@@ -1,0 +1,109 @@
+//! End-to-end validation: REAL agentic RL training through the full
+//! three-layer stack.
+//!
+//! The AOT-compiled transformer (JAX/Pallas → HLO text → PJRT, see
+//! python/compile/) is the agent LLM; real Rust environments provide
+//! observations and rewards; the coordinator machinery (GenEngine,
+//! per-trajectory EnvManagers, serverless-style reward handler,
+//! SampleBuffer, GRPO advantages, fused train_step) closes the loop.
+//! Python never runs here.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example e2e_train -- --steps 150 --env echo
+//! ```
+//!
+//! The reward/loss curve is appended to EXPERIMENTS.md §E2E by hand
+//! from the CSV this writes to target/bench-results/e2e_train.csv.
+
+use rollart::env::{EchoEnv, Environment, FrozenLake, GemMath};
+use rollart::exec::{train, TrainConfig};
+use rollart::metrics::CsvWriter;
+use rollart::runtime::Runtime;
+use rollart::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 150);
+    let env_name = args.get_or("env", "echo").to_string();
+    let lr = args.get_f64("lr", 2e-3) as f32;
+
+    eprintln!("loading AOT artifacts (run `make artifacts` if missing)...");
+    let rt = Runtime::load_default().expect("runtime loads artifacts");
+    let m = rt.manifest.model.clone();
+    eprintln!(
+        "  model: {} params, vocab {}, batch {}, max_seq {}",
+        rt.manifest.param_elements(),
+        m.vocab,
+        m.batch,
+        m.max_seq
+    );
+
+    let make_env: Box<dyn Fn() -> Box<dyn Environment>> = match env_name.as_str() {
+        "echo" => Box::new(|| Box::new(EchoEnv::new()) as Box<dyn Environment>),
+        "math" => Box::new(|| Box::new(GemMath::single_turn()) as Box<dyn Environment>),
+        "frozenlake" => Box::new(|| Box::new(FrozenLake::new(4, false)) as Box<dyn Environment>),
+        other => panic!("--env {other}: use echo | math | frozenlake"),
+    };
+    let (max_new, max_turns) = match env_name.as_str() {
+        "echo" => (6, 1),
+        "math" => (12, 1),
+        _ => (8, 12),
+    };
+
+    let cfg = TrainConfig {
+        groups_per_step: args.get_usize("groups", 2),
+        steps,
+        lr,
+        max_new_tokens: max_new,
+        max_turns,
+        temperature: args.get_f64("temperature", 1.0) as f32,
+        alpha: 1,
+        seed: args.get_usize("seed", 7) as u64,
+    };
+    eprintln!(
+        "training: {} steps x {} groups of {} on '{env_name}' (lr {lr})",
+        cfg.steps, cfg.groups_per_step, m.batch
+    );
+
+    let t0 = std::time::Instant::now();
+    let (logs, state) = train(&rt, &cfg, make_env.as_ref()).expect("training runs");
+
+    let mut csv = CsvWriter::for_bench(
+        "e2e_train",
+        &["step", "loss", "entropy", "grad_norm", "mean_reward", "rollout_s", "train_s"],
+    );
+    println!("\n  step |   loss   | entropy | grad  | reward | rollout | train");
+    for l in &logs {
+        if l.step % 10 == 0 || l.step + 1 == logs.len() {
+            println!(
+                "  {:>4} | {:>8.4} | {:>7.3} | {:>5.2} | {:>6.3} | {:>6.1}s | {:>5.1}s",
+                l.step, l.loss, l.entropy, l.grad_norm, l.mean_reward, l.rollout_s, l.train_s
+            );
+        }
+        csv.row([
+            l.step.to_string(),
+            format!("{:.5}", l.loss),
+            format!("{:.4}", l.entropy),
+            format!("{:.4}", l.grad_norm),
+            format!("{:.4}", l.mean_reward),
+            format!("{:.2}", l.rollout_s),
+            format!("{:.2}", l.train_s),
+        ]);
+    }
+    csv.flush().unwrap();
+
+    let head: Vec<f64> = logs.iter().take(10).map(|l| l.mean_reward).collect();
+    let tail: Vec<f64> = logs.iter().rev().take(10).map(|l| l.mean_reward).collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "\n  reward: first-10 mean {:.3} -> last-10 mean {:.3}   (adam steps: {})",
+        mean(&head),
+        mean(&tail),
+        state.step
+    );
+    println!(
+        "  wall time: {:.0}s   CSV: target/bench-results/e2e_train.csv",
+        t0.elapsed().as_secs_f64()
+    );
+}

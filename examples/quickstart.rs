@@ -1,0 +1,64 @@
+//! Quickstart: simulate one RollArt training job on the disaggregated
+//! fabric and print per-iteration stats.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- --model qwen3-8b --alpha 1
+//! cargo run --release --example quickstart -- --mode sync+   # baseline
+//! ```
+
+use rollart::baselines;
+use rollart::config::{mode_by_name, model_by_name};
+use rollart::sim::{Mode, Scenario};
+use rollart::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let model = model_by_name(args.get_or("model", "qwen3-8b"))
+        .expect("--model: qwen3-8b | qwen3-14b | qwen3-32b");
+    let mode = mode_by_name(args.get_or("mode", "rollart"))
+        .expect("--mode: sync | sync+ | one-off | areal | rollart");
+    let scale = args.get_f64("scale", 0.25);
+    let alpha = args.get_usize("alpha", 1) as u64;
+    let iters = args.get_usize("iterations", 5);
+
+    println!(
+        "RollArt quickstart: {} on {} (scale {scale}, alpha {alpha})",
+        mode.name(),
+        model.name
+    );
+
+    let mut scenario = Scenario::rollart_default(model, scale);
+    scenario = baselines::configure(&scenario, mode);
+    scenario.alpha = alpha;
+    scenario.iterations = iters;
+
+    println!(
+        "  fleet: {} train GPUs + {} generation GPUs across {} engine pool(s)",
+        scenario.train_gpus,
+        scenario.total_gen_gpus(),
+        scenario.gen_pools.len()
+    );
+
+    let result = baselines::run(&scenario);
+    println!("\n  iter | step time | train | sync+recomp | wait   | stale | tokens");
+    for (i, s) in result.steps.iter().enumerate() {
+        println!(
+            "  {i:>4} | {:>8.1}s | {:>5.1} | {:>11.1} | {:>6.1} | {:>5} | {:>9.0}",
+            s.step_time_s,
+            s.breakdown.train_s,
+            s.breakdown.weight_sync_s,
+            s.breakdown.get_batch_wait_s,
+            s.stale_aborts,
+            s.batch_tokens,
+        );
+    }
+    println!(
+        "\n  mean step time: {:.1}s  throughput: {:.0} tokens/s  gen util: {:.0}%",
+        result.mean_step_time(),
+        result.throughput(),
+        100.0 * result.gen_util
+    );
+    if mode == Mode::RollArt {
+        println!("  (compare against baselines with --mode sync|sync+|one-off|areal)");
+    }
+}

@@ -1,0 +1,194 @@
+"""AOT driver: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects;
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ``artifacts/``):
+  prefill.hlo.txt      decode_step.hlo.txt
+  logprob.hlo.txt      train_step.hlo.txt
+  params.init.bin      — initial parameters, raw little-endian f32,
+                         concatenated in ``param_layout`` order
+  manifest.json        — shapes/dtypes/flat arg order for the Rust side
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import SHAPES
+
+S = SHAPES
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs():
+    return [_spec(shape) for _, shape in model.param_layout(S)]
+
+
+def _cache_spec():
+    return _spec((S.n_layers, S.batch, S.n_heads, S.max_seq, S.head_dim))
+
+
+def _entry_defs():
+    """name → (flat_fn, input specs (flat), input names, output names)."""
+    n_p = len(model.param_layout(S))
+    p_names = [n for n, _ in model.param_layout(S)]
+
+    def prefill_flat(*args):
+        params, tokens, lengths = args[:n_p], args[n_p], args[n_p + 1]
+        return model.prefill(params, tokens, lengths, S)
+
+    def decode_flat(*args):
+        params = args[:n_p]
+        ck, cv, tokens, lengths = args[n_p:n_p + 4]
+        return model.decode_step(params, ck, cv, tokens, lengths, S)
+
+    def logprob_flat(*args):
+        params, tokens = args[:n_p], args[n_p]
+        return (model.logprob(params, tokens, S),)
+
+    def train_flat(*args):
+        i = 0
+        params = args[i:i + n_p]; i += n_p
+        m = args[i:i + n_p]; i += n_p
+        v = args[i:i + n_p]; i += n_p
+        step, lr, tokens, old_logp, adv, mask = args[i:i + 6]
+        new_p, new_m, new_v, loss, ent, gnorm = model.train_step(
+            params, m, v, step, lr, tokens, old_logp, adv, mask, S)
+        return (*new_p, *new_m, *new_v, loss, ent, gnorm)
+
+    bt = (S.train_batch, S.train_seq)
+    return {
+        "prefill": (
+            prefill_flat,
+            _param_specs() + [_spec((S.batch, S.max_seq), I32), _spec((S.batch,), I32)],
+            p_names + ["tokens", "lengths"],
+            ["last_logits", "cache_k", "cache_v"],
+        ),
+        "decode_step": (
+            decode_flat,
+            _param_specs() + [_cache_spec(), _cache_spec(),
+                              _spec((S.batch,), I32), _spec((S.batch,), I32)],
+            p_names + ["cache_k", "cache_v", "tokens", "lengths"],
+            ["logits", "cache_k", "cache_v", "lengths"],
+        ),
+        "logprob": (
+            logprob_flat,
+            _param_specs() + [_spec(bt, I32)],
+            p_names + ["tokens"],
+            ["logprobs"],
+        ),
+        "train_step": (
+            train_flat,
+            _param_specs() * 3
+            + [_spec((), F32), _spec((), F32), _spec(bt, I32),
+               _spec(bt), _spec(bt), _spec(bt)],
+            p_names + [f"m.{n}" for n in p_names] + [f"v.{n}" for n in p_names]
+            + ["step", "lr", "tokens", "old_logp", "adv", "mask"],
+            [f"p.{n}" for n in p_names] + [f"m.{n}" for n in p_names]
+            + [f"v.{n}" for n in p_names] + ["loss", "entropy", "grad_norm"],
+        ),
+    }
+
+
+def _describe(specs, names):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+        for n, s in zip(names, specs)
+    ]
+
+
+def _out_specs(fn, in_specs):
+    return jax.eval_shape(fn, *in_specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of entries to lower")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(args.out))
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = {}
+    for name, (fn, in_specs, in_names, out_names) in _entry_defs().items():
+        if only and name not in only:
+            continue
+        print(f"[aot] lowering {name} ({len(in_specs)} inputs)...", flush=True)
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.tree_util.tree_leaves(_out_specs(fn, in_specs))
+        entries[name] = {
+            "file": fname,
+            "inputs": _describe(in_specs, in_names),
+            "outputs": _describe(out_specs, out_names),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"[aot]   wrote {fname}: {len(text)} chars", flush=True)
+
+    # Initial parameters for the Rust side (raw f32 little-endian concat).
+    params = model.init_params(seed=0)
+    with open(os.path.join(out_dir, "params.init.bin"), "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, "<f4").tobytes())
+
+    manifest = {
+        "model": S.to_dict(),
+        "param_layout": [
+            {"name": n, "shape": list(shape)} for n, shape in model.param_layout(S)
+        ],
+        "entries": entries,
+    }
+    # Merge with an existing manifest when lowering a subset.
+    mpath = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["entries"].update(entries)
+        manifest["entries"] = old["entries"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest + params written to {out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

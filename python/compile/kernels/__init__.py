@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots, checked against
+# the pure-jnp oracles in ref.py.
+from .flash_attention import flash_attention  # noqa: F401
+from .decode_attention import decode_attention  # noqa: F401
+from .grpo_loss import grpo_loss, grpo_loss_terms  # noqa: F401

@@ -1,0 +1,96 @@
+"""Pallas decode-attention kernel (L1 hot spot for the decode phase).
+
+Single-token attention against a KV cache: the bandwidth-bound phase
+whose roofline (≈1 FLOP/byte over the whole cache) is the quantitative
+basis of the paper's H20-affinity claim (§3, Fig 4b) — mirrored in the
+Rust ``hw`` cost model.
+
+Grid: one program per (batch · head).  Each program streams the cache
+rows for its head through VMEM in ``block_k`` tiles and computes a
+masked online softmax against the per-slot valid length, so slots in a
+continuous batch can sit at different positions (the LLMProxy packs
+heterogeneous trajectories into one engine batch; see rust/src/proxy).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, seq, scale):
+    """One (batch·head) program.
+
+    len_ref: (1,) int32 in SMEM-like memory — valid cache length for this
+        slot (same value for every head of a batch row).
+    q_ref: (d,) query; k_ref/v_ref: (seq, d) cache rows; o_ref: (d,).
+    """
+    q = q_ref[...].astype(jnp.float32) * scale        # (d,)
+    d = q.shape[-1]
+    length = len_ref[0]
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.ds(ki * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.ds(ki * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+        s = jnp.sum(k * q[None, :], axis=-1)          # (bk,) VPU reduce
+        pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = pos < length
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_cur = jnp.max(s)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + jnp.sum(p[:, None] * v, axis=0)
+        return m_new, l_new, acc
+
+    num_kb = seq // block_k
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    l = jnp.maximum(l, 1e-30)
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, lengths, block_k=32):
+    """q: (B,H,D); cache_k/v: (B,H,S,D); lengths: (B,) int32 → (B,H,D).
+
+    No custom_vjp: decode runs only on the inference path (no gradients).
+    """
+    b, h, s, d = cache_k.shape
+    assert s % block_k == 0, (s, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, d)
+    kr = cache_k.reshape(b * h, s, d)
+    vr = cache_v.reshape(b * h, s, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)   # (B*H,)
+
+    kernel = functools.partial(
+        _dec_kernel, block_k=block_k, seq=s, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh: (bh,)),
+            pl.BlockSpec((None, d), lambda bh: (bh, 0)),
+            pl.BlockSpec((None, s, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda bh: (bh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), q.dtype),
+        interpret=True,
+    )(lens, qr, kr, vr)
+    return out.reshape(b, h, d)

@@ -1,0 +1,135 @@
+"""Pallas flash-attention kernel (L1 hot spot for prefill & training).
+
+Tiled online-softmax causal attention.  The grid iterates over
+(batch*heads, q-blocks); inside each program a ``fori_loop`` streams K/V
+blocks through VMEM and maintains the running (max, normalizer, acc)
+triple of the flash-attention recurrence.
+
+TPU adaptation of the paper's CUDA hot spot (DESIGN.md
+§Hardware-Adaptation): threadblock tiling becomes the BlockSpec grid +
+in-kernel K/V block loop, WMMA becomes MXU-friendly ``jnp.dot`` with f32
+accumulation, and warp shuffles become whole-tile VPU reductions.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+artifacts ship (see /opt/xla-example/README.md).
+
+Autodiff: Pallas has no transpose rules, so ``flash_attention`` carries a
+``custom_vjp`` whose backward recomputes through the pure-jnp oracle in
+``ref.py`` (identical math; see ref.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq, scale):
+    """One (batch*head, q-block) program of the flash-attention grid.
+
+    q_ref: (block_q, d) — this program's query tile (VMEM).
+    k_ref, v_ref: (seq, d) — the full K/V rows for this head; the kernel
+        streams them block_k rows at a time (on real TPU each ``pl.load``
+        below is an HBM→VMEM copy of one tile; double-buffering is the
+        compiler's job once block sizes are VMEM-sized).
+    o_ref: (block_q, d) — output tile.
+    """
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale        # (bq, d)
+    d = q.shape[-1]
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # (bq,)
+
+    # Causal: query row t only attends keys <= t, so K blocks past this
+    # q-block contribute nothing — bound the loop at the diagonal.
+    num_kb = (qi * block_q + block_q + block_k - 1) // block_k
+    num_kb = jnp.minimum(num_kb, seq // block_k)
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.ds(ki * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.ds(ki * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+        s = jax.lax.dot_general(                      # (bq, bk) on the MXU
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)                   # (bq,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be 1.
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(causal, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    l = jnp.maximum(l, 1e-30)                          # fully-masked rows
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _fa_pallas(q, k, v, block_q, block_k):
+    """Raw pallas_call wrapper: q,k,v (B,H,S,D) → (B,H,S,D)."""
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, seq=s, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=32, block_k=32):
+    """Causal flash attention. q,k,v: (B,H,S,D); S divisible by blocks."""
+    return _fa_pallas(q, k, v, block_q, block_k)
+
+
+def _fa_fwd(q, k, v, block_q, block_k):
+    return _fa_pallas(q, k, v, block_q, block_k), (q, k, v)
+
+
+def _fa_bwd(block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,83 @@
+"""Pallas fused GRPO-loss kernel (L1 hot spot of the training objective).
+
+Computes the per-token clipped policy-gradient objective
+
+    loss_t = -min(r_t · A_t, clip(r_t, 1±eps) · A_t) · mask_t,
+    r_t    = exp(logp_new_t − logp_old_t)
+
+fused in one VMEM pass (exp, clip, min, mask — all VPU element-wise ops)
+instead of the five materialized (B,S) intermediates the naive jnp
+version creates.  Tiled over (B-blocks × S-blocks); each tile is a
+(block_b, block_s) panel resident in VMEM.
+
+Autodiff: ``custom_vjp`` recomputing through ``ref.grpo_loss_terms``
+(same math; Pallas has no transpose rules — see ref.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _grpo_kernel(new_ref, old_ref, adv_ref, mask_ref, o_ref, *, clip_eps):
+    lp_new = new_ref[...]
+    lp_old = old_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+
+    ratio = jnp.exp(lp_new - lp_old)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    o_ref[...] = -jnp.minimum(unclipped, clipped) * mask
+
+
+def _grpo_pallas(logp_new, logp_old, adv, mask, clip_eps, block_b, block_s):
+    b, s = logp_new.shape
+    assert b % block_b == 0 and s % block_s == 0, (b, s, block_b, block_s)
+    kernel = functools.partial(_grpo_kernel, clip_eps=clip_eps)
+    spec = pl.BlockSpec((block_b, block_s), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b, s // block_s),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, s), jnp.float32),
+        interpret=True,
+    )(logp_new, logp_old, adv, mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def grpo_loss_terms(logp_new, logp_old, adv, mask,
+                    clip_eps=0.2, block_b=4, block_s=32):
+    """Per-token GRPO objective, (B,S) float32 inputs → (B,S) float32."""
+    return _grpo_pallas(logp_new, logp_old, adv, mask,
+                        clip_eps, block_b, block_s)
+
+
+def _fwd(logp_new, logp_old, adv, mask, clip_eps, block_b, block_s):
+    out = _grpo_pallas(logp_new, logp_old, adv, mask,
+                       clip_eps, block_b, block_s)
+    return out, (logp_new, logp_old, adv, mask)
+
+
+def _bwd(clip_eps, block_b, block_s, res, g):
+    logp_new, logp_old, adv, mask = res
+    f = functools.partial(ref.grpo_loss_terms, clip_eps=clip_eps)
+    _, vjp = jax.vjp(f, logp_new, logp_old, adv, mask)
+    return vjp(g)
+
+
+grpo_loss_terms.defvjp(_fwd, _bwd)
+
+
+def grpo_loss(logp_new, logp_old, adv, mask,
+              clip_eps=0.2, block_b=4, block_s=32):
+    """Scalar masked-mean GRPO loss over the fused per-token kernel."""
+    terms = grpo_loss_terms(logp_new, logp_old, adv, mask,
+                            clip_eps, block_b, block_s)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return terms.sum() / denom

@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package is checked against the matching function here by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes and
+asserts allclose).  They are also used as the *backward* implementations
+for the kernels' ``custom_vjp`` rules — Pallas has no general autodiff,
+so gradients recompute through these (mathematically identical)
+definitions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention(q, k, v, scale=None):
+    """Masked softmax attention.
+
+    q, k, v: (B, H, S, D).  Returns (B, H, S, D) in q's dtype.
+    """
+    b, h, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, lengths, scale=None):
+    """Single-position attention against a KV cache.
+
+    q: (B, H, D) — the query for the token being decoded.
+    cache_k/cache_v: (B, H, S, D).
+    lengths: (B,) int32 — number of *valid* cache positions per slot
+             (the current token's K/V must already be written, so
+             position ``lengths[b]-1`` is the newest).
+    Returns (B, H, D).
+    """
+    b, h, s, d = cache_k.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    scores = jnp.einsum("bhd,bhkd->bhk", qf, kf) * scale
+    pos = jnp.arange(s)[None, :]                      # (1, S)
+    valid = pos < lengths[:, None]                    # (B, S)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs, vf).astype(q.dtype)
+
+
+def grpo_loss_terms(logp_new, logp_old, adv, mask, clip_eps=0.2):
+    """Per-token clipped GRPO policy-gradient objective.
+
+    logp_new, logp_old, adv, mask: (B, S) float32.
+    Returns per-token loss contributions (B, S); caller masks/averages.
+    loss_t = -min(r_t * A_t, clip(r_t, 1-eps, 1+eps) * A_t) * mask_t
+    """
+    ratio = jnp.exp(logp_new - logp_old)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    return -jnp.minimum(unclipped, clipped) * mask
+
+
+def grpo_loss(logp_new, logp_old, adv, mask, clip_eps=0.2):
+    """Scalar masked-mean GRPO loss."""
+    terms = grpo_loss_terms(logp_new, logp_old, adv, mask, clip_eps)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return terms.sum() / denom
+
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def swiglu(x, w1, w2, w3):
+    """SwiGLU MLP: (silu(x @ w1) * (x @ w3)) @ w2."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2

@@ -1,0 +1,301 @@
+"""L2: the agent LLM — a Qwen-style decoder-only transformer in JAX.
+
+Four jittable entry points are AOT-lowered to HLO text by ``aot.py`` and
+executed from the Rust runtime (Python never runs on the request path):
+
+- ``prefill``      — prompt ingestion: builds the KV cache, returns the
+                     next-token logits at each slot's last prompt token.
+- ``decode_step``  — one continuous-batching decode step against the KV
+                     cache (per-slot positions; calls the Pallas decode
+                     kernel).
+- ``logprob``      — per-token log-probabilities of a realized sequence
+                     (old-logprob recompute after weight sync §6.2, and
+                     the LLM-judge reward path).
+- ``train_step``   — fused GRPO loss (Pallas kernel) + full backward via
+                     ``jax.grad`` + Adam update.
+
+Parameters are a *flat tuple* of arrays in the order given by
+``param_layout()``; the same ordering is recorded in
+``artifacts/manifest.json`` and consumed by ``rust/src/runtime``.
+
+Attention uses the Pallas kernels from ``kernels/`` (flash attention for
+prefill/training, decode attention for generation), so the paper's
+compute hot spots lower into the same HLO the Rust side loads.
+"""
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+from .shapes import SHAPES, ADAM_B1, ADAM_B2, ADAM_EPS, CLIP_EPS
+
+S = SHAPES
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def param_layout(cfg=S) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat (name, shape) list defining the cross-language param order."""
+    d, f, v, hd, h = cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.head_dim, cfg.n_heads
+    layout = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, h * hd)),
+            (f"l{i}.wk", (d, h * hd)),
+            (f"l{i}.wv", (d, h * hd)),
+            (f"l{i}.wo", (h * hd, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+            (f"l{i}.w3", (d, f)),
+        ]
+    layout += [("lnf", (d,)), ("head", (d, v))]
+    return layout
+
+
+def init_params(seed: int = 0, cfg=S):
+    """Scaled-normal init; returns the flat tuple in layout order."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_layout(cfg):
+        if name.endswith(("ln1", "ln2", "lnf")):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else cfg.d_model
+            arr = rng.normal(0.0, fan_in ** -0.5, shape).astype(np.float32)
+        params.append(jnp.asarray(arr))
+    return tuple(params)
+
+
+def _split(params, cfg=S):
+    """Flat tuple → (embed, [per-layer dicts], lnf, head)."""
+    embed = params[0]
+    layers = []
+    idx = 1
+    names = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2", "w3"]
+    for _ in range(cfg.n_layers):
+        layers.append(dict(zip(names, params[idx:idx + 9])))
+        idx += 9
+    lnf, head = params[idx], params[idx + 1]
+    return embed, layers, lnf, head
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def _rope_freqs(positions, cfg=S):
+    """positions: (...,) int32 → cos/sin of shape (..., head_dim//2)."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    """x: (..., head_dim); cos/sin broadcastable to (..., head_dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# --------------------------------------------------------------------------
+# Transformer blocks
+# --------------------------------------------------------------------------
+
+def _qkv(layer, x, cfg=S):
+    b = x.shape[0]
+    t = x.shape[1] if x.ndim == 3 else 1
+    def proj(w):
+        y = x @ w
+        return y.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return proj(layer["wq"]), proj(layer["wk"]), proj(layer["wv"])
+
+
+def _forward_full(params, tokens, cfg=S):
+    """Full-sequence forward: tokens (B,T) → (logits (B,T,V), k/v stacks).
+
+    k/v stacks: (L, B, H, T, Dh) — the prefill KV cache.
+    """
+    embed, layers, lnf, head = _split(params, cfg)
+    b, t = tokens.shape
+    x = embed[tokens]                                   # (B,T,D)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    cos, sin = _rope_freqs(pos, cfg)                    # (T, Dh/2)
+    ks, vs = [], []
+    for layer in layers:
+        h_in = ref.rmsnorm(x, layer["ln1"])
+        q, k, v = _qkv(layer, h_in, cfg)                # (B,H,T,Dh)
+        q = _apply_rope(q, cos[None, None], sin[None, None])
+        k = _apply_rope(k, cos[None, None], sin[None, None])
+        att = kernels.flash_attention(q, k, v, cfg.block_q, cfg.block_k)
+        att = att.transpose(0, 2, 1, 3).reshape(b, t, -1)
+        x = x + att @ layer["wo"]
+        h2 = ref.rmsnorm(x, layer["ln2"])
+        x = x + ref.swiglu(h2, layer["w1"], layer["w2"], layer["w3"])
+        ks.append(k)
+        vs.append(v)
+    x = ref.rmsnorm(x, lnf)
+    logits = x @ head                                   # (B,T,V)
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill(params, tokens, lengths, cfg=S):
+    """tokens (B,S) int32, lengths (B,) int32.
+
+    Returns (last_logits (B,V), cache_k, cache_v) where ``last_logits``
+    are the next-token logits at each slot's final prompt position
+    (``lengths[b]-1``) and the caches are (L,B,H,S,Dh).
+    """
+    logits, ck, cv = _forward_full(params, tokens, cfg)
+    idx = jnp.maximum(lengths - 1, 0)
+    last = jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]                                             # (B,V)
+    return last, ck, cv
+
+
+def decode_step(params, cache_k, cache_v, tokens, lengths, cfg=S):
+    """One decode step for a continuous batch.
+
+    tokens: (B,) int32 — the token generated at position ``lengths[b]-1``'s
+        successor slot, i.e. the model input at position ``lengths[b]``.
+    lengths: (B,) int32 — current valid cache length per slot; the new
+        K/V is written at index ``lengths[b]`` and attention spans
+        ``lengths[b]+1`` entries.
+    Returns (logits (B,V), new_cache_k, new_cache_v, new_lengths).
+    """
+    embed, layers, lnf, head = _split(params, cfg)
+    b = tokens.shape[0]
+    x = embed[tokens][:, None, :]                       # (B,1,D)
+    cos, sin = _rope_freqs(lengths, cfg)                # (B, Dh/2)
+    cos_b = cos[:, None, None, :]                       # (B,1,1,Dh/2)
+    sin_b = sin[:, None, None, :]
+
+    new_ck, new_cv = [], []
+    for li, layer in enumerate(layers):
+        h_in = ref.rmsnorm(x, layer["ln1"])
+        q, k, v = _qkv(layer, h_in, cfg)                # (B,H,1,Dh)
+        q = _apply_rope(q, cos_b, sin_b)[:, :, 0]       # (B,H,Dh)
+        k = _apply_rope(k, cos_b, sin_b)[:, :, 0]
+        v = v[:, :, 0]
+
+        # Scatter the new K/V into each slot's ``lengths[b]`` row.
+        def put(cache, new):
+            def one(c, n, l):                           # c:(H,S,Dh) n:(H,Dh)
+                return jax.lax.dynamic_update_slice(
+                    c, n[:, None, :], (0, l, 0))
+            return jax.vmap(one)(cache, new, lengths)
+        ck = put(cache_k[li], k)
+        cv = put(cache_v[li], v)
+        new_ck.append(ck)
+        new_cv.append(cv)
+
+        att = kernels.decode_attention(q, ck, cv, lengths + 1, cfg.block_k)
+        att = att.reshape(b, 1, -1)                     # (B,1,H*Dh)
+        x = x + att @ layer["wo"]
+        h2 = ref.rmsnorm(x, layer["ln2"])
+        x = x + ref.swiglu(h2, layer["w1"], layer["w2"], layer["w3"])
+
+    x = ref.rmsnorm(x, lnf)[:, 0]                       # (B,D)
+    logits = x @ head                                   # (B,V)
+    return logits, jnp.stack(new_ck), jnp.stack(new_cv), lengths + 1
+
+
+def logprob(params, tokens, cfg=S):
+    """Per-token log-probabilities: lp[b,t] = log P(tokens[t] | tokens[<t]).
+
+    lp[:, 0] is defined as 0 (no conditioning context in-artifact; the
+    Rust side masks position 0 anyway because it is always a prompt
+    token).
+    """
+    logits, _, _ = _forward_full(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(
+        logp[:, :-1], tokens[:, 1:, None].astype(jnp.int32), axis=-1
+    )[..., 0]                                           # (B,S-1)
+    return jnp.concatenate(
+        [jnp.zeros((tokens.shape[0], 1), jnp.float32), tgt], axis=1
+    )
+
+
+# --------------------------------------------------------------------------
+# GRPO training step (loss → grad → Adam) — one fused artifact
+# --------------------------------------------------------------------------
+
+def _loss_fn(params, tokens, old_logp, adv, mask, cfg=S):
+    # Single forward pass shared by the policy-gradient term and the
+    # entropy diagnostic (computing them from separate forwards doubled
+    # the train-step cost; see EXPERIMENTS.md §Perf L2-1).
+    logits, _, _ = _forward_full(params, tokens, cfg)
+    logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(
+        logp_all[:, :-1], tokens[:, 1:, None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    lp = jnp.concatenate(
+        [jnp.zeros((tokens.shape[0], 1), jnp.float32), tgt], axis=1)
+    pg = kernels.grpo_loss(lp, old_logp, adv, mask, CLIP_EPS)
+    ent_tok = -jnp.sum(jnp.exp(logp_all) * logp_all, -1)          # (B,S)
+    ent = jax.lax.stop_gradient(
+        (ent_tok * mask).sum() / jnp.maximum(mask.sum(), 1.0))
+    return pg, ent
+
+
+def train_step(params, m_state, v_state, step, lr,
+               tokens, old_logp, adv, mask, cfg=S):
+    """One GRPO update.
+
+    params/m_state/v_state: flat tuples in ``param_layout`` order.
+    step: float32 scalar Adam timestep (1-based); lr: float32 scalar.
+    tokens (B,S) int32; old_logp/adv/mask (B,S) float32.
+    Returns (new_params, new_m, new_v, loss, entropy, grad_norm).
+    """
+    (loss, ent), grads = jax.value_and_grad(
+        lambda p: _loss_fn(p, tokens, old_logp, adv, mask, cfg),
+        has_aux=True,
+    )(params)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    # Global-norm clip at 1.0 for stability.
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-12))
+    b1t = 1.0 - ADAM_B1 ** step
+    b2t = 1.0 - ADAM_B2 ** step
+
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(params, m_state, v_state, grads):
+        g = g * scale
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(g)
+        upd = (m2 / b1t) / (jnp.sqrt(v2 / b2t) + ADAM_EPS)
+        new_p.append(p - lr * upd)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (tuple(new_p), tuple(new_m), tuple(new_v), loss, ent, gnorm)
+
+
+# --------------------------------------------------------------------------
+# Reference generation loop (used by python tests only — the production
+# loop lives in rust/src/exec; this mirrors it for cross-validation).
+# --------------------------------------------------------------------------
+
+def greedy_generate(params, prompt: List[int], steps: int, cfg=S):
+    b, s = cfg.batch, cfg.max_seq
+    tokens = np.zeros((b, s), np.int32)
+    tokens[0, :len(prompt)] = prompt
+    lengths = np.zeros((b,), np.int32)
+    lengths[0] = len(prompt)
+    last, ck, cv = prefill(params, jnp.asarray(tokens), jnp.asarray(lengths), cfg)
+    out = []
+    lens = jnp.asarray(lengths)
+    for _ in range(steps):
+        nxt = jnp.argmax(last, -1).astype(jnp.int32)    # (B,)
+        out.append(int(nxt[0]))
+        last, ck, cv, lens = decode_step(params, ck, cv, nxt, lens, cfg)
+    return out

@@ -1,0 +1,59 @@
+"""Static shape configuration for AOT lowering.
+
+Every artifact is lowered at the fixed shapes declared here; the Rust
+runtime reads the same values from ``artifacts/manifest.json`` and pads
+its batches accordingly.  Keep this file tiny and dependency-free — it is
+imported by the kernels, the model, the AOT driver and the tests.
+
+The e2e model is a ~7M-parameter Qwen-style decoder.  The paper trains
+Qwen3-8B..32B on GPU clusters; on the CPU-PJRT substrate we scale the
+model down so a few hundred *real* GRPO steps complete in the session
+budget (see DESIGN.md §2 Substitutions) while exercising identical code
+paths (prefill / decode-with-KV-cache / fused-loss train step).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelShapes:
+    """Architecture + AOT batch/sequence shapes for the agent LLM."""
+
+    vocab: int = 512          # byte-level tokenizer: 256 bytes + specials
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 64        # n_heads * head_dim == d_model
+    d_ffn: int = 1024
+    rope_theta: float = 10_000.0
+
+    # AOT execution shapes (fixed at lowering time).
+    batch: int = 8            # engine batch width (proxy pads to this)
+    max_seq: int = 160        # KV-cache capacity / prefill width
+    train_seq: int = 160      # token width of one training sample
+    train_batch: int = 8      # samples per train_step micro-batch
+
+    # Pallas kernel tile sizes (see DESIGN.md §6 for VMEM/MXU estimates).
+    block_q: int = 32
+    block_k: int = 32
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ffn, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + swiglu + norms
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def to_dict(self):
+        out = asdict(self)
+        out["param_count"] = self.param_count()
+        return out
+
+
+SHAPES = ModelShapes()
+
+# Adam hyper-parameters baked into the train_step artifact.
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+# GRPO clipping range (PPO-style ratio clip).
+CLIP_EPS = 0.2

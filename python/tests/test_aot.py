@@ -1,0 +1,110 @@
+# AOT contract tests: the manifest + HLO-text artifacts the Rust runtime
+# consumes.  Lowers a subset into a temp dir and checks structure; also
+# validates an existing artifacts/ dir when present (fast path in CI).
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.shapes import SHAPES as S
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts_dir(tmp_path_factory):
+    """Use the checked-out artifacts dir if complete, else lower fresh."""
+    manifest = os.path.join(ARTIFACTS, "manifest.json")
+    if os.path.exists(manifest):
+        with open(manifest) as f:
+            m = json.load(f)
+        if set(m["entries"]) == {"prefill", "decode_step", "logprob",
+                                 "train_step"}:
+            return ARTIFACTS
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", out],
+        check=True, cwd=os.path.join(REPO, "python"))
+    return out
+
+
+def _manifest(artifacts_dir):
+    with open(os.path.join(artifacts_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_entries_complete(artifacts_dir):
+    m = _manifest(artifacts_dir)
+    assert set(m["entries"]) == {
+        "prefill", "decode_step", "logprob", "train_step"}
+    for name, e in m["entries"].items():
+        path = os.path.join(artifacts_dir, e["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert text.startswith("HloModule"), name
+        assert e["inputs"] and e["outputs"]
+
+
+def test_manifest_model_matches_shapes(artifacts_dir):
+    m = _manifest(artifacts_dir)["model"]
+    assert m["vocab"] == S.vocab
+    assert m["n_layers"] == S.n_layers
+    assert m["batch"] == S.batch
+    assert m["max_seq"] == S.max_seq
+    assert m["param_count"] == S.param_count()
+
+
+def test_param_layout_round_trip(artifacts_dir):
+    m = _manifest(artifacts_dir)
+    layout = model.param_layout()
+    assert len(m["param_layout"]) == len(layout)
+    for entry, (name, shape) in zip(m["param_layout"], layout):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == shape
+
+
+def test_params_bin_size_and_loadability(artifacts_dir):
+    path = os.path.join(artifacts_dir, "params.init.bin")
+    raw = np.fromfile(path, "<f4")
+    assert raw.size == S.param_count()
+    # reconstruct and compare against init_params(0)
+    params = model.init_params(0)
+    off = 0
+    for p in params:
+        n = int(np.prod(p.shape))
+        np.testing.assert_array_equal(
+            raw[off:off + n].reshape(p.shape), np.asarray(p))
+        off += n
+    assert off == raw.size
+
+
+def test_train_step_flat_arg_order(artifacts_dir):
+    """The Rust runtime feeds literals positionally; the manifest input
+    list must be params, m, v, then the six data args."""
+    e = _manifest(artifacts_dir)["entries"]["train_step"]
+    names = [i["name"] for i in e["inputs"]]
+    n = len(model.param_layout())
+    assert names[:n] == [x for x, _ in model.param_layout()]
+    assert names[n:2 * n] == [f"m.{x}" for x, _ in model.param_layout()]
+    assert names[2 * n:3 * n] == [f"v.{x}" for x, _ in model.param_layout()]
+    assert names[3 * n:] == ["step", "lr", "tokens", "old_logp", "adv",
+                             "mask"]
+    outs = [o["name"] for o in e["outputs"]]
+    assert outs[-3:] == ["loss", "entropy", "grad_norm"]
+    assert len(outs) == 3 * n + 3
+
+
+def test_decode_entry_shapes(artifacts_dir):
+    e = _manifest(artifacts_dir)["entries"]["decode_step"]
+    by_name = {i["name"]: i for i in e["inputs"]}
+    assert by_name["cache_k"]["shape"] == [
+        S.n_layers, S.batch, S.n_heads, S.max_seq, S.head_dim]
+    assert by_name["tokens"]["shape"] == [S.batch]
+    assert by_name["tokens"]["dtype"] == "int32"
+    outs = [o["name"] for o in e["outputs"]]
+    assert outs == ["logits", "cache_k", "cache_v", "lengths"]

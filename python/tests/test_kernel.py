@@ -1,0 +1,265 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+# hypothesis sweeps shapes/dtypes; every Pallas kernel is compared
+# against its pure-jnp oracle in compile/kernels/ref.py.
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    flash_attention,
+    decode_attention,
+    grpo_loss,
+    grpo_loss_terms,
+)
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=8)
+settings.load_profile("ci")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(0.0, 1.0, shape)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(b, h, s_blocks, d, seed):
+    s = 32 * s_blocks
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, s, d), jnp.float32)
+    k = _rand(rng, (b, h, s, d), jnp.float32)
+    v = _rand(rng, (b, h, s, d), jnp.float32)
+    out = flash_attention(q, k, v)
+    exp = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_block_size_invariance(bq, bk, seed):
+    """Output must not depend on the tiling."""
+    s = 64
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (2, 2, s, 32), jnp.float32)
+    k = _rand(rng, (2, 2, s, 32), jnp.float32)
+    v = _rand(rng, (2, 2, s, 32), jnp.float32)
+    out = flash_attention(q, k, v, bq, bk)
+    exp = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 2, 64, 32), jnp.bfloat16)
+    k = _rand(rng, (2, 2, 64, 32), jnp.bfloat16)
+    v = _rand(rng, (2, 2, 64, 32), jnp.bfloat16)
+    out = flash_attention(q, k, v).astype(jnp.float32)
+    exp = ref.causal_attention(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(out, exp, rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_causality():
+    """Perturbing future K/V rows must not change earlier outputs."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 1, 64, 32), jnp.float32)
+    k = _rand(rng, (1, 1, 64, 32), jnp.float32)
+    v = _rand(rng, (1, 1, 64, 32), jnp.float32)
+    out1 = flash_attention(q, k, v)
+    k2 = k.at[:, :, 40:].add(100.0)
+    v2 = v.at[:, :, 40:].add(-7.0)
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :, :40], out2[:, :, :40],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, :, 41:], out2[:, :, 41:])
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (2, 2, 64, 32), jnp.float32)
+    k = _rand(rng, (2, 2, 64, 32), jnp.float32)
+    v = _rand(rng, (2, 2, 64, 32), jnp.float32)
+    g1 = jax.grad(lambda a, b, c: flash_attention(a, b, c).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda a, b, c: ref.causal_attention(a, b, c).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_first_row_attends_self_only():
+    """Row 0 can only attend itself → output row 0 == v row 0."""
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (1, 2, 32, 16), jnp.float32)
+    k = _rand(rng, (1, 2, 32, 16), jnp.float32)
+    v = _rand(rng, (1, 2, 32, 16), jnp.float32)
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[:, :, 0], v[:, :, 0], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 5),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s_blocks, d, seed):
+    s = 32 * s_blocks
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, d), jnp.float32)
+    ck = _rand(rng, (b, h, s, d), jnp.float32)
+    cv = _rand(rng, (b, h, s, d), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = decode_attention(q, ck, cv, lengths)
+    exp = ref.decode_attention(q, ck, cv, lengths)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_stale_cache():
+    """Rows beyond `lengths` must not affect the result (the engine
+    reuses cache slots across trajectories — stale data is expected)."""
+    rng = np.random.default_rng(6)
+    b, h, s, d = 2, 2, 64, 32
+    q = _rand(rng, (b, h, d), jnp.float32)
+    ck = _rand(rng, (b, h, s, d), jnp.float32)
+    cv = _rand(rng, (b, h, s, d), jnp.float32)
+    lengths = jnp.asarray([10, 20], jnp.int32)
+    out1 = decode_attention(q, ck, cv, lengths)
+    ck2 = ck.at[:, :, 30:].set(999.0)
+    cv2 = cv.at[:, :, 30:].set(-999.0)
+    out2 = decode_attention(q, ck2, cv2, lengths)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_length_one():
+    """With length 1 the output is exactly cache row 0's V."""
+    rng = np.random.default_rng(7)
+    b, h, s, d = 1, 2, 32, 16
+    q = _rand(rng, (b, h, d), jnp.float32)
+    ck = _rand(rng, (b, h, s, d), jnp.float32)
+    cv = _rand(rng, (b, h, s, d), jnp.float32)
+    out = decode_attention(q, ck, cv, jnp.asarray([1], jnp.int32))
+    np.testing.assert_allclose(out[0], cv[0, :, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_last_row_of_flash():
+    """Decoding position t must equal flash attention's row t."""
+    rng = np.random.default_rng(8)
+    b, h, s, d = 2, 2, 64, 32
+    q = _rand(rng, (b, h, s, d), jnp.float32)
+    k = _rand(rng, (b, h, s, d), jnp.float32)
+    v = _rand(rng, (b, h, s, d), jnp.float32)
+    full = flash_attention(q, k, v)
+    t = 37
+    dec = decode_attention(q[:, :, t], k, v,
+                           jnp.full((b,), t + 1, jnp.int32))
+    np.testing.assert_allclose(dec, full[:, :, t], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grpo_loss
+# ---------------------------------------------------------------------------
+
+@given(
+    b_blocks=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    clip=st.sampled_from([0.1, 0.2, 0.3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grpo_terms_match_ref(b_blocks, s_blocks, clip, seed):
+    b, s = 4 * b_blocks, 32 * s_blocks
+    rng = np.random.default_rng(seed)
+    lp_new = _rand(rng, (b, s), jnp.float32)
+    lp_old = _rand(rng, (b, s), jnp.float32)
+    adv = _rand(rng, (b, s), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, (b, s)), jnp.float32)
+    out = grpo_loss_terms(lp_new, lp_old, adv, mask, clip)
+    exp = ref.grpo_loss_terms(lp_new, lp_old, adv, mask, clip)
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+
+
+def test_grpo_scalar_matches_ref():
+    rng = np.random.default_rng(9)
+    lp_new = _rand(rng, (8, 64), jnp.float32)
+    lp_old = _rand(rng, (8, 64), jnp.float32)
+    adv = _rand(rng, (8, 64), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, (8, 64)), jnp.float32)
+    np.testing.assert_allclose(
+        grpo_loss(lp_new, lp_old, adv, mask),
+        ref.grpo_loss(lp_new, lp_old, adv, mask),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_grpo_grad_matches_ref():
+    rng = np.random.default_rng(10)
+    lp_new = _rand(rng, (4, 32), jnp.float32)
+    lp_old = _rand(rng, (4, 32), jnp.float32)
+    adv = _rand(rng, (4, 32), jnp.float32)
+    mask = jnp.ones((4, 32), jnp.float32)
+    g1 = jax.grad(lambda x: grpo_loss(x, lp_old, adv, mask))(lp_new)
+    g2 = jax.grad(lambda x: ref.grpo_loss(x, lp_old, adv, mask))(lp_new)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_grpo_identical_policy_is_plain_pg():
+    """ratio == 1 everywhere → loss == -mean(adv * mask)."""
+    rng = np.random.default_rng(11)
+    lp = _rand(rng, (4, 32), jnp.float32)
+    adv = _rand(rng, (4, 32), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, (4, 32)), jnp.float32)
+    loss = grpo_loss(lp, lp, adv, mask)
+    exp = -(adv * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    np.testing.assert_allclose(loss, exp, rtol=1e-6, atol=1e-6)
+
+
+def test_grpo_masked_tokens_contribute_nothing():
+    rng = np.random.default_rng(12)
+    lp_new = _rand(rng, (4, 32), jnp.float32)
+    lp_old = _rand(rng, (4, 32), jnp.float32)
+    adv = _rand(rng, (4, 32), jnp.float32)
+    mask = jnp.zeros((4, 32), jnp.float32).at[:, :8].set(1.0)
+    l1 = grpo_loss(lp_new, lp_old, adv, mask)
+    # wildly perturb masked region
+    l2 = grpo_loss(lp_new.at[:, 8:].add(50.0), lp_old, adv, mask)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)
+
+
+def test_grpo_clip_bounds_positive_adv():
+    """For adv>0 and huge ratio, loss per token is -(1+eps)*adv."""
+    lp_old = jnp.zeros((4, 32), jnp.float32)
+    lp_new = jnp.full((4, 32), 5.0, jnp.float32)     # ratio = e^5
+    adv = jnp.ones((4, 32), jnp.float32)
+    mask = jnp.ones((4, 32), jnp.float32)
+    terms = grpo_loss_terms(lp_new, lp_old, adv, mask, 0.2)
+    np.testing.assert_allclose(terms, -1.2 * jnp.ones_like(terms),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_grpo_no_clip_negative_direction():
+    """For adv<0 the unclipped branch dominates (pessimistic min)."""
+    lp_old = jnp.zeros((4, 32), jnp.float32)
+    lp_new = jnp.full((4, 32), 1.0, jnp.float32)     # ratio = e
+    adv = -jnp.ones((4, 32), jnp.float32)
+    mask = jnp.ones((4, 32), jnp.float32)
+    terms = grpo_loss_terms(lp_new, lp_old, adv, mask, 0.2)
+    np.testing.assert_allclose(terms, np.e * jnp.ones_like(terms),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,141 @@
+//! Hot-path micro-benchmarks (`cargo bench --bench bench_hotpath`).
+//!
+//! criterion is not vendored in this offline environment, so this is a
+//! small self-contained harness: warm-up, N timed iterations, median of
+//! 7 repetitions.  Covers the L3 structures the profiler flags:
+//! SampleBuffer ops, proxy routing, engine stepping, the DES event
+//! queue, GRPO packing, and the JSON/manifest parser.  Results feed
+//! EXPERIMENTS.md §Perf.
+
+use rollart::buffer::{SampleBuffer, StalenessPolicy};
+use rollart::env::profile::DomainProfile;
+use rollart::env::TaskDomain;
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::proxy::{EngineSim, LlmProxy, SimRequest};
+use rollart::rl::{group_advantages, pack_sample, Trajectory, TrajectoryId, Turn, Version};
+use rollart::simkit::{EventQueue, SimRng, SimTime};
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after warm-up; prints and returns
+/// ns/iter (median of 7 repetitions).
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut reps: Vec<f64> = (0..7)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters as f64
+        })
+        .collect();
+    reps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = reps[3];
+    println!("{name:<44} {median:>12.0} ns/iter");
+    median
+}
+
+fn scored(id: u64, v: u64) -> Trajectory {
+    let mut t = Trajectory::new(TrajectoryId(id), TaskDomain::MathTool, Version(v));
+    t.turns.push(Turn {
+        obs_tokens: vec![1; 64],
+        action_tokens: vec![2; 64],
+        version: Version(v),
+    });
+    t.reward = Some(1.0);
+    t
+}
+
+fn main() {
+    println!("hot-path micro-benches (median of 7):");
+
+    bench("event_queue: schedule+pop (1k events)", 1_000, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..1_000u32 {
+            q.schedule(SimTime::secs((i % 97) as f64), i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    bench("sample_buffer: deposit+get_batch (256)", 1_000, || {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        for i in 0..256 {
+            b.deposit(scored(i, 5), Version(5));
+        }
+        let _ = b.get_batch(256, Version(5));
+    });
+
+    bench("proxy: route+add (least-loaded, 64 req)", 2_000, || {
+        let engines = (0..8)
+            .map(|i| EngineSim::new(i, GpuClass::H20, 8, QWEN3_8B.clone(), 64))
+            .collect();
+        let mut p = LlmProxy::new(engines);
+        p.set_default_class(GpuClass::H20);
+        for i in 0..64 {
+            p.add(SimRequest {
+                traj: TrajectoryId(i),
+                domain: TaskDomain::MathTool,
+                new_tokens: 100.0,
+                ctx_tokens: 0.0,
+                decode_budget: 10.0,
+            });
+        }
+    });
+
+    bench("engine_sim: full 64-request rollout", 200, || {
+        let mut e = EngineSim::new(0, GpuClass::H20, 8, QWEN3_8B.clone(), 64);
+        for i in 0..64 {
+            e.enqueue(SimRequest {
+                traj: TrajectoryId(i),
+                domain: TaskDomain::MathTool,
+                new_tokens: 200.0,
+                ctx_tokens: 0.0,
+                decode_budget: 100.0,
+            });
+        }
+        let _ = e.run_to_idle();
+    });
+
+    bench("grpo: group_advantages(8) x100", 5_000, || {
+        let r = [1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            std::hint::black_box(group_advantages(&r));
+        }
+    });
+
+    bench("grpo: pack_sample (seq 160)", 10_000, || {
+        let t = scored(0, 1);
+        std::hint::black_box(pack_sample(&t, 0.5, 160));
+    });
+
+    bench("profile: sample_trajectory (SWE)", 10_000, || {
+        let mut rng = SimRng::new(3);
+        let p = DomainProfile::of(TaskDomain::Swe);
+        std::hint::black_box(p.sample_trajectory(&mut rng));
+    });
+
+    bench("json: parse 4KB manifest-like doc", 2_000, || {
+        let doc = format!(
+            "{{\"entries\": [{}]}}",
+            (0..40)
+                .map(|i| format!("{{\"name\": \"p{i}\", \"shape\": [256, 256]}}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        std::hint::black_box(rollart::util::json::Json::parse(&doc).unwrap());
+    });
+
+    // End-to-end DES throughput: wall-clock for a small scenario.
+    let t0 = Instant::now();
+    let mut s = rollart::sim::Scenario::rollart_default(QWEN3_8B.clone(), 0.1);
+    s.iterations = 4;
+    let r = rollart::sim::async_driver::run(&s);
+    println!(
+        "des: rollart 0.1-scale 4 iters               {:>12.0} ms wall ({} steps)",
+        t0.elapsed().as_millis(),
+        r.steps.len()
+    );
+}

@@ -1,0 +1,89 @@
+//! PJRT runtime hot-path benchmark (§Perf L3): prefill / decode /
+//! logprob / train_step latency, comparing the naive literal path with
+//! the device-resident-parameter path (`decode_step_device`).
+//!
+//! Skips (exit 0) when `artifacts/` is missing.
+
+use rollart::runtime::{default_artifacts_dir, Runtime};
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    println!("{name:<46} {ms:>9.1} ms/call");
+    ms
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built, skipping");
+        return;
+    }
+    let t0 = Instant::now();
+    let rt = Runtime::load(dir).expect("runtime");
+    println!(
+        "artifact load+compile                          {:>9.1} ms (once)",
+        t0.elapsed().as_secs_f64() * 1000.0
+    );
+    let m = rt.manifest.model.clone();
+    let params = rt.init_params().unwrap();
+
+    // Common inputs.
+    let mut tokens = vec![256i32; m.batch * m.max_seq];
+    for b in 0..m.batch {
+        for j in 0..8 {
+            tokens[b * m.max_seq + j] = (97 + j) as i32;
+        }
+    }
+    let lengths = vec![8i32; m.batch];
+
+    time("prefill (literal path)", 5, || {
+        let _ = rt.prefill(&params, &tokens, &lengths).unwrap();
+    });
+
+    // Decode: naive literal path (params re-uploaded per call).
+    let (_, mut cache) = rt.prefill(&params, &tokens, &lengths).unwrap();
+    let next = vec![104i32; m.batch];
+    let mut lens = lengths.clone();
+    let naive = time("decode_step (naive: params per call)", 20, || {
+        let _ = rt
+            .decode_step(&params, &mut cache, &next, &mut lens)
+            .unwrap();
+    });
+
+    // Decode: device-resident params (§Perf L3-1).
+    let (_, mut cache2) = rt.prefill(&params, &tokens, &lengths).unwrap();
+    let dev = rt.upload_params(&params).unwrap();
+    let mut lens2 = lengths.clone();
+    let fast = time("decode_step (device-resident params)", 20, || {
+        let _ = rt
+            .decode_step_device(&dev, &mut cache2, &next, &mut lens2)
+            .unwrap();
+    });
+    println!(
+        "  -> decode speedup                            {:>9.2} x",
+        naive / fast
+    );
+
+    let ttokens: Vec<i32> = (0..m.train_batch * m.train_seq)
+        .map(|i| (i % 256) as i32)
+        .collect();
+    time("logprob", 5, || {
+        let _ = rt.logprob(&params, &ttokens).unwrap();
+    });
+
+    let mut state = rt.init_train_state().unwrap();
+    let old = rt.logprob(&state.params, &ttokens).unwrap();
+    let adv = vec![0.5f32; ttokens.len()];
+    let mask = vec![1.0f32; ttokens.len()];
+    time("train_step (fused fwd+bwd+adam)", 3, || {
+        let _ = rt
+            .train_step(&mut state, 1e-4, &ttokens, &old, &adv, &mask)
+            .unwrap();
+    });
+}

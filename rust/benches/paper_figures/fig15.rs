@@ -1,0 +1,123 @@
+//! Fig 15: production workload characterization (§8) — the >3,000-GPU
+//! week-long MoE deployment.
+//!
+//! (a) workload stats: prompts ≤12k tokens, responses ≤46k, turns 1–48,
+//!     per-step max response >5× mean (peak 9×), turns tail >40× mean;
+//! (b) iteration breakdown: blocking get_batch up to 62% of iteration
+//!     time (ideal removal ≈ −22% training time), longest iter 1.5 h;
+//! (c) characterization-driven tuning: 1.66× over the first 25 steps.
+
+use crate::support::*;
+use rollart::baselines;
+use rollart::llm::PROD_MOE;
+use rollart::metrics::CsvWriter;
+use rollart::sim::{async_driver, Mode, Scenario};
+use rollart::trace;
+
+pub fn run() {
+    banner("Fig 15", "production workload characterization (3000+ GPUs)");
+
+    // (a) workload statistics from the trace generator.
+    let records = trace::generate(&trace::prod_families(), 50_000, 15);
+    let stats = trace::analyze(&records);
+    row("max prompt tokens", "~12k", &format!("{:.0}", stats.max_prompt));
+    row(
+        "max response tokens",
+        "~46k",
+        &format!("{:.0}", stats.max_response),
+    );
+    row(
+        "turns range",
+        "1-48",
+        &format!("1-{}", stats.max_turns),
+    );
+    let ratios = trace::per_step_tail_ratios(&records, 512);
+    let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let peak = ratios.iter().cloned().fold(0.0, f64::max);
+    row(
+        "per-step max/mean response",
+        ">5x, peak 9x",
+        &format!("{mean_ratio:.1}x, peak {peak:.1}x"),
+    );
+    row(
+        "max turns / mean turns",
+        ">40x at prod scale",
+        &format!("{:.0}x (trace)", stats.turns_tail_ratio),
+    );
+
+    // (b) iteration breakdown on the prod-MoE scenario (1:5 ratio).
+    let mut s = quick(Scenario::rollart_default(PROD_MOE.clone(), SCALE), 4);
+    s = baselines::configure(&s, Mode::RollArt);
+    s.train_gpus = 16;
+    // 1:5 train:generation GPU ratio
+    s.gen_pools = vec![rollart::sim::EnginePool {
+        class: rollart::hw::GpuClass::H800,
+        gpus_per_engine: 8,
+        engines: 10,
+        max_batch: 64,
+    }];
+    let r = async_driver::run(&s);
+    let wait_frac: f64 = r
+        .steps
+        .iter()
+        .skip(1)
+        .map(|x| x.breakdown.get_batch_wait_s / x.step_time_s.max(1e-9))
+        .sum::<f64>()
+        / (r.steps.len() - 1) as f64;
+    row(
+        "blocking get_batch share of iteration",
+        "up to 62%",
+        &format!("{:.0}%", 100.0 * wait_frac),
+    );
+
+    // (c) characterization-driven tuning: retune the train:gen ratio +
+    // multi-tier env cache (prefix-caching effect folded into the
+    // engine model) and compare the first steps.
+    let mut tuned = s.clone();
+    tuned.train_gpus = 24;
+    tuned.gen_pools = vec![rollart::sim::EnginePool {
+        class: rollart::hw::GpuClass::H800,
+        gpus_per_engine: 8,
+        engines: 14,
+        max_batch: 96,
+    }];
+    tuned.envpool = rollart::envpool::EnvPoolConfig::multi_tier();
+    let rt = async_driver::run(&tuned);
+    row(
+        "tuning speedup (first steps)",
+        "1.66x",
+        &x(r.mean_step_time() / rt.mean_step_time()),
+    );
+
+    // env stability: reset success under the multi-tier cache
+    let cfg = rollart::envpool::EnvPoolConfig::multi_tier();
+    let mut rng = rollart::simkit::SimRng::new(9);
+    let n = 100_000;
+    let mut ok_fast = 0;
+    for _ in 0..n {
+        let o = cfg.sample_reset(0, &mut rng);
+        if !o.failed && o.latency_s < 60.0 {
+            ok_fast += 1;
+        }
+    }
+    row(
+        "env.reset <1min after cache fix",
+        ">99.99%",
+        &format!("{:.2}%", 100.0 * ok_fast as f64 / n as f64),
+    );
+
+    let mut csv = CsvWriter::for_bench(
+        "fig15_production",
+        &["metric", "paper", "measured"],
+    );
+    csv.row(["max_prompt".to_string(), "12000".into(), format!("{:.0}", stats.max_prompt)]);
+    csv.row(["max_response".to_string(), "46000".into(), format!("{:.0}", stats.max_response)]);
+    csv.row(["tail_peak".to_string(), "9".into(), format!("{peak:.1}")]);
+    csv.row(["get_batch_frac".to_string(), "0.62".into(), format!("{wait_frac:.2}")]);
+    csv.row([
+        "tuning_speedup".to_string(),
+        "1.66".into(),
+        format!("{:.2}", r.mean_step_time() / rt.mean_step_time()),
+    ]);
+    csv.flush().unwrap();
+}

@@ -1,0 +1,109 @@
+//! Fig 3: breakdown of a synchronous training step — successful runs
+//! (paper avg 365.7 s, generation only 54%) vs runs with environment
+//! failures (avg 513.3 s, env.reset dominating).
+
+use crate::support::*;
+use rollart::env::TaskDomain;
+use rollart::envpool::EnvPoolConfig;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::sim::{sync_driver, Mode, RewardDeploy, Scenario};
+use rollart::simkit::dist::Dist;
+
+fn scenario(failure_p: f64) -> Scenario {
+    // Paper setup: Qwen3-8B/32k, SWE-bench, batch 128, 32 H800.
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+    s.mode = Mode::Sync;
+    s.task_mix = vec![TaskDomain::Swe];
+    s.batch_size = (128.0 * SCALE) as usize;
+    s.train_gpus = (32.0 * SCALE).max(2.0) as usize;
+    s.gen_pools = vec![rollart::sim::EnginePool {
+        class: rollart::hw::GpuClass::H800,
+        gpus_per_engine: 8,
+        engines: ((32.0 * SCALE) as usize / 8).max(1),
+        max_batch: 64,
+    }];
+    s.reward = RewardDeploy::DedicatedGpus {
+        gpus: 4,
+        exec_s: Dist::lognormal_median(2.0, 0.5),
+    };
+    s.envpool = EnvPoolConfig {
+        reset_failure_p: failure_p,
+        ..EnvPoolConfig::registry_only()
+    };
+    s.iterations = 5;
+    s
+}
+
+pub fn run() {
+    banner("Fig 3", "sync step breakdown: success vs env failures");
+    let clean = sync_driver::run(&scenario(0.0));
+    // Failure iterations: force failures frequent enough that each
+    // 5-iteration window contains several (paper: 1 in 10 at batch 128;
+    // the failure *panel* shows iterations that did fail).
+    let faulty = sync_driver::run(&scenario(0.05));
+
+    let mean = |r: &rollart::sim::ScenarioResult| {
+        let mut acc = rollart::metrics::StepBreakdown::default();
+        for s in &r.steps {
+            acc.add(&s.breakdown);
+        }
+        acc.scale(1.0 / r.steps.len() as f64);
+        acc
+    };
+    let c = mean(&clean);
+    let f = mean(&faulty);
+
+    row(
+        "avg successful step",
+        "365.7s",
+        &secs(c.total()),
+    );
+    row(
+        "generation share (success)",
+        "~54%",
+        &format!("{:.0}%", 100.0 * c.fraction("generation")),
+    );
+    row(
+        "train share (success)",
+        "~23%",
+        &format!("{:.0}%", 100.0 * c.fraction("train")),
+    );
+    row(
+        "env-init share (success)",
+        "~15%",
+        &format!("{:.0}%", 100.0 * c.fraction("env_reset")),
+    );
+    row("avg failure step", "513.3s", &secs(f.total()));
+    row(
+        "failure step vs success",
+        &x(513.3 / 365.7),
+        &x(f.total() / c.total()),
+    );
+    row(
+        "env.reset share of rollout (failure)",
+        "~78%",
+        &format!(
+            "{:.0}%",
+            100.0 * f.env_reset_s / (f.env_reset_s + f.generation_s + f.env_step_s)
+        ),
+    );
+
+    let mut csv = CsvWriter::for_bench(
+        "fig3_step_breakdown",
+        &["variant", "generation", "env_reset", "env_step", "reward", "sync", "train", "total"],
+    );
+    for (name, b) in [("success", &c), ("failure", &f)] {
+        csv.row([
+            name.to_string(),
+            format!("{:.1}", b.generation_s),
+            format!("{:.1}", b.env_reset_s),
+            format!("{:.1}", b.env_step_s),
+            format!("{:.1}", b.reward_s),
+            format!("{:.1}", b.weight_sync_s),
+            format!("{:.1}", b.train_s),
+            format!("{:.1}", b.total()),
+        ]);
+    }
+    csv.flush().unwrap();
+}

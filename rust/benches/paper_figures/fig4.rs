@@ -1,0 +1,88 @@
+//! Fig 4: end-to-end rollout time of a prefill-heavy task (FrozenLake)
+//! and a decode-heavy task (GEM-math) on cost-equivalent 6×H20 vs
+//! 2×H800 across batch sizes.  Paper: H800 cuts FrozenLake rollout to
+//! ~0.53× of H20; H20 cuts GEM-math rollout to 0.49–0.79× of H800.
+
+use crate::support::*;
+use rollart::env::profile::DomainProfile;
+use rollart::env::TaskDomain;
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::proxy::{EngineSim, SimRequest};
+use rollart::rl::TrajectoryId;
+use rollart::simkit::SimRng;
+
+/// Rollout one task's batch on a single engine, turn by turn (batched
+/// turns, as in the paper's single-task measurement), return seconds.
+fn rollout_time(domain: TaskDomain, class: GpuClass, gpus: usize, batch: usize) -> f64 {
+    let profile = DomainProfile::of(domain);
+    let mut rng = SimRng::new(7);
+    let shapes: Vec<_> = (0..batch)
+        .map(|_| profile.sample_trajectory(&mut rng))
+        .collect();
+    let mut engine = EngineSim::new(0, class, gpus, QWEN3_8B.clone(), batch.max(8));
+    let mut total = 0.0;
+    let mut ctx = vec![0.0f64; batch];
+    let max_turns = shapes.iter().map(|s| s.turns()).max().unwrap();
+    for turn in 0..max_turns {
+        for (i, s) in shapes.iter().enumerate() {
+            if turn < s.turns() {
+                let (obs, act) = s.per_turn[turn];
+                let new = if turn == 0 {
+                    s.initial_prompt_tokens + obs
+                } else {
+                    obs
+                };
+                engine.enqueue(SimRequest {
+                    traj: TrajectoryId(i as u64),
+                    domain,
+                    new_tokens: new,
+                    ctx_tokens: ctx[i],
+                    decode_budget: act,
+                });
+                ctx[i] += new + act;
+            }
+        }
+        total += engine.run_to_idle().0;
+    }
+    total
+}
+
+pub fn run() {
+    banner("Fig 4", "rollout time: 6xH20 vs 2xH800 (cost-equivalent)");
+    let batches = [16usize, 32, 64, 128];
+
+    let mut csv = CsvWriter::for_bench(
+        "fig4_hw_affinity",
+        &["task", "batch", "h20x6_s", "h800x2_s", "ratio"],
+    );
+
+    for (task, domain, paper) in [
+        ("FrozenLake [prefill-heavy]", TaskDomain::Game, "H800 ~0.53x of H20"),
+        ("GEM-math  [decode-heavy]", TaskDomain::MathTool, "H20 0.49-0.79x of H800"),
+    ] {
+        println!("  {task}  ({paper})");
+        for &b in &batches {
+            let t20 = rollout_time(domain, GpuClass::H20, 6, b);
+            let t800 = rollout_time(domain, GpuClass::H800, 2, b);
+            let (label, ratio) = if domain == TaskDomain::Game {
+                ("H800/H20", t800 / t20)
+            } else {
+                ("H20/H800", t20 / t800)
+            };
+            println!(
+                "    batch {b:>4}: H20x6 {:>8.1}s  H800x2 {:>8.1}s  {label}={:.2}",
+                t20, t800, ratio
+            );
+            csv.row([
+                task.to_string(),
+                b.to_string(),
+                format!("{t20:.2}"),
+                format!("{t800:.2}"),
+                format!("{ratio:.3}"),
+            ]);
+        }
+    }
+    csv.flush().unwrap();
+}

@@ -1,0 +1,64 @@
+//! Fig 5a: CDFs of env.reset / env.step latency (log-scaled tails).
+//! Fig 5b: how batched env interaction stalls fast environments behind
+//! the slowest one (quantified fully in Fig 11b; here the per-turn
+//! barrier overhead at the default tail).
+
+use crate::support::*;
+use rollart::env::TaskDomain;
+use rollart::envpool::EnvPoolConfig;
+use rollart::metrics::{CsvWriter, Histogram};
+use rollart::simkit::SimRng;
+
+pub fn run() {
+    banner("Fig 5", "environment latency tails + batched-interaction cost");
+    let cfg = EnvPoolConfig::registry_only();
+    let mut rng = SimRng::new(3);
+
+    let mut reset = Histogram::new();
+    let mut step = Histogram::new();
+    for _ in 0..20_000 {
+        reset.record(cfg.sample_reset(0, &mut rng).latency_s);
+        step.record(cfg.sample_step(TaskDomain::Swe, &mut rng));
+    }
+
+    row("env.reset p50", "~seconds", &secs(reset.p50()));
+    row(
+        "env.reset p99.9 (long tail)",
+        "hundreds of seconds",
+        &secs(reset.quantile(0.999)),
+    );
+    row("env.step p50 (SWE)", "sub-second to seconds", &format!("{:.2}s", step.p50()));
+    row(
+        "env.step p99 / p50",
+        ">5x (pronounced tail)",
+        &x(step.p99() / step.p50()),
+    );
+
+    // Fig 5b: expected per-turn barrier overhead for a batch of n —
+    // E[max of n draws] / E[one draw].
+    let n = 128;
+    let mut max_sum = 0.0;
+    let trials = 200;
+    for t in 0..trials {
+        let mut r = rng.stream("5b", t);
+        let m = (0..n)
+            .map(|_| cfg.sample_step(TaskDomain::Swe, &mut r))
+            .fold(0.0, f64::max);
+        max_sum += m;
+    }
+    let mean_max = max_sum / trials as f64;
+    row(
+        "batched barrier: E[max of 128]/E[one]",
+        "fast envs wait for slowest",
+        &x(mean_max / step.mean()),
+    );
+
+    let mut csv = CsvWriter::for_bench("fig5_env_cdf", &["kind", "latency_s", "cdf"]);
+    for (v, q) in reset.cdf(200) {
+        csv.row(["reset".to_string(), format!("{v:.3}"), format!("{q:.4}")]);
+    }
+    for (v, q) in step.cdf(200) {
+        csv.row(["step".to_string(), format!("{v:.3}"), format!("{q:.4}")]);
+    }
+    csv.flush().unwrap();
+}

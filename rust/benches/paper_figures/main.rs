@@ -1,0 +1,88 @@
+//! Paper-figure regeneration harness (`cargo bench --bench paper_figures`).
+//!
+//! One module per table/figure of the ROLLART evaluation (§7, §8); each
+//! prints `paper=` vs `measured=` rows and writes a CSV under
+//! `target/bench-results/`.  Select a subset with
+//! `cargo bench --bench paper_figures -- fig10b table3 ...`.
+//!
+//! Absolute numbers come from the DES over calibrated cost models (our
+//! substrate is a simulator, not the authors' 128-GPU testbed); the
+//! claims checked here are the paper's *shapes*: who wins, by what
+//! factor, where crossovers fall.  EXPERIMENTS.md records the output.
+
+mod fig10;
+mod fig11;
+mod fig12;
+mod fig13;
+mod fig14;
+mod fig15;
+mod fig3;
+mod fig4;
+mod fig5;
+mod fig6;
+mod support;
+mod table3;
+mod table5;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| -> bool {
+        // cargo bench passes --bench; ignore flags.
+        let sel: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
+        sel.is_empty() || sel.iter().any(|a| name.contains(a.as_str()))
+    };
+
+    let t0 = std::time::Instant::now();
+    if want("fig3") {
+        fig3::run();
+    }
+    if want("fig4") {
+        fig4::run();
+    }
+    if want("fig5") {
+        fig5::run();
+    }
+    if want("fig6") {
+        fig6::run();
+    }
+    if want("table3") {
+        table3::run();
+    }
+    if want("fig10a") {
+        fig10::run_a();
+    }
+    if want("fig10b") {
+        fig10::run_b();
+    }
+    if want("fig10c") {
+        fig10::run_c();
+    }
+    if want("fig11a") {
+        fig11::run_a();
+    }
+    if want("fig11b") {
+        fig11::run_b();
+    }
+    if want("fig12") {
+        fig12::run();
+    }
+    if want("fig13") {
+        fig13::run();
+    }
+    if want("fig14a") {
+        fig14::run_a();
+    }
+    if want("fig14b") {
+        fig14::run_b();
+    }
+    if want("table5") {
+        table5::run();
+    }
+    if want("fig15") {
+        fig15::run();
+    }
+    eprintln!(
+        "\npaper_figures done in {:.1}s; CSVs in target/bench-results/",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,33 @@
+//! Shared helpers for the figure benches.
+
+use rollart::sim::Scenario;
+
+/// Global scale of the simulated scenarios relative to the paper's
+/// testbed (batch 512, 128 GPUs).  0.25 keeps every figure's scenario
+/// within seconds of DES wall-clock while preserving the pool ratios.
+pub const SCALE: f64 = 0.25;
+
+/// Banner for one figure/table.
+pub fn banner(id: &str, title: &str) {
+    println!("\n=== {id}: {title} ===");
+}
+
+/// Print one comparison row.
+pub fn row(label: &str, paper: &str, measured: &str) {
+    println!("  {label:<38} paper={paper:<18} measured={measured}");
+}
+
+/// Ratio formatting.
+pub fn x(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+pub fn secs(v: f64) -> String {
+    format!("{v:.1}s")
+}
+
+/// Shrink a scenario further for the heavier sweeps.
+pub fn quick(mut s: Scenario, iterations: usize) -> Scenario {
+    s.iterations = iterations;
+    s
+}

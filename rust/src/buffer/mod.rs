@@ -1,0 +1,242 @@
+//! SampleBuffer: scored-trajectory buffering with bounded staleness.
+//!
+//! The control-plane component behind protocol step ① (`get_batch`) and
+//! the asynchronous bound α (§6.2):
+//!
+//! * scored trajectories are deposited as they finish (trajectory-level
+//!   rollout, R2);
+//! * before a batch is formed, trajectories outside the α-window are
+//!   *eagerly evicted* (aborted), so out-of-order completion cannot
+//!   grow the buffer beyond O(α · E) with E concurrent environments;
+//! * eviction policy is selectable: RollArt checks every turn's version
+//!   (footnote 1), AReaL-style only the start version.
+
+use crate::rl::{Trajectory, Version};
+
+/// Which staleness test evicts (RollArt vs AReaL semantics, §7.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessPolicy {
+    /// Every turn's version must be within the window (RollArt).
+    PerTurn,
+    /// Only the start version is bounded (AReaL re-implementation).
+    AtStart,
+}
+
+/// Buffer statistics (reported by benches and the production trace).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BufferStats {
+    pub deposited: u64,
+    pub evicted_stale: u64,
+    pub consumed: u64,
+    pub peak_len: usize,
+}
+
+/// The scored-trajectory buffer.
+#[derive(Debug)]
+pub struct SampleBuffer {
+    items: Vec<Trajectory>,
+    alpha: u64,
+    policy: StalenessPolicy,
+    stats: BufferStats,
+}
+
+impl SampleBuffer {
+    pub fn new(alpha: u64, policy: StalenessPolicy) -> Self {
+        SampleBuffer {
+            items: Vec::new(),
+            alpha,
+            policy,
+            stats: BufferStats::default(),
+        }
+    }
+
+    pub fn alpha(&self) -> u64 {
+        self.alpha
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn stats(&self) -> BufferStats {
+        self.stats
+    }
+
+    fn fresh(&self, t: &Trajectory, current: Version) -> bool {
+        match self.policy {
+            StalenessPolicy::PerTurn => t.fresh_rollart(current, self.alpha),
+            StalenessPolicy::AtStart => t.fresh_areal(current, self.alpha),
+        }
+    }
+
+    /// Deposit a scored trajectory.  A trajectory already outside the
+    /// window at deposit time is dropped immediately (counted as
+    /// evicted) — the paper aborts such trajectories at the source.
+    pub fn deposit(&mut self, traj: Trajectory, current: Version) -> bool {
+        assert!(traj.is_scored(), "only scored trajectories enter the buffer");
+        self.stats.deposited += 1;
+        if !self.fresh(&traj, current) {
+            self.stats.evicted_stale += 1;
+            return false;
+        }
+        self.items.push(traj);
+        self.stats.peak_len = self.stats.peak_len.max(self.items.len());
+        true
+    }
+
+    /// Eagerly evict stale trajectories at the current version (called
+    /// by `get_batch` before forming a batch, §6.2).
+    pub fn evict_stale(&mut self, current: Version) -> usize {
+        let before = self.items.len();
+        let alpha = self.alpha;
+        let policy = self.policy;
+        self.items.retain(|t| match policy {
+            StalenessPolicy::PerTurn => t.fresh_rollart(current, alpha),
+            StalenessPolicy::AtStart => t.fresh_areal(current, alpha),
+        });
+        let evicted = before - self.items.len();
+        self.stats.evicted_stale += evicted as u64;
+        evicted
+    }
+
+    /// Protocol step ①: take `n` trajectories if available after stale
+    /// eviction; oldest-first (FIFO) to bound trajectory latency.
+    /// Returns `None` when fewer than `n` fresh trajectories are ready
+    /// (the caller blocks / keeps rolling out).
+    pub fn get_batch(&mut self, n: usize, current: Version) -> Option<Vec<Trajectory>> {
+        self.evict_stale(current);
+        if self.items.len() < n {
+            return None;
+        }
+        let batch: Vec<Trajectory> = self.items.drain(..n).collect();
+        self.stats.consumed += n as u64;
+        Some(batch)
+    }
+
+    /// Upper bound on pending trajectories: O(α · E) (§6.2).
+    pub fn capacity_bound(&self, concurrent_envs: usize) -> usize {
+        ((self.alpha + 1) as usize) * concurrent_envs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::TaskDomain;
+    use crate::rl::{TrajectoryId, Turn};
+
+    fn scored(id: u64, start: u64, turn_versions: &[u64]) -> Trajectory {
+        let mut t =
+            Trajectory::new(TrajectoryId(id), TaskDomain::MathTool, Version(start));
+        for &v in turn_versions {
+            t.turns.push(Turn {
+                obs_tokens: vec![0],
+                action_tokens: vec![1],
+                version: Version(v),
+            });
+        }
+        t.reward = Some(1.0);
+        t
+    }
+
+    #[test]
+    fn get_batch_blocks_until_enough() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        b.deposit(scored(0, 5, &[5]), Version(5));
+        assert!(b.get_batch(2, Version(5)).is_none());
+        b.deposit(scored(1, 5, &[5]), Version(5));
+        let batch = b.get_batch(2, Version(5)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = SampleBuffer::new(4, StalenessPolicy::PerTurn);
+        for i in 0..4 {
+            b.deposit(scored(i, 1, &[1]), Version(1));
+        }
+        let batch = b.get_batch(2, Version(1)).unwrap();
+        assert_eq!(batch[0].id.0, 0);
+        assert_eq!(batch[1].id.0, 1);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn eager_eviction_on_get_batch() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        b.deposit(scored(0, 3, &[3]), Version(3)); // stale at v5 (α=1)
+        b.deposit(scored(1, 4, &[4]), Version(4)); // fresh at v5
+        b.deposit(scored(2, 5, &[5]), Version(5));
+        assert_eq!(b.len(), 3);
+        let batch = b.get_batch(2, Version(5)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id.0, 1);
+        assert_eq!(b.stats().evicted_stale, 1);
+    }
+
+    #[test]
+    fn deposit_rejects_already_stale() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        assert!(!b.deposit(scored(0, 1, &[1]), Version(5)));
+        assert!(b.is_empty());
+        assert_eq!(b.stats().evicted_stale, 1);
+    }
+
+    #[test]
+    fn per_turn_vs_at_start_policies_differ() {
+        // Trajectory started fresh (v4) but carries a v3 turn.
+        let t = scored(0, 4, &[3, 4]);
+        let mut rollart = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        let mut areal = SampleBuffer::new(1, StalenessPolicy::AtStart);
+        assert!(!rollart.deposit(t.clone(), Version(5)));
+        assert!(areal.deposit(t, Version(5)));
+    }
+
+    #[test]
+    fn capacity_bound_formula() {
+        let b = SampleBuffer::new(2, StalenessPolicy::PerTurn);
+        assert_eq!(b.capacity_bound(128), 384);
+    }
+
+    #[test]
+    fn buffer_growth_is_bounded_under_version_advance() {
+        // Property: with eviction at every version bump, the buffer
+        // never exceeds the O(α·E) bound even with adversarial deposit
+        // timing across E simulated envs.
+        let e = 16;
+        let alpha = 2;
+        let mut b = SampleBuffer::new(alpha, StalenessPolicy::PerTurn);
+        let mut id = 0;
+        for v in 0..50u64 {
+            let current = Version(v);
+            b.evict_stale(current);
+            // each env deposits one trajectory started up to α back
+            for env in 0..e {
+                let start = v.saturating_sub((env as u64) % (alpha + 1));
+                b.deposit(scored(id, start, &[start]), current);
+                id += 1;
+            }
+            assert!(
+                b.len() <= b.capacity_bound(e),
+                "v{v}: {} > bound {}",
+                b.len(),
+                b.capacity_bound(e)
+            );
+            // trainer consumes what it can
+            let _ = b.get_batch(e, current);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scored")]
+    fn unscored_deposit_panics() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        let t = Trajectory::new(TrajectoryId(9), TaskDomain::Web, Version(0));
+        b.deposit(t, Version(0));
+    }
+}

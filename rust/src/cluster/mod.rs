@@ -1,0 +1,258 @@
+//! Data plane: Worker and Cluster abstractions (§5.1–§5.3).
+//!
+//! A `Worker` is the basic execution unit; a `Cluster` is the proxy /
+//! controller for a role-specific Worker group, realizing the paper's
+//! decorator semantics (Listing 2) in Rust:
+//!
+//! * `execute_all` — the single-controller broadcast path (`register`
+//!   with `execute_all` mode): invoke on every worker, aggregate
+//!   results;
+//! * `route_by_affinity` — the `hw_mapping` path: filter workers whose
+//!   resource class matches the tag's preferred hardware, falling back
+//!   to the whole group when none match (forward progress under
+//!   transient contention, §5.3);
+//! * `serverless_handler` — the `register_serverless` path: replace a
+//!   method's executor with a callable that dispatches to the
+//!   serverless platform.
+
+use crate::env::TaskDomain;
+use crate::hw::GpuClass;
+use crate::resource::{ResourceClass, Role};
+use std::collections::BTreeMap;
+
+/// Metadata every Worker carries (resource binding of §5.2).
+pub trait Worker {
+    fn id(&self) -> u64;
+    fn resource_class(&self) -> ResourceClass;
+}
+
+/// A plain worker record for roles whose state lives elsewhere.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerMeta {
+    pub id: u64,
+    pub class: ResourceClass,
+}
+
+impl Worker for WorkerMeta {
+    fn id(&self) -> u64 {
+        self.id
+    }
+    fn resource_class(&self) -> ResourceClass {
+        self.class
+    }
+}
+
+/// Role-specific worker group + invocation proxy.
+pub struct Cluster<W: Worker> {
+    pub role: Role,
+    workers: Vec<W>,
+    /// Task-domain → GPU class affinity table for this cluster
+    /// (the `hw_mapping` declaration).
+    hw_affinity: BTreeMap<TaskDomain, GpuClass>,
+    /// Round-robin cursor per routing class for fair dispatch.
+    cursors: BTreeMap<ResourceClass, usize>,
+}
+
+impl<W: Worker> Cluster<W> {
+    pub fn new(role: Role, workers: Vec<W>) -> Self {
+        Cluster {
+            role,
+            workers,
+            hw_affinity: BTreeMap::new(),
+            cursors: BTreeMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn workers(&self) -> &[W] {
+        &self.workers
+    }
+
+    /// Declare a domain affinity (Listing 1, lines 17–19).
+    pub fn declare_affinity(&mut self, domain: TaskDomain, class: GpuClass) -> &mut Self {
+        self.hw_affinity.insert(domain, class);
+        self
+    }
+
+    /// `execute_all`: call `f` on every worker and collect results
+    /// (the runtime's broadcast + aggregate path).
+    pub fn execute_all<R>(&mut self, mut f: impl FnMut(&mut W) -> R) -> Vec<R> {
+        self.workers.iter_mut().map(|w| f(w)).collect()
+    }
+
+    /// Workers whose resource class serves `domain` under the declared
+    /// affinity.  Falls back to *all* workers when the preferred class
+    /// has no members (§5.3 forward-progress rule).
+    pub fn route_by_affinity(&self, domain: TaskDomain) -> Vec<&W> {
+        match self.hw_affinity.get(&domain) {
+            Some(&cls) => {
+                let want = ResourceClass::Gpu(cls);
+                let hits: Vec<&W> = self
+                    .workers
+                    .iter()
+                    .filter(|w| w.resource_class() == want)
+                    .collect();
+                if hits.is_empty() {
+                    self.workers.iter().collect()
+                } else {
+                    hits
+                }
+            }
+            None => self.workers.iter().collect(),
+        }
+    }
+
+    /// Pick one worker for `domain`, round-robin within its affinity
+    /// class (the LLMProxy's per-request dispatch uses this).
+    pub fn dispatch(&mut self, domain: TaskDomain) -> Option<u64> {
+        let candidates: Vec<u64> = self
+            .route_by_affinity(domain)
+            .iter()
+            .map(|w| w.id())
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let class_key = self
+            .hw_affinity
+            .get(&domain)
+            .map(|&g| ResourceClass::Gpu(g))
+            .unwrap_or(ResourceClass::CpuSlot);
+        let cur = self.cursors.entry(class_key).or_insert(0);
+        let chosen = candidates[*cur % candidates.len()];
+        *cur += 1;
+        Some(chosen)
+    }
+
+    pub fn worker_mut(&mut self, id: u64) -> Option<&mut W> {
+        self.workers.iter_mut().find(|w| w.id() == id)
+    }
+
+    /// Remove a failed worker from the group (resilience path, §8):
+    /// its work is reassigned by the caller; returns the worker.
+    pub fn remove_worker(&mut self, id: u64) -> Option<W> {
+        let idx = self.workers.iter().position(|w| w.id() == id)?;
+        Some(self.workers.remove(idx))
+    }
+
+    pub fn add_worker(&mut self, w: W) {
+        self.workers.push(w);
+    }
+}
+
+/// The `register_serverless` realization: wraps a handler so calls are
+/// executed by the serverless platform instead of a local worker.
+/// (The DES uses [`crate::serverless::ServerlessPlatform`]; the real
+/// harness uses an in-process executor with the same interface.)
+pub struct ServerlessHandler<In, Out> {
+    pub url: String,
+    handler: Box<dyn FnMut(In) -> Out + Send>,
+    pub calls: u64,
+}
+
+impl<In, Out> ServerlessHandler<In, Out> {
+    pub fn new(url: impl Into<String>, handler: impl FnMut(In) -> Out + Send + 'static) -> Self {
+        ServerlessHandler {
+            url: url.into(),
+            handler: Box::new(handler),
+            calls: 0,
+        }
+    }
+
+    pub fn invoke(&mut self, input: In) -> Out {
+        self.calls += 1;
+        (self.handler)(input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen_cluster() -> Cluster<WorkerMeta> {
+        // 2 H800 + 4 H20 generation workers (Listing 1's heterogeneous
+        // allocation, scaled down).
+        let mut workers = Vec::new();
+        for id in 0..2 {
+            workers.push(WorkerMeta {
+                id,
+                class: ResourceClass::Gpu(GpuClass::H800),
+            });
+        }
+        for id in 2..6 {
+            workers.push(WorkerMeta {
+                id,
+                class: ResourceClass::Gpu(GpuClass::H20),
+            });
+        }
+        Cluster::new(Role::ActorGen, workers)
+    }
+
+    #[test]
+    fn execute_all_broadcasts() {
+        let mut c = gen_cluster();
+        let ids = c.execute_all(|w| w.id * 10);
+        assert_eq!(ids, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn affinity_routes_to_declared_class() {
+        let mut c = gen_cluster();
+        c.declare_affinity(TaskDomain::Game, GpuClass::H800);
+        let routed = c.route_by_affinity(TaskDomain::Game);
+        assert_eq!(routed.len(), 2);
+        assert!(routed
+            .iter()
+            .all(|w| w.resource_class() == ResourceClass::Gpu(GpuClass::H800)));
+    }
+
+    #[test]
+    fn undeclared_domain_uses_all_workers() {
+        let c = gen_cluster();
+        assert_eq!(c.route_by_affinity(TaskDomain::MathTool).len(), 6);
+    }
+
+    #[test]
+    fn missing_class_falls_back_to_all() {
+        let mut c = gen_cluster();
+        // declare affinity to a class with no members after removal
+        c.declare_affinity(TaskDomain::Swe, GpuClass::H800);
+        c.remove_worker(0);
+        c.remove_worker(1);
+        assert_eq!(c.route_by_affinity(TaskDomain::Swe).len(), 4);
+    }
+
+    #[test]
+    fn dispatch_round_robins_within_class() {
+        let mut c = gen_cluster();
+        c.declare_affinity(TaskDomain::Game, GpuClass::H800);
+        let picks: Vec<u64> = (0..4).map(|_| c.dispatch(TaskDomain::Game).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn worker_failure_and_replacement() {
+        let mut c = gen_cluster();
+        let dead = c.remove_worker(3).unwrap();
+        assert_eq!(c.len(), 5);
+        assert!(c.worker_mut(3).is_none());
+        c.add_worker(dead);
+        assert_eq!(c.len(), 6);
+    }
+
+    #[test]
+    fn serverless_handler_counts_calls() {
+        let mut h = ServerlessHandler::new("fc://reward", |x: f64| x * 2.0);
+        assert_eq!(h.invoke(2.0), 4.0);
+        assert_eq!(h.invoke(3.0), 6.0);
+        assert_eq!(h.calls, 2);
+        assert_eq!(h.url, "fc://reward");
+    }
+}

@@ -1,0 +1,194 @@
+//! Launcher configuration: JSON config files → [`Scenario`].
+//!
+//! The `rollart` binary accepts `--config path.json` with the fields
+//! below (all optional; defaults mirror the paper's §7.1 setup scaled
+//! down).  This is the user-facing declarative surface of the resource
+//! plane — model, pools, α, affinity, reward deployment.
+
+use crate::buffer::StalenessPolicy;
+use crate::env::TaskDomain;
+use crate::envpool::EnvPoolConfig;
+use crate::hw::GpuClass;
+use crate::llm::{LlmSpec, QWEN3_14B, QWEN3_32B, QWEN3_8B, TINY_E2E};
+use crate::sim::{EnginePool, Mode, RewardDeploy, Scenario};
+use crate::simkit::dist::Dist;
+use crate::util::json::Json;
+
+/// Look up a model by name.
+pub fn model_by_name(name: &str) -> Option<LlmSpec> {
+    match name.to_lowercase().as_str() {
+        "qwen3-8b" | "8b" => Some(QWEN3_8B.clone()),
+        "qwen3-14b" | "14b" => Some(QWEN3_14B.clone()),
+        "qwen3-32b" | "32b" => Some(QWEN3_32B.clone()),
+        "tiny" | "tiny-e2e" => Some(TINY_E2E.clone()),
+        _ => None,
+    }
+}
+
+pub fn mode_by_name(name: &str) -> Option<Mode> {
+    match name.to_lowercase().as_str() {
+        "sync" => Some(Mode::Sync),
+        "sync+" | "syncplus" => Some(Mode::SyncPlus),
+        "one-off" | "oneoff" => Some(Mode::OneOff),
+        "areal" => Some(Mode::AReaL),
+        "rollart" => Some(Mode::RollArt),
+        _ => None,
+    }
+}
+
+pub fn domain_by_name(name: &str) -> Option<TaskDomain> {
+    TaskDomain::ALL.into_iter().find(|d| d.name() == name)
+}
+
+/// Parse a scenario from JSON text.  Unknown fields are ignored;
+/// missing fields take the scaled default.
+pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let model = j
+        .get("model")
+        .and_then(|m| m.as_str())
+        .map(|n| model_by_name(n).ok_or(format!("unknown model {n}")))
+        .transpose()?
+        .unwrap_or_else(|| QWEN3_8B.clone());
+    let scale = j.get("scale").and_then(|s| s.as_f64()).unwrap_or(0.25);
+    let mut s = Scenario::rollart_default(model, scale);
+
+    if let Some(m) = j.get("mode").and_then(|m| m.as_str()) {
+        s.mode = mode_by_name(m).ok_or(format!("unknown mode {m}"))?;
+    }
+    if let Some(b) = j.get("batch_size").and_then(|v| v.as_usize()) {
+        s.batch_size = b;
+    }
+    if let Some(g) = j.get("group_size").and_then(|v| v.as_usize()) {
+        s.group_size = g;
+    }
+    if let Some(r) = j.get("redundancy").and_then(|v| v.as_usize()) {
+        s.redundancy = r;
+    }
+    if let Some(a) = j.get("alpha").and_then(|v| v.as_usize()) {
+        s.alpha = a as u64;
+    }
+    if let Some(p) = j.get("staleness").and_then(|v| v.as_str()) {
+        s.staleness = match p {
+            "per_turn" => StalenessPolicy::PerTurn,
+            "at_start" => StalenessPolicy::AtStart,
+            other => return Err(format!("unknown staleness {other}")),
+        };
+    }
+    if let Some(t) = j.get("train_gpus").and_then(|v| v.as_usize()) {
+        s.train_gpus = t;
+    }
+    if let Some(i) = j.get("iterations").and_then(|v| v.as_usize()) {
+        s.iterations = i;
+    }
+    if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+        s.seed = v as u64;
+    }
+    if let Some(b) = j.get("affinity_routing").and_then(|v| v.as_bool()) {
+        s.affinity_routing = b;
+    }
+    if let Some(b) = j.get("async_weight_sync").and_then(|v| v.as_bool()) {
+        s.async_weight_sync = b;
+    }
+    if let Some(c) = j.get("envpool").and_then(|v| v.as_str()) {
+        s.envpool = match c {
+            "registry_only" => EnvPoolConfig::registry_only(),
+            "multi_tier" => EnvPoolConfig::multi_tier(),
+            other => return Err(format!("unknown envpool {other}")),
+        };
+    }
+    if let Some(mix) = j.get("task_mix").and_then(|v| v.as_arr()) {
+        let mut domains = Vec::new();
+        for d in mix {
+            let name = d.as_str().ok_or("task_mix entries must be strings")?;
+            domains.push(domain_by_name(name).ok_or(format!("unknown domain {name}"))?);
+        }
+        if !domains.is_empty() {
+            s.task_mix = domains;
+        }
+    }
+    if let Some(pools) = j.get("gen_pools").and_then(|v| v.as_arr()) {
+        let mut out = Vec::new();
+        for p in pools {
+            let class = match p.get("class").and_then(|c| c.as_str()) {
+                Some("H800" | "h800") => GpuClass::H800,
+                Some("H20" | "h20") => GpuClass::H20,
+                other => return Err(format!("bad gpu class {other:?}")),
+            };
+            out.push(EnginePool {
+                class,
+                gpus_per_engine: p.get("gpus_per_engine").and_then(|v| v.as_usize()).unwrap_or(8),
+                engines: p.get("engines").and_then(|v| v.as_usize()).unwrap_or(1),
+                max_batch: p.get("max_batch").and_then(|v| v.as_usize()).unwrap_or(64),
+            });
+        }
+        if !out.is_empty() {
+            s.gen_pools = out;
+        }
+    }
+    if let Some(r) = j.get("reward") {
+        let kind = r.get("kind").and_then(|k| k.as_str()).unwrap_or("serverless");
+        let exec = r.get("exec_s").and_then(|v| v.as_f64()).unwrap_or(1.0);
+        s.reward = match kind {
+            "serverless" => RewardDeploy::Serverless {
+                exec_s: Dist::lognormal_median(exec, 0.6),
+            },
+            "dedicated" => RewardDeploy::DedicatedGpus {
+                gpus: r.get("gpus").and_then(|v| v.as_usize()).unwrap_or(4),
+                exec_s: Dist::lognormal_median(exec, 0.6),
+            },
+            other => return Err(format!("unknown reward kind {other}")),
+        };
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config_defaults() {
+        let s = scenario_from_json("{}").unwrap();
+        assert_eq!(s.mode, Mode::RollArt);
+        assert_eq!(s.model.name, "Qwen3-8B");
+        assert!(s.batch_size > 0);
+    }
+
+    #[test]
+    fn full_config_round_trip() {
+        let text = r#"{
+            "model": "qwen3-32b", "mode": "areal", "scale": 0.1,
+            "batch_size": 64, "group_size": 8, "alpha": 2,
+            "staleness": "at_start", "iterations": 4, "seed": 9,
+            "affinity_routing": false, "envpool": "multi_tier",
+            "task_mix": ["swe", "math_tool"],
+            "gen_pools": [{"class": "H20", "engines": 2, "gpus_per_engine": 4}],
+            "reward": {"kind": "dedicated", "gpus": 2, "exec_s": 3.0}
+        }"#;
+        let s = scenario_from_json(text).unwrap();
+        assert_eq!(s.model.name, "Qwen3-32B");
+        assert_eq!(s.mode, Mode::AReaL);
+        assert_eq!(s.batch_size, 64);
+        assert_eq!(s.alpha, 2);
+        assert_eq!(s.task_mix, vec![TaskDomain::Swe, TaskDomain::MathTool]);
+        assert_eq!(s.gen_pools.len(), 1);
+        assert_eq!(s.gen_pools[0].class, GpuClass::H20);
+        assert!(matches!(s.reward, RewardDeploy::DedicatedGpus { gpus: 2, .. }));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(scenario_from_json(r#"{"model": "gpt-5"}"#).is_err());
+        assert!(scenario_from_json(r#"{"mode": "warp"}"#).is_err());
+        assert!(scenario_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn lookups() {
+        assert_eq!(model_by_name("8b").unwrap().name, "Qwen3-8B");
+        assert_eq!(mode_by_name("RollArt"), Some(Mode::RollArt));
+        assert_eq!(domain_by_name("game"), Some(TaskDomain::Game));
+        assert!(domain_by_name("nope").is_none());
+    }
+}

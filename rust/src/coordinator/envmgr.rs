@@ -1,0 +1,238 @@
+//! EnvManager: per-trajectory environment lifecycle (§6.1).
+//!
+//! "Each EnvManager is a lightweight controller that manages the
+//! lifecycle of a single environment to collect trajectories" — here as
+//! a pure state machine over a sampled [`TrajectoryShape`], so the DES
+//! driver owns all timing.  The real harness ([`crate::exec`]) runs the
+//! same lifecycle against live environments and the PJRT engine.
+
+use crate::env::profile::TrajectoryShape;
+use crate::proxy::SimRequest;
+use crate::rl::{Trajectory, TrajectoryId, Turn, Version};
+
+/// Lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvPhase {
+    /// Waiting for `env.reset` (container init) to finish.
+    Resetting,
+    /// Generation request in flight at the LLMProxy.
+    Generating,
+    /// `env.step` executing on the CPU cluster.
+    Stepping,
+    /// Trajectory complete (awaiting reward / deposited).
+    Done,
+    /// Aborted (stale or redundant).
+    Aborted,
+}
+
+/// What the driver must do next after an event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EnvAction {
+    /// Send this generation request to the LLMProxy.
+    Generate(SimRequest),
+    /// Run `env.step` (driver samples its latency).
+    StepEnv,
+    /// Trajectory finished: dispatch to reward.
+    Complete,
+}
+
+/// Per-trajectory controller over a pre-sampled workload shape.
+#[derive(Clone, Debug)]
+pub struct EnvManagerSim {
+    pub id: TrajectoryId,
+    pub traj: Trajectory,
+    shape: TrajectoryShape,
+    turn_idx: usize,
+    pub phase: EnvPhase,
+    /// Context tokens accumulated so far (prefix-cached).
+    ctx: f64,
+}
+
+impl EnvManagerSim {
+    pub fn new(
+        id: TrajectoryId,
+        shape: TrajectoryShape,
+        version: Version,
+        group: u64,
+        now: f64,
+    ) -> Self {
+        let mut traj = Trajectory::new(id, shape.domain, version);
+        traj.group = group;
+        traj.started_at = now;
+        EnvManagerSim {
+            id,
+            traj,
+            shape,
+            turn_idx: 0,
+            phase: EnvPhase::Resetting,
+            ctx: 0.0,
+        }
+    }
+
+    pub fn domain(&self) -> crate::env::TaskDomain {
+        self.shape.domain
+    }
+
+    pub fn turns_total(&self) -> usize {
+        self.shape.turns()
+    }
+
+    pub fn turns_done(&self) -> usize {
+        self.turn_idx
+    }
+
+    fn gen_request(&self, version: Version) -> SimRequest {
+        let (obs, act) = self.shape.per_turn[self.turn_idx];
+        let new_tokens = if self.turn_idx == 0 {
+            self.shape.initial_prompt_tokens + obs
+        } else {
+            obs
+        };
+        let _ = version;
+        SimRequest {
+            traj: self.id,
+            domain: self.shape.domain,
+            new_tokens,
+            ctx_tokens: self.ctx,
+            decode_budget: act,
+        }
+    }
+
+    /// `env.reset` finished: issue the first generation request.
+    pub fn on_reset_done(&mut self, version: Version) -> EnvAction {
+        assert_eq!(self.phase, EnvPhase::Resetting);
+        self.phase = EnvPhase::Generating;
+        EnvAction::Generate(self.gen_request(version))
+    }
+
+    /// Generation for the current turn finished under `version`:
+    /// record the turn and run the environment.
+    pub fn on_generation_done(&mut self, version: Version) -> EnvAction {
+        assert_eq!(self.phase, EnvPhase::Generating);
+        let (obs, act) = self.shape.per_turn[self.turn_idx];
+        let new_tokens = if self.turn_idx == 0 {
+            self.shape.initial_prompt_tokens + obs
+        } else {
+            obs
+        };
+        self.traj.turns.push(Turn {
+            obs_tokens: vec![0; new_tokens as usize],
+            action_tokens: vec![0; act as usize],
+            version,
+        });
+        self.ctx += new_tokens + act;
+        self.phase = EnvPhase::Stepping;
+        EnvAction::StepEnv
+    }
+
+    /// `env.step` finished: next turn or complete.
+    pub fn on_env_step_done(&mut self, version: Version, now: f64) -> EnvAction {
+        assert_eq!(self.phase, EnvPhase::Stepping);
+        self.turn_idx += 1;
+        if self.turn_idx >= self.shape.turns() {
+            self.phase = EnvPhase::Done;
+            self.traj.finished_at = Some(now);
+            EnvAction::Complete
+        } else {
+            self.phase = EnvPhase::Generating;
+            EnvAction::Generate(self.gen_request(version))
+        }
+    }
+
+    /// Abort (stale under α, or redundant after its group completed).
+    pub fn abort(&mut self) {
+        self.phase = EnvPhase::Aborted;
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.phase, EnvPhase::Done | EnvPhase::Aborted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::profile::DomainProfile;
+    use crate::env::TaskDomain;
+    use crate::simkit::SimRng;
+
+    fn mgr(domain: TaskDomain, seed: u64) -> EnvManagerSim {
+        let mut rng = SimRng::new(seed);
+        let shape = DomainProfile::of(domain).sample_trajectory(&mut rng);
+        EnvManagerSim::new(TrajectoryId(1), shape, Version(3), 0, 0.0)
+    }
+
+    #[test]
+    fn full_lifecycle_runs_all_turns() {
+        let mut m = mgr(TaskDomain::Web, 0);
+        let total = m.turns_total();
+        let mut action = m.on_reset_done(Version(3));
+        let mut gens = 0;
+        loop {
+            match action {
+                EnvAction::Generate(req) => {
+                    gens += 1;
+                    assert_eq!(req.traj, TrajectoryId(1));
+                    action = m.on_generation_done(Version(3));
+                }
+                EnvAction::StepEnv => {
+                    action = m.on_env_step_done(Version(3), 1.0);
+                }
+                EnvAction::Complete => break,
+            }
+        }
+        assert_eq!(gens, total);
+        assert_eq!(m.phase, EnvPhase::Done);
+        assert_eq!(m.traj.turns.len(), total);
+        assert_eq!(m.traj.finished_at, Some(1.0));
+    }
+
+    #[test]
+    fn first_request_includes_initial_prompt() {
+        let mut m = mgr(TaskDomain::Swe, 1);
+        let EnvAction::Generate(req) = m.on_reset_done(Version(0)) else {
+            panic!()
+        };
+        assert!(req.new_tokens >= 1200.0, "{}", req.new_tokens);
+        assert_eq!(req.ctx_tokens, 0.0);
+    }
+
+    #[test]
+    fn context_grows_across_turns() {
+        let mut m = mgr(TaskDomain::Web, 2);
+        let EnvAction::Generate(r1) = m.on_reset_done(Version(0)) else {
+            panic!()
+        };
+        m.on_generation_done(Version(0));
+        let EnvAction::Generate(r2) = m.on_env_step_done(Version(0), 0.5) else {
+            panic!()
+        };
+        assert_eq!(r2.ctx_tokens, r1.new_tokens + r1.decode_budget);
+        assert!(r2.new_tokens < r1.new_tokens, "no initial prompt on turn 2");
+    }
+
+    #[test]
+    fn version_recorded_per_turn() {
+        // Mid-trajectory weight update: turns carry distinct versions —
+        // the input to RollArt's per-turn staleness test.
+        let mut m = mgr(TaskDomain::Web, 3);
+        m.on_reset_done(Version(0));
+        m.on_generation_done(Version(0));
+        if let EnvAction::Generate(_) = m.on_env_step_done(Version(1), 0.1) {
+            m.on_generation_done(Version(1));
+        }
+        assert_eq!(m.traj.turns[0].version, Version(0));
+        assert_eq!(m.traj.turns[1].version, Version(1));
+        assert_eq!(m.traj.min_version(), Version(0));
+        assert_eq!(m.traj.max_version(), Version(1));
+    }
+
+    #[test]
+    fn abort_is_terminal() {
+        let mut m = mgr(TaskDomain::Game, 4);
+        m.on_reset_done(Version(0));
+        m.abort();
+        assert!(m.is_terminal());
+        assert_eq!(m.phase, EnvPhase::Aborted);
+    }
+}

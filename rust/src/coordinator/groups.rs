@@ -1,0 +1,219 @@
+//! GRPO group tracking + redundant environment rollouts (§6.3).
+//!
+//! GRPO needs G completed trajectories per prompt group.  RollArt may
+//! launch G + R environments per group ("redundant environment
+//! rollouts"); once G trajectories finish, the remaining in-flight
+//! members are aborted — slow or failed environments never hold a
+//! group hostage (Fig 14b: up to 1.62× rollout speedup).
+
+use crate::rl::TrajectoryId;
+use std::collections::BTreeMap;
+
+/// What a completion means for its group.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GroupOutcome {
+    /// Group still needs more completions.
+    Pending,
+    /// This completion filled the group: abort these in-flight members.
+    Filled { abort: Vec<TrajectoryId> },
+    /// Completion arrived after the group was already filled (racing
+    /// abort); the trajectory is surplus and must be dropped.
+    Surplus,
+}
+
+#[derive(Clone, Debug)]
+struct Group {
+    need: usize,
+    done: Vec<TrajectoryId>,
+    inflight: Vec<TrajectoryId>,
+    filled: bool,
+}
+
+/// Tracks all groups of one training iteration.
+#[derive(Clone, Debug, Default)]
+pub struct GroupTracker {
+    groups: BTreeMap<u64, Group>,
+    /// trajectory → group reverse index.
+    index: BTreeMap<TrajectoryId, u64>,
+}
+
+impl GroupTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a group needing `need` completions.
+    pub fn add_group(&mut self, group: u64, need: usize) {
+        assert!(need > 0);
+        let prev = self.groups.insert(
+            group,
+            Group {
+                need,
+                done: Vec::new(),
+                inflight: Vec::new(),
+                filled: false,
+            },
+        );
+        assert!(prev.is_none(), "group {group} declared twice");
+    }
+
+    /// Register a launched trajectory (including redundant ones).
+    pub fn launch(&mut self, group: u64, traj: TrajectoryId) {
+        let g = self.groups.get_mut(&group).expect("unknown group");
+        g.inflight.push(traj);
+        self.index.insert(traj, group);
+    }
+
+    /// Redundancy of a group: launched − needed.
+    pub fn redundancy(&self, group: u64) -> usize {
+        let g = &self.groups[&group];
+        (g.inflight.len() + g.done.len()).saturating_sub(g.need)
+    }
+
+    /// A trajectory failed (env failure / stale abort): remove it from
+    /// its group so redundancy accounting stays correct.  Returns true
+    /// if it was tracked.
+    pub fn fail(&mut self, traj: TrajectoryId) -> bool {
+        let Some(group) = self.index.remove(&traj) else {
+            return false;
+        };
+        let g = self.groups.get_mut(&group).unwrap();
+        g.inflight.retain(|&t| t != traj);
+        true
+    }
+
+    /// A trajectory completed.  Returns the group outcome.
+    pub fn complete(&mut self, traj: TrajectoryId) -> GroupOutcome {
+        let Some(&group) = self.index.get(&traj) else {
+            return GroupOutcome::Surplus;
+        };
+        let g = self.groups.get_mut(&group).unwrap();
+        if g.filled {
+            g.inflight.retain(|&t| t != traj);
+            self.index.remove(&traj);
+            return GroupOutcome::Surplus;
+        }
+        g.inflight.retain(|&t| t != traj);
+        g.done.push(traj);
+        if g.done.len() >= g.need {
+            g.filled = true;
+            let abort = std::mem::take(&mut g.inflight);
+            for t in &abort {
+                self.index.remove(t);
+            }
+            GroupOutcome::Filled { abort }
+        } else {
+            GroupOutcome::Pending
+        }
+    }
+
+    /// Ids of a filled group's kept members.
+    pub fn members(&self, group: u64) -> &[TrajectoryId] {
+        &self.groups[&group].done
+    }
+
+    pub fn is_filled(&self, group: u64) -> bool {
+        self.groups[&group].filled
+    }
+
+    /// All groups filled?
+    pub fn all_filled(&self) -> bool {
+        self.groups.values().all(|g| g.filled)
+    }
+
+    /// Groups still missing completions (diagnostics).
+    pub fn pending_groups(&self) -> usize {
+        self.groups.values().filter(|g| !g.filled).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u64) -> TrajectoryId {
+        TrajectoryId(n)
+    }
+
+    #[test]
+    fn group_fills_at_need_and_aborts_stragglers() {
+        let mut t = GroupTracker::new();
+        t.add_group(0, 2);
+        for i in 0..4 {
+            t.launch(0, id(i)); // redundancy 2
+        }
+        assert_eq!(t.redundancy(0), 2);
+        assert_eq!(t.complete(id(1)), GroupOutcome::Pending);
+        match t.complete(id(3)) {
+            GroupOutcome::Filled { abort } => {
+                assert_eq!(abort, vec![id(0), id(2)]);
+            }
+            o => panic!("{o:?}"),
+        }
+        assert!(t.is_filled(0));
+        assert_eq!(t.members(0), &[id(1), id(3)]);
+    }
+
+    #[test]
+    fn surplus_after_filled() {
+        let mut t = GroupTracker::new();
+        t.add_group(0, 1);
+        t.launch(0, id(0));
+        t.launch(0, id(1));
+        assert!(matches!(t.complete(id(0)), GroupOutcome::Filled { .. }));
+        // id(1) completes anyway (abort raced): surplus, dropped.
+        assert_eq!(t.complete(id(1)), GroupOutcome::Surplus);
+    }
+
+    #[test]
+    fn failure_removes_from_group() {
+        let mut t = GroupTracker::new();
+        t.add_group(0, 2);
+        t.launch(0, id(0));
+        t.launch(0, id(1));
+        t.launch(0, id(2));
+        assert!(t.fail(id(0)));
+        assert!(!t.fail(id(0)), "double-fail is a no-op");
+        assert_eq!(t.complete(id(1)), GroupOutcome::Pending);
+        assert!(matches!(t.complete(id(2)), GroupOutcome::Filled { .. }));
+    }
+
+    #[test]
+    fn group_can_starve_without_redundancy() {
+        // Without redundancy, a failure leaves the group unfillable —
+        // the scheduler must relaunch (this is what R2+redundancy buy).
+        let mut t = GroupTracker::new();
+        t.add_group(0, 2);
+        t.launch(0, id(0));
+        t.launch(0, id(1));
+        t.fail(id(0));
+        t.complete(id(1));
+        assert!(!t.all_filled());
+        assert_eq!(t.pending_groups(), 1);
+        // relaunch path
+        t.launch(0, id(7));
+        assert!(matches!(t.complete(id(7)), GroupOutcome::Filled { .. }));
+        assert!(t.all_filled());
+    }
+
+    #[test]
+    fn multiple_groups_independent() {
+        let mut t = GroupTracker::new();
+        t.add_group(0, 1);
+        t.add_group(1, 1);
+        t.launch(0, id(0));
+        t.launch(1, id(1));
+        t.complete(id(0));
+        assert!(t.is_filled(0));
+        assert!(!t.is_filled(1));
+        assert_eq!(t.pending_groups(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "declared twice")]
+    fn duplicate_group_panics() {
+        let mut t = GroupTracker::new();
+        t.add_group(0, 1);
+        t.add_group(0, 1);
+    }
+}

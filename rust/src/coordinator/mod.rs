@@ -1,0 +1,23 @@
+//! Control plane: trajectory-level rollout orchestration and the
+//! asynchronous training protocol (§6).
+//!
+//! The control plane is *system-managed*: users declare nothing here.
+//! Three pieces:
+//!
+//! * [`EnvManagerSim`] — the per-trajectory lifecycle state machine of
+//!   §6.1 (reset → {generate ↔ env.step}* → reward), expressed as a
+//!   pure transition function the harnesses drive with events;
+//! * [`GroupTracker`] — GRPO group accounting with *redundant
+//!   environment rollouts* (§6.3): launch more environments than the
+//!   group needs, keep the first finishers, abort the stragglers;
+//! * [`SyncProtocol`] — the six-step weight-synchronization sequence of
+//!   §6.2 (get_batch → suspend → update → resume → recomp → train),
+//!   with the time accounting that decides what overlaps what.
+
+mod envmgr;
+mod groups;
+mod sync;
+
+pub use envmgr::{EnvAction, EnvManagerSim, EnvPhase};
+pub use groups::{GroupOutcome, GroupTracker};
+pub use sync::{IterationCost, SyncProtocol};

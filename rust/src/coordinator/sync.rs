@@ -1,0 +1,138 @@
+//! The six-step weight-synchronization protocol (§6.2, Fig 9).
+//!
+//! Per iteration: ① `get_batch` (block until the SampleBuffer holds a
+//! batch) → ② `suspend` the LLMProxy → ③ `update` inference weights →
+//! ④ `resume` → ⑤ `recomp` in-flight KV caches → ⑥ `train_step`
+//! overlapped with the resumed rollout.
+//!
+//! [`SyncProtocol::iteration`] computes one iteration's time accounting
+//! from the component costs; the DES drivers feed it measured values,
+//! and the Fig 10/13/14 benches compare the resulting schedules across
+//! baselines.
+
+/// Component costs of one iteration, as measured by a driver.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterationCost {
+    /// Time spent blocked in ① waiting for the batch (rollout-bound).
+    pub get_batch_wait_s: f64,
+    /// Exposed weight-update cost at ③ (Mooncake exposed pull + GPU
+    /// load, or full transfer for synchronous schemes).
+    pub weight_update_s: f64,
+    /// KV recomputation for in-flight trajectories at ⑤.
+    pub recompute_s: f64,
+    /// The training step at ⑥.
+    pub train_s: f64,
+    /// Suspend/resume command round-trips (small).
+    pub command_s: f64,
+}
+
+/// Scheduling policy: what overlaps what.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncProtocol {
+    /// RollArt (Fig 9): training overlaps the resumed rollout; only
+    /// suspend → update → resume → recomp is exposed to rollout, and
+    /// the *next* get_batch wait absorbs the train step.
+    AsyncOverlapped,
+    /// Synchronous: every component serializes (Fig 2-Left).
+    Synchronous,
+}
+
+impl SyncProtocol {
+    /// Wall-clock the iteration adds to the pipeline's critical path.
+    pub fn iteration(&self, c: &IterationCost) -> f64 {
+        match self {
+            SyncProtocol::Synchronous => {
+                // rollout wait + transfer + recomp + training, serial.
+                c.get_batch_wait_s
+                    + c.command_s
+                    + c.weight_update_s
+                    + c.recompute_s
+                    + c.train_s
+            }
+            SyncProtocol::AsyncOverlapped => {
+                // Training overlaps the next rollout window; it only
+                // extends the critical path when it outlasts that
+                // window (rollout-bound vs train-bound regimes).
+                let exposed_sync = c.command_s + c.weight_update_s + c.recompute_s;
+                let rollout_window = c.get_batch_wait_s;
+                exposed_sync + rollout_window.max(c.train_s)
+            }
+        }
+    }
+
+    /// GPU "dependency bubble" time per iteration (Fig 2): how long
+    /// rollout GPUs sit idle.
+    pub fn rollout_bubble(&self, c: &IterationCost) -> f64 {
+        match self {
+            SyncProtocol::Synchronous => {
+                c.command_s + c.weight_update_s + c.recompute_s + c.train_s
+            }
+            SyncProtocol::AsyncOverlapped => {
+                c.command_s + c.weight_update_s + c.recompute_s
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> IterationCost {
+        IterationCost {
+            get_batch_wait_s: 200.0,
+            weight_update_s: 30.0,
+            recompute_s: 5.0,
+            train_s: 80.0,
+            command_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn async_hides_training_in_rollout_window() {
+        let c = cost();
+        let sync = SyncProtocol::Synchronous.iteration(&c);
+        let asyn = SyncProtocol::AsyncOverlapped.iteration(&c);
+        assert_eq!(sync, 315.5);
+        // async: 35.5 exposed + max(200, 80) = 235.5
+        assert!((asyn - 235.5).abs() < 1e-9, "{asyn}");
+        assert!(asyn < sync);
+    }
+
+    #[test]
+    fn train_bound_regime_exposes_training() {
+        // When training outlasts the rollout window (small rollout
+        // fleet), async degrades gracefully to train-bound.
+        let c = IterationCost {
+            get_batch_wait_s: 10.0,
+            train_s: 100.0,
+            ..cost()
+        };
+        let asyn = SyncProtocol::AsyncOverlapped.iteration(&c);
+        assert!((asyn - (35.5 + 100.0)).abs() < 1e-9, "{asyn}");
+    }
+
+    #[test]
+    fn bubbles_shrink_under_async() {
+        let c = cost();
+        assert!(
+            SyncProtocol::AsyncOverlapped.rollout_bubble(&c)
+                < SyncProtocol::Synchronous.rollout_bubble(&c)
+        );
+        // async bubble excludes exactly the training time
+        assert!(
+            (SyncProtocol::Synchronous.rollout_bubble(&c)
+                - SyncProtocol::AsyncOverlapped.rollout_bubble(&c)
+                - c.train_s)
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn zero_cost_iteration_is_zero() {
+        let c = IterationCost::default();
+        assert_eq!(SyncProtocol::Synchronous.iteration(&c), 0.0);
+        assert_eq!(SyncProtocol::AsyncOverlapped.iteration(&c), 0.0);
+    }
+}

@@ -1,0 +1,319 @@
+//! FrozenLake: the paper's prefill-heavy game environment [9].
+//!
+//! A real grid-world implementation (not a stub): N×N board with start,
+//! holes and a goal; optional slippery dynamics.  Observations render
+//! the full board each turn, so context grows with every move — exactly
+//! the many-turns / growing-history pattern that makes the domain
+//! prefill-heavy (§2.1, Table 1: 20–100 turns).
+
+use super::{Environment, Observation, TaskDomain};
+use crate::simkit::SimRng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cell {
+    Frozen,
+    Hole,
+    Goal,
+    Start,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    Left,
+    Down,
+    Right,
+    Up,
+}
+
+impl Action {
+    /// Parse an action from free-form model output: first direction
+    /// keyword (or single-letter alias) wins; unparseable text is a
+    /// no-op handled by the caller.
+    pub fn parse(text: &str) -> Option<Action> {
+        let lower = text.to_lowercase();
+        for word in lower.split(|c: char| !c.is_alphanumeric()) {
+            match word {
+                "left" | "l" => return Some(Action::Left),
+                "down" | "d" => return Some(Action::Down),
+                "right" | "r" => return Some(Action::Right),
+                "up" | "u" => return Some(Action::Up),
+                _ => {}
+            }
+        }
+        None
+    }
+
+    fn delta(self) -> (i32, i32) {
+        match self {
+            Action::Left => (0, -1),
+            Action::Down => (1, 0),
+            Action::Right => (0, 1),
+            Action::Up => (-1, 0),
+        }
+    }
+}
+
+pub struct FrozenLake {
+    n: usize,
+    slippery: bool,
+    grid: Vec<Cell>,
+    pos: (i32, i32),
+    turns: usize,
+    done: bool,
+    rng: SimRng,
+}
+
+impl FrozenLake {
+    pub fn new(n: usize, slippery: bool) -> Self {
+        assert!(n >= 3);
+        FrozenLake {
+            n,
+            slippery,
+            grid: vec![Cell::Frozen; n * n],
+            pos: (0, 0),
+            turns: 0,
+            done: true,
+            rng: SimRng::new(0),
+        }
+    }
+
+    fn at(&self, r: i32, c: i32) -> Cell {
+        self.grid[r as usize * self.n + c as usize]
+    }
+
+    /// Generate a solvable board: random holes, then verify a path
+    /// exists with BFS; retry until solvable.
+    fn gen_board(&mut self, seed: u64) {
+        let n = self.n;
+        let mut attempt = 0u64;
+        loop {
+            let mut rng = SimRng::new(seed.wrapping_add(attempt * 0x9e37));
+            let mut grid = vec![Cell::Frozen; n * n];
+            grid[0] = Cell::Start;
+            grid[n * n - 1] = Cell::Goal;
+            let holes = (n * n) / 5;
+            let mut placed = 0;
+            while placed < holes {
+                let i = rng.below(n * n);
+                if grid[i] == Cell::Frozen {
+                    grid[i] = Cell::Hole;
+                    placed += 1;
+                }
+            }
+            if Self::solvable(&grid, n) {
+                self.grid = grid;
+                self.rng = rng;
+                return;
+            }
+            attempt += 1;
+        }
+    }
+
+    fn solvable(grid: &[Cell], n: usize) -> bool {
+        let mut seen = vec![false; n * n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            if grid[i] == Cell::Goal {
+                return true;
+            }
+            let (r, c) = (i / n, i % n);
+            let mut push = |r2: i32, c2: i32| {
+                if r2 >= 0 && c2 >= 0 && (r2 as usize) < n && (c2 as usize) < n {
+                    let j = r2 as usize * n + c2 as usize;
+                    if !seen[j] && grid[j] != Cell::Hole {
+                        seen[j] = true;
+                        stack.push(j);
+                    }
+                }
+            };
+            push(r as i32 - 1, c as i32);
+            push(r as i32 + 1, c as i32);
+            push(r as i32, c as i32 - 1);
+            push(r as i32, c as i32 + 1);
+        }
+        false
+    }
+
+    fn render(&self) -> String {
+        let mut s = String::with_capacity(self.n * (self.n + 1));
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if (r as i32, c as i32) == self.pos {
+                    s.push('A');
+                } else {
+                    s.push(match self.grid[r * self.n + c] {
+                        Cell::Frozen => '.',
+                        Cell::Hole => 'O',
+                        Cell::Goal => 'G',
+                        Cell::Start => 'S',
+                    });
+                }
+            }
+            s.push('\n');
+        }
+        s.push_str("move? (up/down/left/right)");
+        s
+    }
+}
+
+impl Environment for FrozenLake {
+    fn domain(&self) -> TaskDomain {
+        TaskDomain::Game
+    }
+
+    fn reset(&mut self, seed: u64) -> Observation {
+        self.gen_board(seed);
+        self.pos = (0, 0);
+        self.turns = 0;
+        self.done = false;
+        Observation::ongoing(format!("frozen lake {0}x{0}\n{1}", self.n, self.render()))
+    }
+
+    fn step(&mut self, action: &str) -> Observation {
+        assert!(!self.done, "step after episode end");
+        self.turns += 1;
+        let parsed = Action::parse(action);
+        if let Some(mut act) = parsed {
+            if self.slippery && self.rng.chance(1.0 / 3.0) {
+                // Slip perpendicular, as in Gymnasium's dynamics.
+                act = match (act, self.rng.chance(0.5)) {
+                    (Action::Left | Action::Right, true) => Action::Up,
+                    (Action::Left | Action::Right, false) => Action::Down,
+                    (Action::Up | Action::Down, true) => Action::Left,
+                    (Action::Up | Action::Down, false) => Action::Right,
+                };
+            }
+            let (dr, dc) = act.delta();
+            let r2 = (self.pos.0 + dr).clamp(0, self.n as i32 - 1);
+            let c2 = (self.pos.1 + dc).clamp(0, self.n as i32 - 1);
+            self.pos = (r2, c2);
+        }
+        match self.at(self.pos.0, self.pos.1) {
+            Cell::Goal => {
+                self.done = true;
+                Observation::terminal("you reached the goal!", 1.0)
+            }
+            Cell::Hole => {
+                self.done = true;
+                Observation::terminal("you fell into a hole.", 0.0)
+            }
+            _ if self.turns >= self.max_turns() => {
+                self.done = true;
+                Observation::terminal("out of moves.", 0.0)
+            }
+            _ => Observation::ongoing(self.render()),
+        }
+    }
+
+    fn max_turns(&self) -> usize {
+        self.n * self.n * 4 // generous: up to 100 for 5x5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_is_always_solvable() {
+        for seed in 0..50 {
+            let mut env = FrozenLake::new(4, false);
+            env.reset(seed);
+            assert!(FrozenLake::solvable(&env.grid, env.n), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn action_parsing() {
+        assert_eq!(Action::parse("I should go right now"), Some(Action::Right));
+        assert_eq!(Action::parse("UP!"), Some(Action::Up));
+        assert_eq!(Action::parse("d"), Some(Action::Down));
+        assert_eq!(Action::parse("nothing sensible"), None);
+        // first keyword wins
+        assert_eq!(Action::parse("left then right"), Some(Action::Left));
+    }
+
+    #[test]
+    fn deterministic_solution_reaches_goal() {
+        // On a solvable deterministic board, BFS-derived moves win.
+        let mut env = FrozenLake::new(4, false);
+        env.reset(3);
+        // navigate greedily via BFS on the known grid
+        let n = env.n;
+        let grid = env.grid.clone();
+        // BFS shortest path
+        let mut prev = vec![usize::MAX; n * n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        let mut seen = vec![false; n * n];
+        seen[0] = true;
+        while let Some(i) = queue.pop_front() {
+            let (r, c) = (i / n, i % n);
+            for (dr, dc) in [(0i32, 1i32), (1, 0), (0, -1), (-1, 0)] {
+                let (r2, c2) = (r as i32 + dr, c as i32 + dc);
+                if r2 >= 0 && c2 >= 0 && (r2 as usize) < n && (c2 as usize) < n {
+                    let j = r2 as usize * n + c2 as usize;
+                    if !seen[j] && grid[j] != Cell::Hole {
+                        seen[j] = true;
+                        prev[j] = i;
+                        queue.push_back(j);
+                    }
+                }
+            }
+        }
+        let mut path = vec![n * n - 1];
+        while *path.last().unwrap() != 0 {
+            path.push(prev[*path.last().unwrap()]);
+        }
+        path.reverse();
+        let mut obs = Observation::ongoing("");
+        for w in path.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let act = if b == a + 1 {
+                "right"
+            } else if b + 1 == a {
+                "left"
+            } else if b == a + n {
+                "down"
+            } else {
+                "up"
+            };
+            obs = env.step(act);
+        }
+        assert!(obs.done);
+        assert_eq!(obs.reward, 1.0);
+    }
+
+    #[test]
+    fn falling_into_hole_ends_episode() {
+        let mut env = FrozenLake::new(4, false);
+        env.reset(0);
+        // walk until something terminal happens with garbage+right mix
+        let mut obs = Observation::ongoing("");
+        let mut i = 0;
+        while !obs.done {
+            obs = env.step(if i % 2 == 0 { "right" } else { "down" });
+            i += 1;
+        }
+        assert!(obs.reward == 0.0 || obs.reward == 1.0);
+    }
+
+    #[test]
+    fn unparseable_action_is_noop_but_consumes_turn() {
+        let mut env = FrozenLake::new(4, false);
+        let first = env.reset(3);
+        let obs = env.step("hmm let me think");
+        assert!(!obs.done);
+        // agent did not move: rendering identical to reset board
+        assert!(first.text.ends_with(&obs.text));
+        assert_eq!(env.turns, 1);
+    }
+
+    #[test]
+    fn observation_contains_agent_marker() {
+        let mut env = FrozenLake::new(4, false);
+        let obs = env.reset(9);
+        assert!(obs.text.contains('A'));
+        assert!(obs.text.contains('G'));
+    }
+}

@@ -1,0 +1,259 @@
+//! GEM-math: the paper's decode-heavy math + tool-use environment [3].
+//!
+//! Few turns (<5), long chains of thought per action (§2.1) — the
+//! decode-heavy pole of the bimodal task distribution.  Tasks are
+//! integer arithmetic expressions; the optional `calc:` tool lets the
+//! agent evaluate a sub-expression (tool use), and `answer:` submits.
+//! The single-turn variant models GEM-game (Table 1: 1 turn).
+
+use super::{Environment, Observation, TaskDomain};
+use crate::simkit::SimRng;
+
+pub struct GemMath {
+    single_turn: bool,
+    answer: i64,
+    turns: usize,
+    max_turns: usize,
+    done: bool,
+}
+
+impl GemMath {
+    pub fn new() -> Self {
+        GemMath {
+            single_turn: false,
+            answer: 0,
+            turns: 0,
+            max_turns: 5,
+            done: true,
+        }
+    }
+
+    /// GEM-game: exactly one turn, answer immediately.
+    pub fn single_turn() -> Self {
+        GemMath {
+            single_turn: true,
+            answer: 0,
+            turns: 0,
+            max_turns: 1,
+            done: true,
+        }
+    }
+
+    /// Evaluate `a op b` with op ∈ {+, -, *}; used by the `calc:` tool.
+    fn eval_tool(expr: &str) -> Option<i64> {
+        let expr = expr.trim();
+        for (sym, f) in [
+            ("+", (|a: i64, b: i64| a.checked_add(b)) as fn(i64, i64) -> Option<i64>),
+            ("*", |a, b| a.checked_mul(b)),
+            ("-", |a, b| a.checked_sub(b)),
+        ] {
+            // split on the operator, allowing negative first operand
+            if let Some(idx) = expr[1..].find(sym).map(|i| i + 1) {
+                let (l, r) = expr.split_at(idx);
+                let r = &r[1..];
+                if let (Ok(a), Ok(b)) = (l.trim().parse::<i64>(), r.trim().parse::<i64>()) {
+                    return f(a, b);
+                }
+            }
+        }
+        expr.parse::<i64>().ok()
+    }
+
+    /// Extract the submitted answer from free-form output: prefer an
+    /// `answer:` marker, else the last integer in the text.
+    fn parse_answer(text: &str) -> Option<i64> {
+        let lower = text.to_lowercase();
+        if let Some(idx) = lower.rfind("answer:") {
+            let tail = &text[idx + 7..];
+            let num: String = tail
+                .chars()
+                .skip_while(|c| c.is_whitespace())
+                .take_while(|c| c.is_ascii_digit() || *c == '-')
+                .collect();
+            if let Ok(v) = num.parse() {
+                return Some(v);
+            }
+        }
+        // fallback: last integer token
+        let mut last = None;
+        let mut cur = String::new();
+        for c in text.chars() {
+            if c.is_ascii_digit() || (c == '-' && cur.is_empty()) {
+                cur.push(c);
+            } else if !cur.is_empty() {
+                if let Ok(v) = cur.parse() {
+                    last = Some(v);
+                }
+                cur.clear();
+            }
+        }
+        if let Ok(v) = cur.parse() {
+            last = Some(v);
+        }
+        last
+    }
+}
+
+impl Default for GemMath {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for GemMath {
+    fn domain(&self) -> TaskDomain {
+        if self.single_turn {
+            TaskDomain::GameSingle
+        } else {
+            TaskDomain::MathTool
+        }
+    }
+
+    fn reset(&mut self, seed: u64) -> Observation {
+        let mut rng = SimRng::new(seed);
+        let a = rng.below(90) as i64 + 10;
+        let b = rng.below(90) as i64 + 10;
+        let c = rng.below(9) as i64 + 1;
+        self.answer = a + b * c;
+        self.turns = 0;
+        self.done = false;
+        Observation::ongoing(format!(
+            "compute {a} + {b} * {c}. tools: 'calc: <x> <op> <y>'. \
+             submit with 'answer: <n>'."
+        ))
+    }
+
+    fn step(&mut self, action: &str) -> Observation {
+        assert!(!self.done, "step after episode end");
+        self.turns += 1;
+        let lower = action.to_lowercase();
+
+        // Tool call path (not available in single-turn mode).
+        if !self.single_turn {
+            if let Some(idx) = lower.find("calc:") {
+                if !lower.contains("answer:") {
+                    let expr = &action[idx + 5..];
+                    let msg = match Self::eval_tool(expr) {
+                        Some(v) => format!("calc result: {v}"),
+                        None => "calc error: could not parse".to_string(),
+                    };
+                    if self.turns >= self.max_turns {
+                        self.done = true;
+                        return Observation::terminal("out of turns.", 0.0);
+                    }
+                    return Observation::ongoing(msg);
+                }
+            }
+        }
+
+        match Self::parse_answer(action) {
+            Some(v) if v == self.answer => {
+                self.done = true;
+                Observation::terminal("correct!", 1.0)
+            }
+            _ if self.turns >= self.max_turns => {
+                self.done = true;
+                Observation::terminal("out of turns.", 0.0)
+            }
+            Some(_) => {
+                self.done = true;
+                Observation::terminal("wrong answer.", 0.0)
+            }
+            None => Observation::ongoing("no answer found; use 'answer: <n>'."),
+        }
+    }
+
+    fn max_turns(&self) -> usize {
+        self.max_turns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn answer_of(seed: u64) -> (GemMath, i64) {
+        let mut env = GemMath::new();
+        env.reset(seed);
+        let ans = env.answer;
+        (env, ans)
+    }
+
+    #[test]
+    fn correct_answer_rewarded() {
+        let (mut env, ans) = answer_of(5);
+        let obs = env.step(&format!("thinking... answer: {ans}"));
+        assert!(obs.done);
+        assert_eq!(obs.reward, 1.0);
+    }
+
+    #[test]
+    fn wrong_answer_terminal_zero() {
+        let (mut env, ans) = answer_of(6);
+        let obs = env.step(&format!("answer: {}", ans + 1));
+        assert!(obs.done);
+        assert_eq!(obs.reward, 0.0);
+    }
+
+    #[test]
+    fn tool_use_then_answer() {
+        let mut env = GemMath::new();
+        let obs = env.reset(7);
+        // extract operands from the prompt: "compute A + B * C."
+        let nums: Vec<i64> = obs
+            .text
+            .split(|c: char| !c.is_ascii_digit())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().unwrap())
+            .collect();
+        let (a, b, c) = (nums[0], nums[1], nums[2]);
+        let t = env.step(&format!("calc: {b} * {c}"));
+        assert!(!t.done);
+        let prod: i64 = t.text.split(": ").nth(1).unwrap().parse().unwrap();
+        assert_eq!(prod, b * c);
+        let fin = env.step(&format!("answer: {}", a + prod));
+        assert_eq!(fin.reward, 1.0);
+    }
+
+    #[test]
+    fn single_turn_has_one_shot() {
+        let mut env = GemMath::single_turn();
+        env.reset(8);
+        assert_eq!(env.max_turns(), 1);
+        let obs = env.step("calc: 1 + 1"); // tools unavailable
+        assert!(obs.done);
+        assert_eq!(obs.reward, 0.0);
+    }
+
+    #[test]
+    fn last_integer_fallback_parsing() {
+        assert_eq!(GemMath::parse_answer("maybe 5 or 7? I'll say 42"), Some(42));
+        assert_eq!(GemMath::parse_answer("answer: -13"), Some(-13));
+        assert_eq!(GemMath::parse_answer("no numbers here"), None);
+    }
+
+    #[test]
+    fn eval_tool_ops() {
+        assert_eq!(GemMath::eval_tool("3 + 4"), Some(7));
+        assert_eq!(GemMath::eval_tool("3 * 4"), Some(12));
+        assert_eq!(GemMath::eval_tool("10 - 4"), Some(6));
+        assert_eq!(GemMath::eval_tool("-5 + 2"), Some(-3));
+        assert_eq!(GemMath::eval_tool("7"), Some(7));
+        assert_eq!(GemMath::eval_tool("nope"), None);
+    }
+
+    #[test]
+    fn unanswered_runs_out_of_turns() {
+        let mut env = GemMath::new();
+        env.reset(9);
+        let mut obs = Observation::ongoing("");
+        for _ in 0..env.max_turns() {
+            obs = env.step("still thinking");
+            if obs.done {
+                break;
+            }
+        }
+        assert!(obs.done);
+        assert_eq!(obs.reward, 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Per-domain workload profiles for the DES harness.
+//!
+//! The paper's insight (§3, §8, §9) is that computation profiles are
+//! *stable per task domain*: turn counts and prefill/decode ratios vary
+//! wildly across domains but stay bounded within one.  These profiles
+//! parameterize the simulated rollout generator; the numbers follow
+//! Table 1's turn ranges and §2.1's chain-of-thought observations.
+
+use super::TaskDomain;
+use crate::simkit::dist::Dist;
+use crate::simkit::SimRng;
+
+/// Workload statistics of one task domain.
+#[derive(Clone, Debug)]
+pub struct DomainProfile {
+    pub domain: TaskDomain,
+    /// Interaction turns per trajectory.
+    pub turns: Dist,
+    /// Prompt/system tokens at trajectory start.
+    pub initial_prompt_tokens: f64,
+    /// Observation tokens appended per turn (drives prefill growth).
+    pub obs_tokens_per_turn: Dist,
+    /// Generated (decoded) tokens per action.
+    pub action_tokens: Dist,
+    /// Whether the domain is prefill-heavy (many turns, growing
+    /// context) or decode-heavy (few turns, long chains of thought).
+    pub prefill_heavy: bool,
+}
+
+impl DomainProfile {
+    pub fn of(domain: TaskDomain) -> DomainProfile {
+        match domain {
+            // SWE-bench: 30–50 turns, file-listing observations,
+            // moderate actions. Strongly prefill-heavy.
+            TaskDomain::Swe => DomainProfile {
+                domain,
+                turns: Dist::Uniform { lo: 30.0, hi: 50.0 },
+                initial_prompt_tokens: 2000.0,
+                obs_tokens_per_turn: Dist::LogNormal {
+                    mu: 6.4,
+                    sigma: 0.5,
+                }, // median ~600 (file listings, diffs)
+                action_tokens: Dist::LogNormal { mu: 5.5, sigma: 0.4 }, // ~250 CoT
+                prefill_heavy: true,
+            },
+            // WebShop: 5–30 turns, medium pages.
+            TaskDomain::Web => DomainProfile {
+                domain,
+                turns: Dist::Uniform { lo: 5.0, hi: 30.0 },
+                initial_prompt_tokens: 800.0,
+                obs_tokens_per_turn: Dist::LogNormal {
+                    mu: 5.7,
+                    sigma: 0.4,
+                }, // ~300 (page contents)
+                action_tokens: Dist::LogNormal { mu: 4.8, sigma: 0.4 }, // ~120
+                prefill_heavy: true,
+            },
+            // FrozenLake: 20–100 turns, small board renders, short
+            // actions — prefill dominates through sheer turn count.
+            TaskDomain::Game => DomainProfile {
+                domain,
+                turns: Dist::Uniform { lo: 20.0, hi: 100.0 },
+                initial_prompt_tokens: 400.0,
+                obs_tokens_per_turn: Dist::LogNormal {
+                    mu: 4.8,
+                    sigma: 0.3,
+                }, // ~120 (board render + status)
+                action_tokens: Dist::LogNormal { mu: 3.7, sigma: 0.5 }, // ~40
+                prefill_heavy: true,
+            },
+            // GEM-math: <5 turns, long chains of thought → decode-heavy.
+            TaskDomain::MathTool => DomainProfile {
+                domain,
+                turns: Dist::Uniform { lo: 1.0, hi: 5.0 },
+                initial_prompt_tokens: 400.0,
+                obs_tokens_per_turn: Dist::LogNormal {
+                    mu: 3.4,
+                    sigma: 0.3,
+                }, // ~30
+                action_tokens: Dist::LogNormal { mu: 7.6, sigma: 0.5 }, // ~2000
+                prefill_heavy: false,
+            },
+            // GEM-game: single turn, very long response.
+            TaskDomain::GameSingle => DomainProfile {
+                domain,
+                turns: Dist::Constant(1.0),
+                initial_prompt_tokens: 350.0,
+                obs_tokens_per_turn: Dist::Constant(0.0),
+                action_tokens: Dist::LogNormal { mu: 7.6, sigma: 0.5 }, // ~2000
+                prefill_heavy: false,
+            },
+        }
+    }
+
+    /// Sample one trajectory's shape: per-turn (obs tokens, action
+    /// tokens) plus the initial prompt.
+    pub fn sample_trajectory(&self, rng: &mut SimRng) -> TrajectoryShape {
+        let turns = self.turns.sample(rng).round().max(1.0) as usize;
+        let mut per_turn = Vec::with_capacity(turns);
+        for _ in 0..turns {
+            let obs = self.obs_tokens_per_turn.sample(rng).round().max(0.0);
+            let act = self.action_tokens.sample(rng).round().max(1.0);
+            per_turn.push((obs, act));
+        }
+        TrajectoryShape {
+            domain: self.domain,
+            initial_prompt_tokens: self.initial_prompt_tokens,
+            per_turn,
+        }
+    }
+
+    /// Expected decode-to-prefill token ratio under prefix caching
+    /// (diagnostic; validates the prefill/decode-heavy labels).  With
+    /// prefix caching — which the paper's rollouts enable (§7.1) — each
+    /// turn only prefills the *new* observation tokens; previously
+    /// generated actions are already cached.
+    pub fn decode_prefill_ratio(&self) -> f64 {
+        let turns = self.turns.mean();
+        let decoded = turns * self.action_tokens.mean();
+        let prefilled =
+            self.initial_prompt_tokens + turns * self.obs_tokens_per_turn.mean();
+        decoded / prefilled.max(1.0)
+    }
+}
+
+/// A sampled trajectory's token structure.
+#[derive(Clone, Debug)]
+pub struct TrajectoryShape {
+    pub domain: TaskDomain,
+    pub initial_prompt_tokens: f64,
+    /// (observation tokens, action tokens) per turn.
+    pub per_turn: Vec<(f64, f64)>,
+}
+
+impl TrajectoryShape {
+    pub fn turns(&self) -> usize {
+        self.per_turn.len()
+    }
+
+    /// Total tokens decoded by the LLM.
+    pub fn decode_tokens(&self) -> f64 {
+        self.per_turn.iter().map(|(_, a)| a).sum()
+    }
+
+    /// Total tokens prefilled across all turns assuming prefix caching
+    /// (only *new* tokens are prefilled each turn: the previous turn's
+    /// observation; the generated action is already cached).
+    pub fn prefill_tokens_cached(&self) -> f64 {
+        self.initial_prompt_tokens + self.per_turn.iter().map(|(o, _)| o).sum::<f64>()
+    }
+
+    /// Final context length.
+    pub fn final_context(&self) -> f64 {
+        self.initial_prompt_tokens
+            + self
+                .per_turn
+                .iter()
+                .map(|(o, a)| o + a)
+                .sum::<f64>()
+    }
+
+    /// Total tokens in the finished trajectory (prompt + response), the
+    /// §7.1 throughput numerator.
+    pub fn total_tokens(&self) -> f64 {
+        self.final_context()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_ratios() {
+        // Decode-heavy domains decode more tokens than they prefill;
+        // prefill-heavy domains the opposite, by a wide margin.
+        for d in TaskDomain::ALL {
+            let p = DomainProfile::of(d);
+            let r = p.decode_prefill_ratio();
+            if p.prefill_heavy {
+                assert!(r < 0.5, "{d}: ratio {r}");
+            } else {
+                assert!(r > 1.0, "{d}: ratio {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn turn_ranges_match_table1() {
+        let mut rng = SimRng::new(0);
+        let swe = DomainProfile::of(TaskDomain::Swe);
+        for _ in 0..100 {
+            let t = swe.sample_trajectory(&mut rng).turns();
+            assert!((30..=50).contains(&t), "{t}");
+        }
+        let math = DomainProfile::of(TaskDomain::MathTool);
+        for _ in 0..100 {
+            let t = math.sample_trajectory(&mut rng).turns();
+            assert!(t <= 5, "{t}");
+        }
+        let single = DomainProfile::of(TaskDomain::GameSingle);
+        assert_eq!(single.sample_trajectory(&mut rng).turns(), 1);
+    }
+
+    #[test]
+    fn trajectory_accounting_consistent() {
+        let mut rng = SimRng::new(1);
+        let p = DomainProfile::of(TaskDomain::Web);
+        let t = p.sample_trajectory(&mut rng);
+        assert!(t.final_context() >= t.prefill_tokens_cached());
+        assert!(
+            (t.final_context() - t.prefill_tokens_cached() - t.decode_tokens()).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn bimodal_turn_distribution() {
+        // §3: production tasks are bimodal — <5 or >10 turns.
+        let math = DomainProfile::of(TaskDomain::MathTool).turns.mean();
+        let swe = DomainProfile::of(TaskDomain::Swe).turns.mean();
+        assert!(math < 5.0);
+        assert!(swe > 10.0);
+    }
+}

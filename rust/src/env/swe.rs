@@ -1,0 +1,292 @@
+//! SWE-bench-like software-engineering environment [23], simulated.
+//!
+//! The paper runs real repository containers; here a deterministic
+//! mini-codebase (a handful of files, one seeded bug) preserves the
+//! interaction pattern that matters to the system: long horizons
+//! (30–50 turns), large observations (file listings), and a verifiable
+//! terminal condition (`test` passes only when the bug is fixed).
+//! See DESIGN.md §2 Substitutions.
+
+use super::{Environment, Observation, TaskDomain};
+use crate::simkit::SimRng;
+use std::collections::BTreeMap;
+
+/// One injectable bug: (file, line, buggy text, fixed text, test name).
+struct BugTemplate {
+    file: &'static str,
+    line: usize,
+    buggy: &'static str,
+    fixed: &'static str,
+    test: &'static str,
+}
+
+const BUGS: [BugTemplate; 4] = [
+    BugTemplate {
+        file: "calc.rs",
+        line: 2,
+        buggy: "    a - b",
+        fixed: "    a + b",
+        test: "test_add",
+    },
+    BugTemplate {
+        file: "calc.rs",
+        line: 6,
+        buggy: "    a * a",
+        fixed: "    a * b",
+        test: "test_mul",
+    },
+    BugTemplate {
+        file: "text.rs",
+        line: 2,
+        buggy: "    s.to_uppercase()",
+        fixed: "    s.to_lowercase()",
+        test: "test_lower",
+    },
+    BugTemplate {
+        file: "list.rs",
+        line: 2,
+        buggy: "    v.first()",
+        fixed: "    v.last()",
+        test: "test_last",
+    },
+];
+
+fn base_codebase() -> BTreeMap<String, Vec<String>> {
+    let mut files = BTreeMap::new();
+    files.insert(
+        "calc.rs".to_string(),
+        vec![
+            "fn add(a: i64, b: i64) -> i64 {".into(),
+            "    a + b".into(),
+            "}".into(),
+            "".into(),
+            "fn mul(a: i64, b: i64) -> i64 {".into(),
+            "    a * b".into(),
+            "}".into(),
+        ],
+    );
+    files.insert(
+        "text.rs".to_string(),
+        vec![
+            "fn lower(s: &str) -> String {".into(),
+            "    s.to_lowercase()".into(),
+            "}".into(),
+        ],
+    );
+    files.insert(
+        "list.rs".to_string(),
+        vec![
+            "fn last(v: &[i64]) -> Option<&i64> {".into(),
+            "    v.last()".into(),
+            "}".into(),
+        ],
+    );
+    files
+}
+
+pub struct SweSim {
+    files: BTreeMap<String, Vec<String>>,
+    bug: usize,
+    turns: usize,
+    done: bool,
+}
+
+impl SweSim {
+    pub fn new() -> Self {
+        SweSim {
+            files: BTreeMap::new(),
+            bug: 0,
+            turns: 0,
+            done: true,
+        }
+    }
+
+    fn bug_fixed(&self) -> bool {
+        let b = &BUGS[self.bug];
+        self.files
+            .get(b.file)
+            .and_then(|lines| lines.get(b.line))
+            .map(|l| l.trim() == b.fixed.trim())
+            .unwrap_or(false)
+    }
+
+    fn run_tests(&self) -> String {
+        let b = &BUGS[self.bug];
+        if self.bug_fixed() {
+            "all tests passed.".to_string()
+        } else {
+            format!("FAILED {}: expected fixed behaviour in {}", b.test, b.file)
+        }
+    }
+}
+
+impl Default for SweSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for SweSim {
+    fn domain(&self) -> TaskDomain {
+        TaskDomain::Swe
+    }
+
+    fn reset(&mut self, seed: u64) -> Observation {
+        let mut rng = SimRng::new(seed);
+        self.files = base_codebase();
+        self.bug = rng.below(BUGS.len());
+        let b = &BUGS[self.bug];
+        self.files.get_mut(b.file).unwrap()[b.line] = b.buggy.to_string();
+        self.turns = 0;
+        self.done = false;
+        let listing: Vec<&str> = self.files.keys().map(|s| s.as_str()).collect();
+        Observation::ongoing(format!(
+            "issue: {} fails. files: {}. actions: 'open <file>', \
+             'edit <file> <line> <code>', 'test'.",
+            b.test,
+            listing.join(", ")
+        ))
+    }
+
+    fn step(&mut self, action: &str) -> Observation {
+        assert!(!self.done, "step after episode end");
+        self.turns += 1;
+        let lower = action.to_lowercase();
+        let out_of_turns = self.turns >= self.max_turns();
+
+        let obs = if let Some(idx) = lower.find("open") {
+            let name = action[idx + 4..]
+                .split_whitespace()
+                .next()
+                .unwrap_or("")
+                .to_string();
+            match self.files.get(&name) {
+                Some(lines) => {
+                    let numbered: Vec<String> = lines
+                        .iter()
+                        .enumerate()
+                        .map(|(i, l)| format!("{i}: {l}"))
+                        .collect();
+                    Observation::ongoing(format!("{name}:\n{}", numbered.join("\n")))
+                }
+                None => Observation::ongoing("no such file.".to_string()),
+            }
+        } else if let Some(idx) = lower.find("edit") {
+            let rest = &action[idx + 4..];
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("").to_string();
+            let line: Option<usize> = it.next().and_then(|s| s.parse().ok());
+            let code: String = {
+                // remainder after the line number, preserving spacing-ish
+                let consumed: usize = rest
+                    .find(|c: char| c.is_ascii_digit())
+                    .map(|p| {
+                        p + rest[p..]
+                            .find(char::is_whitespace)
+                            .unwrap_or(rest.len() - p)
+                    })
+                    .unwrap_or(rest.len());
+                rest[consumed.min(rest.len())..].trim().to_string()
+            };
+            match (self.files.get_mut(&name), line) {
+                (Some(lines), Some(ln)) if ln < lines.len() => {
+                    lines[ln] = format!("    {code}");
+                    Observation::ongoing(format!("edited {name}:{ln}"))
+                }
+                _ => Observation::ongoing("edit failed: bad file or line.".to_string()),
+            }
+        } else if lower.contains("test") {
+            let result = self.run_tests();
+            if self.bug_fixed() {
+                self.done = true;
+                return Observation::terminal(result, 1.0);
+            }
+            Observation::ongoing(result)
+        } else {
+            Observation::ongoing("unknown action. use open/edit/test.".to_string())
+        };
+
+        if out_of_turns {
+            self.done = true;
+            return Observation::terminal("time limit reached.", 0.0);
+        }
+        obs
+    }
+
+    fn max_turns(&self) -> usize {
+        50
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_agent_fixes_the_bug() {
+        for seed in 0..8 {
+            let mut env = SweSim::new();
+            env.reset(seed);
+            let b = &BUGS[env.bug];
+            // open, edit the buggy line with the fix, run tests
+            let obs = env.step(&format!("open {}", b.file));
+            assert!(obs.text.contains(&format!("{}:", b.line)), "{}", obs.text);
+            env.step(&format!("edit {} {} {}", b.file, b.line, b.fixed.trim()));
+            let fin = env.step("test");
+            assert!(fin.done, "seed {seed}");
+            assert_eq!(fin.reward, 1.0);
+        }
+    }
+
+    #[test]
+    fn tests_fail_before_fix() {
+        let mut env = SweSim::new();
+        env.reset(3);
+        let obs = env.step("test");
+        assert!(!obs.done);
+        assert!(obs.text.contains("FAILED"));
+    }
+
+    #[test]
+    fn wrong_edit_does_not_pass() {
+        let mut env = SweSim::new();
+        env.reset(4);
+        let b = &BUGS[env.bug];
+        env.step(&format!("edit {} {} something_wrong()", b.file, b.line));
+        let obs = env.step("test");
+        assert!(!obs.done);
+        assert!(obs.text.contains("FAILED"));
+    }
+
+    #[test]
+    fn open_lists_numbered_lines() {
+        let mut env = SweSim::new();
+        env.reset(5);
+        let obs = env.step("open calc.rs");
+        assert!(obs.text.starts_with("calc.rs:"));
+        assert!(obs.text.contains("0: fn add"));
+    }
+
+    #[test]
+    fn edit_bad_line_rejected() {
+        let mut env = SweSim::new();
+        env.reset(6);
+        let obs = env.step("edit calc.rs 999 nope");
+        assert!(obs.text.contains("edit failed"));
+    }
+
+    #[test]
+    fn time_limit_fails_episode() {
+        let mut env = SweSim::new();
+        env.reset(7);
+        let mut obs = Observation::ongoing("");
+        for _ in 0..env.max_turns() {
+            obs = env.step("open calc.rs");
+            if obs.done {
+                break;
+            }
+        }
+        assert!(obs.done);
+        assert_eq!(obs.reward, 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Byte-level tokenizer shared by the real execution path.
+//!
+//! Vocab = 512 (matching `python/compile/shapes.py`): ids 0–255 are raw
+//! bytes; 256+ are special tokens.  Byte-level keeps the tokenizer
+//! trivially correct and reversible — the right trade for a ~4.5M-param
+//! e2e model whose job is to prove the stack composes.
+
+/// Special token ids (must stay below the 512 vocab of shapes.py).
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+/// Separator between conversation turns (observation ↔ action).
+pub const SEP: i32 = 259;
+/// Marks the start of an agent action (tokens after this are trained).
+pub const ACT: i32 = 260;
+
+pub const VOCAB: usize = 512;
+
+/// Encode text as raw bytes.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Decode token ids back to text; specials and out-of-range ids are
+/// dropped, invalid UTF-8 is replaced.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Build a prompt: BOS, obs bytes, SEP, ... , ACT.
+/// `history` is the alternating (observation, action) transcript.
+pub fn build_prompt(history: &[(String, String)], latest_obs: &str, budget: usize) -> Vec<i32> {
+    let mut toks = vec![BOS];
+    for (obs, act) in history {
+        toks.extend(encode(obs));
+        toks.push(ACT);
+        toks.extend(encode(act));
+        toks.push(SEP);
+    }
+    toks.extend(encode(latest_obs));
+    toks.push(ACT);
+    // Keep the most recent `budget` tokens (sliding window), always
+    // starting with BOS so position 0 is stable.
+    if toks.len() > budget {
+        let tail = toks.split_off(toks.len() - (budget - 1));
+        toks = vec![BOS];
+        toks.extend(tail);
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let s = "move right, then up!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let mut t = encode("ab");
+        t.push(EOS);
+        t.insert(0, BOS);
+        assert_eq!(decode(&t), "ab");
+    }
+
+    #[test]
+    fn specials_below_vocab() {
+        for t in [PAD, BOS, EOS, SEP, ACT] {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn prompt_structure() {
+        let hist = vec![("you are at S".to_string(), "right".to_string())];
+        let p = build_prompt(&hist, "you moved", 4096);
+        assert_eq!(p[0], BOS);
+        assert_eq!(*p.last().unwrap(), ACT);
+        // contains exactly two ACT markers (one per action slot)
+        assert_eq!(p.iter().filter(|&&t| t == ACT).count(), 2);
+        assert_eq!(p.iter().filter(|&&t| t == SEP).count(), 1);
+    }
+
+    #[test]
+    fn prompt_truncates_to_budget() {
+        let hist: Vec<(String, String)> = (0..50)
+            .map(|i| (format!("obs {i} {}", "x".repeat(40)), "act".to_string()))
+            .collect();
+        let p = build_prompt(&hist, "final", 128);
+        assert_eq!(p.len(), 128);
+        assert_eq!(p[0], BOS);
+        assert_eq!(*p.last().unwrap(), ACT);
+    }
+
+    #[test]
+    fn utf8_lossy_is_safe() {
+        // Splitting a multi-byte char across the window must not panic.
+        let s = "héllo";
+        let toks = encode(s);
+        let _ = decode(&toks[1..]);
+    }
+}

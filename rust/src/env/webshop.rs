@@ -1,0 +1,263 @@
+//! WebShop: the paper's web-navigation environment [61], simulated.
+//!
+//! A deterministic in-process shop: a seeded catalog of items with
+//! (category, color, price) attributes and an instruction like
+//! "buy a red shirt under $40".  Actions: `search <keywords>`,
+//! `click <item-id>`, `buy`.  Preserves WebShop's interaction pattern
+//! (multi-turn browsing, 5–30 turns, medium observations) without the
+//! real website container (DESIGN.md §2 Substitutions).
+
+use super::{Environment, Observation, TaskDomain};
+use crate::simkit::SimRng;
+
+const CATEGORIES: [&str; 6] = ["shirt", "shoes", "lamp", "mug", "chair", "hat"];
+const COLORS: [&str; 6] = ["red", "blue", "green", "black", "white", "yellow"];
+
+#[derive(Clone, Debug)]
+struct Item {
+    id: usize,
+    category: &'static str,
+    color: &'static str,
+    price: u32,
+}
+
+impl Item {
+    fn describe(&self) -> String {
+        format!("[{}] {} {} - ${}", self.id, self.color, self.category, self.price)
+    }
+}
+
+pub struct WebShop {
+    catalog: Vec<Item>,
+    want_cat: &'static str,
+    want_color: &'static str,
+    max_price: u32,
+    selected: Option<usize>,
+    turns: usize,
+    done: bool,
+}
+
+impl WebShop {
+    pub fn new() -> Self {
+        WebShop {
+            catalog: Vec::new(),
+            want_cat: "",
+            want_color: "",
+            max_price: 0,
+            selected: None,
+            turns: 0,
+            done: true,
+        }
+    }
+
+    fn matches_goal(&self, item: &Item) -> bool {
+        item.category == self.want_cat
+            && item.color == self.want_color
+            && item.price <= self.max_price
+    }
+
+    fn search(&self, query: &str) -> Vec<&Item> {
+        let q = query.to_lowercase();
+        let terms: Vec<&str> = q
+            .split(|c: char| !c.is_alphanumeric())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let mut hits: Vec<&Item> = self
+            .catalog
+            .iter()
+            .filter(|it| {
+                terms
+                    .iter()
+                    .any(|t| it.category.contains(t) || it.color.contains(t))
+            })
+            .collect();
+        hits.truncate(5);
+        hits
+    }
+}
+
+impl Default for WebShop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for WebShop {
+    fn domain(&self) -> TaskDomain {
+        TaskDomain::Web
+    }
+
+    fn reset(&mut self, seed: u64) -> Observation {
+        let mut rng = SimRng::new(seed);
+        self.catalog = (0..40)
+            .map(|id| Item {
+                id,
+                category: CATEGORIES[rng.below(CATEGORIES.len())],
+                color: COLORS[rng.below(COLORS.len())],
+                price: 5 + rng.below(95) as u32,
+            })
+            .collect();
+        // Pick a goal that exists in the catalog so every task is
+        // solvable (mirrors WebShop's attainable instructions).
+        let goal_idx = rng.below(self.catalog.len());
+        let goal = self.catalog[goal_idx].clone();
+        self.want_cat = goal.category;
+        self.want_color = goal.color;
+        self.max_price = goal.price + rng.below(20) as u32;
+        self.selected = None;
+        self.turns = 0;
+        self.done = false;
+        Observation::ongoing(format!(
+            "instruction: buy a {} {} under ${}. actions: 'search <kw>', \
+             'click <id>', 'buy'.",
+            self.want_color, self.want_cat, self.max_price
+        ))
+    }
+
+    fn step(&mut self, action: &str) -> Observation {
+        assert!(!self.done, "step after episode end");
+        self.turns += 1;
+        let lower = action.to_lowercase();
+        let out_of_turns = self.turns >= self.max_turns();
+
+        let obs = if let Some(idx) = lower.find("search") {
+            let query = &lower[idx + 6..];
+            let hits = self.search(query);
+            if hits.is_empty() {
+                Observation::ongoing("no results.".to_string())
+            } else {
+                let list: Vec<String> = hits.iter().map(|i| i.describe()).collect();
+                Observation::ongoing(format!("results:\n{}", list.join("\n")))
+            }
+        } else if let Some(idx) = lower.find("click") {
+            let id: Option<usize> = lower[idx + 5..]
+                .split(|c: char| !c.is_ascii_digit())
+                .find(|s| !s.is_empty())
+                .and_then(|s| s.parse().ok());
+            match id.and_then(|i| self.catalog.iter().find(|it| it.id == i)) {
+                Some(item) => {
+                    self.selected = Some(item.id);
+                    Observation::ongoing(format!(
+                        "viewing {}. 'buy' to purchase.",
+                        item.describe()
+                    ))
+                }
+                None => Observation::ongoing("item not found.".to_string()),
+            }
+        } else if lower.contains("buy") {
+            self.done = true;
+            let reward = match self.selected {
+                Some(id) => {
+                    let item = self.catalog.iter().find(|it| it.id == id).unwrap();
+                    if self.matches_goal(item) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                None => 0.0,
+            };
+            return Observation::terminal(
+                if reward > 0.0 { "purchase complete!" } else { "wrong item." },
+                reward,
+            );
+        } else {
+            Observation::ongoing("unknown action. use search/click/buy.".to_string())
+        };
+
+        if out_of_turns {
+            self.done = true;
+            return Observation::terminal("session expired.", 0.0);
+        }
+        obs
+    }
+
+    fn max_turns(&self) -> usize {
+        30
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goal_is_always_attainable() {
+        for seed in 0..30 {
+            let mut env = WebShop::new();
+            env.reset(seed);
+            assert!(
+                env.catalog.iter().any(|it| env.matches_goal(it)),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_agent_succeeds() {
+        let mut env = WebShop::new();
+        env.reset(11);
+        let (cat, color) = (env.want_cat, env.want_color);
+        let obs = env.step(&format!("search {color} {cat}"));
+        assert!(obs.text.contains("results"));
+        // pick the first listed id that matches the goal
+        let target = env
+            .catalog
+            .iter()
+            .find(|it| env.matches_goal(it))
+            .unwrap()
+            .id;
+        env.step(&format!("click {target}"));
+        let fin = env.step("buy");
+        assert!(fin.done);
+        assert_eq!(fin.reward, 1.0);
+    }
+
+    #[test]
+    fn buying_without_selection_fails() {
+        let mut env = WebShop::new();
+        env.reset(12);
+        let fin = env.step("buy");
+        assert!(fin.done);
+        assert_eq!(fin.reward, 0.0);
+    }
+
+    #[test]
+    fn buying_wrong_item_fails() {
+        let mut env = WebShop::new();
+        env.reset(13);
+        let wrong = env
+            .catalog
+            .iter()
+            .find(|it| !env.matches_goal(it))
+            .unwrap()
+            .id;
+        env.step(&format!("click {wrong}"));
+        let fin = env.step("buy");
+        assert_eq!(fin.reward, 0.0);
+    }
+
+    #[test]
+    fn search_limits_results() {
+        let mut env = WebShop::new();
+        env.reset(14);
+        let obs = env.step("search red blue green black white yellow");
+        let lines = obs.text.lines().count();
+        assert!(lines <= 6, "{}", obs.text); // header + ≤5 items
+    }
+
+    #[test]
+    fn session_expires_at_turn_budget() {
+        let mut env = WebShop::new();
+        env.reset(15);
+        let mut obs = Observation::ongoing("");
+        for _ in 0..env.max_turns() {
+            obs = env.step("search nothingmatches");
+            if obs.done {
+                break;
+            }
+        }
+        assert!(obs.done);
+        assert_eq!(obs.reward, 0.0);
+    }
+}

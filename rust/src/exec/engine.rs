@@ -1,0 +1,166 @@
+//! Generation engine over the AOT artifacts.
+//!
+//! The artifacts are compiled at a fixed batch width `B`
+//! (shapes.py `batch`); the engine exposes turn-level generation for up
+//! to `B` prompts at once: one `prefill` call builds the KV caches,
+//! then `decode_step` advances every live slot one token per call until
+//! all slots emit a stop token or exhaust the budget.  Sampling is
+//! temperature softmax with an optional greedy mode, seeded by
+//! [`SimRng`] for reproducibility.
+
+use crate::env::tokenizer::{EOS, PAD, SEP};
+use crate::runtime::{Params, Runtime};
+use crate::simkit::SimRng;
+use anyhow::{bail, Result};
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    pub temperature: f32,
+    pub greedy: bool,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg {
+            temperature: 0.8,
+            greedy: false,
+        }
+    }
+}
+
+/// Fixed-width generation engine.
+pub struct GenEngine<'r> {
+    rt: &'r Runtime,
+    pub sample: SampleCfg,
+    rng: SimRng,
+    /// Engine steps executed (decode calls), for perf accounting.
+    pub decode_calls: u64,
+    pub prefill_calls: u64,
+}
+
+impl<'r> GenEngine<'r> {
+    pub fn new(rt: &'r Runtime, seed: u64) -> Self {
+        GenEngine {
+            rt,
+            sample: SampleCfg::default(),
+            rng: SimRng::new(seed),
+            decode_calls: 0,
+            prefill_calls: 0,
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.rt.manifest.model.batch
+    }
+
+    fn max_seq(&self) -> usize {
+        self.rt.manifest.model.max_seq
+    }
+
+    fn sample_token(&mut self, logits: &[f32]) -> i32 {
+        debug_assert_eq!(logits.len(), self.rt.manifest.model.vocab);
+        if self.sample.greedy {
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(EOS);
+        }
+        let t = self.sample.temperature.max(1e-3);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&l| (((l - max) / t) as f64).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut pick = self.rng.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            pick -= w;
+            if pick <= 0.0 {
+                return i as i32;
+            }
+        }
+        (weights.len() - 1) as i32
+    }
+
+    /// Generate one turn's action for up to `batch()` prompts.
+    ///
+    /// `prompts[i]` is slot i's full prompt (token ids); empty slots
+    /// beyond `prompts.len()` are padded internally.  Returns one
+    /// generated token sequence per prompt (stop tokens excluded).
+    pub fn generate(
+        &mut self,
+        params: &Params,
+        prompts: &[Vec<i32>],
+        max_new_tokens: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch();
+        let s = self.max_seq();
+        if prompts.is_empty() || prompts.len() > b {
+            bail!("prompt count {} out of range 1..={b}", prompts.len());
+        }
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() >= s {
+                bail!("prompt {i} length {} out of range", p.len());
+            }
+        }
+
+        // Pack into the fixed-width batch.
+        let mut tokens = vec![PAD; b * s];
+        let mut lengths = vec![1i32; b]; // dummy slots hold 1 PAD token
+        for (i, p) in prompts.iter().enumerate() {
+            tokens[i * s..i * s + p.len()].copy_from_slice(p);
+            lengths[i] = p.len() as i32;
+        }
+
+        let (mut logits, mut cache) = self.rt.prefill(params, &tokens, &lengths)?;
+        self.prefill_calls += 1;
+        // Perf L3-1: keep parameters device-resident for the decode
+        // loop instead of re-uploading ~18 MB per step.
+        let dev_params = self.rt.upload_params(params)?;
+
+        let vocab = self.rt.manifest.model.vocab;
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut live: Vec<bool> = (0..b).map(|i| i < prompts.len()).collect();
+        let budget = max_new_tokens.min(s - 1);
+
+        for _ in 0..budget {
+            // Sample the next token per live slot.
+            let mut next = vec![PAD; b];
+            for (slot, alive) in live.iter().enumerate().take(b) {
+                if !alive {
+                    continue;
+                }
+                let tok = self.sample_token(&logits[slot * vocab..(slot + 1) * vocab]);
+                next[slot] = tok;
+            }
+            // Stop bookkeeping (before feeding: stop tokens are not
+            // appended to the action).
+            let mut any_live = false;
+            for slot in 0..prompts.len() {
+                if !live[slot] {
+                    continue;
+                }
+                let tok = next[slot];
+                if tok == EOS || tok == SEP || lengths[slot] as usize >= s - 1 {
+                    live[slot] = false;
+                } else {
+                    out[slot].push(tok);
+                    any_live = true;
+                }
+            }
+            if !any_live {
+                break;
+            }
+            // Dead slots keep feeding PAD (their outputs are ignored;
+            // the cache write at their frozen position is harmless).
+            logits = self
+                .rt
+                .decode_step_device(&dev_params, &mut cache, &next, &mut lengths)?;
+            self.decode_calls += 1;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,17 @@
+//! Real execution harness: the coordinator running against the PJRT
+//! runtime and live Rust environments (Python never on this path).
+//!
+//! Mirrors the control-plane flow of §6 at laptop scale: a
+//! [`GenEngine`] plays the inference worker (fixed-width continuous
+//! batch over the AOT `prefill`/`decode_step` artifacts), EnvManagers
+//! drive real [`crate::env`] environments per trajectory, rewards come
+//! from in-process "serverless" handlers, and the trainer consumes
+//! GRPO groups through the same [`crate::buffer::SampleBuffer`] +
+//! staleness machinery the DES uses.  `examples/e2e_train.rs` runs the
+//! full loop and logs the loss/reward curves (EXPERIMENTS.md §E2E).
+
+mod engine;
+mod trainer;
+
+pub use engine::GenEngine;
+pub use trainer::{train, StepLog, TrainConfig};

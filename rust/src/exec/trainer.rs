@@ -1,0 +1,254 @@
+//! The real GRPO training loop: coordinator + PJRT runtime + live envs.
+//!
+//! One step = collect `groups_per_step` GRPO groups (each group: the
+//! same task seed rolled out `batch` times), score them through the
+//! in-process serverless reward handler, push them through the
+//! [`SampleBuffer`] (the same staleness machinery as the DES), compute
+//! old log-probs with the `logprob` artifact, and run fused
+//! `train_step` micro-batches.  Returns a per-step log for
+//! EXPERIMENTS.md §E2E.
+
+use crate::buffer::{SampleBuffer, StalenessPolicy};
+use crate::cluster::ServerlessHandler;
+use crate::env::tokenizer::{build_prompt, decode as tok_decode};
+use crate::env::{Environment, Observation};
+use crate::exec::GenEngine;
+use crate::rl::{group_advantages, pack_sample, Trajectory, TrajectoryId, Turn, Version};
+use crate::runtime::{Runtime, TrainState};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Configuration of the real training loop.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// GRPO groups collected per training step (group size = the
+    /// engine batch width, shapes.py `batch`).
+    pub groups_per_step: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub max_new_tokens: usize,
+    pub max_turns: usize,
+    pub temperature: f32,
+    pub alpha: u64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            groups_per_step: 1,
+            steps: 50,
+            lr: 1e-3,
+            max_new_tokens: 8,
+            max_turns: 1,
+            temperature: 1.0,
+            alpha: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// One step's log line.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub entropy: f32,
+    pub grad_norm: f32,
+    pub mean_reward: f64,
+    pub trajectories: usize,
+    pub action_tokens: usize,
+    pub rollout_s: f64,
+    pub train_s: f64,
+}
+
+/// Roll out one GRPO group: the same task seed, `width` samples.
+#[allow(clippy::too_many_arguments)]
+fn rollout_group(
+    rt: &Runtime,
+    engine: &mut GenEngine,
+    state: &TrainState,
+    make_env: &dyn Fn() -> Box<dyn Environment>,
+    task_seed: u64,
+    group: u64,
+    version: Version,
+    cfg: &TrainConfig,
+    next_id: &mut u64,
+) -> Result<Vec<(Trajectory, f64)>> {
+    let width = rt.manifest.model.batch;
+    let budget = rt.manifest.model.max_seq - cfg.max_new_tokens - 2;
+
+    let mut envs: Vec<Box<dyn Environment>> = (0..width).map(|_| make_env()).collect();
+    let mut histories: Vec<Vec<(String, String)>> = vec![Vec::new(); width];
+    let mut obs: Vec<Observation> = envs.iter_mut().map(|e| e.reset(task_seed)).collect();
+    let mut trajs: Vec<Trajectory> = (0..width)
+        .map(|_| {
+            let id = TrajectoryId(*next_id);
+            *next_id += 1;
+            let mut t = Trajectory::new(id, envs[0].domain(), version);
+            t.group = group;
+            t
+        })
+        .collect();
+    let mut rewards = vec![0.0f64; width];
+    let mut done = vec![false; width];
+
+    for _turn in 0..cfg.max_turns {
+        let live: Vec<usize> = (0..width).filter(|&i| !done[i]).collect();
+        if live.is_empty() {
+            break;
+        }
+        // Build prompts for live slots (trajectory-level: each slot has
+        // its own history/obs).
+        let prompts: Vec<Vec<i32>> = live
+            .iter()
+            .map(|&i| build_prompt(&histories[i], &obs[i].text, budget))
+            .collect();
+        let actions = engine.generate(&state.params, &prompts, cfg.max_new_tokens)?;
+
+        for (k, &i) in live.iter().enumerate() {
+            let action_text = tok_decode(&actions[k]);
+            // Record the turn with the *new* prompt tokens this turn
+            // contributed (the observation text).
+            trajs[i].turns.push(Turn {
+                obs_tokens: crate::env::tokenizer::encode(&obs[i].text),
+                action_tokens: actions[k].clone(),
+                version,
+            });
+            let next = envs[i].step(&action_text);
+            histories[i].push((obs[i].text.clone(), action_text));
+            if next.done {
+                done[i] = true;
+                rewards[i] = next.reward;
+            }
+            obs[i] = next;
+        }
+    }
+
+    // Unfinished trajectories get reward 0 (out of budget).
+    Ok(trajs.into_iter().zip(rewards).collect())
+}
+
+/// Run the full loop; `make_env` builds one environment instance.
+pub fn train(
+    rt: &Runtime,
+    cfg: &TrainConfig,
+    make_env: &dyn Fn() -> Box<dyn Environment>,
+) -> Result<(Vec<StepLog>, TrainState)> {
+    let mut state = rt.init_train_state()?;
+    let mut engine = GenEngine::new(rt, cfg.seed ^ 0x5eed);
+    engine.sample.temperature = cfg.temperature;
+    let mut buffer = SampleBuffer::new(cfg.alpha, StalenessPolicy::PerTurn);
+    // The reward stage as a serverless handler (R3's shape: a stateless
+    // function behind a URL; in-process here).
+    let mut reward_fn: ServerlessHandler<f64, f64> =
+        ServerlessHandler::new("fc://local/reward", |r: f64| r);
+
+    let m = rt.manifest.model.clone();
+    let mut logs = Vec::new();
+    let mut next_id = 0u64;
+
+    for step in 0..cfg.steps {
+        let version = Version(step as u64);
+        let t0 = Instant::now();
+
+        // ---- rollout: collect groups ---------------------------------
+        let mut all: Vec<(Trajectory, f64)> = Vec::new();
+        for g in 0..cfg.groups_per_step {
+            let task_seed = cfg.seed
+                .wrapping_mul(31)
+                .wrapping_add((step * cfg.groups_per_step + g) as u64);
+            let group = rollout_group(
+                rt,
+                &mut engine,
+                &state,
+                make_env,
+                task_seed,
+                g as u64,
+                version,
+                cfg,
+                &mut next_id,
+            )?;
+            all.extend(group);
+        }
+        let rollout_s = t0.elapsed().as_secs_f64();
+
+        // ---- reward + advantages (per group) --------------------------
+        let width = m.batch;
+        let mut packed = Vec::new();
+        let mut reward_sum = 0.0;
+        for chunk in all.chunks_mut_helper(width) {
+            let rewards: Vec<f64> = chunk.iter().map(|(_, r)| reward_fn.invoke(*r)).collect();
+            reward_sum += rewards.iter().sum::<f64>();
+            let advs = group_advantages(&rewards);
+            for ((traj, r), adv) in chunk.iter_mut().zip(advs) {
+                traj.reward = Some(*r);
+                buffer.deposit(traj.clone(), version);
+                packed.push(pack_sample(traj, adv, m.train_seq));
+            }
+        }
+        let mean_reward = reward_sum / all.len() as f64;
+
+        // ---- drain through the buffer (staleness machinery) -----------
+        let batch = buffer
+            .get_batch(packed.len().min(buffer.len()), version)
+            .unwrap_or_default();
+        debug_assert_eq!(batch.len(), packed.len());
+
+        // ---- train micro-batches --------------------------------------
+        let t1 = Instant::now();
+        let mut loss = 0.0;
+        let mut entropy = 0.0;
+        let mut grad_norm = 0.0;
+        let mut micro = 0;
+        let mut action_tokens = 0usize;
+        for mb in packed.chunks(m.train_batch) {
+            if mb.len() < m.train_batch {
+                break; // drop ragged tail (fixed-shape artifact)
+            }
+            let mut tokens = Vec::with_capacity(m.train_batch * m.train_seq);
+            let mut adv = Vec::with_capacity(tokens.capacity());
+            let mut mask = Vec::with_capacity(tokens.capacity());
+            for s in mb {
+                tokens.extend_from_slice(&s.tokens);
+                adv.extend_from_slice(&s.adv);
+                mask.extend_from_slice(&s.mask);
+                action_tokens += s.mask.iter().filter(|&&x| x > 0.0).count();
+            }
+            // Old log-probs under the *current* (pre-update) weights.
+            let old = rt.logprob(&state.params, &tokens)?;
+            let metrics = rt.train_step(&mut state, cfg.lr, &tokens, &old, &adv, &mask)?;
+            loss += metrics.loss;
+            entropy += metrics.entropy;
+            grad_norm += metrics.grad_norm;
+            micro += 1;
+        }
+        let train_s = t1.elapsed().as_secs_f64();
+        let n = micro.max(1) as f32;
+
+        logs.push(StepLog {
+            step,
+            loss: loss / n,
+            entropy: entropy / n,
+            grad_norm: grad_norm / n,
+            mean_reward,
+            trajectories: all.len(),
+            action_tokens,
+            rollout_s,
+            train_s,
+        });
+    }
+    Ok((logs, state))
+}
+
+/// Chunking helper that yields mutable slices (std `chunks_mut` via a
+/// tiny extension trait so the call site stays readable).
+trait ChunksMutHelper<T> {
+    fn chunks_mut_helper(&mut self, size: usize) -> std::slice::ChunksMut<'_, T>;
+}
+
+impl<T> ChunksMutHelper<T> for Vec<T> {
+    fn chunks_mut_helper(&mut self, size: usize) -> std::slice::ChunksMut<'_, T> {
+        self.chunks_mut(size)
+    }
+}

@@ -1,0 +1,132 @@
+//! GPU specifications (paper Table 2).
+
+
+/// The two GPU classes of the paper's disaggregated fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GpuClass {
+    /// Bandwidth-optimized (NVIDIA H20): 148 TFLOPS, 4 TB/s HBM.
+    H20,
+    /// Compute-optimized (NVIDIA H800): 989.5 TFLOPS, 3.35 TB/s HBM.
+    H800,
+}
+
+impl GpuClass {
+    pub fn spec(self) -> &'static GpuSpec {
+        match self {
+            GpuClass::H20 => &H20,
+            GpuClass::H800 => &H800,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuClass::H20 => "H20",
+            GpuClass::H800 => "H800",
+        }
+    }
+}
+
+impl std::fmt::Display for GpuClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One GPU class's capabilities (paper Table 2).
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Peak dense bf16 throughput, TFLOPS.
+    pub tflops: f64,
+    /// HBM capacity, GB.
+    pub hbm_gb: f64,
+    /// HBM bandwidth, TB/s.
+    pub hbm_tbps: f64,
+    /// NVLink bandwidth, GB/s.
+    pub nvlink_gbps: f64,
+    /// Normalized cost (H20 = 1.00; paper cites [69]).
+    pub cost: f64,
+    /// Achievable fraction of peak FLOPs for large GEMMs (MFU ceiling).
+    pub flops_eff: f64,
+    /// Achievable fraction of peak HBM bandwidth.
+    pub bw_eff: f64,
+}
+
+pub static H20: GpuSpec = GpuSpec {
+    name: "H20",
+    tflops: 148.0,
+    hbm_gb: 96.0,
+    hbm_tbps: 4.0,
+    nvlink_gbps: 900.0,
+    cost: 1.00,
+    flops_eff: 0.45,
+    bw_eff: 0.65,
+};
+
+pub static H800: GpuSpec = GpuSpec {
+    name: "H800",
+    tflops: 989.5,
+    hbm_gb: 80.0,
+    hbm_tbps: 3.35,
+    nvlink_gbps: 400.0,
+    cost: 2.85,
+    flops_eff: 0.45,
+    bw_eff: 0.65,
+};
+
+impl GpuSpec {
+    /// Effective compute throughput, FLOP/s.
+    pub fn eff_flops(&self) -> f64 {
+        self.tflops * 1e12 * self.flops_eff
+    }
+
+    /// Effective HBM bandwidth, bytes/s.
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_tbps * 1e12 * self.bw_eff
+    }
+
+    /// FLOP/byte at which this class transitions compute-bound.
+    pub fn ridge_point(&self) -> f64 {
+        self.eff_flops() / self.eff_bw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        assert_eq!(H20.tflops, 148.0);
+        assert_eq!(H800.tflops, 989.5);
+        assert_eq!(H20.hbm_tbps, 4.0);
+        assert_eq!(H800.hbm_tbps, 3.35);
+        assert_eq!(H20.cost, 1.00);
+        assert_eq!(H800.cost, 2.85);
+    }
+
+    #[test]
+    fn h20_is_bandwidth_optimized() {
+        // Lower ridge point == becomes compute-bound sooner == favors
+        // bandwidth-bound decoding.
+        assert!(H20.ridge_point() < H800.ridge_point());
+        // H20 has more HBM bandwidth despite ~6.7x less compute.
+        assert!(H20.hbm_tbps > H800.hbm_tbps);
+        assert!(H800.tflops / H20.tflops > 6.0);
+    }
+
+    #[test]
+    fn cost_equivalence_of_paper_setups() {
+        // §3: six H20s vs two H800s is the paper's cost-equivalent pair.
+        let h20x6 = 6.0 * H20.cost;
+        let h800x2 = 2.0 * H800.cost;
+        assert!((h20x6 - h800x2).abs() / h800x2 < 0.06, "{h20x6} vs {h800x2}");
+    }
+
+    #[test]
+    fn class_round_trip() {
+        assert_eq!(GpuClass::H20.spec().name, "H20");
+        assert_eq!(GpuClass::H800.spec().name, "H800");
+        assert_eq!(GpuClass::H800.to_string(), "H800");
+    }
+}

@@ -1,0 +1,13 @@
+//! Hardware model: GPU classes and the roofline cost model.
+//!
+//! Table 2 of the paper is the source of truth for the two GPU classes;
+//! the roofline translates an LLM phase's (FLOPs, bytes moved) into
+//! seconds on a class, which is what makes the R1 affinity claims
+//! (Fig 4, Fig 11a, Table 5) *ratio-reproducible* without the physical
+//! testbed (DESIGN.md §2).
+
+mod gpu;
+mod roofline;
+
+pub use gpu::{GpuClass, GpuSpec, H20, H800};
+pub use roofline::{phase_time, PhaseCost};

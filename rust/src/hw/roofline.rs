@@ -1,0 +1,121 @@
+//! Roofline cost model: (FLOPs, bytes) → seconds on a GPU class.
+//!
+//! `time = max(flops / eff_flops, bytes / eff_bw) + launch_overhead`.
+//!
+//! This is the quantitative engine behind the paper's R1 story: a
+//! prefill-heavy phase has high arithmetic intensity and lands on the
+//! FLOPs roof (H800 wins); a decode phase streams the whole weight +
+//! KV-cache working set per token and lands on the bandwidth roof
+//! (H20 wins at equal cost).  Fig 4 / Fig 11a / Table 5 all reduce to
+//! this function applied per phase.
+
+use super::GpuSpec;
+
+/// The resource demand of one executed phase (one prefill of `n`
+/// tokens, one decode step of a batch, one optimizer step, ...).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl PhaseCost {
+    pub fn new(flops: f64, bytes: f64) -> Self {
+        PhaseCost { flops, bytes }
+    }
+
+    /// Arithmetic intensity, FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+
+    pub fn add(&self, other: &PhaseCost) -> PhaseCost {
+        PhaseCost {
+            flops: self.flops + other.flops,
+            bytes: self.bytes + other.bytes,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> PhaseCost {
+        PhaseCost {
+            flops: self.flops * k,
+            bytes: self.bytes * k,
+        }
+    }
+}
+
+/// Fixed per-launch overhead (kernel launches, scheduler ticks).
+pub const LAUNCH_OVERHEAD_S: f64 = 25e-6;
+
+/// Time for `cost` spread over `n_gpus` of class `spec` (ideal data
+/// parallel split; parallelism inefficiency is applied by callers that
+/// know their sharding).
+pub fn phase_time(cost: &PhaseCost, spec: &GpuSpec, n_gpus: usize) -> f64 {
+    assert!(n_gpus > 0);
+    let n = n_gpus as f64;
+    let t_flops = cost.flops / (spec.eff_flops() * n);
+    let t_bytes = cost.bytes / (spec.eff_bw() * n);
+    t_flops.max(t_bytes) + LAUNCH_OVERHEAD_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{H20, H800};
+
+    #[test]
+    fn compute_bound_phase_favors_h800() {
+        // High arithmetic intensity: 1 PFLOP over 1 GB.
+        let c = PhaseCost::new(1e15, 1e9);
+        let t20 = phase_time(&c, &H20, 1);
+        let t800 = phase_time(&c, &H800, 1);
+        assert!(t800 < t20 * 0.25, "{t800} vs {t20}");
+    }
+
+    #[test]
+    fn bandwidth_bound_phase_favors_h20() {
+        // ~1 FLOP/byte: decode-like.
+        let c = PhaseCost::new(1e12, 1e12);
+        let t20 = phase_time(&c, &H20, 1);
+        let t800 = phase_time(&c, &H800, 1);
+        assert!(t20 < t800, "{t20} vs {t800}");
+        // and per-cost H20 wins by ~3x (4/3.35 * 2.85 cost ratio)
+        let per_cost_20 = t20 * H20.cost;
+        let per_cost_800 = t800 * H800.cost;
+        assert!(per_cost_20 < 0.5 * per_cost_800);
+    }
+
+    #[test]
+    fn scaling_with_gpus() {
+        let c = PhaseCost::new(1e15, 1e9);
+        let t1 = phase_time(&c, &H800, 1);
+        let t4 = phase_time(&c, &H800, 4);
+        assert!((t1 / t4 - 4.0).abs() < 0.01, "{}", t1 / t4);
+    }
+
+    #[test]
+    fn intensity_and_roofs() {
+        let c = PhaseCost::new(1e12, 1e9);
+        assert!((c.intensity() - 1000.0).abs() < 1e-9);
+        // above both ridge points -> compute bound on both
+        assert!(c.intensity() > H20.ridge_point());
+        assert!(c.intensity() > H800.ridge_point());
+    }
+
+    #[test]
+    fn overhead_floor() {
+        let c = PhaseCost::new(0.0, 0.0);
+        assert_eq!(phase_time(&c, &H20, 8), LAUNCH_OVERHEAD_S);
+    }
+
+    #[test]
+    fn add_scale() {
+        let a = PhaseCost::new(1.0, 2.0);
+        let b = a.add(&PhaseCost::new(3.0, 4.0)).scale(2.0);
+        assert_eq!(b, PhaseCost::new(8.0, 12.0));
+    }
+}

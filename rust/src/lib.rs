@@ -1,0 +1,52 @@
+//! # RollArt — disaggregated multi-task agentic RL training
+//!
+//! Reproduction of *ROLLART: Disaggregated Multi-Task Agentic RL Training
+//! at Scale* as a three-layer Rust + JAX + Pallas stack: this crate is
+//! Layer 3 — the paper's coordination contribution (resource / data /
+//! control planes) plus every substrate it depends on.  Layers 2 and 1
+//! (the agent LLM and its Pallas kernels) are AOT-compiled by
+//! `python/compile` into `artifacts/*.hlo.txt` and executed from
+//! [`runtime`] via the PJRT C API; Python never runs on the request path.
+//!
+//! Two harnesses drive the same control-plane core:
+//!
+//! * [`sim`] — a discrete-event simulator over the [`hw`]/[`net`]/
+//!   [`envpool`]/[`serverless`] cost models; regenerates every table and
+//!   figure of the paper's evaluation (see `rust/benches/`).
+//! * [`exec`] — a real tokio runtime: the PJRT CPU client executes the
+//!   AOT transformer while real Rust environments ([`env`]) interact with
+//!   it through the same [`proxy::LlmProxy`] / [`coordinator`] machinery
+//!   (see `examples/e2e_train.rs`).
+//!
+//! Module map (DESIGN.md §1 has the paper-section ↔ module table):
+//!
+//! | plane | modules |
+//! |---|---|
+//! | resource | [`resource`], [`hw`], [`llm`], [`net`] |
+//! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
+//! | control | [`coordinator`], [`proxy`], [`buffer`], [`rl`] |
+//! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
+//! | evaluation | [`sim`], [`baselines`] |
+
+pub mod baselines;
+pub mod buffer;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod envpool;
+pub mod exec;
+pub mod hw;
+pub mod llm;
+pub mod metrics;
+pub mod mooncake;
+pub mod net;
+pub mod proxy;
+pub mod resource;
+pub mod rl;
+pub mod runtime;
+pub mod serverless;
+pub mod sim;
+pub mod simkit;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,12 @@
+//! LLM workload model: architecture specs → per-phase resource demands.
+//!
+//! The paper trains Qwen3-8B/14B/32B (plus Qwen3-30B-A3B and a
+//! hundreds-of-billions-parameter production MoE).  This module carries
+//! their architectural parameters and converts generation/training
+//! phases into [`PhaseCost`]s for the [`crate::hw`] roofline.  Weight
+//! byte counts match the paper's Table 3 transfer sizes exactly
+//! (15.26 / 27.51 / 61.02 GB).
+
+mod spec;
+
+pub use spec::{LlmSpec, MoeSpec, PROD_MOE, QWEN3_14B, QWEN3_30B_A3B, QWEN3_32B, QWEN3_8B, TINY_E2E};

@@ -1,0 +1,257 @@
+//! Architecture specs and phase cost functions.
+
+use crate::hw::PhaseCost;
+
+/// Mixture-of-experts parameters (None for dense models).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MoeSpec {
+    pub total_experts: usize,
+    pub active_experts: usize,
+    /// Parameters activated per token, fraction of total.
+    pub active_frac: f64,
+}
+
+/// One LLM's architecture, sufficient for FLOPs/bytes accounting.
+#[derive(Clone, Debug)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    /// Total parameter count.
+    pub params: f64,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub moe: Option<MoeSpec>,
+    /// Bytes per weight element (bf16 checkpoints).
+    pub dtype_bytes: f64,
+    /// Rollout tensor-parallel degree used in the paper's eval (§7.1).
+    pub rollout_tp: usize,
+}
+
+impl LlmSpec {
+    /// Parameters activated per token (== `params` for dense).
+    pub fn active_params(&self) -> f64 {
+        match self.moe {
+            Some(m) => self.params * m.active_frac,
+            None => self.params,
+        }
+    }
+
+    /// Checkpoint size in bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.dtype_bytes
+    }
+
+    /// KV-cache bytes appended per generated/prefilled token.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.head_dim as f64
+            * self.dtype_bytes
+    }
+
+    /// Cost of prefilling `new_tokens` on top of `ctx` cached tokens
+    /// (whole batch aggregated by the caller).
+    ///
+    /// FLOPs: 2·P_active per token (GEMMs) + 4·n·(ctx+n/2)·d·L (attention
+    /// scores + output against a growing context).
+    /// Bytes: one weight sweep + KV written + KV read.
+    pub fn prefill_cost(&self, new_tokens: f64, ctx: f64) -> PhaseCost {
+        let d = (self.n_heads * self.head_dim) as f64;
+        let l = self.n_layers as f64;
+        let gemm = 2.0 * self.active_params() * new_tokens;
+        let attn = 4.0 * new_tokens * (ctx + new_tokens / 2.0) * d * l;
+        let bytes = self.weight_bytes()
+            + (new_tokens + ctx) * self.kv_bytes_per_token()
+            + new_tokens * self.kv_bytes_per_token();
+        PhaseCost::new(gemm + attn, bytes)
+    }
+
+    /// Cost of one decode step for a batch of `batch` sequences at mean
+    /// context `ctx`.
+    ///
+    /// Decode streams the full (active) weight set once per step and the
+    /// whole KV cache of every sequence — the ~O(1) FLOP/byte profile
+    /// that makes it bandwidth-bound (paper §3, Fig 4b).
+    pub fn decode_cost(&self, batch: f64, ctx: f64) -> PhaseCost {
+        let d = (self.n_heads * self.head_dim) as f64;
+        let l = self.n_layers as f64;
+        let gemm = 2.0 * self.active_params() * batch;
+        let attn = 4.0 * batch * ctx * d * l;
+        let bytes = self.weight_bytes() + batch * ctx * self.kv_bytes_per_token();
+        PhaseCost::new(gemm + attn, bytes)
+    }
+
+    /// Cost of one training step over `tokens` tokens (fwd + bwd ≈ 6·P
+    /// per token, plus attention terms; bytes dominated by three weight
+    /// sweeps + optimizer state traffic).
+    pub fn train_cost(&self, tokens: f64, mean_ctx: f64) -> PhaseCost {
+        let d = (self.n_heads * self.head_dim) as f64;
+        let l = self.n_layers as f64;
+        let gemm = 6.0 * self.active_params() * tokens;
+        let attn = 12.0 * tokens * mean_ctx / 2.0 * d * l;
+        // fwd + bwd + opt: weights, grads, adam m/v (fp32 master copies).
+        let bytes = 8.0 * self.weight_bytes() + tokens * self.kv_bytes_per_token();
+        PhaseCost::new(gemm + attn, bytes)
+    }
+
+    /// HBM working set for serving: weights + `batch`·`ctx` KV.
+    pub fn serving_bytes(&self, batch: f64, ctx: f64) -> f64 {
+        self.weight_bytes() + batch * ctx * self.kv_bytes_per_token()
+    }
+}
+
+pub static QWEN3_8B: LlmSpec = LlmSpec {
+    name: "Qwen3-8B",
+    params: 8.19e9,
+    n_layers: 36,
+    hidden: 4096,
+    n_heads: 32,
+    n_kv_heads: 8,
+    head_dim: 128,
+    moe: None,
+    dtype_bytes: 2.0,
+    rollout_tp: 1,
+};
+
+pub static QWEN3_14B: LlmSpec = LlmSpec {
+    name: "Qwen3-14B",
+    params: 14.77e9,
+    n_layers: 40,
+    hidden: 5120,
+    n_heads: 40,
+    n_kv_heads: 8,
+    head_dim: 128,
+    moe: None,
+    dtype_bytes: 2.0,
+    rollout_tp: 2,
+};
+
+pub static QWEN3_32B: LlmSpec = LlmSpec {
+    name: "Qwen3-32B",
+    params: 32.76e9,
+    n_layers: 64,
+    hidden: 5120,
+    n_heads: 64,
+    n_kv_heads: 8,
+    head_dim: 128,
+    moe: None,
+    dtype_bytes: 2.0,
+    rollout_tp: 4,
+};
+
+pub static QWEN3_30B_A3B: LlmSpec = LlmSpec {
+    name: "Qwen3-30B-A3B",
+    params: 30.5e9,
+    n_layers: 48,
+    hidden: 2048,
+    n_heads: 32,
+    n_kv_heads: 4,
+    head_dim: 128,
+    moe: Some(MoeSpec {
+        total_experts: 128,
+        active_experts: 8,
+        active_frac: 0.108, // 3.3B active of 30.5B
+    }),
+    dtype_bytes: 2.0,
+    rollout_tp: 4,
+};
+
+/// The §8 production model: "hundreds-of-billions-parameter MoE".
+pub static PROD_MOE: LlmSpec = LlmSpec {
+    name: "Prod-MoE-300B",
+    params: 300.0e9,
+    n_layers: 61,
+    hidden: 7168,
+    n_heads: 64,
+    n_kv_heads: 8,
+    head_dim: 128,
+    moe: Some(MoeSpec {
+        total_experts: 256,
+        active_experts: 8,
+        active_frac: 0.08,
+    }),
+    dtype_bytes: 2.0,
+    rollout_tp: 8,
+};
+
+/// The real AOT-compiled e2e model (python/compile/shapes.py).
+pub static TINY_E2E: LlmSpec = LlmSpec {
+    name: "Tiny-E2E-4.5M",
+    params: 4.458752e6,
+    n_layers: 4,
+    hidden: 256,
+    n_heads: 4,
+    n_kv_heads: 4,
+    head_dim: 64,
+    moe: None,
+    dtype_bytes: 4.0,
+    rollout_tp: 1,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{phase_time, H20, H800};
+
+    #[test]
+    fn table3_weight_sizes() {
+        // Paper Table 3: 15.26 / 27.51 / 61.02 GB.
+        let gb = 1024.0 * 1024.0 * 1024.0;
+        assert!((QWEN3_8B.weight_bytes() / gb - 15.26).abs() < 0.1);
+        assert!((QWEN3_14B.weight_bytes() / gb - 27.51).abs() < 0.1);
+        assert!((QWEN3_32B.weight_bytes() / gb - 61.02).abs() < 0.1);
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_prefill_is_compute_bound() {
+        let m = &QWEN3_8B;
+        let dec = m.decode_cost(32.0, 8000.0);
+        let pre = m.prefill_cost(32.0 * 4000.0, 0.0);
+        assert!(dec.intensity() < H20.ridge_point(), "{}", dec.intensity());
+        assert!(pre.intensity() > H800.ridge_point(), "{}", pre.intensity());
+    }
+
+    #[test]
+    fn fig4_cost_equivalent_affinity_ratios() {
+        // Prefill-heavy phase: 2×H800 beat 6×H20 (paper: ~0.53x time).
+        let m = &QWEN3_8B;
+        let pre = m.prefill_cost(128.0 * 8000.0, 0.0);
+        let t_h800 = phase_time(&pre, &H800, 2);
+        let t_h20 = phase_time(&pre, &H20, 6);
+        let ratio = t_h800 / t_h20;
+        assert!(ratio < 0.75, "prefill H800/H20 time ratio {ratio}");
+
+        // Decode-heavy phase: 6×H20 beat 2×H800 (paper: 0.49–0.79x).
+        let dec = m.decode_cost(256.0, 12_000.0);
+        let t_h20d = phase_time(&dec, &H20, 6);
+        let t_h800d = phase_time(&dec, &H800, 2);
+        let r2 = t_h20d / t_h800d;
+        assert!(r2 < 0.85, "decode H20/H800 time ratio {r2}");
+    }
+
+    #[test]
+    fn moe_active_params() {
+        assert!(QWEN3_30B_A3B.active_params() < 4.0e9);
+        assert_eq!(QWEN3_8B.active_params(), QWEN3_8B.params);
+        // MoE decode is *less* bandwidth-hungry per token than dense at
+        // equal total size — the Table 5 PD-disagg gap driver.
+        let dense = QWEN3_32B.decode_cost(64.0, 8000.0);
+        let moe = QWEN3_30B_A3B.decode_cost(64.0, 8000.0);
+        assert!(moe.flops < dense.flops);
+    }
+
+    #[test]
+    fn kv_bytes() {
+        // Qwen3-8B: 2*36*8*128*2 = 147456 B/token ≈ 144 KiB.
+        assert_eq!(QWEN3_8B.kv_bytes_per_token(), 147456.0);
+    }
+
+    #[test]
+    fn train_cost_scales_linearly_in_tokens() {
+        let a = QWEN3_8B.train_cost(1e6, 4000.0);
+        let b = QWEN3_8B.train_cost(2e6, 4000.0);
+        assert!((b.flops / a.flops - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,112 @@
+//! `rollart` — launcher CLI for the RollArt coordinator.
+//!
+//! Subcommands:
+//!   simulate   run a scenario on the DES harness (default)
+//!   train      real training through the PJRT runtime (needs artifacts)
+//!   trace      production workload characterization (§8)
+//!
+//! Examples:
+//!   rollart simulate --model qwen3-8b --mode rollart --alpha 1
+//!   rollart simulate --config scenario.json
+//!   rollart train --steps 50 --env echo
+//!   rollart trace --trajectories 20000
+
+use rollart::baselines;
+use rollart::config::{mode_by_name, model_by_name, scenario_from_json};
+use rollart::sim::Scenario;
+use rollart::trace;
+use rollart::util::cli::Args;
+
+fn simulate(args: &Args) {
+    let scenario = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).expect("read --config file");
+        scenario_from_json(&text).expect("parse config")
+    } else {
+        let model = model_by_name(args.get_or("model", "qwen3-8b")).expect("unknown --model");
+        let mode = mode_by_name(args.get_or("mode", "rollart")).expect("unknown --mode");
+        let mut s = Scenario::rollart_default(model, args.get_f64("scale", 0.25));
+        s = baselines::configure(&s, mode);
+        s.alpha = args.get_usize("alpha", 1) as u64;
+        s.iterations = args.get_usize("iterations", 5);
+        s.seed = args.get_usize("seed", 17) as u64;
+        s
+    };
+    println!(
+        "simulating {} on {} ({} iterations, alpha {})",
+        scenario.mode.name(),
+        scenario.model.name,
+        scenario.iterations,
+        scenario.alpha
+    );
+    let r = baselines::run(&scenario);
+    for (i, s) in r.steps.iter().enumerate() {
+        println!(
+            "  iter {i}: {:>8.1}s  (train {:.1}s, sync {:.1}s, wait {:.1}s, stale {}, tokens {:.0})",
+            s.step_time_s,
+            s.breakdown.train_s,
+            s.breakdown.weight_sync_s,
+            s.breakdown.get_batch_wait_s,
+            s.stale_aborts,
+            s.batch_tokens
+        );
+    }
+    println!(
+        "mean step {:.1}s  throughput {:.0} tok/s  gen util {:.0}%  reward util {:.0}%",
+        r.mean_step_time(),
+        r.throughput(),
+        100.0 * r.gen_util,
+        100.0 * r.reward_util
+    );
+}
+
+fn real_train(args: &Args) {
+    use rollart::env::{EchoEnv, Environment, FrozenLake, GemMath};
+    use rollart::exec::{train, TrainConfig};
+    let rt = rollart::runtime::Runtime::load_default()
+        .expect("artifacts missing — run `make artifacts`");
+    let env = args.get_or("env", "echo").to_string();
+    let make_env: Box<dyn Fn() -> Box<dyn Environment>> = match env.as_str() {
+        "echo" => Box::new(|| Box::new(EchoEnv::new()) as _),
+        "math" => Box::new(|| Box::new(GemMath::single_turn()) as _),
+        "frozenlake" => Box::new(|| Box::new(FrozenLake::new(4, false)) as _),
+        other => panic!("--env {other}: use echo | math | frozenlake"),
+    };
+    let cfg = TrainConfig {
+        steps: args.get_usize("steps", 20),
+        groups_per_step: args.get_usize("groups", 1),
+        lr: args.get_f64("lr", 2e-3) as f32,
+        ..TrainConfig::default()
+    };
+    let (logs, _) = train(&rt, &cfg, make_env.as_ref()).expect("training");
+    for l in &logs {
+        println!(
+            "step {:>4}: loss {:>8.4} entropy {:.3} reward {:.3}",
+            l.step, l.loss, l.entropy, l.mean_reward
+        );
+    }
+}
+
+fn run_trace(args: &Args) {
+    let n = args.get_usize("trajectories", 20_000);
+    let records = trace::generate(&trace::prod_families(), n, 15);
+    let s = trace::analyze(&records);
+    println!("{n} trajectories:");
+    println!("  turns 1..{} (mean {:.1})", s.max_turns, s.mean_turns);
+    println!(
+        "  responses mean {:.0} max {:.0} (tail ratio {:.1}x)",
+        s.mean_response, s.max_response, s.response_tail_ratio
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        None | Some("simulate") => simulate(&args),
+        Some("train") => real_train(&args),
+        Some("trace") => run_trace(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'; use simulate | train | trace");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CSV emitter for bench results (`target/bench-results/*.csv`).
+//!
+//! Every paper-figure bench writes both a human-readable table to
+//! stdout and a machine-readable CSV through this writer, so plots can
+//! be regenerated without re-running the scenario.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    rows: Vec<Vec<String>>,
+    header: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        CsvWriter {
+            path: path.as_ref().to_path_buf(),
+            rows: Vec::new(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Standard location for a named result set.
+    pub fn for_bench(name: &str, header: &[&str]) -> Self {
+        let dir = Path::new("target").join("bench-results");
+        let _ = fs::create_dir_all(&dir);
+        Self::new(dir.join(format!("{name}.csv")), header)
+    }
+
+    pub fn row<I, S>(&mut self, cells: I)
+    where
+        I: IntoIterator<Item = S>,
+        S: ToString,
+    {
+        let row: Vec<String> = cells.into_iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(row);
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    /// Write the file; returns the path written.
+    pub fn flush(&self) -> std::io::Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&self.path)?;
+        writeln!(
+            f,
+            "{}",
+            self.header
+                .iter()
+                .map(|c| Self::escape(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        )?;
+        for row in &self.rows {
+            writeln!(
+                f,
+                "{}",
+                row.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(",")
+            )?;
+        }
+        Ok(self.path.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = crate::util::tempdir::TempDir::new("csv").unwrap();
+        let path = dir.path().join("x.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(["1", "hello, world"]);
+        w.row(["2", "quote\"inside"]);
+        let p = w.flush().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(
+            text,
+            "a,b\n1,\"hello, world\"\n2,\"quote\"\"inside\"\n"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "width")]
+    fn row_width_enforced() {
+        let mut w = CsvWriter::new("/tmp/never.csv", &["a", "b"]);
+        w.row(["only-one"]);
+    }
+
+    #[test]
+    fn numeric_rows() {
+        let dir = crate::util::tempdir::TempDir::new("csv").unwrap();
+        let mut w = CsvWriter::new(dir.path().join("n.csv"), &["x", "y"]);
+        w.row([1.5.to_string(), 2.to_string()]);
+        w.flush().unwrap();
+    }
+}

@@ -1,0 +1,133 @@
+//! Streaming histogram with exact quantiles over retained samples.
+//!
+//! The evaluation scenarios retain at most a few hundred thousand
+//! latency samples, so we keep them all and sort on demand — exact
+//! p50/p99/CDF beats approximate sketches for figure regeneration.
+
+use crate::simkit::dist::quantile;
+
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "histogram sample must be finite");
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+            self.sorted = true;
+        }
+    }
+
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "quantile of empty histogram");
+        self.ensure_sorted();
+        quantile(&self.samples, q)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// CDF points `(value, cumulative fraction)` at `n` evenly spaced
+    /// quantiles — the Fig 5a series.
+    pub fn cdf(&mut self, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2);
+        self.ensure_sorted();
+        (0..n)
+            .map(|i| {
+                let q = i as f64 / (n - 1) as f64;
+                (quantile(&self.samples, q), q)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_uniform_sequence() {
+        let mut h = Histogram::new();
+        for i in 0..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.p50(), 50.0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert_eq!(h.mean(), 50.0);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut h = Histogram::new();
+        for i in [5.0, 1.0, 9.0, 3.0, 7.0] {
+            h.record(i);
+        }
+        let cdf = h.cdf(5);
+        assert_eq!(cdf.first().unwrap().0, 1.0);
+        assert_eq!(cdf.last().unwrap().0, 9.0);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn record_after_quantile_resorts() {
+        let mut h = Histogram::new();
+        h.record(2.0);
+        h.record(1.0);
+        assert_eq!(h.quantile(1.0), 2.0);
+        h.record(10.0);
+        assert_eq!(h.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_quantile_panics() {
+        Histogram::new().quantile(0.5);
+    }
+}

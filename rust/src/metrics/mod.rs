@@ -1,0 +1,127 @@
+//! Metrics substrate: histograms, utilization timelines, step
+//! breakdowns, and the CSV emitter used by the paper-figure benches.
+
+mod csv;
+mod hist;
+mod util;
+
+pub use csv::CsvWriter;
+pub use hist::Histogram;
+pub use util::UtilizationTracker;
+
+
+/// Per-iteration latency breakdown (paper Fig 3 / Fig 15b categories).
+#[derive(Clone, Debug, Default)]
+pub struct StepBreakdown {
+    pub generation_s: f64,
+    pub env_reset_s: f64,
+    pub env_step_s: f64,
+    pub reward_s: f64,
+    pub train_s: f64,
+    pub weight_sync_s: f64,
+    pub get_batch_wait_s: f64,
+    pub other_s: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.generation_s
+            + self.env_reset_s
+            + self.env_step_s
+            + self.reward_s
+            + self.train_s
+            + self.weight_sync_s
+            + self.get_batch_wait_s
+            + self.other_s
+    }
+
+    /// Fraction of the step spent in `component` ∈ the field names.
+    pub fn fraction(&self, component: &str) -> f64 {
+        let v = match component {
+            "generation" => self.generation_s,
+            "env_reset" => self.env_reset_s,
+            "env_step" => self.env_step_s,
+            "reward" => self.reward_s,
+            "train" => self.train_s,
+            "weight_sync" => self.weight_sync_s,
+            "get_batch_wait" => self.get_batch_wait_s,
+            "other" => self.other_s,
+            _ => panic!("unknown component {component}"),
+        };
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            v / t
+        }
+    }
+
+    pub fn add(&mut self, other: &StepBreakdown) {
+        self.generation_s += other.generation_s;
+        self.env_reset_s += other.env_reset_s;
+        self.env_step_s += other.env_step_s;
+        self.reward_s += other.reward_s;
+        self.train_s += other.train_s;
+        self.weight_sync_s += other.weight_sync_s;
+        self.get_batch_wait_s += other.get_batch_wait_s;
+        self.other_s += other.other_s;
+    }
+
+    pub fn scale(&mut self, k: f64) {
+        self.generation_s *= k;
+        self.env_reset_s *= k;
+        self.env_step_s *= k;
+        self.reward_s *= k;
+        self.train_s *= k;
+        self.weight_sync_s *= k;
+        self.get_batch_wait_s *= k;
+        self.other_s *= k;
+    }
+}
+
+/// Throughput metric used throughout §7: tokens in a global batch
+/// divided by step time [47].
+pub fn throughput_tokens_per_s(batch_tokens: f64, step_time_s: f64) -> f64 {
+    assert!(step_time_s > 0.0);
+    batch_tokens / step_time_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_fraction() {
+        let b = StepBreakdown {
+            generation_s: 50.0,
+            train_s: 30.0,
+            env_reset_s: 20.0,
+            ..Default::default()
+        };
+        assert_eq!(b.total(), 100.0);
+        assert!((b.fraction("generation") - 0.5).abs() < 1e-12);
+        assert!((b.fraction("train") - 0.3).abs() < 1e-12);
+        assert_eq!(b.fraction("reward"), 0.0);
+    }
+
+    #[test]
+    fn breakdown_add_scale() {
+        let mut a = StepBreakdown {
+            generation_s: 1.0,
+            ..Default::default()
+        };
+        a.add(&StepBreakdown {
+            generation_s: 2.0,
+            train_s: 4.0,
+            ..Default::default()
+        });
+        a.scale(0.5);
+        assert_eq!(a.generation_s, 1.5);
+        assert_eq!(a.train_s, 2.0);
+    }
+
+    #[test]
+    fn throughput() {
+        assert_eq!(throughput_tokens_per_s(1000.0, 10.0), 100.0);
+    }
+}

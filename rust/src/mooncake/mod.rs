@@ -1,0 +1,242 @@
+//! Mooncake-style asynchronous cross-cluster weight store (§6.3).
+//!
+//! After each training step, updated weights are bucketized (1 GB) and
+//! *published* to a CPU-resident store over the low-bandwidth
+//! cross-cluster link; inference workers then *pull* buckets on demand
+//! over high-bandwidth intra-cluster links, pipelined behind the push.
+//! Both stages overlap with ongoing rollout; the only unavoidable
+//! *exposed* cost is the in-GPU weight (re)load at the suspend point of
+//! the sync protocol plus whatever pull tail the overlap window did not
+//! cover (paper Table 4: 1.4–9.6 s exposed vs 38.6–157 s naive).
+//!
+//! Constants are calibrated to Table 4's measurements: push goodput
+//! ≈0.45 GB/s (cross-cluster TCP shared with rollout traffic),
+//! aggregate pull ≈2.1 GB/s, GPU load ≈6.5 GB/s.
+
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Configuration of the bucketized store.
+#[derive(Clone, Debug)]
+pub struct MooncakeConfig {
+    /// Bucket granularity in bytes (paper: ~1 GB).
+    pub bucket_bytes: f64,
+    /// Achieved push goodput training-cluster → store (cross-cluster,
+    /// shared with trajectory traffic).
+    pub push_bytes_per_s: f64,
+    /// Aggregate pull goodput store → inference workers (intra-cluster).
+    pub pull_bytes_per_s: f64,
+    /// Host→GPU weight load bandwidth at the suspend point.
+    pub gpu_load_bytes_per_s: f64,
+    /// Fixed per-bucket coordination latency (metadata RPC).
+    pub per_bucket_latency_s: f64,
+}
+
+impl Default for MooncakeConfig {
+    fn default() -> Self {
+        MooncakeConfig {
+            bucket_bytes: 1.0 * GB,
+            push_bytes_per_s: 0.45 * GB,
+            pull_bytes_per_s: 2.1 * GB,
+            gpu_load_bytes_per_s: 6.5 * GB,
+            per_bucket_latency_s: 0.01,
+        }
+    }
+}
+
+/// Cost decomposition of one weight synchronization (Table 4 rows).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SyncCost {
+    /// Streaming updated weights to the store (hidden behind rollout).
+    pub push_s: f64,
+    /// Total pull cost across workers (mostly hidden).
+    pub acc_pull_s: f64,
+    /// Residual cost the rollout actually observes.
+    pub exposed_s: f64,
+    /// What a synchronous design (veRL-style push-to-workers) would
+    /// block on: push + accumulated pull, no overlap.
+    pub naive_s: f64,
+}
+
+/// The weight store: versions + cost model.
+#[derive(Clone, Debug)]
+pub struct MooncakeStore {
+    cfg: MooncakeConfig,
+    /// Latest fully-published weight version.
+    version: u64,
+    /// Bytes pushed across the lifetime (stats).
+    pub bytes_pushed: f64,
+    pub bytes_pulled: f64,
+}
+
+impl MooncakeStore {
+    pub fn new(cfg: MooncakeConfig) -> Self {
+        MooncakeStore {
+            cfg,
+            version: 0,
+            bytes_pushed: 0.0,
+            bytes_pulled: 0.0,
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn buckets(&self, bytes: f64) -> usize {
+        (bytes / self.cfg.bucket_bytes).ceil().max(1.0) as usize
+    }
+
+    /// Time to stream `bytes` of weights to the store.
+    pub fn push_time(&self, bytes: f64) -> f64 {
+        let n = self.buckets(bytes);
+        bytes / self.cfg.push_bytes_per_s + n as f64 * self.cfg.per_bucket_latency_s
+    }
+
+    /// Total (accumulated) pull time across the inference fleet.
+    pub fn acc_pull_time(&self, bytes: f64) -> f64 {
+        let n = self.buckets(bytes);
+        bytes / self.cfg.pull_bytes_per_s + n as f64 * self.cfg.per_bucket_latency_s
+    }
+
+    /// Compute one synchronization's cost decomposition.
+    ///
+    /// `overlap_window_s` is how much ongoing-rollout time is available
+    /// to hide the push+pull pipeline (the pipeline driver passes the
+    /// real remaining-rollout estimate; `f64::INFINITY` = fully
+    /// overlapped pulls, leaving only the GPU load exposed).
+    pub fn sync(&mut self, bytes: f64, overlap_window_s: f64) -> SyncCost {
+        let push = self.push_time(bytes);
+        let acc_pull = self.acc_pull_time(bytes);
+        let n = self.buckets(bytes) as f64;
+
+        // Pipelined completion: pulls trail the push bucket-by-bucket.
+        let b_push = push / n;
+        let b_pull = acc_pull / n;
+        let pipeline_end = if b_push >= b_pull {
+            push + b_pull
+        } else {
+            b_push + acc_pull
+        };
+
+        // Pull tail not covered by the rollout overlap window.
+        let uncovered = (pipeline_end - overlap_window_s).max(0.0);
+        // Unavoidable: (re)loading the new weights into GPU memory at
+        // the suspend point.
+        let gpu_load = bytes / self.cfg.gpu_load_bytes_per_s;
+        let exposed = uncovered + gpu_load + n * self.cfg.per_bucket_latency_s;
+
+        self.version += 1;
+        self.bytes_pushed += bytes;
+        self.bytes_pulled += bytes;
+
+        SyncCost {
+            push_s: push,
+            acc_pull_s: acc_pull,
+            exposed_s: exposed,
+            naive_s: push + acc_pull,
+        }
+    }
+}
+
+impl Default for MooncakeStore {
+    fn default() -> Self {
+        Self::new(MooncakeConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
+
+    fn sync_model(spec: &crate::llm::LlmSpec) -> SyncCost {
+        let mut store = MooncakeStore::default();
+        store.sync(spec.weight_bytes(), f64::INFINITY)
+    }
+
+    #[test]
+    fn table4_push_times() {
+        // Paper: 32.4 / 67.8 / 127.3 s push.
+        let cases = [(&QWEN3_8B, 32.4), (&QWEN3_14B, 67.8), (&QWEN3_32B, 127.3)];
+        for (spec, paper) in cases {
+            let c = sync_model(spec);
+            assert!(
+                (c.push_s - paper).abs() / paper < 0.1,
+                "{}: push {} vs paper {paper}",
+                spec.name,
+                c.push_s
+            );
+        }
+    }
+
+    #[test]
+    fn table4_acc_pull_times() {
+        // Paper: 6.2 / 16.3 / 29.7 s accumulated pull (±35%: aggregate
+        // pull bandwidth varies with fleet size; shape is what matters).
+        let cases = [(&QWEN3_8B, 6.2), (&QWEN3_14B, 16.3), (&QWEN3_32B, 29.7)];
+        for (spec, paper) in cases {
+            let c = sync_model(spec);
+            assert!(
+                (c.acc_pull_s - paper).abs() / paper < 0.35,
+                "{}: pull {} vs paper {paper}",
+                spec.name,
+                c.acc_pull_s
+            );
+        }
+    }
+
+    #[test]
+    fn exposed_cost_band_and_growth() {
+        // Paper: exposed 1.4 / 5.1 / 9.6 s; grows with model size and
+        // stays under 10% of naive.
+        let mut last = 0.0;
+        for spec in [&QWEN3_8B, &QWEN3_14B, &QWEN3_32B] {
+            let c = sync_model(spec);
+            assert!(c.exposed_s > last, "exposed must grow with size");
+            assert!(
+                c.exposed_s < 0.1 * c.naive_s,
+                "{}: exposed {} vs naive {}",
+                spec.name,
+                c.exposed_s,
+                c.naive_s
+            );
+            assert!(c.exposed_s < 12.0, "{}", c.exposed_s);
+            last = c.exposed_s;
+        }
+    }
+
+    #[test]
+    fn overlap_hides_most_of_pull() {
+        // Paper: "asynchronous overlap hides 67-78% of the pull cost".
+        let c = sync_model(&QWEN3_32B);
+        let hidden = 1.0 - c.exposed_s / (c.acc_pull_s + c.push_s * 0.0);
+        assert!(hidden > 0.6, "hidden fraction {hidden}");
+    }
+
+    #[test]
+    fn short_window_exposes_pull_tail() {
+        let mut store = MooncakeStore::default();
+        let full = store.sync(QWEN3_8B.weight_bytes(), f64::INFINITY);
+        let mut store2 = MooncakeStore::default();
+        let cut = store2.sync(QWEN3_8B.weight_bytes(), 5.0);
+        assert!(cut.exposed_s > full.exposed_s + 10.0, "{cut:?} vs {full:?}");
+    }
+
+    #[test]
+    fn version_advances_per_sync() {
+        let mut store = MooncakeStore::default();
+        assert_eq!(store.version(), 0);
+        store.sync(1e9, f64::INFINITY);
+        store.sync(1e9, f64::INFINITY);
+        assert_eq!(store.version(), 2);
+        assert!((store.bytes_pushed - 2e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn naive_matches_verl_style_blocking() {
+        let c = sync_model(&QWEN3_32B);
+        // Paper: naive 157.0 s for 32B.
+        assert!((c.naive_s - 157.0).abs() / 157.0 < 0.15, "{}", c.naive_s);
+    }
+}

@@ -1,0 +1,167 @@
+//! Point-to-point link model.
+
+use crate::simkit::dist::Dist;
+
+/// A network path with an effective-bandwidth + setup-cost model.
+///
+/// `effective_bytes_per_s` is the *achieved* single-transfer goodput
+/// (protocol stacks on these fabrics reach only a fraction of the raw
+/// signalling rate for large sequential transfers; the constants below
+/// are fit to the paper's Table 3 measurements).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub name: &'static str,
+    /// Raw signalling rate, Gbit/s (documentation only).
+    pub raw_gbps: f64,
+    /// Achieved goodput for bulk transfers, bytes/s.
+    pub effective_bytes_per_s: f64,
+    /// Per-transfer session setup cost, seconds.
+    pub setup_s: f64,
+    /// One-way base latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Link {
+    /// Time to move `bytes` in one logical transfer.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.setup_s + self.latency_s + bytes / self.effective_bytes_per_s
+    }
+
+    /// Time to move `bytes` split into `streams` parallel streams that
+    /// share the link fairly (setup paid once; bandwidth unchanged).
+    pub fn transfer_time_streams(&self, bytes: f64, streams: usize) -> f64 {
+        assert!(streams > 0);
+        self.setup_s + self.latency_s + bytes / self.effective_bytes_per_s
+            + (streams as f64 - 1.0) * 1e-4 // per-stream bookkeeping
+    }
+}
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Cross-cluster Ethernet (paper: 200 Gbps TCP).  Effective goodput fit
+/// to Table 3: ≈2.06 GB/s single-stream.
+pub static TCP_200GBE: Link = Link {
+    name: "tcp-200gbe",
+    raw_gbps: 200.0,
+    effective_bytes_per_s: 2.06 * GB,
+    setup_s: 0.10,
+    latency_s: 0.002,
+};
+
+/// Cross-cluster InfiniBand (paper: 400 Gbps RDMA via Mooncake).
+/// Higher goodput but heavier session establishment (QP setup +
+/// registration), which is why small models see less speedup (Table 3).
+pub static RDMA_400IB: Link = Link {
+    name: "rdma-400ib",
+    raw_gbps: 400.0,
+    effective_bytes_per_s: 10.0 * GB,
+    setup_s: 3.60,
+    latency_s: 0.0005,
+};
+
+/// Intra-cluster NVLink/NVSwitch path for weight broadcast (NCCL).
+pub static NVLINK_INTRA: Link = Link {
+    name: "nvlink-intra",
+    raw_gbps: 3600.0,
+    effective_bytes_per_s: 250.0 * GB,
+    setup_s: 0.005,
+    latency_s: 0.00001,
+};
+
+/// Latency distribution for a *small-packet* control-path call
+/// (trajectory transfer, serverless reward I/O): a tight body with a
+/// rare heavy tail, calibrated to §7.5's (mean, max) pairs.
+///
+/// `mean_s` ≈ observed mean per-call overhead; `max_s` ≈ observed max.
+pub fn jittered_small_transfer(mean_s: f64, max_s: f64) -> Dist {
+    // Body: exponential around ~0.8·mean. Tail: uniform stretch toward
+    // max, hit rarely enough to keep the mean at ~mean_s.
+    let tail_lo = max_s * 0.25;
+    let tail_mean = (tail_lo + max_s) / 2.0;
+    let p_tail = (0.2 * mean_s / tail_mean).min(0.05);
+    let body_mean = (mean_s - p_tail * tail_mean).max(mean_s * 0.1) / (1.0 - p_tail);
+    Dist::Mix {
+        p_tail,
+        body: Box::new(Dist::Exp { mean: body_mean }),
+        tail: Box::new(Dist::Uniform {
+            lo: tail_lo,
+            hi: max_s,
+        }),
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
+
+    #[test]
+    fn table3_shape_tcp_vs_rdma() {
+        // The *shape* check: RDMA wins, and its advantage grows with
+        // model size (paper: 1.264x -> 2.482x -> 3.140x).
+        let mut last = 0.0;
+        for spec in [&QWEN3_8B, &QWEN3_14B, &QWEN3_32B] {
+            let tcp = TCP_200GBE.transfer_time(spec.weight_bytes());
+            let rdma = RDMA_400IB.transfer_time(spec.weight_bytes());
+            let speedup = tcp / rdma;
+            assert!(speedup > 1.0, "{}: {speedup}", spec.name);
+            assert!(speedup > last, "speedup must grow with size");
+            last = speedup;
+        }
+        // 32B speedup is close to the paper's 3.14x
+        let tcp = TCP_200GBE.transfer_time(QWEN3_32B.weight_bytes());
+        let rdma = RDMA_400IB.transfer_time(QWEN3_32B.weight_bytes());
+        assert!((tcp / rdma - 3.14).abs() < 0.5, "{}", tcp / rdma);
+    }
+
+    #[test]
+    fn table3_absolute_times_are_in_range() {
+        // Within ~25% of the paper's measured seconds.
+        let cases = [
+            (&QWEN3_8B, 6.911, 5.466),
+            (&QWEN3_14B, 14.437, 5.817),
+            (&QWEN3_32B, 29.649, 9.442),
+        ];
+        for (spec, tcp_paper, rdma_paper) in cases {
+            let tcp = TCP_200GBE.transfer_time(spec.weight_bytes());
+            let rdma = RDMA_400IB.transfer_time(spec.weight_bytes());
+            assert!(
+                (tcp - tcp_paper).abs() / tcp_paper < 0.25,
+                "{} tcp {tcp} vs {tcp_paper}",
+                spec.name
+            );
+            assert!(
+                (rdma - rdma_paper).abs() / rdma_paper < 0.35,
+                "{} rdma {rdma} vs {rdma_paper}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn nvlink_much_faster_than_cross_cluster() {
+        let bytes = QWEN3_8B.weight_bytes();
+        assert!(NVLINK_INTRA.transfer_time(bytes) < 0.1 * RDMA_400IB.transfer_time(bytes));
+    }
+
+    #[test]
+    fn small_transfer_jitter_calibration() {
+        // §7.5 env-interaction I/O: mean 0.02s, max 1.4s.
+        let d = jittered_small_transfer(0.02, 1.4);
+        let mut rng = crate::simkit::SimRng::new(11);
+        let samples: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        assert!((mean - 0.02).abs() < 0.01, "mean {mean}");
+        assert!(max <= 1.4 + 1e-9, "max {max}");
+        assert!(max > 0.3, "tail should be visible, max {max}");
+    }
+
+    #[test]
+    fn streams_share_setup() {
+        let t1 = RDMA_400IB.transfer_time(1e9);
+        let t16 = RDMA_400IB.transfer_time_streams(1e9, 16);
+        assert!((t16 - t1) < 0.01);
+    }
+}

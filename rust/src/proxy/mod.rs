@@ -1,0 +1,253 @@
+//! LLMProxy: trajectory-level generation dispatch (§6.1).
+//!
+//! The proxy sits between EnvManagers and inference workers.  It
+//! dispatches *per-trajectory* requests (never batches of
+//! environments), routes each request to the GPU class its task domain
+//! prefers (R1), supports the weight-sync protocol's SUSPEND / RESUME
+//! commands (§6.2 steps ②/④), ABORTs stale trajectories, and — in PD
+//! mode (§6.3) — splits prefill and decode across engine pools.
+//!
+//! [`EngineSim`] models one inference worker's command-driven event
+//! loop over the roofline cost model; the real harness substitutes the
+//! PJRT-backed engine in [`crate::exec`] behind the same command set.
+
+mod engine_sim;
+pub mod pd;
+
+pub use engine_sim::{EngineSim, EngineStats, SimRequest, StepOutcome};
+
+use crate::env::TaskDomain;
+use crate::hw::GpuClass;
+use crate::rl::TrajectoryId;
+use std::collections::BTreeMap;
+
+/// Commands an inference worker's event loop processes between engine
+/// steps (§6.1: ADD / ABORT; §6.2: SUSPEND / RESUME).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Add(SimRequest),
+    Abort(TrajectoryId),
+    Suspend,
+    Resume,
+}
+
+/// The proxy: engine registry + affinity routing + suspend state.
+pub struct LlmProxy {
+    engines: Vec<EngineSim>,
+    affinity: BTreeMap<TaskDomain, GpuClass>,
+    default_class: Option<GpuClass>,
+    suspended: bool,
+    /// Dispatch counters for fairness stats.
+    dispatched: BTreeMap<TaskDomain, u64>,
+}
+
+impl LlmProxy {
+    pub fn new(engines: Vec<EngineSim>) -> Self {
+        LlmProxy {
+            engines,
+            affinity: BTreeMap::new(),
+            default_class: None,
+            suspended: false,
+            dispatched: BTreeMap::new(),
+        }
+    }
+
+    /// Declare `domain → class` routing (Listing 1's `hw_affinity`).
+    pub fn set_affinity(&mut self, domain: TaskDomain, class: GpuClass) -> &mut Self {
+        self.affinity.insert(domain, class);
+        self
+    }
+
+    /// Class used for domains without an explicit declaration
+    /// (Listing 1's `"default": "H20"`).
+    pub fn set_default_class(&mut self, class: GpuClass) -> &mut Self {
+        self.default_class = Some(class);
+        self
+    }
+
+    pub fn engines(&self) -> &[EngineSim] {
+        &self.engines
+    }
+
+    pub fn engines_mut(&mut self) -> &mut [EngineSim] {
+        &mut self.engines
+    }
+
+    pub fn is_suspended(&self) -> bool {
+        self.suspended
+    }
+
+    fn preferred_class(&self, domain: TaskDomain) -> Option<GpuClass> {
+        self.affinity.get(&domain).copied().or(self.default_class)
+    }
+
+    /// Route a request to the least-loaded engine of the preferred
+    /// class, with two fallbacks (§5.3 "redirects execution to a
+    /// compatible fallback... ensuring forward progress under transient
+    /// contention"):
+    /// * the class has no members → global least-loaded;
+    /// * the class is *congested* (its best queue is much deeper than
+    ///   the global best) → spill to the global least-loaded engine.
+    pub fn route(&self, domain: TaskDomain) -> Option<usize> {
+        let global = (0..self.engines.len()).min_by_key(|&i| self.engines[i].load())?;
+        let Some(cls) = self.preferred_class(domain) else {
+            return Some(global);
+        };
+        let preferred = (0..self.engines.len())
+            .filter(|&i| self.engines[i].class == cls)
+            .min_by_key(|&i| self.engines[i].load());
+        // Spillover is asymmetric: decode-heavy work (preferring H20)
+        // degrades gracefully on compute-optimized GPUs, but
+        // prefill-heavy work must never spill onto bandwidth-optimized
+        // GPUs (6.7x slower prefill, Table 2) — the resource manager
+        // only offers *compatible* fallbacks (§5.3).
+        let may_spill = cls == GpuClass::H20;
+        match preferred {
+            Some(p)
+                if !may_spill
+                    || self.engines[p].load() <= 2 * self.engines[global].load() + 4 =>
+            {
+                Some(p)
+            }
+            _ => Some(global),
+        }
+    }
+
+    /// ADD: dispatch one trajectory-level generation request.
+    /// Returns the engine it landed on, or None while suspended (the
+    /// caller re-queues; the paper's suspend blocks new requests).
+    pub fn add(&mut self, req: SimRequest) -> Option<usize> {
+        if self.suspended {
+            return None;
+        }
+        let idx = self.route(req.domain)?;
+        *self.dispatched.entry(req.domain).or_insert(0) += 1;
+        self.engines[idx].enqueue(req);
+        Some(idx)
+    }
+
+    /// ABORT: cancel a trajectory on whichever engine holds it.
+    pub fn abort(&mut self, traj: TrajectoryId) -> bool {
+        self.engines.iter_mut().any(|e| e.abort(traj))
+    }
+
+    /// SUSPEND (protocol step ②): stop accepting and processing;
+    /// in-flight state is preserved on the engines.
+    pub fn suspend(&mut self) {
+        self.suspended = true;
+        for e in &mut self.engines {
+            e.suspend();
+        }
+    }
+
+    /// RESUME (protocol step ④): continue pending generation.
+    pub fn resume(&mut self) {
+        self.suspended = false;
+        for e in &mut self.engines {
+            e.resume();
+        }
+    }
+
+    /// Total KV-recompute cost across engines (protocol step ⑤): after
+    /// a weight update, in-flight trajectories rebuild their KV caches
+    /// under the new weights.
+    pub fn recompute_cost_s(&self) -> f64 {
+        self.engines.iter().map(|e| e.recompute_cost_s()).sum()
+    }
+
+    pub fn dispatch_counts(&self) -> &BTreeMap<TaskDomain, u64> {
+        &self.dispatched
+    }
+
+    /// In-flight request count across engines.
+    pub fn inflight(&self) -> usize {
+        self.engines.iter().map(|e| e.load()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QWEN3_8B;
+
+    fn req(id: u64, domain: TaskDomain) -> SimRequest {
+        SimRequest {
+            traj: TrajectoryId(id),
+            domain,
+            new_tokens: 100.0,
+            ctx_tokens: 0.0,
+            decode_budget: 50.0,
+        }
+    }
+
+    fn proxy() -> LlmProxy {
+        let engines = vec![
+            EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), 32),
+            EngineSim::new(1, GpuClass::H20, 6, QWEN3_8B.clone(), 32),
+            EngineSim::new(2, GpuClass::H20, 6, QWEN3_8B.clone(), 32),
+        ];
+        let mut p = LlmProxy::new(engines);
+        p.set_affinity(TaskDomain::Game, GpuClass::H800)
+            .set_default_class(GpuClass::H20);
+        p
+    }
+
+    #[test]
+    fn routes_declared_domain_to_declared_class() {
+        let mut p = proxy();
+        let idx = p.add(req(1, TaskDomain::Game)).unwrap();
+        assert_eq!(p.engines()[idx].class, GpuClass::H800);
+    }
+
+    #[test]
+    fn default_class_for_undeclared_domains() {
+        let mut p = proxy();
+        let idx = p.add(req(2, TaskDomain::MathTool)).unwrap();
+        assert_eq!(p.engines()[idx].class, GpuClass::H20);
+    }
+
+    #[test]
+    fn least_loaded_within_class() {
+        let mut p = proxy();
+        let a = p.add(req(1, TaskDomain::MathTool)).unwrap();
+        let b = p.add(req(2, TaskDomain::MathTool)).unwrap();
+        assert_ne!(a, b, "second request must go to the other H20 engine");
+    }
+
+    #[test]
+    fn suspend_blocks_and_resume_unblocks() {
+        let mut p = proxy();
+        p.suspend();
+        assert!(p.add(req(1, TaskDomain::Game)).is_none());
+        p.resume();
+        assert!(p.add(req(1, TaskDomain::Game)).is_some());
+    }
+
+    #[test]
+    fn abort_reaches_the_right_engine() {
+        let mut p = proxy();
+        p.add(req(7, TaskDomain::Game)).unwrap();
+        assert!(p.abort(TrajectoryId(7)));
+        assert!(!p.abort(TrajectoryId(7)), "second abort finds nothing");
+        assert_eq!(p.inflight(), 0);
+    }
+
+    #[test]
+    fn missing_class_falls_back() {
+        let engines = vec![EngineSim::new(0, GpuClass::H20, 1, QWEN3_8B.clone(), 8)];
+        let mut p = LlmProxy::new(engines);
+        p.set_affinity(TaskDomain::Game, GpuClass::H800);
+        // No H800 engine exists; request still lands somewhere.
+        assert!(p.add(req(1, TaskDomain::Game)).is_some());
+    }
+
+    #[test]
+    fn dispatch_counts_accumulate() {
+        let mut p = proxy();
+        p.add(req(1, TaskDomain::Game));
+        p.add(req(2, TaskDomain::Game));
+        p.add(req(3, TaskDomain::Web));
+        assert_eq!(p.dispatch_counts()[&TaskDomain::Game], 2);
+        assert_eq!(p.dispatch_counts()[&TaskDomain::Web], 1);
+    }
+}

@@ -1,0 +1,297 @@
+//! Resource plane: heterogeneous pools, affinity binding, fallback.
+//!
+//! Implements the paper's *resource manager* (§4.1, §5.2): it keeps a
+//! global real-time view of the disaggregated pools (compute-optimized
+//! GPUs, bandwidth-optimized GPUs, CPU slots, serverless endpoints),
+//! interprets worker-level hardware-affinity declarations, binds
+//! Workers to concrete resources, and *opportunistically falls back*
+//! to compatible pools instead of stalling deployment when the
+//! preferred hardware is unavailable.
+
+use crate::env::TaskDomain;
+use crate::hw::GpuClass;
+use std::collections::BTreeMap;
+
+/// The resource classes of the disaggregated fabric (Fig 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ResourceClass {
+    Gpu(GpuClass),
+    CpuSlot,
+    Serverless,
+}
+
+impl std::fmt::Display for ResourceClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResourceClass::Gpu(g) => write!(f, "gpu:{g}"),
+            ResourceClass::CpuSlot => write!(f, "cpu"),
+            ResourceClass::Serverless => write!(f, "serverless"),
+        }
+    }
+}
+
+/// Worker roles (the four Clusters of §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Role {
+    ActorTrain,
+    ActorGen,
+    Reward,
+    Environment,
+}
+
+impl Role {
+    /// Default affinity order (§5.2): training → compute-optimized
+    /// GPUs, generation → bandwidth-optimized GPUs, environments →
+    /// CPU servers, reward → serverless (falling back to local GPUs).
+    pub fn default_affinity(self) -> &'static [ResourceClass] {
+        match self {
+            Role::ActorTrain => &[
+                ResourceClass::Gpu(GpuClass::H800),
+                ResourceClass::Gpu(GpuClass::H20),
+            ],
+            Role::ActorGen => &[
+                ResourceClass::Gpu(GpuClass::H20),
+                ResourceClass::Gpu(GpuClass::H800),
+            ],
+            Role::Reward => &[
+                ResourceClass::Serverless,
+                ResourceClass::Gpu(GpuClass::H20),
+                ResourceClass::Gpu(GpuClass::H800),
+            ],
+            Role::Environment => &[ResourceClass::CpuSlot],
+        }
+    }
+}
+
+/// A successful binding: `count` units of `class` held by a worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Binding {
+    pub id: u64,
+    pub role: Role,
+    pub class: ResourceClass,
+    pub count: usize,
+    /// True when the preferred class was unavailable and a fallback
+    /// was used (surfaced to metrics; the paper logs these).
+    pub fallback: bool,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Pool {
+    total: usize,
+    free: usize,
+}
+
+/// Binding failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BindError {
+    pub role: Role,
+    pub wanted: Vec<ResourceClass>,
+    pub count: usize,
+}
+
+impl std::fmt::Display for BindError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no capacity for {:?} x{} in any of {:?}",
+            self.role, self.count, self.wanted
+        )
+    }
+}
+
+impl std::error::Error for BindError {}
+
+/// The resource manager: pool accounting + the binding registry
+/// (the paper uses a shared Redis; a BTreeMap plays that role here —
+/// same semantics, single-process).
+#[derive(Debug, Default)]
+pub struct ResourceManager {
+    pools: BTreeMap<ResourceClass, Pool>,
+    bindings: BTreeMap<u64, Binding>,
+    next_id: u64,
+    /// Task-domain → GPU class routing table (R1, `hw_mapping`).
+    hw_mapping: BTreeMap<TaskDomain, GpuClass>,
+}
+
+impl ResourceManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `count` units of a resource class.
+    pub fn add_pool(&mut self, class: ResourceClass, count: usize) -> &mut Self {
+        let p = self.pools.entry(class).or_default();
+        p.total += count;
+        p.free += count;
+        self
+    }
+
+    pub fn free(&self, class: ResourceClass) -> usize {
+        self.pools.get(&class).map(|p| p.free).unwrap_or(0)
+    }
+
+    pub fn total(&self, class: ResourceClass) -> usize {
+        self.pools.get(&class).map(|p| p.total).unwrap_or(0)
+    }
+
+    /// Declare a task-domain affinity (the `hw_mapping` decorator,
+    /// Listing 1).  Domains without an entry use the role default.
+    pub fn set_hw_mapping(&mut self, domain: TaskDomain, class: GpuClass) -> &mut Self {
+        self.hw_mapping.insert(domain, class);
+        self
+    }
+
+    /// R1 routing: which GPU class should serve `domain`'s generation?
+    pub fn route_domain(&self, domain: TaskDomain) -> Option<GpuClass> {
+        self.hw_mapping.get(&domain).copied()
+    }
+
+    /// Bind `count` units for `role`, trying `affinity` in order and
+    /// falling back to later entries when earlier pools lack capacity.
+    pub fn bind(
+        &mut self,
+        role: Role,
+        affinity: &[ResourceClass],
+        count: usize,
+    ) -> Result<Binding, BindError> {
+        assert!(count > 0);
+        for (i, &class) in affinity.iter().enumerate() {
+            if self.free(class) >= count {
+                let p = self.pools.get_mut(&class).unwrap();
+                p.free -= count;
+                let id = self.next_id;
+                self.next_id += 1;
+                let b = Binding {
+                    id,
+                    role,
+                    class,
+                    count,
+                    fallback: i > 0,
+                };
+                self.bindings.insert(id, b.clone());
+                return Ok(b);
+            }
+        }
+        Err(BindError {
+            role,
+            wanted: affinity.to_vec(),
+            count,
+        })
+    }
+
+    /// Bind with the role's default affinity chain.
+    pub fn bind_default(&mut self, role: Role, count: usize) -> Result<Binding, BindError> {
+        self.bind(role, role.default_affinity(), count)
+    }
+
+    /// Release a binding back to its pool.  Idempotent per id.
+    pub fn release(&mut self, binding_id: u64) -> bool {
+        match self.bindings.remove(&binding_id) {
+            Some(b) => {
+                self.pools.get_mut(&b.class).unwrap().free += b.count;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn active_bindings(&self) -> impl Iterator<Item = &Binding> {
+        self.bindings.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manager() -> ResourceManager {
+        let mut rm = ResourceManager::new();
+        rm.add_pool(ResourceClass::Gpu(GpuClass::H800), 96)
+            .add_pool(ResourceClass::Gpu(GpuClass::H20), 32)
+            .add_pool(ResourceClass::CpuSlot, 1024)
+            .add_pool(ResourceClass::Serverless, usize::MAX / 2);
+        rm
+    }
+
+    #[test]
+    fn default_bindings_follow_paper_defaults() {
+        let mut rm = manager();
+        let train = rm.bind_default(Role::ActorTrain, 32).unwrap();
+        assert_eq!(train.class, ResourceClass::Gpu(GpuClass::H800));
+        assert!(!train.fallback);
+        let gen = rm.bind_default(Role::ActorGen, 32).unwrap();
+        assert_eq!(gen.class, ResourceClass::Gpu(GpuClass::H20));
+        let env = rm.bind_default(Role::Environment, 512).unwrap();
+        assert_eq!(env.class, ResourceClass::CpuSlot);
+        let rew = rm.bind_default(Role::Reward, 8).unwrap();
+        assert_eq!(rew.class, ResourceClass::Serverless);
+        assert_eq!(rm.free(ResourceClass::Gpu(GpuClass::H800)), 64);
+    }
+
+    #[test]
+    fn fallback_when_preferred_exhausted() {
+        let mut rm = manager();
+        rm.bind_default(Role::ActorGen, 32).unwrap(); // drains H20
+        let gen2 = rm.bind_default(Role::ActorGen, 16).unwrap();
+        assert_eq!(gen2.class, ResourceClass::Gpu(GpuClass::H800));
+        assert!(gen2.fallback);
+    }
+
+    #[test]
+    fn bind_error_when_nothing_fits() {
+        let mut rm = manager();
+        let err = rm
+            .bind(
+                Role::ActorTrain,
+                &[ResourceClass::Gpu(GpuClass::H800)],
+                200,
+            )
+            .unwrap_err();
+        assert_eq!(err.count, 200);
+        assert!(err.to_string().contains("ActorTrain"));
+    }
+
+    #[test]
+    fn release_returns_capacity() {
+        let mut rm = manager();
+        let b = rm.bind_default(Role::ActorTrain, 96).unwrap();
+        assert_eq!(rm.free(ResourceClass::Gpu(GpuClass::H800)), 0);
+        assert!(rm.release(b.id));
+        assert_eq!(rm.free(ResourceClass::Gpu(GpuClass::H800)), 96);
+        // idempotent
+        assert!(!rm.release(b.id));
+        assert_eq!(rm.free(ResourceClass::Gpu(GpuClass::H800)), 96);
+    }
+
+    #[test]
+    fn hw_mapping_routes_domains() {
+        // Listing 1: FrozenLake → H800, default → H20.
+        let mut rm = manager();
+        rm.set_hw_mapping(TaskDomain::Game, GpuClass::H800);
+        assert_eq!(rm.route_domain(TaskDomain::Game), Some(GpuClass::H800));
+        assert_eq!(rm.route_domain(TaskDomain::MathTool), None);
+    }
+
+    #[test]
+    fn partial_capacity_prefers_fallback_over_split() {
+        // The manager binds whole requests to a single class (the
+        // paper's Worker groups are homogeneous); a request larger
+        // than the preferred pool's free space falls back entirely.
+        let mut rm = ResourceManager::new();
+        rm.add_pool(ResourceClass::Gpu(GpuClass::H20), 4)
+            .add_pool(ResourceClass::Gpu(GpuClass::H800), 64);
+        let b = rm.bind_default(Role::ActorGen, 8).unwrap();
+        assert_eq!(b.class, ResourceClass::Gpu(GpuClass::H800));
+        assert_eq!(rm.free(ResourceClass::Gpu(GpuClass::H20)), 4);
+    }
+
+    #[test]
+    fn registry_tracks_active_bindings() {
+        let mut rm = manager();
+        let a = rm.bind_default(Role::ActorTrain, 8).unwrap();
+        let _b = rm.bind_default(Role::ActorGen, 8).unwrap();
+        assert_eq!(rm.active_bindings().count(), 2);
+        rm.release(a.id);
+        assert_eq!(rm.active_bindings().count(), 1);
+    }
+}

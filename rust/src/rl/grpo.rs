@@ -1,0 +1,203 @@
+//! GRPO: group-normalized advantages and train-sample packing.
+//!
+//! GRPO [44] samples a *group* of G trajectories per prompt and uses
+//! the group's reward statistics as the baseline:
+//! `A_i = (r_i − mean(r)) / std(r)`.  The redundant-environment
+//! optimization (§6.3, Fig 14b) leans on this structure: launching more
+//! than G environments per group and keeping the first G finishers
+//! preserves the estimator while masking stragglers.
+
+use super::{Trajectory, Version};
+use crate::env::tokenizer::{ACT, BOS, PAD, SEP};
+
+/// Group-normalized advantages for one GRPO group's rewards.
+///
+/// Returns one advantage per input reward.  A degenerate group (all
+/// rewards equal) gets all-zero advantages — no gradient, matching the
+/// GRPO estimator's behaviour.
+pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
+    assert!(!rewards.is_empty());
+    let n = rewards.len() as f64;
+    let mean = rewards.iter().sum::<f64>() / n;
+    let var = rewards.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt();
+    if std < 1e-9 {
+        return vec![0.0; rewards.len()];
+    }
+    rewards.iter().map(|r| (r - mean) / std).collect()
+}
+
+/// A fixed-shape training sample for the `train_step` artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedSample {
+    /// Token ids, PAD-padded/truncated to `seq_len`.
+    pub tokens: Vec<i32>,
+    /// 1.0 exactly at *action* token positions (only those are trained).
+    pub mask: Vec<f32>,
+    /// Per-token advantage (the trajectory's scalar advantage broadcast
+    /// over its action positions).
+    pub adv: Vec<f32>,
+    /// Model version whose log-probs must be used as `old_logp`.
+    pub version: Version,
+}
+
+/// Flatten a finished trajectory into one `seq_len`-wide sample:
+/// `BOS obs ACT action SEP obs ACT action ... PAD`.
+///
+/// The layout must match `env::tokenizer::build_prompt` so that the
+/// log-probs the trainer recomputes line up with what the policy saw at
+/// generation time.  If the flattened sequence exceeds `seq_len`, the
+/// *tail* is kept (same sliding-window rule as the prompt builder).
+pub fn pack_sample(traj: &Trajectory, advantage: f64, seq_len: usize) -> PackedSample {
+    let mut tokens: Vec<i32> = vec![BOS];
+    let mut is_action: Vec<bool> = vec![false];
+    for turn in &traj.turns {
+        for &t in &turn.obs_tokens {
+            tokens.push(t);
+            is_action.push(false);
+        }
+        tokens.push(ACT);
+        is_action.push(false);
+        for &t in &turn.action_tokens {
+            tokens.push(t);
+            is_action.push(true);
+        }
+        tokens.push(SEP);
+        is_action.push(false);
+    }
+
+    if tokens.len() > seq_len {
+        // keep BOS + most recent (seq_len - 1) tokens
+        let cut = tokens.len() - (seq_len - 1);
+        tokens = std::iter::once(BOS)
+            .chain(tokens[cut..].iter().copied())
+            .collect();
+        is_action = std::iter::once(false)
+            .chain(is_action[cut..].iter().copied())
+            .collect();
+    }
+
+    let mut mask = vec![0.0f32; seq_len];
+    let mut adv = vec![0.0f32; seq_len];
+    for (i, &a) in is_action.iter().enumerate() {
+        if a {
+            mask[i] = 1.0;
+            adv[i] = advantage as f32;
+        }
+    }
+    tokens.resize(seq_len, PAD);
+
+    PackedSample {
+        tokens,
+        mask,
+        adv,
+        version: traj.min_version(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::TaskDomain;
+    use crate::rl::{TrajectoryId, Turn};
+
+    fn traj(turn_specs: &[(&[i32], &[i32])]) -> Trajectory {
+        let mut t = Trajectory::new(TrajectoryId(0), TaskDomain::Game, Version(2));
+        for (obs, act) in turn_specs {
+            t.turns.push(Turn {
+                obs_tokens: obs.to_vec(),
+                action_tokens: act.to_vec(),
+                version: Version(2),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn advantages_zero_mean_unit_scale() {
+        let adv = group_advantages(&[1.0, 0.0, 1.0, 0.0]);
+        let mean: f64 = adv.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((adv[0] - 1.0).abs() < 1e-12);
+        assert!((adv[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_group_gets_zero_gradient() {
+        assert_eq!(group_advantages(&[1.0; 8]), vec![0.0; 8]);
+        assert_eq!(group_advantages(&[0.0; 8]), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn single_element_group() {
+        assert_eq!(group_advantages(&[0.7]), vec![0.0]);
+    }
+
+    #[test]
+    fn pack_marks_only_action_tokens() {
+        let t = traj(&[(&[10, 11], &[20, 21, 22])]);
+        let s = pack_sample(&t, 0.5, 16);
+        assert_eq!(s.tokens.len(), 16);
+        assert_eq!(s.tokens[0], BOS);
+        // layout: BOS 10 11 ACT 20 21 22 SEP PAD...
+        assert_eq!(&s.tokens[1..8], &[10, 11, ACT, 20, 21, 22, SEP]);
+        assert_eq!(s.tokens[8], PAD);
+        let marked: Vec<usize> = s
+            .mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(marked, vec![4, 5, 6]);
+        for i in marked {
+            assert_eq!(s.adv[i], 0.5);
+        }
+        assert_eq!(s.adv[0], 0.0);
+    }
+
+    #[test]
+    fn pack_truncation_keeps_tail() {
+        let obs: Vec<i32> = (0..30).collect();
+        let act: Vec<i32> = (100..130).collect();
+        let t = traj(&[(&obs, &act), (&obs, &act)]);
+        let s = pack_sample(&t, 1.0, 32);
+        assert_eq!(s.tokens.len(), 32);
+        assert_eq!(s.tokens[0], BOS);
+        // The last real token before padding must be SEP (end of turn 2).
+        let last_non_pad = s.tokens.iter().rposition(|&t| t != PAD).unwrap();
+        assert_eq!(s.tokens[last_non_pad], SEP);
+        // Action mask nonempty and aligned with kept action tokens.
+        assert!(s.mask.iter().sum::<f32>() > 0.0);
+        for (i, &m) in s.mask.iter().enumerate() {
+            if m > 0.0 {
+                assert!((100..130).contains(&s.tokens[i]), "tok {}", s.tokens[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_version_is_min_turn_version() {
+        let mut t = traj(&[(&[1], &[2])]);
+        t.turns[0].version = Version(7);
+        t.turns.push(Turn {
+            obs_tokens: vec![3],
+            action_tokens: vec![4],
+            version: Version(9),
+        });
+        let s = pack_sample(&t, 0.0, 16);
+        assert_eq!(s.version, Version(7));
+    }
+
+    #[test]
+    fn group_size_8_matches_paper_config() {
+        // §7.1: group size 8 — sanity on the intended usage.
+        let rewards = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let adv = group_advantages(&rewards);
+        assert_eq!(adv.len(), 8);
+        // positives all equal, negatives all equal
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert_eq!(adv[0], adv[3]);
+        assert_eq!(adv[1], adv[2]);
+    }
+}

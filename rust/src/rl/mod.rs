@@ -1,0 +1,12 @@
+//! RL core types and GRPO math.
+//!
+//! Trajectories, version (staleness) accounting, GRPO group-normalized
+//! advantages (§2.1, §7.1: GRPO, group size 8), and the packing of
+//! finished trajectories into fixed-shape training samples for the AOT
+//! `train_step` artifact.
+
+mod grpo;
+mod types;
+
+pub use grpo::{group_advantages, pack_sample, PackedSample};
+pub use types::{Trajectory, TrajectoryId, Turn, Version};

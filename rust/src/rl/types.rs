@@ -1,0 +1,185 @@
+//! Trajectory and version types shared by every plane.
+
+use crate::env::TaskDomain;
+
+/// Monotone model-version counter.  The paper's asynchronous bound α
+/// is expressed over these: a trajectory initiated at version `v` may
+/// only be trained while the current version is ≤ `v + α` (§6.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version(pub u64);
+
+impl Version {
+    pub fn next(self) -> Version {
+        Version(self.0 + 1)
+    }
+
+    /// Is a trajectory started at `self` still fresh at `current` under
+    /// bound `alpha`?  (Paper: "any buffered trajectory must have been
+    /// initiated by a version no older than (n − α)".)
+    pub fn fresh_at(self, current: Version, alpha: u64) -> bool {
+        current.0 <= self.0 + alpha
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TrajectoryId(pub u64);
+
+/// One agent-environment exchange.
+#[derive(Clone, Debug, Default)]
+pub struct Turn {
+    /// Observation tokens fed to the model this turn (new tokens only,
+    /// under prefix caching).
+    pub obs_tokens: Vec<i32>,
+    /// Action tokens the model generated.
+    pub action_tokens: Vec<i32>,
+    /// Model version that generated this turn's action (a long
+    /// trajectory can span versions after in-flight KV recomputation,
+    /// protocol step ⑤).
+    pub version: Version,
+}
+
+/// A (possibly in-progress) trajectory.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub id: TrajectoryId,
+    pub domain: TaskDomain,
+    /// Version at rollout start (AReaL bounds staleness on this).
+    pub version_started: Version,
+    /// GRPO group this trajectory belongs to (prompt-group id).
+    pub group: u64,
+    pub turns: Vec<Turn>,
+    /// Scalar reward from the reward stage (None until scored).
+    pub reward: Option<f64>,
+    /// Wall/sim time bookkeeping.
+    pub started_at: f64,
+    pub finished_at: Option<f64>,
+}
+
+impl Trajectory {
+    pub fn new(id: TrajectoryId, domain: TaskDomain, version: Version) -> Self {
+        Trajectory {
+            id,
+            domain,
+            version_started: version,
+            group: 0,
+            turns: Vec::new(),
+            reward: None,
+            started_at: 0.0,
+            finished_at: None,
+        }
+    }
+
+    /// Oldest model version that contributed an action.
+    pub fn min_version(&self) -> Version {
+        self.turns
+            .iter()
+            .map(|t| t.version)
+            .min()
+            .unwrap_or(self.version_started)
+    }
+
+    /// Newest model version that contributed an action.
+    pub fn max_version(&self) -> Version {
+        self.turns
+            .iter()
+            .map(|t| t.version)
+            .max()
+            .unwrap_or(self.version_started)
+    }
+
+    /// Staleness of the trajectory's *start* version — the window both
+    /// systems bound (§6.2).  The RollArt-vs-AReaL difference is
+    /// *enforcement time*: RollArt re-checks this in every iteration
+    /// and aborts mid-flight (footnote 1: "controls trajectory-level
+    /// staleness in each iteration"), while AReaL only filters at
+    /// trajectory start / batch consumption — so AReaL finishes
+    /// generating long stale tails it then has to throw away.
+    pub fn fresh_at_start(&self, current: Version, alpha: u64) -> bool {
+        self.version_started.fresh_at(current, alpha)
+    }
+
+    /// Strict per-turn variant: every turn's sampling version must be
+    /// inside the window.  Exposed as an ablation knob
+    /// ([`crate::buffer::StalenessPolicy::PerTurn`]).
+    pub fn fresh_per_turn(&self, current: Version, alpha: u64) -> bool {
+        self.min_version().fresh_at(current, alpha)
+    }
+
+    /// Aliases used by the buffer eviction policies.
+    pub fn fresh_rollart(&self, current: Version, alpha: u64) -> bool {
+        self.fresh_per_turn(current, alpha)
+    }
+
+    pub fn fresh_areal(&self, current: Version, alpha: u64) -> bool {
+        self.fresh_at_start(current, alpha)
+    }
+
+    pub fn is_scored(&self) -> bool {
+        self.reward.is_some()
+    }
+
+    pub fn total_action_tokens(&self) -> usize {
+        self.turns.iter().map(|t| t.action_tokens.len()).sum()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.turns
+            .iter()
+            .map(|t| t.obs_tokens.len() + t.action_tokens.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traj_with_versions(start: u64, turn_versions: &[u64]) -> Trajectory {
+        let mut t = Trajectory::new(TrajectoryId(0), TaskDomain::Game, Version(start));
+        for &v in turn_versions {
+            t.turns.push(Turn {
+                obs_tokens: vec![1, 2],
+                action_tokens: vec![3],
+                version: Version(v),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn version_freshness_window() {
+        let v = Version(5);
+        assert!(v.fresh_at(Version(5), 0));
+        assert!(v.fresh_at(Version(6), 1));
+        assert!(!v.fresh_at(Version(7), 1));
+    }
+
+    #[test]
+    fn rollart_vs_areal_staleness() {
+        // Started at v5 but one early turn came from v4 (pre-recompute).
+        let t = traj_with_versions(5, &[4, 5, 6]);
+        // AReaL: only the start version matters.
+        assert!(t.fresh_areal(Version(6), 1));
+        // RollArt: the v4 turn violates α=1 at current v6.
+        assert!(!t.fresh_rollart(Version(6), 1));
+        // Both fresh at α=2.
+        assert!(t.fresh_rollart(Version(6), 2));
+    }
+
+    #[test]
+    fn min_max_versions() {
+        let t = traj_with_versions(3, &[3, 4, 5]);
+        assert_eq!(t.min_version(), Version(3));
+        assert_eq!(t.max_version(), Version(5));
+        let empty = traj_with_versions(7, &[]);
+        assert_eq!(empty.min_version(), Version(7));
+    }
+
+    #[test]
+    fn token_accounting() {
+        let t = traj_with_versions(0, &[0, 0]);
+        assert_eq!(t.total_action_tokens(), 2);
+        assert_eq!(t.total_tokens(), 6);
+        assert!(!t.is_scored());
+    }
+}

@@ -1,0 +1,231 @@
+//! `artifacts/manifest.json` parsing: the cross-language contract
+//! between `python/compile/aot.py` and the Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model shape constants (python/compile/shapes.py).
+#[derive(Clone, Debug)]
+pub struct ModelShapes {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub batch: usize,
+    pub max_seq: usize,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub param_count: usize,
+}
+
+/// One tensor in an entry's flat signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry (prefill / decode_step / logprob / train_step).
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelShapes,
+    /// (name, shape) in flat parameter order.
+    pub param_layout: Vec<(String, Vec<usize>)>,
+    pub entries: Vec<EntrySpec>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest missing numeric field {key}"))
+}
+
+fn tensor_list(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensors"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<usize>>>()?,
+                dtype: t
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let model = ModelShapes {
+            vocab: usize_field(m, "vocab")?,
+            d_model: usize_field(m, "d_model")?,
+            n_layers: usize_field(m, "n_layers")?,
+            n_heads: usize_field(m, "n_heads")?,
+            head_dim: usize_field(m, "head_dim")?,
+            batch: usize_field(m, "batch")?,
+            max_seq: usize_field(m, "max_seq")?,
+            train_batch: usize_field(m, "train_batch")?,
+            train_seq: usize_field(m, "train_seq")?,
+            param_count: usize_field(m, "param_count")?,
+        };
+
+        let param_layout = j
+            .get("param_layout")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing param_layout"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entries = Vec::new();
+        let entries_obj = j
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("missing entries"))?;
+        for (name, e) in entries_obj {
+            let file = e
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            entries.push(EntrySpec {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: tensor_list(e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: tensor_list(e.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest {
+            dir,
+            model,
+            param_layout,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no entry {name} in manifest"))
+    }
+
+    /// Total f32 elements across the parameter layout.
+    pub fn param_elements(&self) -> usize {
+        self.param_layout
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Locate the artifacts directory: `$ROLLART_ARTIFACTS`, else walk up
+/// from the crate/workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ROLLART_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for base in [
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts"),
+        PathBuf::from("artifacts"),
+        PathBuf::from("../artifacts"),
+    ] {
+        if base.join("manifest.json").exists() {
+            return base;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.param_elements(), m.model.param_count);
+        let train = m.entry("train_step").unwrap();
+        let n = m.param_layout.len();
+        assert_eq!(train.inputs.len(), 3 * n + 6);
+        assert_eq!(train.outputs.len(), 3 * n + 3);
+        assert_eq!(train.outputs[3 * n].name, "loss");
+        // params come first, in layout order
+        for (i, (name, shape)) in m.param_layout.iter().enumerate() {
+            assert_eq!(&train.inputs[i].name, name);
+            assert_eq!(&train.inputs[i].shape, shape);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::tempdir::TempDir::new("man").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), "{}").unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+}

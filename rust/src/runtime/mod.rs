@@ -1,0 +1,435 @@
+//! PJRT runtime: load the AOT artifacts and execute them on the
+//! request path (Python never runs here).
+//!
+//! `python/compile/aot.py` lowers the L2 model (with its L1 Pallas
+//! kernels) to HLO *text*; this module parses each module, compiles it
+//! on the PJRT CPU client once at startup, and exposes typed wrappers:
+//! [`Runtime::prefill`], [`Runtime::decode_step`], [`Runtime::logprob`]
+//! and [`Runtime::train_step`].  Parameter order follows
+//! `manifest.json`'s flat layout (see `runtime::manifest`).
+//!
+//! HLO text — not serialized protos — is the interchange format: jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns them (see /opt/xla-example/README.md).
+
+mod manifest;
+
+pub use manifest::{default_artifacts_dir, EntrySpec, Manifest, ModelShapes, TensorSpec};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Flat model parameters (layout order), shared by all entries.
+pub struct Params(pub Vec<Literal>);
+
+impl Params {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Total byte size (for weight-transfer accounting).
+    pub fn byte_size(&self) -> usize {
+        self.0.iter().map(|l| l.size_bytes()).sum()
+    }
+}
+
+/// Adam training state: params + first/second moments + step counter.
+pub struct TrainState {
+    pub params: Params,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    pub step: f32,
+}
+
+/// Scalar diagnostics of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub entropy: f32,
+    pub grad_norm: f32,
+}
+
+/// KV cache pair (cache_k, cache_v), shape (L,B,H,S,Dh) each.
+pub struct KvCache {
+    pub k: Literal,
+    pub v: Literal,
+}
+
+/// Parameters resident on the PJRT device (§Perf L3-1).
+///
+/// The naive path re-uploads all ~17.8 MB of parameter literals on
+/// *every* executable call; uploading once and executing with
+/// `execute_b` removes that host→device traffic from the decode loop
+/// (see `rust/benches/bench_runtime.rs` for the before/after).
+pub struct DeviceParams {
+    bufs: Vec<PjRtBuffer>,
+}
+
+impl DeviceParams {
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// The compiled runtime.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    exes: BTreeMap<String, PjRtLoadedExecutable>,
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("literal size mismatch: {} vs {:?}", data.len(), dims);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("literal size mismatch: {} vs {:?}", data.len(), dims);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+impl Runtime {
+    /// Load the manifest, parse + compile every entry.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = BTreeMap::new();
+        for entry in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            exes.insert(entry.name.clone(), exe);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(default_artifacts_dir())
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Initial parameters from `params.init.bin` (raw LE f32 concat in
+    /// layout order).
+    pub fn init_params(&self) -> Result<Params> {
+        let path = self.manifest.dir.join("params.init.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.manifest.param_elements() * 4 {
+            bail!(
+                "params.init.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.manifest.param_elements() * 4
+            );
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(self.manifest.param_layout.len());
+        let mut off = 0;
+        for (_, shape) in &self.manifest.param_layout {
+            let n: usize = shape.iter().product();
+            out.push(f32_literal(&floats[off..off + n], shape)?);
+            off += n;
+        }
+        Ok(Params(out))
+    }
+
+    /// Zero-initialized Adam state.
+    pub fn init_train_state(&self) -> Result<TrainState> {
+        let params = self.init_params()?;
+        let zeros = |shape: &[usize]| -> Result<Literal> {
+            f32_literal(&vec![0.0; shape.iter().product()], shape)
+        };
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for (_, shape) in &self.manifest.param_layout {
+            m.push(zeros(shape)?);
+            v.push(zeros(shape)?);
+        }
+        Ok(TrainState {
+            params,
+            m,
+            v,
+            step: 0.0,
+        })
+    }
+
+    fn run_entry(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("entry {name} not loaded"))?;
+        let spec = self.manifest.entry(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let result = exe
+            .execute::<&Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Prompt ingestion for a padded batch.
+    ///
+    /// `tokens`: (B, S) row-major; `lengths`: (B,) valid prompt widths.
+    /// Returns (next-token logits (B,V) row-major, KV cache).
+    pub fn prefill(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let m = &self.manifest.model;
+        let tok = i32_literal(tokens, &[m.batch, m.max_seq])?;
+        let len = i32_literal(lengths, &[m.batch])?;
+        let mut args: Vec<&Literal> = params.0.iter().collect();
+        args.push(&tok);
+        args.push(&len);
+        let mut outs = self.run_entry("prefill", &args)?;
+        let v = outs.remove(2);
+        let k = outs.remove(1);
+        let logits = outs.remove(0).to_vec::<f32>()?;
+        Ok((logits, KvCache { k, v }))
+    }
+
+    /// One continuous-batching decode step.
+    ///
+    /// `tokens`: (B,) next input token per slot; `lengths`: (B,) valid
+    /// cache length per slot.  Returns logits (B,V) and advances the
+    /// cache + lengths in place.
+    pub fn decode_step(
+        &self,
+        params: &Params,
+        cache: &mut KvCache,
+        tokens: &[i32],
+        lengths: &mut [i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let tok = i32_literal(tokens, &[m.batch])?;
+        let len = i32_literal(lengths, &[m.batch])?;
+        let mut args: Vec<&Literal> = params.0.iter().collect();
+        args.push(&cache.k);
+        args.push(&cache.v);
+        args.push(&tok);
+        args.push(&len);
+        let mut outs = self.run_entry("decode_step", &args)?;
+        let new_len = outs.remove(3).to_vec::<i32>()?;
+        cache.v = outs.remove(2);
+        cache.k = outs.remove(1);
+        let logits = outs.remove(0).to_vec::<f32>()?;
+        lengths.copy_from_slice(&new_len);
+        Ok(logits)
+    }
+
+    /// Upload parameters to the device once (fast generation path).
+    pub fn upload_params(&self, params: &Params) -> Result<DeviceParams> {
+        let bufs = params
+            .0
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("uploading param: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceParams { bufs })
+    }
+
+    fn run_entry_b(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("entry {name} not loaded"))?;
+        let spec = self.manifest.entry(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let result = exe
+            .execute_b::<&PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!("{name}: wrong output arity {}", outs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Decode step against device-resident parameters (§Perf L3-1).
+    ///
+    /// Per call this uploads only the KV cache + 2 tiny int vectors
+    /// instead of the full parameter set; numerics are identical to
+    /// [`Runtime::decode_step`].
+    pub fn decode_step_device(
+        &self,
+        params: &DeviceParams,
+        cache: &mut KvCache,
+        tokens: &[i32],
+        lengths: &mut [i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let up = |l: &Literal| {
+            self.client
+                .buffer_from_host_literal(None, l)
+                .map_err(|e| anyhow!("upload: {e:?}"))
+        };
+        let ck = up(&cache.k)?;
+        let cv = up(&cache.v)?;
+        let tok = self
+            .client
+            .buffer_from_host_buffer(tokens, &[m.batch], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let len = self
+            .client
+            .buffer_from_host_buffer(&*lengths, &[m.batch], None)
+            .map_err(|e| anyhow!("upload lengths: {e:?}"))?;
+        let mut args: Vec<&PjRtBuffer> = params.bufs.iter().collect();
+        args.push(&ck);
+        args.push(&cv);
+        args.push(&tok);
+        args.push(&len);
+        let mut outs = self.run_entry_b("decode_step", &args)?;
+        let new_len = outs.remove(3).to_vec::<i32>()?;
+        cache.v = outs.remove(2);
+        cache.k = outs.remove(1);
+        let logits = outs.remove(0).to_vec::<f32>()?;
+        lengths.copy_from_slice(&new_len);
+        Ok(logits)
+    }
+
+    /// Per-token log-probabilities of realized sequences (B, S_train).
+    pub fn logprob(&self, params: &Params, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let tok = i32_literal(tokens, &[m.train_batch, m.train_seq])?;
+        let mut args: Vec<&Literal> = params.0.iter().collect();
+        args.push(&tok);
+        let mut outs = self.run_entry("logprob", &args)?;
+        Ok(outs.remove(0).to_vec::<f32>()?)
+    }
+
+    /// One fused GRPO train step (fwd + bwd + Adam), updating `state`
+    /// in place and returning the scalar diagnostics.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        lr: f32,
+        tokens: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        mask: &[f32],
+    ) -> Result<TrainMetrics> {
+        let m = &self.manifest.model;
+        let bt = [m.train_batch, m.train_seq];
+        state.step += 1.0;
+        let step_l = Literal::scalar(state.step);
+        let lr_l = Literal::scalar(lr);
+        let tok = i32_literal(tokens, &bt)?;
+        let old = f32_literal(old_logp, &bt)?;
+        let adv_l = f32_literal(adv, &bt)?;
+        let mask_l = f32_literal(mask, &bt)?;
+
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * state.params.len() + 6);
+        args.extend(state.params.0.iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&step_l);
+        args.push(&lr_l);
+        args.push(&tok);
+        args.push(&old);
+        args.push(&adv_l);
+        args.push(&mask_l);
+
+        let mut outs = self.run_entry("train_step", &args)?;
+        let n = state.params.len();
+        let grad_norm = outs.pop().unwrap().get_first_element::<f32>()?;
+        let entropy = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let v: Vec<Literal> = outs.drain(2 * n..).collect();
+        let mm: Vec<Literal> = outs.drain(n..).collect();
+        let p: Vec<Literal> = outs.drain(..).collect();
+        state.params = Params(p);
+        state.m = mm;
+        state.v = v;
+        Ok(TrainMetrics {
+            loss,
+            entropy,
+            grad_norm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Heavier integration coverage lives in rust/tests/e2e_runtime.rs;
+    // here only cheap contract checks that run without artifacts.
+
+    #[test]
+    fn literal_helpers_validate_shape() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(i32_literal(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn default_dir_is_stable() {
+        let d = default_artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

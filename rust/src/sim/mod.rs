@@ -1,0 +1,241 @@
+//! Discrete-event simulation drivers: the evaluation harness.
+//!
+//! Two drivers share the control-plane core:
+//!
+//! * [`sync_driver`] — the phase-structured *monolithic synchronous*
+//!   pipeline (the paper's Sync baseline): batched env interaction,
+//!   dedicated reward GPUs, blocking weight sync, blocking training.
+//!   Produces the Fig 3 step breakdowns and Fig 6 utilization directly.
+//! * [`async_driver`] — the event-driven trajectory-level pipeline used
+//!   by Sync+, One-off, AReaL and RollArt; the [`Mode`] knob selects
+//!   the coordination semantics (§7.1 baselines).
+//!
+//! Scenario configs mirror the paper's §7.1 setup; each bench in
+//! `rust/benches/paper_figures.rs` instantiates one scenario per table
+//! or figure row.
+
+pub mod async_driver;
+pub mod sync_driver;
+
+/// Trainer time over the raw roofline: RL training steps run at low
+/// MFU (long sequences with activation recompute, logprob passes,
+/// pipeline bubbles, optimizer sync).  8x over roofline ≈ 6% MFU,
+/// consistent with Fig 3's measured 84 s train phase for Qwen3-8B
+/// batch 128 on 32 H800s.
+pub const TRAIN_OVERHEAD: f64 = 8.0;
+
+use crate::buffer::StalenessPolicy;
+use crate::env::TaskDomain;
+use crate::envpool::EnvPoolConfig;
+use crate::hw::GpuClass;
+use crate::llm::LlmSpec;
+use crate::metrics::StepBreakdown;
+use crate::simkit::dist::Dist;
+
+/// Coordination semantics (§7.1's baseline grid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Monolithic synchronous (Sync): batched env interaction, blocking
+    /// reward/train/sync. Runs on [`sync_driver`].
+    Sync,
+    /// Sync + async env + async serverless reward, but synchronous
+    /// training (Sync+).
+    SyncPlus,
+    /// One-off asynchrony [32]: rollout k+1 overlaps train k; batch
+    /// boundaries preserved.
+    OneOff,
+    /// AReaL-style: continuous rollout, staleness bounded at trajectory
+    /// *start* only.
+    AReaL,
+    /// RollArt: continuous rollout, per-iteration staleness bound,
+    /// suspend/resume + KV recompute, hardware-affinity routing.
+    RollArt,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Sync => "Sync",
+            Mode::SyncPlus => "Sync+",
+            Mode::OneOff => "One-off",
+            Mode::AReaL => "AReaL",
+            Mode::RollArt => "RollArt",
+        }
+    }
+}
+
+/// One engine pool entry: `count` engines of `gpus` × `class`.
+#[derive(Clone, Debug)]
+pub struct EnginePool {
+    pub class: GpuClass,
+    pub gpus_per_engine: usize,
+    pub engines: usize,
+    pub max_batch: usize,
+}
+
+/// Reward-stage deployment (R3 ablation, Fig 6/12).
+#[derive(Clone, Debug)]
+pub enum RewardDeploy {
+    /// Dedicated local GPUs; `exec_s` per call, `gpus` servers.
+    DedicatedGpus { gpus: usize, exec_s: Dist },
+    /// Elastic serverless platform.
+    Serverless { exec_s: Dist },
+}
+
+/// A full scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub mode: Mode,
+    pub model: LlmSpec,
+    /// Task domains sampled uniformly (§7.1 uniform task sampling).
+    pub task_mix: Vec<TaskDomain>,
+    /// Trajectories per training batch (paper: 512; scaled in tests).
+    pub batch_size: usize,
+    /// Concurrent environments E for the continuous modes (defaults to
+    /// the batch size when None, matching the paper's setup; with
+    /// E = batch the steady-state step interval equals one trajectory
+    /// lifetime, so alpha = 1 lets typical trajectories complete).
+    pub concurrent_envs: Option<usize>,
+    /// GRPO group size (paper: 8).
+    pub group_size: usize,
+    /// Redundant environments launched per group (§6.3).
+    pub redundancy: usize,
+    /// Training pool (compute-optimized GPUs).
+    pub train_gpus: usize,
+    /// Generation engine pools.
+    pub gen_pools: Vec<EnginePool>,
+    /// R1: route prefill-heavy domains to H800, decode-heavy to H20.
+    pub affinity_routing: bool,
+    /// Asynchronous bound α and eviction policy (continuous modes).
+    pub alpha: u64,
+    pub staleness: StalenessPolicy,
+    pub envpool: EnvPoolConfig,
+    /// Override per-turn env.step latency (Fig 11b Gaussian injection).
+    pub env_step_override: Option<Dist>,
+    pub reward: RewardDeploy,
+    /// Cross-cluster weight path: async Mooncake store vs blocking
+    /// transfer (Fig 14a).
+    pub async_weight_sync: bool,
+    /// Iterations to simulate (first iteration discarded as warm-up in
+    /// steady-state metrics).
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The paper's default mixed-task RollArt scenario, scaled by
+    /// `scale` (1.0 = paper size: batch 512, 96 H800 + 32 H20).
+    ///
+    /// Engines are sized at the model's rollout tensor-parallel degree
+    /// (§7.1: TP 1/2/4 for 8B/14B/32B) — one engine replica per TP
+    /// group, which is what makes the H20-vs-H800 decode rooflines
+    /// visible (an 8-way TP engine for an 8B model would be
+    /// launch-overhead-bound and mask the hardware difference).
+    pub fn rollart_default(model: LlmSpec, scale: f64) -> Scenario {
+        let b = ((512.0 * scale) as usize).max(16);
+        let h800_gen = ((64.0 * scale) as usize).max(2);
+        let h20_gen = ((32.0 * scale) as usize).max(2);
+        let tp = model.rollout_tp;
+        let per_engine_batch = 32;
+        Scenario {
+            mode: Mode::RollArt,
+            model: model.clone(),
+            task_mix: vec![
+                TaskDomain::Swe,
+                TaskDomain::Web,
+                TaskDomain::Game,
+                TaskDomain::MathTool,
+                TaskDomain::GameSingle,
+            ],
+            batch_size: b,
+            concurrent_envs: None,
+            group_size: 8,
+            redundancy: 0,
+            train_gpus: ((32.0 * scale) as usize).max(2),
+            gen_pools: vec![
+                EnginePool {
+                    class: GpuClass::H800,
+                    gpus_per_engine: tp,
+                    engines: (h800_gen / tp).max(1),
+                    max_batch: per_engine_batch,
+                },
+                EnginePool {
+                    class: GpuClass::H20,
+                    gpus_per_engine: tp,
+                    engines: (h20_gen / tp).max(1),
+                    max_batch: per_engine_batch,
+                },
+            ],
+            affinity_routing: true,
+            alpha: 1,
+            staleness: StalenessPolicy::PerTurn,
+            envpool: EnvPoolConfig::registry_only(),
+            env_step_override: None,
+            reward: RewardDeploy::Serverless {
+                exec_s: Dist::lognormal_median(1.0, 0.6),
+            },
+            async_weight_sync: true,
+            iterations: 6,
+            seed: 17,
+        }
+    }
+
+    pub fn total_gen_gpus(&self) -> usize {
+        self.gen_pools
+            .iter()
+            .map(|p| p.gpus_per_engine * p.engines)
+            .sum()
+    }
+}
+
+/// One training iteration's results.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    /// Wall-clock of this iteration (train-step to train-step).
+    pub step_time_s: f64,
+    pub breakdown: StepBreakdown,
+    /// Tokens (prompt + response) in the consumed batch — throughput
+    /// numerator (§7.1 Metrics).
+    pub batch_tokens: f64,
+    /// Mean staleness (versions) of the consumed batch.
+    pub mean_staleness: f64,
+    /// Trajectories aborted for staleness this iteration.
+    pub stale_aborts: u64,
+    /// Trajectories aborted as redundant.
+    pub redundant_aborts: u64,
+    /// Env failures observed.
+    pub env_failures: u64,
+}
+
+/// Scenario outcome.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioResult {
+    pub steps: Vec<StepStats>,
+    /// Reward-resource utilization over the run (Fig 6/12).
+    pub reward_util: f64,
+    /// Mean generation-GPU busy fraction.
+    pub gen_util: f64,
+    pub total_time_s: f64,
+}
+
+impl ScenarioResult {
+    /// Steady-state mean step time (drops the first iteration).
+    pub fn mean_step_time(&self) -> f64 {
+        let steps: Vec<&StepStats> = self.steps.iter().skip(1).collect();
+        if steps.is_empty() {
+            return self.steps.first().map(|s| s.step_time_s).unwrap_or(0.0);
+        }
+        steps.iter().map(|s| s.step_time_s).sum::<f64>() / steps.len() as f64
+    }
+
+    /// Steady-state throughput, tokens/s (§7.1 Metrics).
+    pub fn throughput(&self) -> f64 {
+        let steps: Vec<&StepStats> = self.steps.iter().skip(1).collect();
+        if steps.is_empty() {
+            return 0.0;
+        }
+        let tok: f64 = steps.iter().map(|s| s.batch_tokens).sum();
+        let t: f64 = steps.iter().map(|s| s.step_time_s).sum();
+        tok / t.max(1e-9)
+    }
+}

@@ -1,0 +1,297 @@
+//! Phase-structured driver for the monolithic synchronous baseline.
+//!
+//! Models the paper's Sync pipeline (§7.1, Fig 2-Left, Fig 3):
+//!
+//! 1. `env.reset` for the whole batch — a barrier over the slowest
+//!    container (failures burn the detection timeout, then retry);
+//! 2. *batched* rollout rounds (Fig 5b): every surviving trajectory
+//!    generates, then every environment steps; the round ends at the
+//!    slowest member;
+//! 3. batched reward on dedicated GPUs after all rollouts finish;
+//! 4. blocking weight synchronization;
+//! 5. blocking training.
+//!
+//! Reward/generation utilization and the Fig 3 component breakdown fall
+//! out of the phase times directly.
+
+use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
+use crate::coordinator::GroupTracker;
+use crate::env::profile::{DomainProfile, TrajectoryShape};
+use crate::hw::phase_time;
+use crate::metrics::StepBreakdown;
+use crate::net::NVLINK_INTRA;
+use crate::proxy::{EngineSim, SimRequest};
+use crate::rl::TrajectoryId;
+use crate::simkit::SimRng;
+
+use super::TRAIN_OVERHEAD;
+
+/// Run the synchronous scenario.
+pub fn run(cfg: &Scenario) -> ScenarioResult {
+    let root = SimRng::new(cfg.seed);
+    let mut result = ScenarioResult::default();
+    let mut reward_busy = 0.0;
+    let mut gen_busy = 0.0;
+    let mut clock = 0.0;
+
+    // Engine fleet (no affinity in the Sync baseline: whole pool).
+    let mut engines: Vec<EngineSim> = Vec::new();
+    let mut eid = 0;
+    for pool in &cfg.gen_pools {
+        for _ in 0..pool.engines {
+            engines.push(EngineSim::new(
+                eid,
+                pool.class,
+                pool.gpus_per_engine,
+                cfg.model.clone(),
+                pool.max_batch,
+            ));
+            eid += 1;
+        }
+    }
+    assert!(!engines.is_empty());
+
+    for iter in 0..cfg.iterations {
+        let mut rng = root.stream("iter", iter as u64);
+        let mut breakdown = StepBreakdown::default();
+        let mut env_failures = 0u64;
+
+        // ---- sample the batch's trajectory shapes -------------------
+        let mut groups = GroupTracker::new();
+        let mut shapes: Vec<TrajectoryShape> = Vec::new();
+        let n_groups = cfg.batch_size / cfg.group_size;
+        for g in 0..n_groups {
+            groups.add_group(g as u64, cfg.group_size);
+            let domain = *rng.choose(&cfg.task_mix);
+            let profile = DomainProfile::of(domain);
+            for m in 0..cfg.group_size {
+                let id = (g * cfg.group_size + m) as u64;
+                shapes.push(profile.sample_trajectory(&mut rng));
+                groups.launch(g as u64, TrajectoryId(id));
+            }
+        }
+        let n = shapes.len();
+
+        // ---- phase 1: batched env.reset (barrier at slowest) --------
+        let mut reset_max: f64 = 0.0;
+        for i in 0..n {
+            let mut r = rng.stream("reset", i as u64);
+            let mut t = 0.0;
+            loop {
+                let o = cfg.envpool.sample_reset(n, &mut r);
+                t += o.latency_s;
+                if !o.failed {
+                    break;
+                }
+                env_failures += 1;
+            }
+            reset_max = reset_max.max(t);
+        }
+        breakdown.env_reset_s = reset_max;
+
+        // ---- phase 2: batched rollout rounds ------------------------
+        let max_turns = shapes.iter().map(|s| s.turns()).max().unwrap_or(0);
+        let mut gen_time = 0.0;
+        let mut env_time = 0.0;
+        let mut ctx: Vec<f64> = shapes.iter().map(|_| 0.0).collect();
+        for turn in 0..max_turns {
+            // generation: active trajectories spread across engines.
+            let mut active = 0;
+            for (i, s) in shapes.iter().enumerate() {
+                if turn < s.turns() {
+                    let (obs, act) = s.per_turn[turn];
+                    let new = if turn == 0 {
+                        s.initial_prompt_tokens + obs
+                    } else {
+                        obs
+                    };
+                    let e = active % engines.len();
+                    engines[e].enqueue(SimRequest {
+                        traj: TrajectoryId(i as u64),
+                        domain: s.domain,
+                        new_tokens: new,
+                        ctx_tokens: ctx[i],
+                        decode_budget: act,
+                    });
+                    ctx[i] += new + act;
+                    active += 1;
+                }
+            }
+            if active == 0 {
+                break;
+            }
+            // batched: the round lasts as long as the slowest engine.
+            let round: f64 = engines
+                .iter_mut()
+                .map(|e| e.run_to_idle().0)
+                .fold(0.0, f64::max);
+            gen_time += round;
+
+            // env round: barrier at the slowest environment step.
+            let mut step_max: f64 = 0.0;
+            for (i, s) in shapes.iter().enumerate() {
+                if turn < s.turns() {
+                    let mut r = rng.stream("step", (turn * n + i) as u64);
+                    let lat = match &cfg.env_step_override {
+                        Some(d) => d.sample(&mut r),
+                        None => cfg.envpool.sample_step(s.domain, &mut r),
+                    };
+                    step_max = step_max.max(lat);
+                }
+            }
+            env_time += step_max;
+        }
+        breakdown.generation_s = gen_time;
+        breakdown.env_step_s = env_time;
+        gen_busy += gen_time;
+
+        // ---- phase 3: batched reward ---------------------------------
+        let reward_time = match &cfg.reward {
+            RewardDeploy::DedicatedGpus { gpus, exec_s } => {
+                // n calls queued over `gpus` servers.
+                let total: f64 = (0..n)
+                    .map(|i| exec_s.sample(&mut rng.stream("reward", i as u64)))
+                    .sum();
+                total / (*gpus as f64)
+            }
+            RewardDeploy::Serverless { exec_s } => {
+                // still batched at the end in Sync, but elastic: the
+                // platform fans out, so the phase lasts ~one call.
+                let max: f64 = (0..n)
+                    .map(|i| exec_s.sample(&mut rng.stream("reward", i as u64)))
+                    .fold(0.0, f64::max);
+                max
+            }
+        };
+        breakdown.reward_s = reward_time;
+        reward_busy += match &cfg.reward {
+            RewardDeploy::DedicatedGpus { .. } => reward_time,
+            RewardDeploy::Serverless { .. } => 0.0,
+        };
+
+        // ---- phase 4: blocking weight sync ---------------------------
+        // Colocated monolith: NCCL reshard between training and rollout
+        // processes over NVLink (fast but blocking).
+        let sync_time = NVLINK_INTRA.transfer_time(cfg.model.weight_bytes()) + 2.0;
+        breakdown.weight_sync_s = sync_time;
+
+        // ---- phase 5: blocking training ------------------------------
+        let batch_tokens: f64 = shapes.iter().map(|s| s.total_tokens()).sum();
+        let t_cost = cfg.model.train_cost(
+            batch_tokens,
+            shapes.iter().map(|s| s.final_context()).sum::<f64>() / n as f64,
+        );
+        let train_time = phase_time(
+            &t_cost,
+            crate::hw::GpuClass::H800.spec(),
+            cfg.train_gpus.max(1),
+        ) * TRAIN_OVERHEAD;
+        breakdown.train_s = train_time;
+
+        let step_time = breakdown.total();
+        clock += step_time;
+        result.steps.push(StepStats {
+            step_time_s: step_time,
+            breakdown,
+            batch_tokens,
+            mean_staleness: 0.0,
+            stale_aborts: 0,
+            redundant_aborts: 0,
+            env_failures,
+        });
+    }
+
+    result.total_time_s = clock;
+    if clock > 0.0 {
+        result.reward_util = match &cfg.reward {
+            RewardDeploy::DedicatedGpus { .. } => reward_busy / clock,
+            RewardDeploy::Serverless { .. } => 1.0, // elastic: busy only when invoked
+        };
+        result.gen_util = gen_busy / clock;
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envpool::EnvPoolConfig;
+    use crate::llm::QWEN3_8B;
+    use crate::sim::{Mode, Scenario};
+    use crate::simkit::dist::Dist;
+
+    fn small_sync() -> Scenario {
+        let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.1);
+        s.mode = Mode::Sync;
+        s.batch_size = 32;
+        s.iterations = 3;
+        s.reward = RewardDeploy::DedicatedGpus {
+            gpus: 4,
+            exec_s: Dist::Constant(2.0),
+        };
+        s
+    }
+
+    #[test]
+    fn produces_iterations_with_positive_components() {
+        let r = run(&small_sync());
+        assert_eq!(r.steps.len(), 3);
+        for s in &r.steps {
+            assert!(s.step_time_s > 0.0);
+            assert!(s.breakdown.generation_s > 0.0);
+            assert!(s.breakdown.env_reset_s > 0.0);
+            assert!(s.breakdown.train_s > 0.0);
+            assert!(s.batch_tokens > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = run(&small_sync());
+        let b = run(&small_sync());
+        assert_eq!(a.mean_step_time(), b.mean_step_time());
+        let mut c = small_sync();
+        c.seed += 1;
+        let d = run(&c);
+        assert_ne!(a.mean_step_time(), d.mean_step_time());
+    }
+
+    #[test]
+    fn dedicated_reward_gpus_underutilized() {
+        // Fig 6's effect: reward GPUs busy only during the short
+        // batched reward phase → single-digit utilization.
+        let r = run(&small_sync());
+        assert!(r.reward_util < 0.2, "reward util {}", r.reward_util);
+        assert!(r.reward_util > 0.0);
+    }
+
+    #[test]
+    fn env_failures_inflate_reset_phase() {
+        let mut clean = small_sync();
+        clean.envpool = EnvPoolConfig {
+            reset_failure_p: 0.0,
+            ..EnvPoolConfig::registry_only()
+        };
+        let mut faulty = small_sync();
+        faulty.envpool = EnvPoolConfig {
+            reset_failure_p: 0.3,
+            ..EnvPoolConfig::registry_only()
+        };
+        let rc = run(&clean);
+        let rf = run(&faulty);
+        let reset_c: f64 = rc.steps.iter().map(|s| s.breakdown.env_reset_s).sum();
+        let reset_f: f64 = rf.steps.iter().map(|s| s.breakdown.env_reset_s).sum();
+        assert!(reset_f > reset_c * 1.3, "{reset_f} vs {reset_c}");
+        assert!(rf.steps.iter().map(|s| s.env_failures).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn generation_not_overwhelmingly_dominant() {
+        // Fig 3's point: generation is only ~half the successful step.
+        let r = run(&small_sync());
+        let s = &r.steps[1];
+        let frac = s.breakdown.fraction("generation");
+        assert!(frac < 0.9, "generation fraction {frac}");
+        assert!(frac > 0.05, "generation fraction {frac}");
+    }
+}

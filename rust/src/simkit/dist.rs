@@ -1,0 +1,190 @@
+//! Latency distributions observed in the paper's characterization (§3).
+//!
+//! `env.reset` / `env.step` exhibit pronounced log-normal heavy tails
+//! (Fig 5a) — reset tails reach hundreds of seconds under image-pull and
+//! host contention; Fig 11b's ablation injects *truncated Gaussian*
+//! per-turn latency (µ=10 s, σ∈[1,10] s).  Both families live here,
+//! parameterised and sampled from [`SimRng`] streams.
+
+use super::SimRng;
+
+/// A sampleable, positive-valued latency distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// Always `value` seconds.
+    Constant(f64),
+    /// Uniform over [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// Exponential with the given mean.
+    Exp { mean: f64 },
+    /// Gaussian(mean, std) truncated below at `floor`.
+    Gaussian { mean: f64, std: f64, floor: f64 },
+    /// Log-normal with parameters of the *underlying* normal.
+    /// median = e^mu; heavier tail as sigma grows.
+    LogNormal { mu: f64, sigma: f64 },
+    /// Mixture: with probability `p_tail` sample `tail`, else `body`.
+    /// Models the bimodal fast-path / contended-path split of
+    /// `env.reset` (§3.1: cached image vs registry pull).
+    Mix {
+        p_tail: f64,
+        body: Box<Dist>,
+        tail: Box<Dist>,
+    },
+    /// `base` shifted right by a constant offset.
+    Shifted { offset: f64, base: Box<Dist> },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut SimRng) -> f64 {
+        match self {
+            Dist::Constant(v) => *v,
+            Dist::Uniform { lo, hi } => rng.uniform(*lo, *hi),
+            Dist::Exp { mean } => {
+                let u = 1.0 - rng.f64(); // (0,1]
+                -mean * u.ln()
+            }
+            Dist::Gaussian { mean, std, floor } => {
+                (mean + std * gauss(rng)).max(*floor)
+            }
+            Dist::LogNormal { mu, sigma } => (mu + sigma * gauss(rng)).exp(),
+            Dist::Mix { p_tail, body, tail } => {
+                if rng.chance(*p_tail) {
+                    tail.sample(rng)
+                } else {
+                    body.sample(rng)
+                }
+            }
+            Dist::Shifted { offset, base } => offset + base.sample(rng),
+        }
+    }
+
+    /// Analytic mean where closed-form exists (used by cost-model
+    /// sanity checks and capacity planning in the drivers).
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Constant(v) => *v,
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::Exp { mean } => *mean,
+            // Truncation shift ignored: callers use floor≈0 relative to mean.
+            Dist::Gaussian { mean, .. } => *mean,
+            Dist::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            Dist::Mix { p_tail, body, tail } => {
+                (1.0 - p_tail) * body.mean() + p_tail * tail.mean()
+            }
+            Dist::Shifted { offset, base } => offset + base.mean(),
+        }
+    }
+
+    /// Convenience: log-normal specified by (median, tail-heaviness).
+    pub fn lognormal_median(median: f64, sigma: f64) -> Dist {
+        Dist::LogNormal {
+            mu: median.ln(),
+            sigma,
+        }
+    }
+}
+
+/// Standard normal via Box–Muller.
+fn gauss(rng: &mut SimRng) -> f64 {
+    let u1 = (1.0 - rng.f64()).max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Empirical quantile helper for CDF reporting (Fig 5a).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < sorted.len() {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    } else {
+        sorted[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_n(d: &Dist, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SimRng::new(seed);
+        (0..n).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn constant_and_uniform() {
+        let mut rng = SimRng::new(0);
+        assert_eq!(Dist::Constant(4.2).sample(&mut rng), 4.2);
+        let s = sample_n(&Dist::Uniform { lo: 1.0, hi: 2.0 }, 1000, 1);
+        assert!(s.iter().all(|&x| (1.0..2.0).contains(&x)));
+    }
+
+    #[test]
+    fn exp_mean_converges() {
+        let s = sample_n(&Dist::Exp { mean: 3.0 }, 20_000, 2);
+        let m = s.iter().sum::<f64>() / s.len() as f64;
+        assert!((m - 3.0).abs() < 0.15, "{m}");
+    }
+
+    #[test]
+    fn gaussian_truncated() {
+        let d = Dist::Gaussian {
+            mean: 10.0,
+            std: 5.0,
+            floor: 0.5,
+        };
+        let s = sample_n(&d, 10_000, 3);
+        assert!(s.iter().all(|&x| x >= 0.5));
+        let m = s.iter().sum::<f64>() / s.len() as f64;
+        assert!((m - 10.0).abs() < 0.5, "{m}");
+    }
+
+    #[test]
+    fn lognormal_heavy_tail() {
+        let d = Dist::lognormal_median(2.0, 1.2);
+        let mut s = sample_n(&d, 50_000, 4);
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = quantile(&s, 0.50);
+        let p99 = quantile(&s, 0.99);
+        assert!((p50 - 2.0).abs() < 0.15, "median {p50}");
+        // heavy tail: p99 well above 5x median
+        assert!(p99 > 5.0 * p50, "p99 {p99} vs p50 {p50}");
+        // analytic mean matches
+        let m = s.iter().sum::<f64>() / s.len() as f64;
+        assert!((m - d.mean()).abs() / d.mean() < 0.1, "{m} vs {}", d.mean());
+    }
+
+    #[test]
+    fn mix_rate() {
+        let d = Dist::Mix {
+            p_tail: 0.1,
+            body: Box::new(Dist::Constant(1.0)),
+            tail: Box::new(Dist::Constant(100.0)),
+        };
+        let s = sample_n(&d, 20_000, 5);
+        let tails = s.iter().filter(|&&x| x > 50.0).count();
+        assert!((1600..2400).contains(&tails), "{tails}");
+        assert!((d.mean() - 10.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let v = vec![0.0, 1.0, 2.0, 3.0];
+        assert_eq!(quantile(&v, 0.0), 0.0);
+        assert_eq!(quantile(&v, 1.0), 3.0);
+        assert!((quantile(&v, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shifted() {
+        let d = Dist::Shifted {
+            offset: 5.0,
+            base: Box::new(Dist::Constant(1.0)),
+        };
+        let mut rng = SimRng::new(0);
+        assert_eq!(d.sample(&mut rng), 6.0);
+        assert_eq!(d.mean(), 6.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Event queue: the heart of every simulation driver.
+//!
+//! Drivers define their own event enum and run a plain
+//! `while let Some((t, ev)) = q.pop()` loop; the queue guarantees
+//! chronological order with FIFO tie-breaking (stable `seq`), which
+//! keeps co-timed events deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A chronological event queue with stable FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    next_seq: u64,
+    now: SimTime,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `t`.
+    ///
+    /// Panics if `t` is in the past — a driver scheduling backwards in
+    /// time is always a logic bug.
+    pub fn schedule(&mut self, t: SimTime, event: E) {
+        assert!(
+            t >= self.now,
+            "cannot schedule into the past: {t:?} < {:?}",
+            self.now
+        );
+        self.heap.push(Entry {
+            time: t,
+            seq: self.next_seq,
+            event,
+        });
+        self.next_seq += 1;
+    }
+
+    /// Schedule `event` `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        let t = self.now + delay.max(0.0);
+        self.schedule(t, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.time;
+            (e.time, e.event)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Peek at the next event time without advancing the clock.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chronological_order() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::secs(3.0), "c");
+        q.schedule(SimTime::secs(1.0), "a");
+        q.schedule(SimTime::secs(2.0), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_tie_break() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(SimTime::secs(1.0), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_on_pop() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, ());
+        assert_eq!(q.now(), SimTime::ZERO);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::secs(5.0));
+        assert_eq!(q.now(), SimTime::secs(5.0));
+        // scheduling relative to the new now
+        q.schedule_in(1.0, ());
+        assert_eq!(q.peek_time(), Some(SimTime::secs(6.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn cannot_schedule_backwards() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, ());
+        q.pop();
+        q.schedule(SimTime::secs(1.0), ());
+    }
+
+    #[test]
+    fn negative_delay_clamped() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, ());
+        q.pop();
+        q.schedule_in(-3.0, ()); // clamps to now
+        assert_eq!(q.peek_time(), Some(SimTime::secs(5.0)));
+    }
+}

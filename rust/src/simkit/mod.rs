@@ -1,0 +1,21 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates RollArt on a 128-GPU H800/H20 testbed we do not
+//! have; every table and figure is regenerated on this DES instead
+//! (DESIGN.md §2 Substitutions).  The kit is deliberately small:
+//!
+//! * [`SimTime`] — f64 seconds with total ordering,
+//! * [`EventQueue`] — a stable (time, seq) binary-heap of driver events,
+//! * [`SimRng`] — deterministic, label-splittable ChaCha streams so every
+//!   scenario is reproducible bit-for-bit regardless of module order,
+//! * [`dist`] — the latency distributions observed in §3 (log-normal
+//!   heavy tails, truncated Gaussians, Bernoulli failures).
+
+mod engine;
+pub mod dist;
+mod rng;
+mod time;
+
+pub use engine::EventQueue;
+pub use rng::SimRng;
+pub use time::SimTime;

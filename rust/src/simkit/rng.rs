@@ -1,0 +1,200 @@
+//! Deterministic, label-splittable randomness for simulations.
+//!
+//! Every stochastic component (env-pool tails, failure injection,
+//! serverless cold starts, ...) derives its own stream via
+//! [`SimRng::stream`], keyed by a stable label + index.  Adding a new
+//! component therefore never perturbs the draws of existing ones — the
+//! property that makes A/B ablations (e.g. Fig 11b's σ sweep) compare
+//! identical workloads.
+//!
+//! The generator is xoshiro256++ (public domain, Blackman & Vigna),
+//! implemented in-tree because this build environment is offline and
+//! the `rand` family is not vendored.
+
+/// A deterministic random stream.
+#[derive(Clone, Debug)]
+pub struct SimRng {
+    s: [u64; 4],
+    seed: u64,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64: seeds the xoshiro state (recommended by its authors).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl SimRng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        SimRng { s, seed }
+    }
+
+    /// Derive an independent stream for `(label, index)`.
+    ///
+    /// Streams are a pure function of `(root seed, label, index)` —
+    /// *not* of how many draws the parent has made.
+    pub fn stream(&self, label: &str, index: u64) -> SimRng {
+        let mixed = self
+            .seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(fnv1a(label.as_bytes()))
+            .wrapping_add(index.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+        SimRng::new(mixed)
+    }
+
+    /// xoshiro256++ next.
+    pub fn u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our
+    /// non-cryptographic needs: modulo bias is negligible for n « 2^64).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.u64() % n as u64) as usize
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SimRng::new(7);
+        let mut b = SimRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn streams_independent_of_parent_draws() {
+        let mut a = SimRng::new(7);
+        let b = SimRng::new(7);
+        let _ = a.u64(); // consume from parent
+        let mut s1 = a.stream("env", 3);
+        let mut s2 = b.stream("env", 3);
+        assert_eq!(s1.u64(), s2.u64());
+    }
+
+    #[test]
+    fn streams_differ_by_label_and_index() {
+        let r = SimRng::new(7);
+        let mut x = r.stream("env", 0);
+        let mut y = r.stream("env", 1);
+        let mut z = r.stream("reward", 0);
+        let (a, b, c) = (x.u64(), y.u64(), z.u64());
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = SimRng::new(1);
+        for _ in 0..1000 {
+            let v = r.uniform(2.0, 3.0);
+            assert!((2.0..3.0).contains(&v));
+            let i = r.below(5);
+            assert!(i < 5);
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn chance_rate_roughly_matches() {
+        let mut r = SimRng::new(2);
+        let hits = (0..10_000).filter(|_| r.chance(0.1)).count();
+        assert!((800..1200).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn mean_of_f64_is_half() {
+        let mut r = SimRng::new(3);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.005, "{m}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SimRng::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        // and actually permuted (astronomically unlikely to be identity)
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = SimRng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

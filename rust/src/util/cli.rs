@@ -1,0 +1,116 @@
+//! Minimal CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; used by the launcher binary and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // getopt-style: a bare `--flag` consumes the next token as its
+        // value unless it is another flag or absent — so boolean flags
+        // mid-line use `--flag=true` or sit last.
+        let a = parse(&["--model", "qwen3-8b", "--alpha=2", "run", "--verbose"]);
+        assert_eq!(a.get("model"), Some("qwen3-8b"));
+        assert_eq!(a.get_usize("alpha", 1), 2);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("f", 1.5), 1.5);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "val"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    #[should_panic(expected = "must be an integer")]
+    fn bad_integer_panics() {
+        parse(&["--n", "abc"]).get_usize("n", 0);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--x", "-3.5"]);
+        assert_eq!(a.get_f64("x", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small in-tree utilities.
+//!
+//! This build environment is offline with only the `xla` dependency
+//! closure vendored, so helpers that would normally come from crates
+//! (tempdir, JSON parsing, CLI parsing) live here instead.
+
+pub mod cli;
+pub mod json;
+pub mod tempdir;

