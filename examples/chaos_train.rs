@@ -1,0 +1,127 @@
+//! Chaos training: lose 25% of the generation pool mid-run and watch
+//! the elastic controller provision replacements and restore
+//! throughput (fault & elasticity plane demo).
+//!
+//! ```bash
+//! cargo run --release --example chaos_train
+//! cargo run --release --example chaos_train -- --outage-frac 0.5 --no-elastic
+//! ```
+//!
+//! Timeline: the run starts on the full heterogeneous fleet; at
+//! `--outage-at` seconds a scheduled [`FaultEvent::PoolOutage`] kills
+//! the configured fraction of *both* GPU-class pools (a rack-level
+//! failure).  The autoscaler notices `get_batch` wait blowing up
+//! relative to train time, binds fresh capacity through the resource
+//! plane, pays the warm-up cost (runtime boot + Mooncake weight pull),
+//! and the per-iteration throughput climbs back.
+
+use rollart::elastic::ElasticPolicy;
+use rollart::fault::{FaultEvent, FaultProfile, ScheduledFault};
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::sim::{async_driver, Mode, Scenario};
+use rollart::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = args.get_f64("scale", 0.12);
+    let iters = args.get_usize("iterations", 10);
+    let outage_at = args.get_f64("outage-at", 400.0);
+    let outage_frac = args.get_f64("outage-frac", 0.25);
+    let elastic = !args.flag("no-elastic");
+
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), scale);
+    s.mode = Mode::RollArt;
+    s.iterations = iters;
+    s.fault = FaultProfile {
+        scheduled: vec![
+            ScheduledFault {
+                at_s: outage_at,
+                event: FaultEvent::PoolOutage {
+                    class: GpuClass::H800,
+                    fraction: outage_frac,
+                },
+            },
+            ScheduledFault {
+                // Staggered by a second so requests drained off the
+                // H800 pool aren't immediately re-counted when the H20
+                // pool goes down at the very same instant.
+                at_s: outage_at + 1.0,
+                event: FaultEvent::PoolOutage {
+                    class: GpuClass::H20,
+                    fraction: outage_frac,
+                },
+            },
+        ],
+        ..FaultProfile::none()
+    };
+    if elastic {
+        let mut policy = ElasticPolicy::new(
+            GpuClass::H800,
+            s.model.rollout_tp,
+            s.gen_pools[0].max_batch,
+        );
+        policy.max_engines = 2 * s.gen_pools.iter().map(|p| p.engines).sum::<usize>();
+        policy.scale_up_wait_ratio = 1.2;
+        policy.step_engines = 2;
+        s.elastic = Some(policy);
+    }
+
+    println!(
+        "chaos_train: RollArt on {} gen GPUs; killing {:.0}% of each pool at t={outage_at}s{}",
+        s.total_gen_gpus(),
+        100.0 * outage_frac,
+        if elastic { ", elastic controller ON" } else { ", elastic controller OFF" }
+    );
+
+    let r = async_driver::run(&s);
+
+    println!("\n  iter | step time | wait    | throughput (tok/s) | engine fails | requeued");
+    let mut t = 0.0;
+    for (i, st) in r.steps.iter().enumerate() {
+        t += st.step_time_s;
+        let marker = if t >= outage_at && t - st.step_time_s < outage_at {
+            "  <-- outage"
+        } else {
+            ""
+        };
+        println!(
+            "  {i:>4} | {:>8.1}s | {:>6.1}s | {:>18.0} | {:>12} | {:>8}{marker}",
+            st.step_time_s,
+            st.breakdown.get_batch_wait_s,
+            st.batch_tokens / st.step_time_s.max(1e-9),
+            st.engine_failures,
+            st.requeued,
+        );
+    }
+
+    println!("\n  faults:  {} engine failures, {} requests re-queued (none lost)",
+        r.faults.engine_failures, r.faults.requeued_requests);
+    if elastic {
+        println!(
+            "  elastic: {} scale-up decisions, {} engines provisioned ({:.0}s total warm-up), {} retired",
+            r.elastic.scale_ups,
+            r.elastic.engines_added,
+            r.elastic.provision_wait_s,
+            r.elastic.engines_retired
+        );
+    }
+    println!(
+        "  goodput: {:.0} useful tokens/s  (token efficiency {:.0}%)",
+        r.goodput(),
+        100.0 * r.token_efficiency()
+    );
+
+    // Recovery check: steady-state throughput of the final iterations
+    // vs the iterations right after the outage.
+    let n = r.steps.len();
+    if n >= 4 {
+        let tput = |s: &rollart::sim::StepStats| s.batch_tokens / s.step_time_s.max(1e-9);
+        let early: f64 = r.steps[1..3].iter().map(tput).sum::<f64>() / 2.0;
+        let last: f64 = r.steps[n - 2..].iter().map(tput).sum::<f64>() / 2.0;
+        println!(
+            "\n  pre-outage throughput ~{early:.0} tok/s, final ~{last:.0} tok/s ({:.0}% restored)",
+            100.0 * last / early.max(1e-9)
+        );
+    }
+}

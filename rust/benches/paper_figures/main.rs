@@ -20,6 +20,7 @@ mod fig3;
 mod fig4;
 mod fig5;
 mod fig6;
+mod fig_fault;
 mod support;
 mod table3;
 mod table5;
@@ -77,6 +78,9 @@ fn main() {
     }
     if want("table5") {
         table5::run();
+    }
+    if want("fault") {
+        fig_fault::run();
     }
     if want("fig15") {
         fig15::run();

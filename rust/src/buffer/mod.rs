@@ -38,6 +38,8 @@ pub struct SampleBuffer {
     alpha: u64,
     policy: StalenessPolicy,
     stats: BufferStats,
+    /// Evict whole GRPO groups together (see [`SampleBuffer::set_group_aware`]).
+    group_aware: bool,
 }
 
 impl SampleBuffer {
@@ -47,7 +49,21 @@ impl SampleBuffer {
             alpha,
             policy,
             stats: BufferStats::default(),
+            group_aware: false,
         }
+    }
+
+    /// GRPO's advantage baseline is the *group* mean/std, so a batch
+    /// containing a partial group is statistically wrong.  With
+    /// group-aware eviction on, a stale member drags its whole group
+    /// out of the buffer rather than leaving group-mates behind to
+    /// form a partial group (the lost prompt is made up by the
+    /// driver's normal concurrency refill).  Off by default for
+    /// ungrouped uses (all-zero group ids would collapse into one
+    /// giant group); the async driver enables it for Mode::RollArt.
+    pub fn set_group_aware(&mut self, on: bool) -> &mut Self {
+        self.group_aware = on;
+        self
     }
 
     pub fn alpha(&self) -> u64 {
@@ -88,16 +104,48 @@ impl SampleBuffer {
         true
     }
 
+    /// Deposit a filled GRPO group *atomically*: either every member
+    /// enters the buffer or none does (counted as evicted).  Without
+    /// this, one member going stale between scoring and deposit leaves
+    /// a partial group in the buffer — a batch formed from it would
+    /// compute group advantages against an incomplete baseline.
+    pub fn deposit_group(&mut self, trajs: Vec<Trajectory>, current: Version) -> bool {
+        for t in &trajs {
+            assert!(t.is_scored(), "only scored trajectories enter the buffer");
+        }
+        self.stats.deposited += trajs.len() as u64;
+        if !trajs.iter().all(|t| self.fresh(t, current)) {
+            self.stats.evicted_stale += trajs.len() as u64;
+            return false;
+        }
+        self.items.extend(trajs);
+        self.stats.peak_len = self.stats.peak_len.max(self.items.len());
+        true
+    }
+
     /// Eagerly evict stale trajectories at the current version (called
-    /// by `get_batch` before forming a batch, §6.2).
+    /// by `get_batch` before forming a batch, §6.2).  In group-aware
+    /// mode a stale member evicts its whole group.
     pub fn evict_stale(&mut self, current: Version) -> usize {
         let before = self.items.len();
         let alpha = self.alpha;
         let policy = self.policy;
-        self.items.retain(|t| match policy {
+        let fresh = |t: &Trajectory| match policy {
             StalenessPolicy::PerTurn => t.fresh_rollart(current, alpha),
             StalenessPolicy::AtStart => t.fresh_areal(current, alpha),
-        });
+        };
+        if self.group_aware {
+            let stale_groups: std::collections::BTreeSet<u64> = self
+                .items
+                .iter()
+                .filter(|&t| !fresh(t))
+                .map(|t| t.group)
+                .collect();
+            self.items
+                .retain(|t| fresh(t) && !stale_groups.contains(&t.group));
+        } else {
+            self.items.retain(fresh);
+        }
         let evicted = before - self.items.len();
         self.stats.evicted_stale += evicted as u64;
         evicted
@@ -238,5 +286,81 @@ mod tests {
         let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
         let t = Trajectory::new(TrajectoryId(9), TaskDomain::Web, Version(0));
         b.deposit(t, Version(0));
+    }
+
+    fn scored_in_group(id: u64, group: u64, start: u64, turn_versions: &[u64]) -> Trajectory {
+        let mut t = scored(id, start, turn_versions);
+        t.group = group;
+        t
+    }
+
+    #[test]
+    fn alpha_zero_admits_only_current_version() {
+        // α = 0: the fully-synchronous corner — anything not generated
+        // at the current version is already stale.
+        let mut b = SampleBuffer::new(0, StalenessPolicy::PerTurn);
+        assert!(b.deposit(scored(0, 5, &[5]), Version(5)));
+        assert!(!b.deposit(scored(1, 4, &[4]), Version(5)));
+        assert_eq!(b.len(), 1);
+        // The survivor dies as soon as the version advances.
+        assert!(b.get_batch(1, Version(6)).is_none());
+        assert!(b.is_empty());
+        assert_eq!(b.stats().evicted_stale, 2);
+    }
+
+    #[test]
+    fn batch_larger_than_buffer_blocks_without_draining() {
+        let mut b = SampleBuffer::new(2, StalenessPolicy::PerTurn);
+        for i in 0..3 {
+            b.deposit(scored(i, 1, &[1]), Version(1));
+        }
+        assert!(b.get_batch(4, Version(1)).is_none());
+        assert_eq!(b.len(), 3, "a blocked get_batch must not consume items");
+        assert_eq!(b.stats().consumed, 0);
+    }
+
+    #[test]
+    fn group_aware_eviction_takes_the_whole_group() {
+        // Group 0 has one member with a stale turn; group 1 is fully
+        // fresh.  Group-aware eviction removes *both* members of group
+        // 0 — a partial group would corrupt the GRPO baseline.
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        b.set_group_aware(true);
+        b.deposit(scored_in_group(0, 0, 3, &[3]), Version(4)); // stale at v5
+        b.deposit(scored_in_group(1, 0, 4, &[4]), Version(4)); // fresh at v5
+        b.deposit(scored_in_group(2, 1, 4, &[4]), Version(4));
+        b.deposit(scored_in_group(3, 1, 5, &[5]), Version(5));
+        assert_eq!(b.evict_stale(Version(5)), 2, "group 0 evicted whole");
+        let batch = b.get_batch(2, Version(5)).unwrap();
+        assert!(batch.iter().all(|t| t.group == 1));
+    }
+
+    #[test]
+    fn group_deposit_is_atomic() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        let stale_group = vec![
+            scored_in_group(0, 7, 5, &[5]),
+            scored_in_group(1, 7, 3, &[3]), // stale at v5
+        ];
+        assert!(!b.deposit_group(stale_group, Version(5)));
+        assert!(b.is_empty(), "no partial group may enter");
+        assert_eq!(b.stats().evicted_stale, 2);
+        let fresh_group = vec![
+            scored_in_group(2, 8, 5, &[5]),
+            scored_in_group(3, 8, 4, &[4, 5]),
+        ];
+        assert!(b.deposit_group(fresh_group, Version(5)));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.stats().deposited, 4);
+    }
+
+    #[test]
+    fn is_empty_tracks_lifecycle() {
+        let mut b = SampleBuffer::new(1, StalenessPolicy::PerTurn);
+        assert!(b.is_empty());
+        b.deposit(scored(0, 1, &[1]), Version(1));
+        assert!(!b.is_empty());
+        b.get_batch(1, Version(1)).unwrap();
+        assert!(b.is_empty());
     }
 }

@@ -97,6 +97,24 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             other => return Err(format!("unknown envpool {other}")),
         };
     }
+    if let Some(v) = j.get("env_fault_seed").and_then(|v| v.as_f64()) {
+        s.envpool.fault_seed = Some(v as u64);
+    }
+    if let Some(m) = j.get("engine_mtbf_s").and_then(|v| v.as_f64()) {
+        if m <= 0.0 || !m.is_finite() {
+            return Err(format!("engine_mtbf_s must be positive, got {m}"));
+        }
+        s.fault = crate::fault::FaultProfile {
+            engine_mtbf_s: Some(m),
+            ..s.fault
+        };
+    }
+    if let Some(p) = j.get("env_crash_p").and_then(|v| v.as_f64()) {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("env_crash_p must be in [0, 1], got {p}"));
+        }
+        s.fault.env_crash_p = p;
+    }
     if let Some(mix) = j.get("task_mix").and_then(|v| v.as_arr()) {
         let mut domains = Vec::new();
         for d in mix {
@@ -178,10 +196,30 @@ mod tests {
     }
 
     #[test]
+    fn fault_knobs_parse() {
+        let s = scenario_from_json(
+            r#"{"engine_mtbf_s": 600.0, "env_crash_p": 0.01, "env_fault_seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(s.fault.engine_mtbf_s, Some(600.0));
+        assert_eq!(s.fault.env_crash_p, 0.01);
+        assert_eq!(s.envpool.fault_seed, Some(7));
+        assert!(s.fault.is_active());
+        let clean = scenario_from_json("{}").unwrap();
+        assert!(!clean.fault.is_active());
+        assert!(clean.elastic.is_none());
+    }
+
+    #[test]
     fn bad_values_error() {
         assert!(scenario_from_json(r#"{"model": "gpt-5"}"#).is_err());
         assert!(scenario_from_json(r#"{"mode": "warp"}"#).is_err());
         assert!(scenario_from_json("not json").is_err());
+        // A zero/negative MTBF would make the failure process fire at
+        // zero-delay forever (the sim clock never advances).
+        assert!(scenario_from_json(r#"{"engine_mtbf_s": 0.0}"#).is_err());
+        assert!(scenario_from_json(r#"{"engine_mtbf_s": -5.0}"#).is_err());
+        assert!(scenario_from_json(r#"{"env_crash_p": 1.5}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Elasticity plane: autoscaling the generation pool (§5.2, §8).
+//!
+//! Disaggregation makes the ActorGen fleet *resizable*: StreamRL
+//! (PAPERS.md) argues elasticity of the generation pool is a
+//! first-class requirement for disaggregated RL, and the paper's
+//! production run continuously rebalances pools as jobs come and go.
+//! This module supplies the controller:
+//!
+//! * [`ElasticPolicy`] — declarative scaling rules for one GPU-class
+//!   pool: bounds, step size, cooldown, and the warm-up cost model of a
+//!   freshly provisioned engine (sandbox boot reusing the
+//!   [`crate::serverless`] cold-start figure, plus the Mooncake weight
+//!   pull from [`crate::mooncake`]);
+//! * [`AutoScaler`] — watches the per-iteration
+//!   [`IterationCost`](crate::coordinator::IterationCost) the drivers
+//!   measure and decides: `get_batch` wait ≫ train time means the
+//!   pipeline is rollout-bound (grow the pool); wait ≈ 0 means
+//!   generation capacity is idle against the train step (shrink it).
+//!
+//! The DES drivers act on [`ScaleDecision`]s by binding/releasing
+//! capacity through the [`crate::resource`] plane and provisioning
+//! engines after the warm-up delay; `examples/chaos_train.rs` shows the
+//! controller restoring throughput after a 25% generation-pool outage.
+
+use crate::coordinator::IterationCost;
+use crate::hw::GpuClass;
+use crate::llm::LlmSpec;
+use crate::mooncake::MooncakeStore;
+use crate::serverless::ServerlessConfig;
+
+/// Scaling rules for one generation pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElasticPolicy {
+    /// GPU class of the pool this policy resizes.
+    pub class: GpuClass,
+    /// Width of a provisioned engine (the model's rollout TP degree).
+    pub gpus_per_engine: usize,
+    /// Continuous-batching slot count of a provisioned engine.
+    pub max_batch: usize,
+    /// Never shrink the pool's live engines below this.
+    pub min_engines: usize,
+    /// Never grow the pool's live + provisioning engines above this.
+    pub max_engines: usize,
+    /// Engines added/retired per decision.
+    pub step_engines: usize,
+    /// Scale up when `get_batch` wait exceeds this multiple of the
+    /// train time (rollout-bound).
+    pub scale_up_wait_ratio: f64,
+    /// Scale down when `get_batch` wait falls below this multiple of
+    /// the train time (train-bound; generation capacity idles).
+    pub scale_down_wait_ratio: f64,
+    /// Iterations to hold after a decision before the next one (lets
+    /// the pipeline re-reach steady state).
+    pub cooldown_steps: usize,
+    /// Engine boot time as a multiple of the serverless function
+    /// cold start (an inference server boots a full runtime, not a
+    /// sandboxed function).
+    pub provision_boot_multiplier: f64,
+}
+
+impl ElasticPolicy {
+    /// Sensible defaults for scaling a pool of `class` engines.
+    pub fn new(class: GpuClass, gpus_per_engine: usize, max_batch: usize) -> Self {
+        ElasticPolicy {
+            class,
+            gpus_per_engine,
+            max_batch,
+            min_engines: 1,
+            max_engines: 64,
+            step_engines: 2,
+            scale_up_wait_ratio: 1.5,
+            scale_down_wait_ratio: 0.25,
+            cooldown_steps: 1,
+            provision_boot_multiplier: 20.0,
+        }
+    }
+
+    /// Warm-up delay of one freshly provisioned engine: sandbox/runtime
+    /// boot (serverless cold start × multiplier) plus the accumulated
+    /// Mooncake weight pull for `model` — the same cost models the
+    /// reward and weight-sync paths already use.
+    pub fn provision_delay_s(&self, model: &LlmSpec) -> f64 {
+        let boot = ServerlessConfig::default().cold_start_s * self.provision_boot_multiplier;
+        let store = MooncakeStore::default();
+        boot + store.acc_pull_time(model.weight_bytes())
+    }
+}
+
+/// What the controller wants done to the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Provision this many engines (after the warm-up delay).
+    Up(usize),
+    /// Retire this many engines (drain + re-queue their work).
+    Down(usize),
+}
+
+/// Accumulated controller activity over one scenario run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ElasticReport {
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Engines that finished provisioning and joined the fleet.
+    pub engines_added: u64,
+    /// Engines drained and retired by scale-down decisions.
+    pub engines_retired: u64,
+    /// Total warm-up time paid across provisioned engines.
+    pub provision_wait_s: f64,
+}
+
+/// The feedback controller over [`IterationCost`] measurements.
+#[derive(Clone, Debug)]
+pub struct AutoScaler {
+    pub policy: ElasticPolicy,
+    cooldown: usize,
+    pub report: ElasticReport,
+}
+
+impl AutoScaler {
+    pub fn new(policy: ElasticPolicy) -> Self {
+        assert!(policy.min_engines <= policy.max_engines);
+        assert!(policy.step_engines > 0);
+        assert!(policy.scale_down_wait_ratio < policy.scale_up_wait_ratio);
+        AutoScaler {
+            policy,
+            cooldown: 0,
+            report: ElasticReport::default(),
+        }
+    }
+
+    /// Feed one iteration's measured cost; `live` is the pool's live
+    /// engine count, `provisioning` the engines still warming up.
+    pub fn observe(
+        &mut self,
+        cost: &IterationCost,
+        live: usize,
+        provisioning: usize,
+    ) -> ScaleDecision {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return ScaleDecision::Hold;
+        }
+        let wait = cost.get_batch_wait_s;
+        let train = cost.train_s.max(1e-9);
+        if wait > self.policy.scale_up_wait_ratio * train {
+            let headroom = self
+                .policy
+                .max_engines
+                .saturating_sub(live + provisioning);
+            let n = self.policy.step_engines.min(headroom);
+            if n > 0 {
+                self.cooldown = self.policy.cooldown_steps;
+                self.report.scale_ups += 1;
+                return ScaleDecision::Up(n);
+            }
+        } else if wait < self.policy.scale_down_wait_ratio * train && provisioning == 0 {
+            let slack = live.saturating_sub(self.policy.min_engines);
+            let n = self.policy.step_engines.min(slack);
+            if n > 0 {
+                self.cooldown = self.policy.cooldown_steps;
+                self.report.scale_downs += 1;
+                return ScaleDecision::Down(n);
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QWEN3_8B;
+
+    fn cost(wait: f64, train: f64) -> IterationCost {
+        IterationCost {
+            get_batch_wait_s: wait,
+            train_s: train,
+            ..IterationCost::default()
+        }
+    }
+
+    fn scaler() -> AutoScaler {
+        let mut p = ElasticPolicy::new(GpuClass::H20, 2, 32);
+        p.min_engines = 2;
+        p.max_engines = 8;
+        p.step_engines = 2;
+        p.cooldown_steps = 0;
+        AutoScaler::new(p)
+    }
+
+    #[test]
+    fn rollout_bound_scales_up() {
+        let mut s = scaler();
+        assert_eq!(s.observe(&cost(300.0, 80.0), 4, 0), ScaleDecision::Up(2));
+        assert_eq!(s.report.scale_ups, 1);
+    }
+
+    #[test]
+    fn train_bound_scales_down() {
+        let mut s = scaler();
+        assert_eq!(s.observe(&cost(1.0, 80.0), 4, 0), ScaleDecision::Down(2));
+        assert_eq!(s.report.scale_downs, 1);
+    }
+
+    #[test]
+    fn balanced_holds() {
+        let mut s = scaler();
+        assert_eq!(s.observe(&cost(80.0, 80.0), 4, 0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn respects_max_with_provisioning_in_flight() {
+        let mut s = scaler();
+        // 6 live + 2 warming = max 8: no headroom.
+        assert_eq!(s.observe(&cost(300.0, 80.0), 6, 2), ScaleDecision::Hold);
+        // 7 live + 0 warming: only one slot left.
+        assert_eq!(s.observe(&cost(300.0, 80.0), 7, 0), ScaleDecision::Up(1));
+    }
+
+    #[test]
+    fn respects_min_engines() {
+        let mut s = scaler();
+        assert_eq!(s.observe(&cost(0.0, 80.0), 2, 0), ScaleDecision::Hold);
+        assert_eq!(s.observe(&cost(0.0, 80.0), 3, 0), ScaleDecision::Down(1));
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_decisions() {
+        let mut s = scaler();
+        s.policy.cooldown_steps = 2;
+        assert_eq!(s.observe(&cost(300.0, 80.0), 4, 0), ScaleDecision::Up(2));
+        assert_eq!(s.observe(&cost(300.0, 80.0), 4, 0), ScaleDecision::Hold);
+        assert_eq!(s.observe(&cost(300.0, 80.0), 4, 0), ScaleDecision::Hold);
+        assert_eq!(s.observe(&cost(300.0, 80.0), 4, 0), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn no_scale_down_while_provisioning() {
+        // A warming engine means a recent scale-up; flapping down before
+        // it lands would thrash.
+        let mut s = scaler();
+        assert_eq!(s.observe(&cost(0.0, 80.0), 4, 1), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn provision_delay_includes_boot_and_weight_pull() {
+        let p = ElasticPolicy::new(GpuClass::H800, 1, 32);
+        let d = p.provision_delay_s(&QWEN3_8B);
+        let boot = ServerlessConfig::default().cold_start_s * p.provision_boot_multiplier;
+        assert!(d > boot, "weight pull must add on top of boot: {d}");
+        let store = MooncakeStore::default();
+        let pull = store.acc_pull_time(QWEN3_8B.weight_bytes());
+        assert!((d - (boot + pull)).abs() < 1e-9);
+    }
+}

@@ -42,6 +42,13 @@ pub struct EnvPoolConfig {
     /// Host-contention multiplier applied when many resets are in
     /// flight simultaneously (concurrent docker pulls saturate links).
     pub contention_per_inflight: f64,
+    /// When set, reset *failure* draws come from a dedicated stream
+    /// seeded here (via [`ResetSampler`]) instead of the caller's
+    /// latency stream, so fault-related tests can pin the failure
+    /// pattern independently of latency draws.  `None` (the default)
+    /// keeps the historical single-stream behaviour bit-for-bit.
+    /// Seeding convention: [`crate::simkit`] module docs.
+    pub fault_seed: Option<u64>,
 }
 
 impl EnvPoolConfig {
@@ -51,6 +58,7 @@ impl EnvPoolConfig {
             reset_failure_p: 0.0008,
             reset_timeout_s: 300.0,
             contention_per_inflight: 0.004,
+            fault_seed: None,
         }
     }
 
@@ -61,6 +69,7 @@ impl EnvPoolConfig {
             reset_failure_p: 0.00003,
             reset_timeout_s: 120.0,
             contention_per_inflight: 0.0005,
+            fault_seed: None,
         }
     }
 
@@ -125,6 +134,54 @@ impl EnvPoolConfig {
 pub struct ResetOutcome {
     pub latency_s: f64,
     pub failed: bool,
+}
+
+/// Stateful reset sampler used by the drivers: owns the optional
+/// seeded failure stream declared by [`EnvPoolConfig::fault_seed`].
+///
+/// With `fault_seed = None` every draw (failure Bernoulli, then
+/// latency) comes from the caller's stream in the historical order —
+/// results are bit-identical to calling
+/// [`EnvPoolConfig::sample_reset`] directly.  With a seed set, failure
+/// draws come from the dedicated stream `root("envpool/fault")` so
+/// sweeping latency parameters (or seeds) replays the exact same
+/// failure pattern.
+#[derive(Clone, Debug)]
+pub struct ResetSampler {
+    cfg: EnvPoolConfig,
+    fault_rng: Option<SimRng>,
+}
+
+impl ResetSampler {
+    pub fn new(cfg: &EnvPoolConfig) -> Self {
+        ResetSampler {
+            cfg: cfg.clone(),
+            fault_rng: cfg
+                .fault_seed
+                .map(|s| SimRng::new(s).stream("envpool/fault", 0)),
+        }
+    }
+
+    /// Sample one reset outcome under `inflight` concurrent resets;
+    /// `rng` supplies the latency (and, unseeded, the failure) draws.
+    pub fn sample(&mut self, inflight: usize, rng: &mut SimRng) -> ResetOutcome {
+        let failed = match &mut self.fault_rng {
+            Some(fr) => fr.chance(self.cfg.reset_failure_p),
+            None => return self.cfg.sample_reset(inflight, rng),
+        };
+        if failed {
+            return ResetOutcome {
+                latency_s: self.cfg.reset_timeout_s,
+                failed: true,
+            };
+        }
+        let base = self.cfg.reset_dist().sample(rng);
+        let contention = 1.0 + self.cfg.contention_per_inflight * inflight as f64;
+        ResetOutcome {
+            latency_s: base * contention,
+            failed: false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +256,44 @@ mod tests {
         // SWE steps are much slower than game steps; both heavy-tailed.
         assert!(swe.p50() > 3.0 * game.p50());
         assert!(swe.p99() > 3.0 * swe.p50(), "heavy tail expected");
+    }
+
+    #[test]
+    fn unseeded_sampler_matches_direct_sampling_bit_for_bit() {
+        let cfg = EnvPoolConfig::registry_only();
+        let mut direct = SimRng::new(9);
+        let mut via = SimRng::new(9);
+        let mut sampler = ResetSampler::new(&cfg);
+        for i in 0..2_000 {
+            let a = cfg.sample_reset(i % 64, &mut direct);
+            let b = sampler.sample(i % 64, &mut via);
+            assert_eq!(a.latency_s, b.latency_s, "draw {i}");
+            assert_eq!(a.failed, b.failed, "draw {i}");
+        }
+    }
+
+    #[test]
+    fn seeded_failure_pattern_is_independent_of_latency_stream() {
+        let cfg = EnvPoolConfig {
+            reset_failure_p: 0.2,
+            fault_seed: Some(42),
+            ..EnvPoolConfig::registry_only()
+        };
+        let pattern = |latency_seed: u64| -> Vec<bool> {
+            let mut rng = SimRng::new(latency_seed);
+            let mut s = ResetSampler::new(&cfg);
+            (0..500).map(|_| s.sample(0, &mut rng).failed).collect()
+        };
+        let a = pattern(1);
+        let b = pattern(777);
+        assert_eq!(a, b, "same fault_seed ⇒ same failures, any latency seed");
+        assert!(a.iter().any(|&f| f), "p=0.2 over 500 draws must fail some");
+        let mut other = cfg.clone();
+        other.fault_seed = Some(43);
+        let mut rng = SimRng::new(1);
+        let mut s = ResetSampler::new(&other);
+        let c: Vec<bool> = (0..500).map(|_| s.sample(0, &mut rng).failed).collect();
+        assert_ne!(a, c, "different fault_seed ⇒ different failure pattern");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Fault plane: cluster-level failure injection (§3.1, §8).
+//!
+//! The paper's headline production claim is *robustness* — a week-long
+//! >3,000-GPU run riding through node failures, inference-engine
+//! crashes, env-worker deaths and serverless stragglers.  This module
+//! models those cluster-level faults as first-class simulation inputs:
+//!
+//! * **stochastic engine failures** — each inference engine fails with
+//!   an exponential MTBF ([`FaultProfile::engine_mtbf_s`]) and comes
+//!   back after [`FaultProfile::engine_recovery_s`] (node reboot +
+//!   engine relaunch + weight reload);
+//! * **env-worker crashes** — a container dies mid-trajectory with
+//!   probability [`FaultProfile::env_crash_p`] per `env.step`, detected
+//!   after [`FaultProfile::env_crash_detect_s`];
+//! * **serverless stragglers** — a reward invocation lands on a slow
+//!   sandbox with probability [`FaultProfile::straggler_p`] and runs
+//!   [`FaultProfile::straggler_factor`]× longer;
+//! * **scheduled faults** ([`ScheduledFault`]) — deterministic chaos
+//!   events (kill one engine, take out a fraction of a GPU-class pool,
+//!   restore it) for reproducible chaos experiments such as
+//!   `examples/chaos_train.rs`.
+//!
+//! All stochastic draws come from dedicated [`SimRng`] streams salted
+//! with [`FaultProfile::seed_salt`] (see the seeding convention in
+//! [`crate::simkit`]), so enabling injection never perturbs the draws
+//! of any other component — and with the profile inactive no fault
+//! stream is ever sampled, making injection *zero-cost when off*.
+//!
+//! The drivers surface the outcome in a [`FaultReport`]: failure
+//! counts, trajectory-level recoveries (re-queued requests, relaunched
+//! group members) and recovery latency.  Together with
+//! [`crate::sim::ScenarioResult::goodput`] these are the §8 robustness
+//! metrics.
+
+use crate::hw::GpuClass;
+use crate::simkit::SimRng;
+
+/// One deterministic chaos event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Kill one engine by index; it auto-recovers after
+    /// `engine_recovery_s`.
+    EngineCrash { engine: usize },
+    /// Take out `fraction` of the currently-live engines of `class`.
+    /// They stay down until a [`FaultEvent::PoolRestore`] (or, with an
+    /// elastic controller, until replacement capacity is provisioned).
+    PoolOutage { class: GpuClass, fraction: f64 },
+    /// Bring every downed engine of `class` back up.
+    PoolRestore { class: GpuClass },
+}
+
+/// A chaos event pinned to a simulation time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledFault {
+    pub at_s: f64,
+    pub event: FaultEvent,
+}
+
+/// Cluster-level failure model for one scenario.
+///
+/// [`FaultProfile::none`] (the [`Default`]) disables every mechanism;
+/// drivers skip all fault sampling in that case so results are
+/// bit-identical to a build without the fault plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Per-engine exponential mean time between failures, seconds.
+    /// `None` disables stochastic engine failures.
+    pub engine_mtbf_s: Option<f64>,
+    /// Downtime of a crashed engine before it rejoins the fleet.
+    pub engine_recovery_s: f64,
+    /// Probability one `env.step` kills its environment worker.
+    pub env_crash_p: f64,
+    /// Latency until a dead env worker is detected (health-check
+    /// interval + grace period).
+    pub env_crash_detect_s: f64,
+    /// Probability a serverless reward invocation straggles.
+    pub straggler_p: f64,
+    /// Execution-time multiplier of a straggling invocation.
+    pub straggler_factor: f64,
+    /// Deterministic chaos schedule.
+    pub scheduled: Vec<ScheduledFault>,
+    /// Salt mixed into every fault stream index, so two profiles on the
+    /// same scenario seed draw independent failure patterns (see the
+    /// seeding convention in [`crate::simkit`]).
+    pub seed_salt: u64,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::none()
+    }
+}
+
+impl FaultProfile {
+    /// No faults; injection paths are never sampled.
+    pub fn none() -> Self {
+        FaultProfile {
+            engine_mtbf_s: None,
+            engine_recovery_s: 120.0,
+            env_crash_p: 0.0,
+            env_crash_detect_s: 10.0,
+            straggler_p: 0.0,
+            straggler_factor: 10.0,
+            scheduled: Vec::new(),
+            seed_salt: 0,
+        }
+    }
+
+    /// Stochastic engine failures at the given MTBF, defaults elsewhere
+    /// (the knob the MTBF-sweep bench turns).
+    pub fn mtbf(engine_mtbf_s: f64) -> Self {
+        assert!(engine_mtbf_s > 0.0);
+        FaultProfile {
+            engine_mtbf_s: Some(engine_mtbf_s),
+            ..FaultProfile::none()
+        }
+    }
+
+    /// Is any injection mechanism enabled?
+    pub fn is_active(&self) -> bool {
+        self.engine_mtbf_s.is_some()
+            || self.env_crash_p > 0.0
+            || self.straggler_p > 0.0
+            || !self.scheduled.is_empty()
+    }
+
+    /// Derive the fault stream for `(label, index)` from the scenario
+    /// root RNG, salted by this profile.
+    pub fn stream(&self, root: &SimRng, label: &str, index: u64) -> SimRng {
+        root.stream(label, index ^ self.seed_salt)
+    }
+
+    /// Seconds until the `nth` failure of `engine` (exponential
+    /// interarrival), or `None` when stochastic engine failures are
+    /// disabled.  A pure function of (root seed, salt, engine, nth) so
+    /// failure patterns replay exactly.
+    pub fn next_engine_failure(&self, root: &SimRng, engine: usize, nth: u64) -> Option<f64> {
+        let mtbf = self.engine_mtbf_s?;
+        // A non-positive MTBF would fire zero-delay crashes forever
+        // without advancing the sim clock: fail loudly instead.
+        assert!(
+            mtbf > 0.0 && mtbf.is_finite(),
+            "engine_mtbf_s must be positive and finite, got {mtbf}"
+        );
+        let idx = (engine as u64).wrapping_mul(1_000_003).wrapping_add(nth);
+        let mut r = self.stream(root, "fault/engine", idx);
+        Some(exp_sample(mtbf, &mut r))
+    }
+
+    /// Does the `turn`-th `env.step` of manager `mgr` crash its worker?
+    pub fn env_step_crashes(&self, root: &SimRng, mgr: usize, turn: usize) -> bool {
+        if self.env_crash_p <= 0.0 {
+            return false;
+        }
+        let idx = (mgr as u64).wrapping_mul(1_000_003).wrapping_add(turn as u64);
+        let mut r = self.stream(root, "fault/envstep", idx);
+        r.chance(self.env_crash_p)
+    }
+
+    /// Does reward invocation `index` straggle?  Returns the execution
+    /// multiplier (1.0 = no straggle).
+    pub fn reward_multiplier(&self, root: &SimRng, index: u64) -> f64 {
+        if self.straggler_p <= 0.0 {
+            return 1.0;
+        }
+        let mut r = self.stream(root, "fault/straggler", index);
+        if r.chance(self.straggler_p) {
+            self.straggler_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Exponential sample with the given mean.
+pub fn exp_sample(mean: f64, rng: &mut SimRng) -> f64 {
+    let u = (1.0 - rng.f64()).max(1e-12); // (0, 1]
+    -mean * u.ln()
+}
+
+/// What the fault plane did to one scenario run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultReport {
+    /// Engine crashes (stochastic + scheduled, incl. pool outages).
+    pub engine_failures: u64,
+    /// Env workers that died mid-trajectory.
+    pub env_crashes: u64,
+    /// Reward invocations that straggled.
+    pub reward_stragglers: u64,
+    /// Re-queue *operations*: in-flight generation requests drained
+    /// off dead engines and re-dispatched (trajectory-level recovery:
+    /// work replayed, trajectory kept).  A request that bounces across
+    /// cascading failures — re-dispatched onto an engine a later fault
+    /// kills — counts once per bounce, so this can exceed the number
+    /// of distinct requests recovered.
+    pub requeued_requests: u64,
+    /// Trajectories relaunched into their GRPO group after an env
+    /// crash (§6.3 backfill).
+    pub trajectories_relaunched: u64,
+    /// Completed engine recoveries (auto-recovery or pool restore).
+    pub recoveries: u64,
+    /// Total downtime over completed recoveries.
+    pub recovery_latency_s: f64,
+}
+
+impl FaultReport {
+    /// Mean engine downtime per completed recovery.
+    pub fn mean_recovery_latency_s(&self) -> f64 {
+        if self.recoveries == 0 {
+            0.0
+        } else {
+            self.recovery_latency_s / self.recoveries as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.engine_failures += other.engine_failures;
+        self.env_crashes += other.env_crashes;
+        self.reward_stragglers += other.reward_stragglers;
+        self.requeued_requests += other.requeued_requests;
+        self.trajectories_relaunched += other.trajectories_relaunched;
+        self.recoveries += other.recoveries;
+        self.recovery_latency_s += other.recovery_latency_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_is_inactive() {
+        let p = FaultProfile::none();
+        assert!(!p.is_active());
+        assert_eq!(p, FaultProfile::default());
+        let root = SimRng::new(7);
+        assert_eq!(p.next_engine_failure(&root, 0, 0), None);
+        assert!(!p.env_step_crashes(&root, 0, 0));
+        assert_eq!(p.reward_multiplier(&root, 0), 1.0);
+    }
+
+    #[test]
+    fn mtbf_profile_is_active_and_deterministic() {
+        let p = FaultProfile::mtbf(600.0);
+        assert!(p.is_active());
+        let root = SimRng::new(7);
+        let a = p.next_engine_failure(&root, 3, 0).unwrap();
+        let b = p.next_engine_failure(&root, 3, 0).unwrap();
+        assert_eq!(a, b, "same (engine, nth) replays exactly");
+        let c = p.next_engine_failure(&root, 3, 1).unwrap();
+        assert_ne!(a, c, "successive failures draw fresh interarrivals");
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn seed_salt_changes_failure_pattern_only() {
+        let a = FaultProfile::mtbf(600.0);
+        let mut b = FaultProfile::mtbf(600.0);
+        b.seed_salt = 99;
+        let root = SimRng::new(7);
+        assert_ne!(
+            a.next_engine_failure(&root, 0, 0),
+            b.next_engine_failure(&root, 0, 0)
+        );
+    }
+
+    #[test]
+    fn exp_sample_mean_roughly_matches() {
+        let mut rng = SimRng::new(11);
+        let n = 20_000;
+        let m: f64 = (0..n).map(|_| exp_sample(50.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((m - 50.0).abs() < 2.5, "{m}");
+    }
+
+    #[test]
+    fn env_crash_rate_roughly_matches() {
+        let mut p = FaultProfile::none();
+        p.env_crash_p = 0.1;
+        let root = SimRng::new(3);
+        let hits = (0..10_000)
+            .filter(|&i| p.env_step_crashes(&root, i, 0))
+            .count();
+        assert!((800..1200).contains(&hits), "{hits}");
+    }
+
+    #[test]
+    fn scheduled_faults_activate_profile() {
+        let mut p = FaultProfile::none();
+        p.scheduled.push(ScheduledFault {
+            at_s: 100.0,
+            event: FaultEvent::PoolOutage {
+                class: GpuClass::H20,
+                fraction: 0.25,
+            },
+        });
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn report_merge_and_mean_latency() {
+        let mut a = FaultReport {
+            engine_failures: 2,
+            recoveries: 2,
+            recovery_latency_s: 60.0,
+            ..FaultReport::default()
+        };
+        let b = FaultReport {
+            engine_failures: 1,
+            recoveries: 1,
+            recovery_latency_s: 30.0,
+            ..FaultReport::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.engine_failures, 3);
+        assert!((a.mean_recovery_latency_s() - 30.0).abs() < 1e-12);
+        assert_eq!(FaultReport::default().mean_recovery_latency_s(), 0.0);
+    }
+}

@@ -25,6 +25,7 @@
 //! | resource | [`resource`], [`hw`], [`llm`], [`net`] |
 //! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
 //! | control | [`coordinator`], [`proxy`], [`buffer`], [`rl`] |
+//! | fault & elasticity | [`fault`], [`elastic`] |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
 //! | evaluation | [`sim`], [`baselines`] |
 
@@ -33,9 +34,11 @@ pub mod buffer;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod elastic;
 pub mod env;
 pub mod envpool;
 pub mod exec;
+pub mod fault;
 pub mod hw;
 pub mod llm;
 pub mod metrics;

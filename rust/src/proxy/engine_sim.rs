@@ -74,6 +74,9 @@ pub struct EngineSim {
     waiting: VecDeque<SimRequest>,
     active: Vec<Active>,
     suspended: bool,
+    /// Engine is dead (crashed node / retired by the elastic
+    /// controller): no routing, no stepping, until revived.
+    down: bool,
     /// Max decode tokens advanced per step when no commands are
     /// pending (event-count optimization; 1 = fully step-accurate).
     decode_chunk: f64,
@@ -99,6 +102,7 @@ impl EngineSim {
             waiting: VecDeque::new(),
             active: Vec::new(),
             suspended: false,
+            down: false,
             decode_chunk: 16.0,
             stats: EngineStats::default(),
         }
@@ -149,6 +153,30 @@ impl EngineSim {
         self.suspended
     }
 
+    /// Mark the engine dead (crash) or alive again (recovery).  State
+    /// is *not* cleared here — the coordinator drains it first via
+    /// [`EngineSim::drain_requests`] so in-flight work is re-queued,
+    /// not lost.
+    pub fn set_down(&mut self, down: bool) {
+        self.down = down;
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    /// Take every pending request off the engine (waiting queue +
+    /// active batch) for trajectory-level recovery after a crash.
+    /// Active requests are returned in their original form: partially
+    /// decoded work is lost and replayed on whichever engine the
+    /// request lands on next — exactly the recovery cost the fault
+    /// plane measures.
+    pub fn drain_requests(&mut self) -> Vec<SimRequest> {
+        let mut out: Vec<SimRequest> = self.waiting.drain(..).collect();
+        out.extend(self.active.drain(..).map(|a| a.req));
+        out
+    }
+
     /// KV-recompute cost for in-flight trajectories after a weight
     /// update (protocol step ⑤): re-prefill every active context.
     pub fn recompute_cost_s(&self) -> f64 {
@@ -162,7 +190,7 @@ impl EngineSim {
 
     /// Advance the engine by one step (§6.1's loop body).
     pub fn step(&mut self) -> StepOutcome {
-        if self.suspended {
+        if self.suspended || self.down {
             return StepOutcome::Idle;
         }
         // Admission (prefill) has priority while batch slots are free —
@@ -411,6 +439,25 @@ mod tests {
         let ratio = t800 / t20;
         // Paper: H800 cuts prefill-heavy rollout to ~0.53x of H20.
         assert!(ratio < 0.8, "H800/H20 = {ratio}");
+    }
+
+    #[test]
+    fn down_engine_idles_and_drain_recovers_requests() {
+        let mut e = engine(GpuClass::H20, 1);
+        e.enqueue(req(1, 10.0, 50.0));
+        e.step(); // prefill: req 1 now active
+        e.enqueue(req(2, 10.0, 50.0)); // still waiting
+        e.set_down(true);
+        assert_eq!(e.step(), StepOutcome::Idle);
+        let drained = e.drain_requests();
+        assert_eq!(drained.len(), 2);
+        // Waiting requests come out first, then active ones.
+        assert_eq!(drained[0].traj, TrajectoryId(2));
+        assert_eq!(drained[1].traj, TrajectoryId(1));
+        assert_eq!(e.load(), 0);
+        e.set_down(false);
+        assert!(!e.is_down());
+        assert_eq!(e.step(), StepOutcome::Idle, "drained engine is empty");
     }
 
     #[test]

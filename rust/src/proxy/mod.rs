@@ -73,6 +73,23 @@ impl LlmProxy {
         &mut self.engines
     }
 
+    /// Register a freshly provisioned engine (elastic scale-up).
+    /// Returns its index.  The engine inherits the proxy's suspend
+    /// state so a scale-up landing mid-weight-sync cannot generate
+    /// under stale weights.
+    pub fn add_engine(&mut self, mut engine: EngineSim) -> usize {
+        if self.suspended {
+            engine.suspend();
+        }
+        self.engines.push(engine);
+        self.engines.len() - 1
+    }
+
+    /// Live (not-down) engine count.
+    pub fn live_engines(&self) -> usize {
+        self.engines.iter().filter(|e| !e.is_down()).count()
+    }
+
     pub fn is_suspended(&self) -> bool {
         self.suspended
     }
@@ -89,11 +106,17 @@ impl LlmProxy {
     /// * the class is *congested* (its best queue is much deeper than
     ///   the global best) → spill to the global least-loaded engine.
     pub fn route(&self, domain: TaskDomain) -> Option<usize> {
-        let global = (0..self.engines.len()).min_by_key(|&i| self.engines[i].load())?;
+        // Dead engines (fault plane) never receive work; when the whole
+        // fleet is down the caller re-queues (no engine returned).
+        let live = |i: &usize| !self.engines[*i].is_down();
+        let global = (0..self.engines.len())
+            .filter(live)
+            .min_by_key(|&i| self.engines[i].load())?;
         let Some(cls) = self.preferred_class(domain) else {
             return Some(global);
         };
         let preferred = (0..self.engines.len())
+            .filter(live)
             .filter(|&i| self.engines[i].class == cls)
             .min_by_key(|&i| self.engines[i].load());
         // Spillover is asymmetric: decode-heavy work (preferring H20)
@@ -239,6 +262,32 @@ mod tests {
         p.set_affinity(TaskDomain::Game, GpuClass::H800);
         // No H800 engine exists; request still lands somewhere.
         assert!(p.add(req(1, TaskDomain::Game)).is_some());
+    }
+
+    #[test]
+    fn routing_skips_down_engines() {
+        let mut p = proxy();
+        // Kill both H20 engines: default-class traffic must spill to
+        // the H800 survivor instead of landing on a corpse.
+        p.engines_mut()[1].set_down(true);
+        p.engines_mut()[2].set_down(true);
+        assert_eq!(p.live_engines(), 1);
+        let idx = p.add(req(1, TaskDomain::MathTool)).unwrap();
+        assert_eq!(p.engines()[idx].class, GpuClass::H800);
+        // Whole fleet down: no routing target at all.
+        p.engines_mut()[0].set_down(true);
+        assert!(p.route(TaskDomain::MathTool).is_none());
+    }
+
+    #[test]
+    fn added_engine_inherits_suspend_state() {
+        let mut p = proxy();
+        p.suspend();
+        let idx = p.add_engine(EngineSim::new(9, GpuClass::H20, 6, QWEN3_8B.clone(), 32));
+        assert!(p.engines()[idx].is_suspended());
+        p.resume();
+        assert!(!p.engines()[idx].is_suspended());
+        assert_eq!(p.engines().len(), 4);
     }
 
     #[test]

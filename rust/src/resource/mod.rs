@@ -238,6 +238,71 @@ mod tests {
     }
 
     #[test]
+    fn reward_affinity_order_is_serverless_then_h20_then_h800() {
+        // §5.2: reward prefers the elastic pool and falls back through
+        // bandwidth-optimized to compute-optimized GPUs — the exact
+        // chain the paper's reward workers declare.
+        assert_eq!(
+            Role::Reward.default_affinity(),
+            &[
+                ResourceClass::Serverless,
+                ResourceClass::Gpu(GpuClass::H20),
+                ResourceClass::Gpu(GpuClass::H800),
+            ]
+        );
+    }
+
+    #[test]
+    fn reward_falls_back_through_the_whole_chain_without_stalling() {
+        // Finite pools so each tier can actually be exhausted.
+        let mut rm = ResourceManager::new();
+        rm.add_pool(ResourceClass::Serverless, 4)
+            .add_pool(ResourceClass::Gpu(GpuClass::H20), 4)
+            .add_pool(ResourceClass::Gpu(GpuClass::H800), 4);
+
+        // Preferred tier has capacity: no fallback.
+        let a = rm.bind_default(Role::Reward, 4).unwrap();
+        assert_eq!(a.class, ResourceClass::Serverless);
+        assert!(!a.fallback);
+
+        // Serverless exhausted: binding lands on H20 immediately —
+        // opportunistic fallback, not a stall on the preferred pool.
+        let b = rm.bind_default(Role::Reward, 4).unwrap();
+        assert_eq!(b.class, ResourceClass::Gpu(GpuClass::H20));
+        assert!(b.fallback);
+
+        // H20 exhausted too: last resort is H800.
+        let c = rm.bind_default(Role::Reward, 4).unwrap();
+        assert_eq!(c.class, ResourceClass::Gpu(GpuClass::H800));
+        assert!(c.fallback);
+
+        // Everything exhausted: an explicit error, never a hang.
+        let err = rm.bind_default(Role::Reward, 4).unwrap_err();
+        assert_eq!(err.role, Role::Reward);
+        assert_eq!(err.wanted, Role::Reward.default_affinity().to_vec());
+
+        // Releasing the preferred tier restores the original order.
+        rm.release(a.id);
+        let d = rm.bind_default(Role::Reward, 4).unwrap();
+        assert_eq!(d.class, ResourceClass::Serverless);
+        assert!(!d.fallback);
+    }
+
+    #[test]
+    fn partial_preferred_capacity_still_falls_back_whole() {
+        // 3 free serverless slots cannot host a 4-wide request: the
+        // whole request falls back to H20 rather than splitting or
+        // waiting for the preferred pool.
+        let mut rm = ResourceManager::new();
+        rm.add_pool(ResourceClass::Serverless, 3)
+            .add_pool(ResourceClass::Gpu(GpuClass::H20), 8);
+        let b = rm.bind_default(Role::Reward, 4).unwrap();
+        assert_eq!(b.class, ResourceClass::Gpu(GpuClass::H20));
+        assert!(b.fallback);
+        assert_eq!(rm.free(ResourceClass::Serverless), 3, "untouched");
+    }
+
+    #[test]
     fn bind_error_when_nothing_fits() {
         let mut rm = manager();
         let err = rm

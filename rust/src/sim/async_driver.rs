@@ -13,29 +13,60 @@
 //! RollArt additionally routes by hardware affinity (R1), runs the
 //! suspend → update → resume → recomp protocol at each version bump
 //! (§6.2), and launches redundant environments per GRPO group (§6.3).
+//!
+//! The fault & elasticity plane threads through the same loop: a
+//! [`FaultProfile`](crate::fault::FaultProfile) injects engine
+//! crashes / env-worker deaths / serverless stragglers, the
+//! coordinator recovers at *trajectory* granularity (in-flight
+//! requests on a dead engine are drained and re-queued through the
+//! proxy; crashed env workers are backfilled into their GRPO group via
+//! the §6.3 redundancy machinery), and an optional
+//! [`ElasticPolicy`](crate::elastic::ElasticPolicy) controller resizes
+//! the generation pool through the [`crate::resource`] plane based on
+//! the measured `get_batch`-wait vs. train-time balance.
 
 use super::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::buffer::SampleBuffer;
-use crate::coordinator::{EnvAction, EnvManagerSim, GroupOutcome, GroupTracker};
+use crate::coordinator::{EnvAction, EnvManagerSim, GroupOutcome, GroupTracker, IterationCost};
+use crate::elastic::{AutoScaler, ScaleDecision};
 use crate::env::profile::DomainProfile;
 use crate::env::TaskDomain;
+use crate::envpool::ResetSampler;
+use crate::fault::{FaultEvent, FaultReport};
 use crate::hw::{phase_time, GpuClass};
 use crate::metrics::StepBreakdown;
 use crate::mooncake::MooncakeStore;
 use crate::proxy::{EngineSim, LlmProxy, SimRequest};
+use crate::resource::{ResourceClass, ResourceManager, Role};
 use crate::rl::{TrajectoryId, Version};
 use crate::serverless::{ServerlessConfig, ServerlessPlatform};
-use crate::simkit::{EventQueue, SimRng};
+use crate::simkit::{EventQueue, SimRng, SimTime};
+
+/// Safety horizon: a mis-configured chaos scenario (e.g. a permanent
+/// whole-fleet outage with no elastic replacement) must terminate, not
+/// spin on fault events forever.  Only checked when faults are active.
+const MAX_SIM_S: f64 = 60.0 * 86400.0;
 
 #[derive(Debug)]
 enum Ev {
     ResetDone { mgr: usize },
     ResetRetry { mgr: usize },
-    EngineFree { engine: usize, completed: Vec<(TrajectoryId, f64)> },
+    EngineFree { engine: usize, epoch: u64, completed: Vec<(TrajectoryId, f64)> },
     EnvStepDone { mgr: usize },
+    /// The env worker of `mgr` died mid-trajectory (fault plane).
+    EnvCrashed { mgr: usize },
     RewardDone { mgr: usize },
     TrainDone,
     SyncDone,
+    /// Stochastic engine failure (MTBF process).
+    EngineCrashed { engine: usize },
+    /// A crashed engine finished recovering.
+    EngineRecovered { engine: usize },
+    /// Deterministic chaos event `cfg.fault.scheduled[idx]` fires.
+    Scheduled { idx: usize },
+    /// An elastic scale-up finished warming: the engine joins the
+    /// fleet holding `binding` in the resource plane.
+    EngineProvisioned { binding: Option<u64> },
 }
 
 struct Driver<'a> {
@@ -45,6 +76,36 @@ struct Driver<'a> {
     mgrs: Vec<EnvManagerSim>,
     proxy: LlmProxy,
     engine_busy: Vec<bool>,
+    // ---- fault & elasticity plane -------------------------------
+    /// Any fault mechanism enabled this run?
+    fault_on: bool,
+    fault_report: FaultReport,
+    reset_sampler: ResetSampler,
+    engine_down: Vec<bool>,
+    /// Retired by the elastic controller: stays down forever.
+    engine_retired: Vec<bool>,
+    /// Bumped on every crash/retire so stale `EngineFree` events (work
+    /// that "completed" on a dead engine) are discarded.
+    engine_epoch: Vec<u64>,
+    /// Per-engine count of MTBF failures drawn so far (stream index).
+    engine_fail_nth: Vec<u64>,
+    /// Crash time of currently-down engines (recovery-latency metric).
+    down_since: std::collections::BTreeMap<usize, f64>,
+    /// Alive-time accounting for utilization under churn.
+    engine_up_since: Vec<Option<f64>>,
+    engine_alive_s: Vec<f64>,
+    scaler: Option<AutoScaler>,
+    /// Resource-plane view backing the elastic controller's bindings.
+    rm: Option<ResourceManager>,
+    engine_bindings: Vec<Option<u64>>,
+    pending_provisions: usize,
+    /// Environment-pool size target (elastic: scales with the live
+    /// generation fleet).
+    env_target: usize,
+    initial_engines: usize,
+    acc_engine_failures: u64,
+    acc_requeued: u64,
+    // -------------------------------------------------------------
     groups: GroupTracker,
     /// Completed trajectories awaiting their group to fill.
     staged: std::collections::BTreeMap<u64, Vec<crate::rl::Trajectory>>,
@@ -126,6 +187,40 @@ impl<'a> Driver<'a> {
             RewardDeploy::DedicatedGpus { gpus, .. } => *gpus,
             RewardDeploy::Serverless { .. } => 0,
         };
+        // Elastic runs bind every engine through the resource plane so
+        // scale decisions contend for real capacity; the elastic class
+        // gets headroom up to the policy's max fleet size.
+        let (rm, engine_bindings, scaler) = match &cfg.elastic {
+            None => (None, vec![None; n_engines], None),
+            Some(policy) => {
+                let mut rm = ResourceManager::new();
+                for p in &cfg.gen_pools {
+                    rm.add_pool(ResourceClass::Gpu(p.class), p.engines * p.gpus_per_engine);
+                }
+                let have = proxy
+                    .engines()
+                    .iter()
+                    .filter(|e| e.class == policy.class)
+                    .count();
+                if policy.max_engines > have {
+                    rm.add_pool(
+                        ResourceClass::Gpu(policy.class),
+                        (policy.max_engines - have) * policy.gpus_per_engine,
+                    );
+                }
+                let bindings: Vec<Option<u64>> = proxy
+                    .engines()
+                    .iter()
+                    .map(|e| {
+                        rm.bind(Role::ActorGen, &[ResourceClass::Gpu(e.class)], e.gpus)
+                            .ok()
+                            .map(|b| b.id)
+                    })
+                    .collect();
+                (Some(rm), bindings, Some(AutoScaler::new(policy.clone())))
+            }
+        };
+        let env_target = cfg.concurrent_envs.unwrap_or(cfg.batch_size);
         Driver {
             cfg,
             q: EventQueue::new(),
@@ -133,10 +228,36 @@ impl<'a> Driver<'a> {
             mgrs: Vec::new(),
             proxy,
             engine_busy: vec![false; n_engines],
+            fault_on: cfg.fault.is_active(),
+            fault_report: FaultReport::default(),
+            reset_sampler: ResetSampler::new(&cfg.envpool),
+            engine_down: vec![false; n_engines],
+            engine_retired: vec![false; n_engines],
+            engine_epoch: vec![0; n_engines],
+            engine_fail_nth: vec![0; n_engines],
+            down_since: std::collections::BTreeMap::new(),
+            engine_up_since: vec![Some(0.0); n_engines],
+            engine_alive_s: vec![0.0; n_engines],
+            scaler,
+            rm,
+            engine_bindings,
+            pending_provisions: 0,
+            env_target,
+            initial_engines: n_engines,
+            acc_engine_failures: 0,
+            acc_requeued: 0,
             groups: GroupTracker::new(),
             staged: std::collections::BTreeMap::new(),
             group_domain: std::collections::BTreeMap::new(),
-            buffer: SampleBuffer::new(cfg.alpha, cfg.staleness),
+            buffer: {
+                // RollArt keeps GRPO groups whole: a stale member
+                // evicts its entire group (partial groups would
+                // corrupt the advantage baseline).  The AReaL/One-off
+                // baselines keep their per-trajectory semantics.
+                let mut b = SampleBuffer::new(cfg.alpha, cfg.staleness);
+                b.set_group_aware(cfg.mode == Mode::RollArt);
+                b
+            },
             store: MooncakeStore::default(),
             serverless: ServerlessPlatform::new(ServerlessConfig {
                 // tight reclaim: reward bursts are short-lived (Fig 12)
@@ -213,10 +334,7 @@ impl<'a> Driver<'a> {
 
     fn schedule_reset(&mut self, mgr: usize) {
         let mut r = self.rng.stream("reset", mgr as u64);
-        let o = self
-            .cfg
-            .envpool
-            .sample_reset(self.inflight_resets, &mut r);
+        let o = self.reset_sampler.sample(self.inflight_resets, &mut r);
         self.inflight_resets += 1;
         if o.failed {
             self.acc_failures += 1;
@@ -227,15 +345,30 @@ impl<'a> Driver<'a> {
         }
     }
 
-    /// Keep the continuous modes at target concurrency.
+    /// Keep the continuous modes at target concurrency.  The target is
+    /// elastic: it tracks the live generation fleet so a grown pool is
+    /// fed and a shrunken one is not drowned.
     fn refill(&mut self) {
         if !self.continuous() {
             return;
         }
-        let target = self.cfg.concurrent_envs.unwrap_or(self.cfg.batch_size);
-        while self.active() < target {
+        while self.active() < self.env_target {
             self.launch_group();
         }
+    }
+
+    /// Resize the environment-pool target after fleet changes
+    /// (elastic runs only; fault-only runs keep the configured target).
+    fn update_env_target(&mut self) {
+        if self.scaler.is_none() {
+            return;
+        }
+        let base = self.cfg.concurrent_envs.unwrap_or(self.cfg.batch_size);
+        let live = self.proxy.live_engines().max(1);
+        let scaled = base * live / self.initial_engines.max(1);
+        let lo = self.cfg.group_size.max(base / 2);
+        let hi = (2 * base).max(lo);
+        self.env_target = scaled.clamp(lo, hi);
     }
 
     /// Barrier modes: launch one iteration's worth of groups.
@@ -248,7 +381,10 @@ impl<'a> Driver<'a> {
     }
 
     fn dispatch(&mut self, req: SimRequest) {
-        if self.proxy.is_suspended() {
+        if self.proxy.is_suspended() || self.proxy.live_engines() == 0 {
+            // Suspended for weight sync, or the whole fleet is down
+            // (chaos): hold the request; it re-dispatches on resume /
+            // recovery / provisioning.
             self.pending_requests.push(req);
             return;
         }
@@ -258,7 +394,7 @@ impl<'a> Driver<'a> {
     }
 
     fn kick_engine(&mut self, e: usize) {
-        if self.engine_busy[e] || self.proxy.is_suspended() {
+        if self.engine_busy[e] || self.engine_down[e] || self.proxy.is_suspended() {
             return;
         }
         let outcome = self.proxy.engines_mut()[e].step();
@@ -267,8 +403,15 @@ impl<'a> Driver<'a> {
         } = outcome
         {
             self.engine_busy[e] = true;
-            self.q
-                .schedule_in(elapsed, Ev::EngineFree { engine: e, completed });
+            let epoch = self.engine_epoch[e];
+            self.q.schedule_in(
+                elapsed,
+                Ev::EngineFree {
+                    engine: e,
+                    epoch,
+                    completed,
+                },
+            );
         }
     }
 
@@ -309,6 +452,21 @@ impl<'a> Driver<'a> {
                 self.dispatch(req);
             }
             EnvAction::StepEnv => {
+                // Fault plane: this step may kill its env worker.  The
+                // crash is detected after the health-check delay and
+                // recovered at trajectory level (group backfill).
+                if self.fault_on
+                    && self
+                        .cfg
+                        .fault
+                        .env_step_crashes(&self.rng, mgr, self.mgrs[mgr].turns_done())
+                {
+                    self.q.schedule_in(
+                        self.cfg.fault.env_crash_detect_s,
+                        Ev::EnvCrashed { mgr },
+                    );
+                    return;
+                }
                 let lat = self.env_step_latency(mgr);
                 self.q.schedule_in(lat, Ev::EnvStepDone { mgr });
             }
@@ -351,9 +509,261 @@ impl<'a> Driver<'a> {
         self.schedule_reset(idx);
     }
 
+    // ---- fault plane ------------------------------------------------
+
+    /// Shared crash/retire path: mark the engine dead, invalidate its
+    /// in-flight `EngineFree`, account alive time, and return its
+    /// drained requests for re-dispatch.
+    fn take_down_engine(&mut self, e: usize) -> Vec<SimRequest> {
+        self.engine_down[e] = true;
+        self.engine_epoch[e] += 1;
+        self.engine_busy[e] = false;
+        let now = self.now();
+        if let Some(up) = self.engine_up_since[e].take() {
+            self.engine_alive_s[e] += now - up;
+        }
+        self.proxy.engines_mut()[e].set_down(true);
+        self.proxy.engines_mut()[e].drain_requests()
+    }
+
+    /// An engine crashed.  Trajectory-level recovery: every request it
+    /// held (queued or mid-generation) is re-queued through the proxy
+    /// instead of being lost — its trajectory survives, only the
+    /// partially decoded turn is replayed.
+    fn kill_engine(&mut self, e: usize, auto_recover: bool) {
+        if self.engine_down[e] {
+            return;
+        }
+        let reqs = self.take_down_engine(e);
+        self.fault_report.engine_failures += 1;
+        self.acc_engine_failures += 1;
+        self.fault_report.requeued_requests += reqs.len() as u64;
+        self.acc_requeued += reqs.len() as u64;
+        self.down_since.insert(e, self.now());
+        for r in reqs {
+            self.dispatch(r);
+        }
+        if auto_recover {
+            self.q
+                .schedule_in(self.cfg.fault.engine_recovery_s, Ev::EngineRecovered { engine: e });
+        }
+        // A crash mid-drain must not wedge the weight-sync barrier:
+        // the dead engine's EngineFree will never count down.
+        if self.suspend_draining {
+            self.finish_drain();
+        }
+    }
+
+    fn revive_engine(&mut self, e: usize) {
+        if !self.engine_down[e] || self.engine_retired[e] {
+            return;
+        }
+        self.engine_down[e] = false;
+        self.engine_up_since[e] = Some(self.now());
+        self.proxy.engines_mut()[e].set_down(false);
+        if let Some(t0) = self.down_since.remove(&e) {
+            self.fault_report.recoveries += 1;
+            self.fault_report.recovery_latency_s += self.now() - t0;
+        }
+        self.flush_pending();
+        self.kick_engine(e);
+    }
+
+    /// Re-dispatch requests held while the fleet was down/suspended.
+    fn flush_pending(&mut self) {
+        if self.proxy.is_suspended() || self.proxy.live_engines() == 0 {
+            return;
+        }
+        let pending: Vec<SimRequest> = std::mem::take(&mut self.pending_requests);
+        for req in pending {
+            self.dispatch(req);
+        }
+    }
+
+    fn live_engines_of(&self, class: GpuClass) -> Vec<usize> {
+        (0..self.engine_down.len())
+            .filter(|&i| !self.engine_down[i] && self.proxy.engines()[i].class == class)
+            .collect()
+    }
+
+    /// Scheduled chaos: kill `fraction` of the live engines of `class`.
+    fn pool_outage(&mut self, class: GpuClass, fraction: f64) {
+        let live = self.live_engines_of(class);
+        let k = ((live.len() as f64) * fraction).ceil() as usize;
+        // Kill from the back for determinism (highest indices first).
+        for &e in live.iter().rev().take(k) {
+            self.kill_engine(e, false);
+        }
+    }
+
+    /// Scheduled chaos: bring every downed engine of `class` back.
+    fn pool_restore(&mut self, class: GpuClass) {
+        let down: Vec<usize> = (0..self.engine_down.len())
+            .filter(|&i| {
+                self.engine_down[i]
+                    && !self.engine_retired[i]
+                    && self.proxy.engines()[i].class == class
+            })
+            .collect();
+        for e in down {
+            self.revive_engine(e);
+        }
+    }
+
+    /// Schedule engine `e`'s next stochastic failure (MTBF process).
+    fn schedule_engine_failure(&mut self, e: usize) {
+        let nth = self.engine_fail_nth[e];
+        if let Some(dt) = self.cfg.fault.next_engine_failure(&self.rng, e, nth) {
+            self.engine_fail_nth[e] += 1;
+            self.q.schedule_in(dt, Ev::EngineCrashed { engine: e });
+        }
+    }
+
+    // ---- elasticity plane -------------------------------------------
+
+    /// Feed the controller the just-completed iteration's cost and act
+    /// on its decision through the resource plane.
+    fn maybe_autoscale(&mut self) {
+        let Some(scaler) = self.scaler.as_mut() else {
+            return;
+        };
+        let Some(last) = self.result.steps.last() else {
+            return;
+        };
+        let cost = IterationCost {
+            get_batch_wait_s: last.breakdown.get_batch_wait_s,
+            weight_update_s: last.breakdown.weight_sync_s,
+            recompute_s: 0.0,
+            train_s: last.breakdown.train_s,
+            command_s: 0.0,
+        };
+        let class = scaler.policy.class;
+        let live = self
+            .proxy
+            .engines()
+            .iter()
+            .enumerate()
+            .filter(|(i, e)| e.class == class && !self.engine_down[*i])
+            .count();
+        match scaler.observe(&cost, live, self.pending_provisions) {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up(n) => {
+                for _ in 0..n {
+                    self.provision_engine();
+                }
+            }
+            ScaleDecision::Down(n) => {
+                // Retire the least-loaded live engines of the class:
+                // minimal re-queued work.
+                let mut candidates = self.live_engines_of(class);
+                candidates.sort_by_key(|&i| self.proxy.engines()[i].load());
+                let victims: Vec<usize> = candidates.into_iter().take(n).collect();
+                for e in victims {
+                    self.retire_engine(e);
+                }
+            }
+        }
+    }
+
+    /// Start warming one engine: bind capacity now, join the fleet
+    /// after the provision delay (boot + weight pull).
+    fn provision_engine(&mut self) {
+        let Some(scaler) = self.scaler.as_ref() else {
+            return;
+        };
+        let policy = scaler.policy.clone();
+        let binding = match self.rm.as_mut() {
+            Some(rm) => {
+                match rm.bind(
+                    Role::ActorGen,
+                    &[ResourceClass::Gpu(policy.class)],
+                    policy.gpus_per_engine,
+                ) {
+                    Ok(b) => Some(b.id),
+                    // Resource plane has no capacity left: the decision
+                    // is dropped, not queued (next iteration retries).
+                    Err(_) => return,
+                }
+            }
+            None => None,
+        };
+        let delay = policy.provision_delay_s(&self.cfg.model);
+        if let Some(s) = self.scaler.as_mut() {
+            s.report.provision_wait_s += delay;
+        }
+        self.pending_provisions += 1;
+        self.q
+            .schedule_in(delay, Ev::EngineProvisioned { binding });
+    }
+
+    fn on_engine_provisioned(&mut self, binding: Option<u64>) {
+        self.pending_provisions = self.pending_provisions.saturating_sub(1);
+        let Some(scaler) = self.scaler.as_mut() else {
+            return;
+        };
+        let policy = scaler.policy.clone();
+        scaler.report.engines_added += 1;
+        let e = self.proxy.add_engine(EngineSim::new(
+            self.engine_down.len() as u64,
+            policy.class,
+            policy.gpus_per_engine,
+            self.cfg.model.clone(),
+            policy.max_batch,
+        ));
+        self.engine_busy.push(false);
+        self.engine_down.push(false);
+        self.engine_retired.push(false);
+        self.engine_epoch.push(0);
+        self.engine_fail_nth.push(0);
+        self.engine_up_since.push(Some(self.now()));
+        self.engine_alive_s.push(0.0);
+        self.engine_bindings.push(binding);
+        // The new engine is subject to the same failure process.
+        if self.fault_on {
+            self.schedule_engine_failure(e);
+        }
+        self.update_env_target();
+        self.flush_pending();
+        self.refill();
+        self.kick_engine(e);
+    }
+
+    /// Elastic scale-down: drain, re-queue, release the binding.
+    fn retire_engine(&mut self, e: usize) {
+        if self.engine_down[e] {
+            return;
+        }
+        let reqs = self.take_down_engine(e);
+        self.engine_retired[e] = true;
+        if let Some(s) = self.scaler.as_mut() {
+            s.report.engines_retired += 1;
+        }
+        if let (Some(rm), Some(b)) = (self.rm.as_mut(), self.engine_bindings[e].take()) {
+            rm.release(b);
+        }
+        for r in reqs {
+            self.dispatch(r);
+        }
+        if self.suspend_draining {
+            self.finish_drain();
+        }
+        self.update_env_target();
+    }
+
+    // -----------------------------------------------------------------
+
     fn dispatch_reward(&mut self, mgr: usize) {
         let mut r = self.rng.stream("rexec", mgr as u64);
-        let exec = reward_exec(self.cfg, &mut r);
+        let mut exec = reward_exec(self.cfg, &mut r);
+        if self.fault_on && matches!(self.cfg.reward, RewardDeploy::Serverless { .. }) {
+            // Serverless stragglers: the invocation lands on a slow
+            // sandbox and runs straggler_factor× longer.
+            let mult = self.cfg.fault.reward_multiplier(&self.rng, mgr as u64);
+            if mult > 1.0 {
+                exec *= mult;
+                self.fault_report.reward_stragglers += 1;
+            }
+        }
         match &self.cfg.reward {
             RewardDeploy::Serverless { .. } => {
                 let inv = self.serverless.invoke(self.now(), exec, &mut r);
@@ -402,8 +812,16 @@ impl<'a> Driver<'a> {
                 let traj = self.mgrs[mgr].traj.clone();
                 let mut members = self.staged.remove(&group).unwrap_or_default();
                 members.push(traj);
-                for t in members {
-                    self.buffer.deposit(t, self.version);
+                if self.cfg.mode == Mode::RollArt {
+                    // Atomic group deposit: all members or none (GRPO
+                    // groups must never enter the buffer partially).
+                    self.buffer.deposit_group(members, self.version);
+                } else {
+                    // Baseline semantics: per-trajectory deposit, a
+                    // stale member is dropped individually (AReaL).
+                    for t in members {
+                        self.buffer.deposit(t, self.version);
+                    }
                 }
                 for t in abort {
                     let i = t.0 as usize;
@@ -538,7 +956,13 @@ impl<'a> Driver<'a> {
             stale_aborts: std::mem::take(&mut self.acc_stale),
             redundant_aborts: std::mem::take(&mut self.acc_redundant),
             env_failures: std::mem::take(&mut self.acc_failures),
+            engine_failures: std::mem::take(&mut self.acc_engine_failures),
+            requeued: std::mem::take(&mut self.acc_requeued),
         });
+
+        // Elastic controller: one decision per completed iteration,
+        // fed by the iteration cost just recorded.
+        self.maybe_autoscale();
 
         // Sync+ barrier: next iteration only after train completes.
         if self.cfg.mode == Mode::SyncPlus {
@@ -552,6 +976,15 @@ impl<'a> Driver<'a> {
 
     fn run(mut self) -> ScenarioResult {
         self.trainer_idle_since = 0.0;
+        if self.fault_on {
+            // Deterministic chaos schedule + per-engine MTBF processes.
+            for (idx, f) in self.cfg.fault.scheduled.iter().enumerate() {
+                self.q.schedule(SimTime::secs(f.at_s), Ev::Scheduled { idx });
+            }
+            for e in 0..self.engine_down.len() {
+                self.schedule_engine_failure(e);
+            }
+        }
         if self.continuous() {
             self.refill();
         } else {
@@ -559,7 +992,10 @@ impl<'a> Driver<'a> {
         }
 
         let target_steps = self.cfg.iterations;
-        while let Some((_, ev)) = self.q.pop() {
+        while let Some((t, ev)) = self.q.pop() {
+            if self.fault_on && t.as_secs() > MAX_SIM_S {
+                break; // chaos deadlock backstop; results are partial
+            }
             match ev {
                 Ev::ResetRetry { mgr } => {
                     self.inflight_resets = self.inflight_resets.saturating_sub(1);
@@ -575,7 +1011,14 @@ impl<'a> Driver<'a> {
                         self.handle_action(mgr, action);
                     }
                 }
-                Ev::EngineFree { engine, completed } => {
+                Ev::EngineFree { engine, epoch, completed } => {
+                    if epoch != self.engine_epoch[engine] {
+                        // The engine crashed (or was retired) while
+                        // this step was in flight: its work was drained
+                        // and re-queued; the completions never
+                        // happened.
+                        continue;
+                    }
                     self.engine_busy[engine] = false;
                     for (tid, _ctx) in completed {
                         let mgr = tid.0 as usize;
@@ -601,6 +1044,56 @@ impl<'a> Driver<'a> {
                         let action = self.mgrs[mgr].on_env_step_done(v, now);
                         self.handle_action(mgr, action);
                     }
+                }
+                Ev::EnvCrashed { mgr } => {
+                    if self.mgrs[mgr].is_terminal() {
+                        continue;
+                    }
+                    // Trajectory-level recovery: the dead worker's
+                    // trajectory is abandoned, but its GRPO group is
+                    // backfilled with a fresh member at the current
+                    // version (§6.3 redundancy machinery).
+                    let id = self.mgrs[mgr].id;
+                    let group = self.mgrs[mgr].traj.group;
+                    self.mgrs[mgr].abort();
+                    self.proxy.abort(id);
+                    self.groups.fail(id);
+                    self.fault_report.env_crashes += 1;
+                    self.acc_failures += 1;
+                    if !self.groups.is_filled(group) {
+                        self.fault_report.trajectories_relaunched += 1;
+                        self.launch_member(group);
+                    }
+                    self.refill();
+                }
+                Ev::EngineCrashed { engine } => {
+                    if !self.engine_down[engine] && !self.engine_retired[engine] {
+                        self.kill_engine(engine, true);
+                    }
+                    // The failure process continues either way.
+                    self.schedule_engine_failure(engine);
+                }
+                Ev::EngineRecovered { engine } => {
+                    self.revive_engine(engine);
+                }
+                Ev::Scheduled { idx } => {
+                    let event = self.cfg.fault.scheduled[idx].event.clone();
+                    match event {
+                        FaultEvent::EngineCrash { engine } => {
+                            if engine < self.engine_down.len() && !self.engine_retired[engine] {
+                                self.kill_engine(engine, true);
+                            }
+                        }
+                        FaultEvent::PoolOutage { class, fraction } => {
+                            self.pool_outage(class, fraction);
+                        }
+                        FaultEvent::PoolRestore { class } => {
+                            self.pool_restore(class);
+                        }
+                    }
+                }
+                Ev::EngineProvisioned { binding } => {
+                    self.on_engine_provisioned(binding);
                 }
                 Ev::RewardDone { mgr } => {
                     self.on_reward_done(mgr);
@@ -631,7 +1124,27 @@ impl<'a> Driver<'a> {
             .iter()
             .map(|e| e.stats.busy_s)
             .sum();
-        self.result.gen_util = (busy / (total * n_engines)).min(1.0);
+        if self.fault_on || self.scaler.is_some() {
+            // Engines churned: utilization over engine-*alive* seconds,
+            // and the fault/elastic reports become part of the result.
+            let mut alive: f64 = self.engine_alive_s.iter().sum();
+            for up in self.engine_up_since.iter().flatten() {
+                alive += total - up;
+            }
+            self.result.gen_util = (busy / alive.max(1e-9)).min(1.0);
+        } else {
+            self.result.gen_util = (busy / (total * n_engines)).min(1.0);
+        }
+        self.result.gen_tokens = self
+            .proxy
+            .engines()
+            .iter()
+            .map(|e| e.stats.prefill_tokens + e.stats.decode_tokens)
+            .sum();
+        self.result.faults = self.fault_report;
+        if let Some(s) = &self.scaler {
+            self.result.elastic = s.report;
+        }
         self.result.reward_util = match &self.cfg.reward {
             RewardDeploy::DedicatedGpus { gpus, .. } => {
                 self.reward_busy_s / (total * (*gpus).max(1) as f64)
@@ -692,6 +1205,118 @@ mod tests {
         let a = run(&scenario(Mode::RollArt));
         let b = run(&scenario(Mode::RollArt));
         assert_eq!(a.mean_step_time(), b.mean_step_time());
+    }
+
+    #[test]
+    fn engine_mtbf_faults_recover_trajectories() {
+        use crate::fault::FaultProfile;
+        let clean = run(&scenario(Mode::RollArt));
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.fault = FaultProfile {
+            engine_recovery_s: 60.0,
+            ..FaultProfile::mtbf(400.0)
+        };
+        let r = run(&cfg);
+        // Crashes happened, every iteration still completed, and the
+        // re-queue machinery recovered the in-flight work.
+        assert_eq!(r.steps.len(), 3, "no iteration may be lost to crashes");
+        assert!(r.faults.engine_failures > 0, "{:?}", r.faults);
+        assert!(r.faults.recoveries > 0);
+        assert!(r.faults.mean_recovery_latency_s() >= 60.0 - 1e-9);
+        // Faults burn wall-clock: the run cannot get meaningfully
+        // faster (small tolerance for event-reordering noise).
+        assert!(
+            r.total_time_s >= 0.9 * clean.total_time_s,
+            "faults cannot speed the run up: {} vs {}",
+            r.total_time_s,
+            clean.total_time_s
+        );
+    }
+
+    #[test]
+    fn env_crashes_backfill_their_groups() {
+        use crate::fault::FaultProfile;
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.fault = FaultProfile {
+            env_crash_p: 0.05,
+            ..FaultProfile::none()
+        };
+        let r = run(&cfg);
+        assert_eq!(r.steps.len(), 3);
+        assert!(r.faults.env_crashes > 0, "{:?}", r.faults);
+        assert!(r.faults.trajectories_relaunched > 0);
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic() {
+        use crate::fault::FaultProfile;
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.fault = FaultProfile {
+            env_crash_p: 0.02,
+            ..FaultProfile::mtbf(500.0)
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.mean_step_time(), b.mean_step_time());
+        assert_eq!(a.faults, b.faults);
+    }
+
+    #[test]
+    fn scheduled_pool_outage_and_restore_ride_through() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        use crate::hw::GpuClass;
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.fault = FaultProfile {
+            scheduled: vec![
+                ScheduledFault {
+                    at_s: 50.0,
+                    event: FaultEvent::PoolOutage {
+                        class: GpuClass::H800,
+                        fraction: 0.5,
+                    },
+                },
+                ScheduledFault {
+                    at_s: 1500.0,
+                    event: FaultEvent::PoolRestore {
+                        class: GpuClass::H800,
+                    },
+                },
+            ],
+            ..FaultProfile::none()
+        };
+        let r = run(&cfg);
+        assert_eq!(r.steps.len(), 3);
+        assert!(r.faults.engine_failures > 0);
+    }
+
+    #[test]
+    fn elastic_controller_grows_a_starved_pool() {
+        use crate::elastic::ElasticPolicy;
+        use crate::hw::GpuClass;
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.iterations = 4;
+        let mut policy = ElasticPolicy::new(GpuClass::H800, cfg.model.rollout_tp, 32);
+        // Hair-trigger scale-up so the tiny test scenario provisions
+        // deterministically (any positive get_batch wait counts as
+        // rollout-bound).
+        policy.scale_up_wait_ratio = 1e-9;
+        policy.scale_down_wait_ratio = 1e-12;
+        policy.max_engines = 16;
+        policy.cooldown_steps = 0;
+        cfg.elastic = Some(policy);
+        let r = run(&cfg);
+        assert_eq!(r.steps.len(), 4);
+        assert!(r.elastic.scale_ups > 0, "{:?}", r.elastic);
+        assert!(r.elastic.engines_added > 0, "{:?}", r.elastic);
+        assert!(r.elastic.provision_wait_s > 0.0);
+    }
+
+    #[test]
+    fn goodput_and_efficiency_are_sane() {
+        let r = run(&scenario(Mode::RollArt));
+        assert!(r.goodput() > 0.0);
+        let eff = r.token_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0, "{eff}");
     }
 
     #[test]

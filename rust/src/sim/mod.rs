@@ -25,8 +25,10 @@ pub mod sync_driver;
 pub const TRAIN_OVERHEAD: f64 = 8.0;
 
 use crate::buffer::StalenessPolicy;
+use crate::elastic::{ElasticPolicy, ElasticReport};
 use crate::env::TaskDomain;
 use crate::envpool::EnvPoolConfig;
+use crate::fault::{FaultProfile, FaultReport};
 use crate::hw::GpuClass;
 use crate::llm::LlmSpec;
 use crate::metrics::StepBreakdown;
@@ -120,6 +122,13 @@ pub struct Scenario {
     /// steady-state metrics).
     pub iterations: usize,
     pub seed: u64,
+    /// Cluster-level failure injection (engine crashes, env-worker
+    /// deaths, serverless stragglers, scheduled chaos).  Inactive by
+    /// default; when inactive no fault stream is ever sampled, so
+    /// results are bit-identical to a fault-free build.
+    pub fault: FaultProfile,
+    /// Optional autoscaling controller over the generation pool.
+    pub elastic: Option<ElasticPolicy>,
 }
 
 impl Scenario {
@@ -177,6 +186,8 @@ impl Scenario {
             async_weight_sync: true,
             iterations: 6,
             seed: 17,
+            fault: FaultProfile::none(),
+            elastic: None,
         }
     }
 
@@ -203,8 +214,14 @@ pub struct StepStats {
     pub stale_aborts: u64,
     /// Trajectories aborted as redundant.
     pub redundant_aborts: u64,
-    /// Env failures observed.
+    /// Env failures observed (reset timeouts + injected worker
+    /// crashes).
     pub env_failures: u64,
+    /// Engine crashes observed this iteration (fault plane).
+    pub engine_failures: u64,
+    /// Generation requests re-queued off dead engines this iteration
+    /// (trajectory-level recovery).
+    pub requeued: u64,
 }
 
 /// Scenario outcome.
@@ -216,6 +233,14 @@ pub struct ScenarioResult {
     /// Mean generation-GPU busy fraction.
     pub gen_util: f64,
     pub total_time_s: f64,
+    /// Tokens the engines actually processed (prefill + decode),
+    /// including work later discarded by aborts and crash replays —
+    /// the goodput denominator's "offered work" side.
+    pub gen_tokens: f64,
+    /// Fault-plane activity over the run.
+    pub faults: FaultReport,
+    /// Elastic-controller activity over the run.
+    pub elastic: ElasticReport,
 }
 
 impl ScenarioResult {
@@ -237,5 +262,26 @@ impl ScenarioResult {
         let tok: f64 = steps.iter().map(|s| s.batch_tokens).sum();
         let t: f64 = steps.iter().map(|s| s.step_time_s).sum();
         tok / t.max(1e-9)
+    }
+
+    /// Goodput (§8 robustness metric): *useful* tokens — tokens that
+    /// reached a training batch — per wall-clock second over the whole
+    /// run, warm-up included.  Under fault injection this is the number
+    /// that degrades: crashes burn wall-clock (recovery, replays) and
+    /// tokens (aborted trajectories) without adding trained tokens.
+    pub fn goodput(&self) -> f64 {
+        let tok: f64 = self.steps.iter().map(|s| s.batch_tokens).sum();
+        tok / self.total_time_s.max(1e-9)
+    }
+
+    /// Fraction of engine-processed tokens that reached a training
+    /// batch (1.0 = nothing wasted on aborts/replays).  0 when the
+    /// driver did not record engine token counts.
+    pub fn token_efficiency(&self) -> f64 {
+        if self.gen_tokens <= 0.0 {
+            return 0.0;
+        }
+        let tok: f64 = self.steps.iter().map(|s| s.batch_tokens).sum();
+        (tok / self.gen_tokens).min(1.0)
     }
 }

@@ -17,6 +17,8 @@
 use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::coordinator::GroupTracker;
 use crate::env::profile::{DomainProfile, TrajectoryShape};
+use crate::envpool::ResetSampler;
+use crate::fault::{exp_sample, FaultEvent};
 use crate::hw::phase_time;
 use crate::metrics::StepBreakdown;
 use crate::net::NVLINK_INTRA;
@@ -33,6 +35,10 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
     let mut reward_busy = 0.0;
     let mut gen_busy = 0.0;
     let mut clock = 0.0;
+    let mut reset_sampler = ResetSampler::new(&cfg.envpool);
+    // Scheduled single-engine crashes are paid exactly once, in the
+    // iteration whose start crosses their timestamp.
+    let mut scheduled_crash_done = vec![false; cfg.fault.scheduled.len()];
 
     // Engine fleet (no affinity in the Sync baseline: whole pool).
     let mut engines: Vec<EngineSim> = Vec::new();
@@ -78,7 +84,7 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
             let mut r = rng.stream("reset", i as u64);
             let mut t = 0.0;
             loop {
-                let o = cfg.envpool.sample_reset(n, &mut r);
+                let o = reset_sampler.sample(n, &mut r);
                 t += o.latency_s;
                 if !o.failed {
                     break;
@@ -188,6 +194,109 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         ) * TRAIN_OVERHEAD;
         breakdown.train_s = train_time;
 
+        // ---- fault plane (analytic): the monolithic baseline has no
+        // recovery machinery, so every fault stalls the whole barrier
+        // pipeline ------------------------------------------------------
+        let mut engine_failures = 0u64;
+        if cfg.fault.is_active() {
+            // Same seeding convention as the async driver: the stream
+            // is salted, so salt sweeps replay independent patterns.
+            let mut fr = cfg.fault.stream(&root, "fault/sync", iter as u64);
+            let mut stall = 0.0;
+            // Scheduled chaos, analytically: pool outages that have
+            // fired by this iteration's start shrink the effective
+            // rollout fleet (rounds redistribute over the survivors);
+            // restores undo them.  Scheduled single-engine crashes pay
+            // one recovery stall in the iteration they land in.
+            if !cfg.fault.scheduled.is_empty() {
+                let mut outage: std::collections::BTreeMap<crate::hw::GpuClass, f64> =
+                    std::collections::BTreeMap::new();
+                for f in &cfg.fault.scheduled {
+                    if f.at_s > clock {
+                        continue;
+                    }
+                    match f.event {
+                        FaultEvent::PoolOutage { class, fraction } => {
+                            let e = outage.entry(class).or_insert(0.0);
+                            *e = (*e + fraction).min(1.0);
+                        }
+                        FaultEvent::PoolRestore { class } => {
+                            outage.insert(class, 0.0);
+                        }
+                        FaultEvent::EngineCrash { .. } => {}
+                    }
+                }
+                let total = engines.len() as f64;
+                let live: f64 = engines
+                    .iter()
+                    .map(|e| 1.0 - outage.get(&e.class).copied().unwrap_or(0.0))
+                    .sum();
+                if live < total {
+                    // At least a token fleet survives in this model; a
+                    // 100% outage degenerates to a 100x slowdown.
+                    let slowdown = total / live.max(total * 0.01);
+                    breakdown.generation_s *= slowdown;
+                }
+                for (fi, f) in cfg.fault.scheduled.iter().enumerate() {
+                    if f.at_s <= clock
+                        && !scheduled_crash_done[fi]
+                        && matches!(f.event, FaultEvent::EngineCrash { .. })
+                    {
+                        scheduled_crash_done[fi] = true;
+                        engine_failures += 1;
+                        stall += cfg.fault.engine_recovery_s
+                            + breakdown.generation_s / (max_turns.max(1) as f64);
+                    }
+                }
+            }
+            // Engine crashes during the rollout phase: the interrupted
+            // batched round is redone on the recovered engine, and the
+            // whole batch waits out the recovery (no re-queue path).
+            if let Some(mtbf) = cfg.fault.engine_mtbf_s {
+                let round = breakdown.generation_s / (max_turns.max(1) as f64);
+                for _e in 0..engines.len() {
+                    let mut t = exp_sample(mtbf, &mut fr);
+                    while t < breakdown.generation_s {
+                        engine_failures += 1;
+                        stall += cfg.fault.engine_recovery_s + round;
+                        t += exp_sample(mtbf, &mut fr);
+                    }
+                }
+            }
+            // Env-worker crashes: detection + container restart, each
+            // serialized behind the barrier.
+            let mut env_crashes = 0u64;
+            if cfg.fault.env_crash_p > 0.0 {
+                let total_env_steps: usize = shapes.iter().map(|s| s.turns()).sum();
+                for _ in 0..total_env_steps {
+                    if fr.chance(cfg.fault.env_crash_p) {
+                        env_crashes += 1;
+                        stall += cfg.fault.env_crash_detect_s + cfg.envpool.reset_dist().mean();
+                    }
+                }
+            }
+            // Serverless reward stragglers stretch the batched reward
+            // phase (the barrier ends at the slowest call).
+            let mut stragglers = 0u64;
+            if cfg.fault.straggler_p > 0.0
+                && matches!(cfg.reward, RewardDeploy::Serverless { .. })
+            {
+                for _ in 0..n {
+                    if fr.chance(cfg.fault.straggler_p) {
+                        stragglers += 1;
+                    }
+                }
+                if stragglers > 0 {
+                    breakdown.reward_s *= cfg.fault.straggler_factor;
+                }
+            }
+            breakdown.other_s += stall;
+            env_failures += env_crashes;
+            result.faults.engine_failures += engine_failures;
+            result.faults.env_crashes += env_crashes;
+            result.faults.reward_stragglers += stragglers;
+        }
+
         let step_time = breakdown.total();
         clock += step_time;
         result.steps.push(StepStats {
@@ -198,6 +307,8 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
             stale_aborts: 0,
             redundant_aborts: 0,
             env_failures,
+            engine_failures,
+            requeued: 0,
         });
     }
 
@@ -209,6 +320,10 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         };
         result.gen_util = gen_busy / clock;
     }
+    result.gen_tokens = engines
+        .iter()
+        .map(|e| e.stats.prefill_tokens + e.stats.decode_tokens)
+        .sum();
     result
 }
 
@@ -283,6 +398,56 @@ mod tests {
         let reset_f: f64 = rf.steps.iter().map(|s| s.breakdown.env_reset_s).sum();
         assert!(reset_f > reset_c * 1.3, "{reset_f} vs {reset_c}");
         assert!(rf.steps.iter().map(|s| s.env_failures).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn engine_faults_stall_the_barrier_pipeline() {
+        use crate::fault::FaultProfile;
+        let clean = run(&small_sync());
+        let mut faulty = small_sync();
+        faulty.fault = FaultProfile::mtbf(300.0);
+        let rf = run(&faulty);
+        assert!(rf.faults.engine_failures > 0, "{:?}", rf.faults);
+        assert!(
+            rf.mean_step_time() > clean.mean_step_time(),
+            "{} vs {}",
+            rf.mean_step_time(),
+            clean.mean_step_time()
+        );
+        assert!(rf.goodput() < clean.goodput());
+        // With faults disabled the run is untouched — the fault branch
+        // draws nothing.
+        let again = run(&small_sync());
+        assert_eq!(again.mean_step_time(), clean.mean_step_time());
+        assert_eq!(again.faults.engine_failures, 0);
+    }
+
+    #[test]
+    fn scheduled_outage_slows_sync_rollout() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        use crate::hw::GpuClass;
+        let clean = run(&small_sync());
+        let mut faulty = small_sync();
+        // Half of every pool gone from t=0: rounds redistribute over
+        // the survivors, roughly doubling the generation phase.
+        faulty.fault = FaultProfile {
+            scheduled: [GpuClass::H800, GpuClass::H20]
+                .into_iter()
+                .map(|class| ScheduledFault {
+                    at_s: 0.0,
+                    event: FaultEvent::PoolOutage {
+                        class,
+                        fraction: 0.5,
+                    },
+                })
+                .collect(),
+            ..FaultProfile::none()
+        };
+        let rf = run(&faulty);
+        let gen_c: f64 = clean.steps.iter().map(|s| s.breakdown.generation_s).sum();
+        let gen_f: f64 = rf.steps.iter().map(|s| s.breakdown.generation_s).sum();
+        assert!(gen_f > 1.5 * gen_c, "{gen_f} vs {gen_c}");
+        assert!(rf.mean_step_time() > clean.mean_step_time());
     }
 
     #[test]
