@@ -144,6 +144,38 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             s.gen_pools = out;
         }
     }
+    if let Some(r) = j.get("route").and_then(|v| v.as_str()) {
+        s.route = match r {
+            "affinity" => crate::proxy::RouteKind::Affinity,
+            "least_loaded" => crate::proxy::RouteKind::LeastLoaded,
+            "domain_fair" => crate::proxy::RouteKind::DomainFair,
+            other => return Err(format!("unknown route policy {other}")),
+        };
+    }
+    if let Some(p) = j.get("pd") {
+        let x = p.get("prefill_nodes").and_then(|v| v.as_usize()).unwrap_or(1);
+        let y = p.get("decode_nodes").and_then(|v| v.as_usize()).unwrap_or(1);
+        if x == 0 || y == 0 {
+            return Err(format!("pd needs ≥1 node per pool, got {x}P{y}D"));
+        }
+        let mut pd = crate::sim::driver::pd::PdScenario::xpyd(x, y);
+        if let Some(g) = p.get("gpus_per_node").and_then(|v| v.as_usize()) {
+            if g == 0 {
+                return Err("pd.gpus_per_node must be ≥ 1".to_string());
+            }
+            pd.gpus_per_node = g;
+        }
+        if let Some(m) = p.get("max_batch").and_then(|v| v.as_usize()) {
+            if m == 0 {
+                return Err("pd.max_batch must be ≥ 1".to_string());
+            }
+            pd.max_batch = m;
+        }
+        if let Some(d) = p.get("disaggregated").and_then(|v| v.as_bool()) {
+            pd.disaggregated = d;
+        }
+        s.pd = Some(pd);
+    }
     if let Some(r) = j.get("reward") {
         let kind = r.get("kind").and_then(|k| k.as_str()).unwrap_or("serverless");
         let exec = r.get("exec_s").and_then(|v| v.as_f64()).unwrap_or(1.0);
@@ -211,10 +243,35 @@ mod tests {
     }
 
     #[test]
+    fn pd_and_route_knobs_parse() {
+        let s = scenario_from_json(
+            r#"{"pd": {"prefill_nodes": 2, "decode_nodes": 2, "gpus_per_node": 4},
+                "route": "domain_fair"}"#,
+        )
+        .unwrap();
+        let pd = s.pd.expect("pd config");
+        assert_eq!(pd.prefill_nodes, 2);
+        assert_eq!(pd.decode_nodes, 2);
+        assert_eq!(pd.gpus_per_node, 4);
+        assert!(pd.disaggregated);
+        assert_eq!(pd.name(), "2P2D");
+        assert_eq!(s.route, crate::proxy::RouteKind::DomainFair);
+        let colo = scenario_from_json(r#"{"pd": {"disaggregated": false}}"#).unwrap();
+        assert!(!colo.pd.unwrap().disaggregated);
+        let clean = scenario_from_json("{}").unwrap();
+        assert!(clean.pd.is_none());
+        assert_eq!(clean.route, crate::proxy::RouteKind::Affinity);
+    }
+
+    #[test]
     fn bad_values_error() {
         assert!(scenario_from_json(r#"{"model": "gpt-5"}"#).is_err());
         assert!(scenario_from_json(r#"{"mode": "warp"}"#).is_err());
         assert!(scenario_from_json("not json").is_err());
+        assert!(scenario_from_json(r#"{"route": "telepathy"}"#).is_err());
+        assert!(scenario_from_json(r#"{"pd": {"prefill_nodes": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"pd": {"gpus_per_node": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"pd": {"max_batch": 0}}"#).is_err());
         // A zero/negative MTBF would make the failure process fire at
         // zero-delay forever (the sim clock never advances).
         assert!(scenario_from_json(r#"{"engine_mtbf_s": 0.0}"#).is_err());

@@ -105,6 +105,16 @@ impl EnvManagerSim {
         EnvAction::Generate(self.gen_request(version))
     }
 
+    /// Regenerate the current turn's request (crash recovery).  The
+    /// manager is a pure state machine over a pre-sampled shape, so the
+    /// regenerated request is deterministically identical to the one
+    /// originally dispatched — the driver uses this to replay work
+    /// whose completion was in flight on an engine when it died.
+    pub fn regen_request(&self, version: Version) -> SimRequest {
+        assert_eq!(self.phase, EnvPhase::Generating);
+        self.gen_request(version)
+    }
+
     /// Generation for the current turn finished under `version`:
     /// record the turn and run the environment.
     pub fn on_generation_done(&mut self, version: Version) -> EnvAction {
@@ -185,6 +195,22 @@ mod tests {
         assert_eq!(m.phase, EnvPhase::Done);
         assert_eq!(m.traj.turns.len(), total);
         assert_eq!(m.traj.finished_at, Some(1.0));
+    }
+
+    #[test]
+    fn regen_request_replays_the_dispatched_turn() {
+        let mut m = mgr(TaskDomain::Web, 7);
+        let EnvAction::Generate(orig) = m.on_reset_done(Version(2)) else {
+            panic!()
+        };
+        assert_eq!(m.regen_request(Version(2)), orig);
+        // Later turns replay identically too.
+        m.on_generation_done(Version(2));
+        if let EnvAction::Generate(r2) = m.on_env_step_done(Version(2), 0.5) {
+            assert_eq!(m.regen_request(Version(2)), r2);
+        } else {
+            panic!("web trajectories have >1 turn at this seed");
+        }
     }
 
     #[test]

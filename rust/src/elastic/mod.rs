@@ -21,6 +21,9 @@
 //! capacity through the [`crate::resource`] plane and provisioning
 //! engines after the warm-up delay; `examples/chaos_train.rs` shows the
 //! controller restoring throughput after a 25% generation-pool outage.
+//! The environment pool scales in lock-step: its CpuSlot bindings track
+//! the live generation fleet, so a scale-down returns real environment
+//! capacity to the resource plane (see [`ElasticReport::env_slots_released`]).
 
 use crate::coordinator::IterationCost;
 use crate::hw::GpuClass;
@@ -107,6 +110,11 @@ pub struct ElasticReport {
     pub engines_retired: u64,
     /// Total warm-up time paid across provisioned engines.
     pub provision_wait_s: f64,
+    /// Environment-pool CpuSlot bindings acquired through the resource
+    /// plane (initial pool + elastic grows).
+    pub env_slots_bound: u64,
+    /// CpuSlot bindings released back on environment-pool scale-down.
+    pub env_slots_released: u64,
 }
 
 /// The feedback controller over [`IterationCost`] measurements.

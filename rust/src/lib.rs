@@ -24,10 +24,11 @@
 //! |---|---|
 //! | resource | [`resource`], [`hw`], [`llm`], [`net`] |
 //! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
-//! | control | [`coordinator`], [`proxy`], [`buffer`], [`rl`] |
+//! | control | [`coordinator`], [`proxy`] (incl. pluggable [`proxy::route`] policies), [`buffer`], [`rl`] |
+//! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine, [`sim::driver::pd`] PD execution mode |
 //! | fault & elasticity | [`fault`], [`elastic`] |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
-//! | evaluation | [`sim`], [`baselines`] |
+//! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |
 
 pub mod baselines;
 pub mod buffer;

@@ -80,6 +80,13 @@ pub struct EngineSim {
     /// Max decode tokens advanced per step when no commands are
     /// pending (event-count optimization; 1 = fully step-accurate).
     decode_chunk: f64,
+    /// Phase-interleaving slowdown multiplier (1.0 = none).  The PD
+    /// colocation baseline sets this to
+    /// [`crate::proxy::pd::colocation_interference`]: an engine that
+    /// alternates prefill and decode on the same GPUs thrashes the
+    /// working set and (for MoE) contends on the expert all-to-all
+    /// (DistServe / MegaScale-Infer; Table 5's mechanism).
+    interference: f64,
     pub stats: EngineStats,
 }
 
@@ -104,6 +111,7 @@ impl EngineSim {
             suspended: false,
             down: false,
             decode_chunk: 16.0,
+            interference: 1.0,
             stats: EngineStats::default(),
         }
     }
@@ -112,6 +120,13 @@ impl EngineSim {
     pub fn set_decode_chunk(&mut self, chunk: f64) -> &mut Self {
         assert!(chunk >= 1.0);
         self.decode_chunk = chunk;
+        self
+    }
+
+    /// Set the phase-interleaving slowdown (PD colocation baseline).
+    pub fn set_interference(&mut self, factor: f64) -> &mut Self {
+        assert!(factor >= 1.0);
+        self.interference = factor;
         self
     }
 
@@ -213,8 +228,9 @@ impl EngineSim {
                 });
             }
             let cost = self.model.prefill_cost(new_tokens, ctx_sum);
-            let elapsed =
-                phase_time(&cost, self.class.spec(), self.gpus).max(PREFILL_STEP_FLOOR_S);
+            let elapsed = phase_time(&cost, self.class.spec(), self.gpus)
+                .max(PREFILL_STEP_FLOOR_S)
+                * self.interference;
             self.stats.prefill_steps += 1;
             self.stats.prefill_tokens += new_tokens;
             self.stats.busy_s += elapsed;
@@ -246,7 +262,8 @@ impl EngineSim {
         let mean_ctx = self.active.iter().map(|a| a.ctx).sum::<f64>() / batch;
         let cost = self.model.decode_cost(batch, mean_ctx).scale(chunk);
         let elapsed = phase_time(&cost, self.class.spec(), self.gpus)
-            .max(chunk * DECODE_STEP_FLOOR_S);
+            .max(chunk * DECODE_STEP_FLOOR_S)
+            * self.interference;
 
         for a in &mut self.active {
             a.decoded += chunk;
@@ -458,6 +475,22 @@ mod tests {
         e.set_down(false);
         assert!(!e.is_down());
         assert_eq!(e.step(), StepOutcome::Idle, "drained engine is empty");
+    }
+
+    #[test]
+    fn interference_scales_elapsed_time_only() {
+        let mk = |f: f64| {
+            let mut e = engine(GpuClass::H800, 1);
+            e.set_interference(f);
+            e.enqueue(req(1, 500.0, 200.0));
+            let (t, done) = e.run_to_idle();
+            (t, done.len(), e.stats.decode_tokens)
+        };
+        let (t1, n1, tok1) = mk(1.0);
+        let (t2, n2, tok2) = mk(1.22);
+        assert_eq!(n1, n2);
+        assert_eq!(tok1, tok2, "token accounting is unchanged");
+        assert!((t2 / t1 - 1.22).abs() < 1e-6, "{t1} vs {t2}");
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! The proxy sits between EnvManagers and inference workers.  It
 //! dispatches *per-trajectory* requests (never batches of
-//! environments), routes each request to the GPU class its task domain
-//! prefers (R1), supports the weight-sync protocol's SUSPEND / RESUME
+//! environments), routes each request through a pluggable
+//! [`RoutePolicy`] (hardware affinity per R1 by default; see
+//! [`route`]), supports the weight-sync protocol's SUSPEND / RESUME
 //! commands (§6.2 steps ②/④), ABORTs stale trajectories, and — in PD
-//! mode (§6.3) — splits prefill and decode across engine pools.
+//! mode (§6.3) — pins prefill and decode dispatches to their pools via
+//! [`LlmProxy::add_to_class`].
 //!
 //! [`EngineSim`] models one inference worker's command-driven event
 //! loop over the roofline cost model; the real harness substitutes the
@@ -13,8 +15,12 @@
 
 mod engine_sim;
 pub mod pd;
+pub mod route;
 
 pub use engine_sim::{EngineSim, EngineStats, SimRequest, StepOutcome};
+pub use route::{
+    AffinityRoute, DomainFairRoute, LeastLoadedRoute, RouteCtx, RouteKind, RoutePolicy,
+};
 
 use crate::env::TaskDomain;
 use crate::hw::GpuClass;
@@ -31,7 +37,7 @@ pub enum Command {
     Resume,
 }
 
-/// The proxy: engine registry + affinity routing + suspend state.
+/// The proxy: engine registry + pluggable routing + suspend state.
 pub struct LlmProxy {
     engines: Vec<EngineSim>,
     affinity: BTreeMap<TaskDomain, GpuClass>,
@@ -39,6 +45,8 @@ pub struct LlmProxy {
     suspended: bool,
     /// Dispatch counters for fairness stats.
     dispatched: BTreeMap<TaskDomain, u64>,
+    /// The dispatch discipline (see [`route`]).
+    policy: Box<dyn RoutePolicy>,
 }
 
 impl LlmProxy {
@@ -49,7 +57,18 @@ impl LlmProxy {
             default_class: None,
             suspended: false,
             dispatched: BTreeMap::new(),
+            policy: RouteKind::Affinity.make(),
         }
+    }
+
+    /// Swap the dispatch discipline (default: [`AffinityRoute`]).
+    pub fn set_route_policy(&mut self, policy: Box<dyn RoutePolicy>) -> &mut Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn route_policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// Declare `domain → class` routing (Listing 1's `hw_affinity`).
@@ -94,46 +113,15 @@ impl LlmProxy {
         self.suspended
     }
 
-    fn preferred_class(&self, domain: TaskDomain) -> Option<GpuClass> {
-        self.affinity.get(&domain).copied().or(self.default_class)
-    }
-
-    /// Route a request to the least-loaded engine of the preferred
-    /// class, with two fallbacks (§5.3 "redirects execution to a
-    /// compatible fallback... ensuring forward progress under transient
-    /// contention"):
-    /// * the class has no members → global least-loaded;
-    /// * the class is *congested* (its best queue is much deeper than
-    ///   the global best) → spill to the global least-loaded engine.
-    pub fn route(&self, domain: TaskDomain) -> Option<usize> {
-        // Dead engines (fault plane) never receive work; when the whole
-        // fleet is down the caller re-queues (no engine returned).
-        let live = |i: &usize| !self.engines[*i].is_down();
-        let global = (0..self.engines.len())
-            .filter(live)
-            .min_by_key(|&i| self.engines[i].load())?;
-        let Some(cls) = self.preferred_class(domain) else {
-            return Some(global);
+    /// Route a request through the active [`RoutePolicy`]: dead engines
+    /// (fault plane) never receive work; when the whole fleet is down
+    /// the caller re-queues (no engine returned).
+    pub fn route(&mut self, domain: TaskDomain) -> Option<usize> {
+        let ctx = RouteCtx {
+            affinity: &self.affinity,
+            default_class: self.default_class,
         };
-        let preferred = (0..self.engines.len())
-            .filter(live)
-            .filter(|&i| self.engines[i].class == cls)
-            .min_by_key(|&i| self.engines[i].load());
-        // Spillover is asymmetric: decode-heavy work (preferring H20)
-        // degrades gracefully on compute-optimized GPUs, but
-        // prefill-heavy work must never spill onto bandwidth-optimized
-        // GPUs (6.7x slower prefill, Table 2) — the resource manager
-        // only offers *compatible* fallbacks (§5.3).
-        let may_spill = cls == GpuClass::H20;
-        match preferred {
-            Some(p)
-                if !may_spill
-                    || self.engines[p].load() <= 2 * self.engines[global].load() + 4 =>
-            {
-                Some(p)
-            }
-            _ => Some(global),
-        }
+        self.policy.pick(&self.engines, domain, &ctx)
     }
 
     /// ADD: dispatch one trajectory-level generation request.
@@ -144,6 +132,26 @@ impl LlmProxy {
             return None;
         }
         let idx = self.route(req.domain)?;
+        *self.dispatched.entry(req.domain).or_insert(0) += 1;
+        self.engines[idx].enqueue(req);
+        Some(idx)
+    }
+
+    /// ADD pinned to one GPU class, with *no* fallback: the least-loaded
+    /// live engine of exactly `class`.  This is the PD-disaggregation
+    /// dispatch path (§6.3): a prefill request must never land in the
+    /// decode pool and vice versa — the phases run on different
+    /// hardware with the KV cache shipped between them, so spilling
+    /// would silently skip the transfer the mode exists to model.
+    /// Returns `None` while suspended or when the class has no live
+    /// engine (the caller holds the request).
+    pub fn add_to_class(&mut self, req: SimRequest, class: GpuClass) -> Option<usize> {
+        if self.suspended {
+            return None;
+        }
+        let idx = (0..self.engines.len())
+            .filter(|&i| !self.engines[i].is_down() && self.engines[i].class == class)
+            .min_by_key(|&i| self.engines[i].load())?;
         *self.dispatched.entry(req.domain).or_insert(0) += 1;
         self.engines[idx].enqueue(req);
         Some(idx)
@@ -298,5 +306,98 @@ mod tests {
         p.add(req(3, TaskDomain::Web));
         assert_eq!(p.dispatch_counts()[&TaskDomain::Game], 2);
         assert_eq!(p.dispatch_counts()[&TaskDomain::Web], 1);
+    }
+
+    #[test]
+    fn preferred_class_entirely_down_falls_back() {
+        // Not merely *missing*: the declared class exists but every
+        // member is dead.  Work must spill to a live survivor.
+        let mut p = proxy();
+        p.engines_mut()[0].set_down(true); // the only H800
+        let idx = p.add(req(1, TaskDomain::Game)).unwrap();
+        assert_eq!(p.engines()[idx].class, GpuClass::H20);
+    }
+
+    #[test]
+    fn dispatch_while_suspended_holds_for_every_policy() {
+        for kind in [RouteKind::Affinity, RouteKind::LeastLoaded, RouteKind::DomainFair] {
+            let mut p = proxy();
+            p.set_route_policy(kind.make());
+            p.suspend();
+            assert!(p.add(req(1, TaskDomain::Game)).is_none(), "{kind:?}");
+            assert!(
+                p.add_to_class(req(1, TaskDomain::Game), GpuClass::H800)
+                    .is_none(),
+                "{kind:?}: class-pinned dispatch must respect suspend too"
+            );
+            p.resume();
+            assert!(p.add(req(1, TaskDomain::Game)).is_some(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn abort_of_already_completed_trajectory_is_a_noop() {
+        let mut p = proxy();
+        let e = p.add(req(5, TaskDomain::Game)).unwrap();
+        // Run the request to completion on its engine.
+        let (_, done) = p.engines_mut()[e].run_to_idle();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, TrajectoryId(5));
+        // The trajectory no longer exists anywhere: ABORT must find
+        // nothing, touch nothing, and report false.
+        let aborted_before = p.engines()[e].stats.aborted;
+        assert!(!p.abort(TrajectoryId(5)));
+        assert_eq!(p.engines()[e].stats.aborted, aborted_before);
+        assert_eq!(p.inflight(), 0);
+    }
+
+    #[test]
+    fn add_to_class_pins_and_never_spills() {
+        let mut p = proxy();
+        let idx = p
+            .add_to_class(req(1, TaskDomain::MathTool), GpuClass::H800)
+            .unwrap();
+        assert_eq!(p.engines()[idx].class, GpuClass::H800);
+        // Class fully down → no fallback, the caller must hold.
+        p.engines_mut()[idx].set_down(true);
+        assert!(p
+            .add_to_class(req(2, TaskDomain::MathTool), GpuClass::H800)
+            .is_none());
+        // The other class still works.
+        let d = p
+            .add_to_class(req(3, TaskDomain::MathTool), GpuClass::H20)
+            .unwrap();
+        assert_eq!(p.engines()[d].class, GpuClass::H20);
+    }
+
+    #[test]
+    fn add_to_class_picks_least_loaded_member() {
+        let mut p = proxy();
+        let a = p
+            .add_to_class(req(1, TaskDomain::Web), GpuClass::H20)
+            .unwrap();
+        let b = p
+            .add_to_class(req(2, TaskDomain::Web), GpuClass::H20)
+            .unwrap();
+        assert_ne!(a, b, "second pinned request must go to the other H20");
+    }
+
+    #[test]
+    fn swapped_route_policy_changes_dispatch() {
+        // Under AffinityRoute, Game is pinned to the single H800 engine;
+        // under LeastLoadedRoute the same request stream spreads over
+        // the whole fleet.
+        let mut p = proxy();
+        p.set_route_policy(RouteKind::LeastLoaded.make());
+        assert_eq!(p.route_policy_name(), "least_loaded");
+        let mut classes = std::collections::BTreeSet::new();
+        for i in 0..3 {
+            let idx = p.add(req(i, TaskDomain::Game)).unwrap();
+            classes.insert(p.engines()[idx].class);
+        }
+        assert!(
+            classes.contains(&GpuClass::H20),
+            "least-loaded must use the H20 engines affinity would shun"
+        );
     }
 }

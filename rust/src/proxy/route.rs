@@ -1,0 +1,319 @@
+//! Pluggable routing policies for the [`LlmProxy`](super::LlmProxy).
+//!
+//! Routing used to be one hard-coded function inside the proxy; the
+//! scheduler-plane refactor promotes it to a [`RoutePolicy`] trait so a
+//! scenario can swap the dispatch discipline without touching the
+//! proxy (ROADMAP: "as many scenarios as you can imagine").  Three
+//! policies ship:
+//!
+//! * [`AffinityRoute`] — the paper's R1 hardware-affinity routing with
+//!   asymmetric congestion spillover (§5.3, §6.1); the default.
+//! * [`LeastLoadedRoute`] — classic least-outstanding-requests across
+//!   the whole live fleet, affinity ignored (the ablation arm of
+//!   Fig 10's affinity study, and a sane default for homogeneous
+//!   fleets).
+//! * [`DomainFairRoute`] — capacity-weighted fairness: each task
+//!   domain spreads its requests across GPU classes in proportion to
+//!   live class capacity, so no domain monopolizes the premium pool
+//!   (the multi-tenant fairness discipline AgentRL argues for in
+//!   multi-task asynchrony).
+//!
+//! Policies see only the live fleet and a [`RouteCtx`] snapshot of the
+//! proxy's declarations, so they stay independently unit-testable.
+
+use super::EngineSim;
+use crate::env::TaskDomain;
+use crate::hw::GpuClass;
+use std::collections::BTreeMap;
+
+/// Immutable proxy state handed to a policy on every pick.
+pub struct RouteCtx<'a> {
+    /// Declared `domain → class` affinities (Listing 1's `hw_affinity`).
+    pub affinity: &'a BTreeMap<TaskDomain, GpuClass>,
+    /// Class for domains without a declaration.
+    pub default_class: Option<GpuClass>,
+}
+
+/// A dispatch discipline: pick the engine one request lands on.
+pub trait RoutePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick an engine index for `domain`, or `None` when no live engine
+    /// can take work (whole fleet down — the caller re-queues).
+    /// `&mut self` so stateful disciplines (fair-share counters) can
+    /// record the decision.
+    fn pick(&mut self, engines: &[EngineSim], domain: TaskDomain, ctx: &RouteCtx) -> Option<usize>;
+}
+
+/// Declarative routing selector carried by scenario configs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouteKind {
+    /// R1 hardware-affinity routing (paper default).
+    #[default]
+    Affinity,
+    /// Global least-loaded, affinity ignored.
+    LeastLoaded,
+    /// Capacity-weighted per-domain fair share across GPU classes.
+    DomainFair,
+}
+
+impl RouteKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteKind::Affinity => "affinity",
+            RouteKind::LeastLoaded => "least_loaded",
+            RouteKind::DomainFair => "domain_fair",
+        }
+    }
+
+    /// Instantiate the policy this selector names.
+    pub fn make(self) -> Box<dyn RoutePolicy> {
+        match self {
+            RouteKind::Affinity => Box::new(AffinityRoute),
+            RouteKind::LeastLoaded => Box::new(LeastLoadedRoute),
+            RouteKind::DomainFair => Box::new(DomainFairRoute::new()),
+        }
+    }
+}
+
+/// Least-loaded live engine over an iterator of candidate indices.
+fn least_loaded(engines: &[EngineSim], idxs: impl Iterator<Item = usize>) -> Option<usize> {
+    idxs.filter(|&i| !engines[i].is_down())
+        .min_by_key(|&i| engines[i].load())
+}
+
+/// The paper's R1 routing: preferred class by domain declaration, with
+/// two fallbacks (§5.3 "redirects execution to a compatible
+/// fallback... ensuring forward progress under transient contention"):
+///
+/// * the class has no live members → global least-loaded;
+/// * the class is *congested* (its best queue is much deeper than the
+///   global best) → spill to the global least-loaded engine.
+///
+/// Spillover is asymmetric: decode-heavy work (preferring H20) degrades
+/// gracefully on compute-optimized GPUs, but prefill-heavy work must
+/// never spill onto bandwidth-optimized GPUs (6.7x slower prefill,
+/// Table 2) — the resource manager only offers *compatible* fallbacks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AffinityRoute;
+
+impl RoutePolicy for AffinityRoute {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn pick(&mut self, engines: &[EngineSim], domain: TaskDomain, ctx: &RouteCtx) -> Option<usize> {
+        let global = least_loaded(engines, 0..engines.len())?;
+        let Some(cls) = ctx.affinity.get(&domain).copied().or(ctx.default_class) else {
+            return Some(global);
+        };
+        let preferred = least_loaded(
+            engines,
+            (0..engines.len()).filter(|&i| engines[i].class == cls),
+        );
+        let may_spill = cls == GpuClass::H20;
+        match preferred {
+            Some(p)
+                if !may_spill || engines[p].load() <= 2 * engines[global].load() + 4 =>
+            {
+                Some(p)
+            }
+            _ => Some(global),
+        }
+    }
+}
+
+/// Classic least-outstanding-requests over the whole live fleet;
+/// affinity declarations are ignored.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastLoadedRoute;
+
+impl RoutePolicy for LeastLoadedRoute {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn pick(&mut self, engines: &[EngineSim], _domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
+        least_loaded(engines, 0..engines.len())
+    }
+}
+
+/// Capacity-weighted per-domain fair share: domain `d`'s requests are
+/// spread across GPU classes in proportion to each class's live GPU
+/// capacity, via a largest-deficit rule (weighted round-robin), then
+/// least-loaded within the chosen class.  A domain can therefore never
+/// monopolize the premium pool, and class shares track fleet churn
+/// (crashes, elastic resizes) because capacity is re-read on every
+/// pick.
+#[derive(Clone, Debug, Default)]
+pub struct DomainFairRoute {
+    /// Dispatches so far per (domain, class).
+    counts: BTreeMap<(TaskDomain, GpuClass), u64>,
+}
+
+impl DomainFairRoute {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RoutePolicy for DomainFairRoute {
+    fn name(&self) -> &'static str {
+        "domain_fair"
+    }
+
+    fn pick(&mut self, engines: &[EngineSim], domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
+        // Live capacity per class (GPUs, not engines: a wide engine is
+        // proportionally more of the fleet).
+        let mut cap: BTreeMap<GpuClass, f64> = BTreeMap::new();
+        for e in engines.iter().filter(|e| !e.is_down()) {
+            *cap.entry(e.class).or_insert(0.0) += e.gpus as f64;
+        }
+        let total: f64 = cap.values().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        // Largest-deficit rule: the class whose share-per-dispatch is
+        // most under-served by this domain goes next.  BTreeMap order +
+        // strict inequality make ties deterministic.
+        let mut best: Option<(GpuClass, f64)> = None;
+        for (&class, &gpus) in &cap {
+            let served = *self.counts.get(&(domain, class)).unwrap_or(&0) as f64;
+            let score = (gpus / total) / (1.0 + served);
+            match best {
+                Some((_, s)) if s >= score => {}
+                _ => best = Some((class, score)),
+            }
+        }
+        let (class, _) = best?;
+        let idx = least_loaded(
+            engines,
+            (0..engines.len()).filter(|&i| engines[i].class == class),
+        )?;
+        *self.counts.entry((domain, class)).or_insert(0) += 1;
+        Some(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QWEN3_8B;
+
+    fn fleet() -> Vec<EngineSim> {
+        vec![
+            EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), 32),
+            EngineSim::new(1, GpuClass::H20, 2, QWEN3_8B.clone(), 32),
+            EngineSim::new(2, GpuClass::H20, 2, QWEN3_8B.clone(), 32),
+        ]
+    }
+
+    fn ctx<'a>(
+        affinity: &'a BTreeMap<TaskDomain, GpuClass>,
+        default_class: Option<GpuClass>,
+    ) -> RouteCtx<'a> {
+        RouteCtx {
+            affinity,
+            default_class,
+        }
+    }
+
+    #[test]
+    fn least_loaded_ignores_affinity() {
+        // Load the declared-affinity engine; the policy must walk away
+        // from it to an emptier engine of the "wrong" class.
+        let mut engines = fleet();
+        let mut affinity = BTreeMap::new();
+        affinity.insert(TaskDomain::Game, GpuClass::H800);
+        let mut p = LeastLoadedRoute;
+        engines[0].enqueue(crate::proxy::SimRequest {
+            traj: crate::rl::TrajectoryId(0),
+            domain: TaskDomain::Game,
+            new_tokens: 10.0,
+            ctx_tokens: 0.0,
+            decode_budget: 5.0,
+        });
+        let got = p
+            .pick(&engines, TaskDomain::Game, &ctx(&affinity, None))
+            .unwrap();
+        assert_ne!(got, 0, "least-loaded must leave the loaded H800 engine");
+    }
+
+    #[test]
+    fn least_loaded_none_when_fleet_down() {
+        let mut engines = fleet();
+        for e in &mut engines {
+            e.set_down(true);
+        }
+        let affinity = BTreeMap::new();
+        let mut p = LeastLoadedRoute;
+        assert_eq!(p.pick(&engines, TaskDomain::Web, &ctx(&affinity, None)), None);
+    }
+
+    #[test]
+    fn domain_fair_spreads_by_capacity() {
+        // 2 GPUs of H800 vs 4 GPUs of H20 → a single domain's dispatches
+        // should split ~1:2 across the classes.
+        let engines = fleet();
+        let affinity = BTreeMap::new();
+        let mut p = DomainFairRoute::new();
+        let mut h800 = 0;
+        let mut h20 = 0;
+        for _ in 0..30 {
+            let i = p
+                .pick(&engines, TaskDomain::MathTool, &ctx(&affinity, None))
+                .unwrap();
+            match engines[i].class {
+                GpuClass::H800 => h800 += 1,
+                GpuClass::H20 => h20 += 1,
+            }
+        }
+        assert_eq!(h800 + h20, 30);
+        assert_eq!(h800, 10, "H800 holds 1/3 of capacity: {h800} of 30");
+        assert_eq!(h20, 20, "H20 holds 2/3 of capacity: {h20} of 30");
+    }
+
+    #[test]
+    fn domain_fair_counters_are_per_domain() {
+        let engines = fleet();
+        let affinity = BTreeMap::new();
+        let mut p = DomainFairRoute::new();
+        let a = p
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        let b = p
+            .pick(&engines, TaskDomain::Web, &ctx(&affinity, None))
+            .unwrap();
+        // A fresh domain starts its own deficit sequence: both domains'
+        // first pick lands on the larger class, not wherever the other
+        // domain left off.
+        assert_eq!(engines[a].class, engines[b].class);
+    }
+
+    #[test]
+    fn domain_fair_tracks_fleet_churn() {
+        let mut engines = fleet();
+        let affinity = BTreeMap::new();
+        let mut p = DomainFairRoute::new();
+        // Kill the whole H20 class: everything must land on H800.
+        engines[1].set_down(true);
+        engines[2].set_down(true);
+        for _ in 0..5 {
+            let i = p
+                .pick(&engines, TaskDomain::Game, &ctx(&affinity, None))
+                .unwrap();
+            assert_eq!(engines[i].class, GpuClass::H800);
+        }
+        // Whole fleet down → no target.
+        engines[0].set_down(true);
+        assert_eq!(p.pick(&engines, TaskDomain::Game, &ctx(&affinity, None)), None);
+    }
+
+    #[test]
+    fn route_kind_round_trip() {
+        for k in [RouteKind::Affinity, RouteKind::LeastLoaded, RouteKind::DomainFair] {
+            assert_eq!(k.make().name(), k.name());
+        }
+        assert_eq!(RouteKind::default(), RouteKind::Affinity);
+    }
+}

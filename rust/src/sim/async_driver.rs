@@ -1,1176 +1,29 @@
-//! Event-driven driver for the trajectory-level pipelines: Sync+,
-//! One-off, AReaL and RollArt (§6, §7.1).
+//! Compatibility shim over the decomposed scheduler plane.
 //!
-//! One event loop covers all four modes; the [`Mode`] knob selects:
+//! The event-driven driver for the trajectory-level pipelines (Sync+,
+//! One-off, AReaL, RollArt — §6, §7.1) used to live here as one
+//! monolithic `run()`.  It now lives in [`crate::sim::driver`]:
 //!
-//! | | env interaction | reward | train overlap | staleness |
-//! |---|---|---|---|---|
-//! | Sync+ | trajectory-level | async serverless | none | — |
-//! | One-off | trajectory-level | async | rollout k+1 ∥ train k | 1, at start |
-//! | AReaL | continuous | async | continuous | α, at start |
-//! | RollArt | continuous | async | continuous | α, per turn |
+//! * [`crate::sim::driver::core`] — the mode-agnostic event loop;
+//! * [`crate::sim::driver::policy`] — per-[`Mode`](super::Mode)
+//!   scheduling policies (what the `cfg.mode == ...` conditionals used
+//!   to encode);
+//! * [`crate::sim::driver::lifecycle`] — the trajectory state machine;
+//! * [`crate::sim::driver::pd`] — PD disaggregation as a simulated
+//!   execution mode.
 //!
-//! RollArt additionally routes by hardware affinity (R1), runs the
-//! suspend → update → resume → recomp protocol at each version bump
-//! (§6.2), and launches redundant environments per GRPO group (§6.3).
-//!
-//! The fault & elasticity plane threads through the same loop: a
-//! [`FaultProfile`](crate::fault::FaultProfile) injects engine
-//! crashes / env-worker deaths / serverless stragglers, the
-//! coordinator recovers at *trajectory* granularity (in-flight
-//! requests on a dead engine are drained and re-queued through the
-//! proxy; crashed env workers are backfilled into their GRPO group via
-//! the §6.3 redundancy machinery), and an optional
-//! [`ElasticPolicy`](crate::elastic::ElasticPolicy) controller resizes
-//! the generation pool through the [`crate::resource`] plane based on
-//! the measured `get_batch`-wait vs. train-time balance.
+//! Every pre-refactor entry point and behaviour is preserved; this
+//! module simply re-exports [`run`] so existing callers (benches,
+//! examples, tests) keep working.  The original driver test suite stays
+//! here, pinned against the new core.
 
-use super::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
-use crate::buffer::SampleBuffer;
-use crate::coordinator::{EnvAction, EnvManagerSim, GroupOutcome, GroupTracker, IterationCost};
-use crate::elastic::{AutoScaler, ScaleDecision};
-use crate::env::profile::DomainProfile;
-use crate::env::TaskDomain;
-use crate::envpool::ResetSampler;
-use crate::fault::{FaultEvent, FaultReport};
-use crate::hw::{phase_time, GpuClass};
-use crate::metrics::StepBreakdown;
-use crate::mooncake::MooncakeStore;
-use crate::proxy::{EngineSim, LlmProxy, SimRequest};
-use crate::resource::{ResourceClass, ResourceManager, Role};
-use crate::rl::{TrajectoryId, Version};
-use crate::serverless::{ServerlessConfig, ServerlessPlatform};
-use crate::simkit::{EventQueue, SimRng, SimTime};
-
-/// Safety horizon: a mis-configured chaos scenario (e.g. a permanent
-/// whole-fleet outage with no elastic replacement) must terminate, not
-/// spin on fault events forever.  Only checked when faults are active.
-const MAX_SIM_S: f64 = 60.0 * 86400.0;
-
-#[derive(Debug)]
-enum Ev {
-    ResetDone { mgr: usize },
-    ResetRetry { mgr: usize },
-    EngineFree { engine: usize, epoch: u64, completed: Vec<(TrajectoryId, f64)> },
-    EnvStepDone { mgr: usize },
-    /// The env worker of `mgr` died mid-trajectory (fault plane).
-    EnvCrashed { mgr: usize },
-    RewardDone { mgr: usize },
-    TrainDone,
-    SyncDone,
-    /// Stochastic engine failure (MTBF process).
-    EngineCrashed { engine: usize },
-    /// A crashed engine finished recovering.
-    EngineRecovered { engine: usize },
-    /// Deterministic chaos event `cfg.fault.scheduled[idx]` fires.
-    Scheduled { idx: usize },
-    /// An elastic scale-up finished warming: the engine joins the
-    /// fleet holding `binding` in the resource plane.
-    EngineProvisioned { binding: Option<u64> },
-}
-
-struct Driver<'a> {
-    cfg: &'a Scenario,
-    q: EventQueue<Ev>,
-    rng: SimRng,
-    mgrs: Vec<EnvManagerSim>,
-    proxy: LlmProxy,
-    engine_busy: Vec<bool>,
-    // ---- fault & elasticity plane -------------------------------
-    /// Any fault mechanism enabled this run?
-    fault_on: bool,
-    fault_report: FaultReport,
-    reset_sampler: ResetSampler,
-    engine_down: Vec<bool>,
-    /// Retired by the elastic controller: stays down forever.
-    engine_retired: Vec<bool>,
-    /// Bumped on every crash/retire so stale `EngineFree` events (work
-    /// that "completed" on a dead engine) are discarded.
-    engine_epoch: Vec<u64>,
-    /// Per-engine count of MTBF failures drawn so far (stream index).
-    engine_fail_nth: Vec<u64>,
-    /// Crash time of currently-down engines (recovery-latency metric).
-    down_since: std::collections::BTreeMap<usize, f64>,
-    /// Alive-time accounting for utilization under churn.
-    engine_up_since: Vec<Option<f64>>,
-    engine_alive_s: Vec<f64>,
-    scaler: Option<AutoScaler>,
-    /// Resource-plane view backing the elastic controller's bindings.
-    rm: Option<ResourceManager>,
-    engine_bindings: Vec<Option<u64>>,
-    pending_provisions: usize,
-    /// Environment-pool size target (elastic: scales with the live
-    /// generation fleet).
-    env_target: usize,
-    initial_engines: usize,
-    acc_engine_failures: u64,
-    acc_requeued: u64,
-    // -------------------------------------------------------------
-    groups: GroupTracker,
-    /// Completed trajectories awaiting their group to fill.
-    staged: std::collections::BTreeMap<u64, Vec<crate::rl::Trajectory>>,
-    /// Group → task domain (for replacement launches).
-    group_domain: std::collections::BTreeMap<u64, crate::env::TaskDomain>,
-    buffer: SampleBuffer,
-    store: MooncakeStore,
-    serverless: ServerlessPlatform,
-    reward_gpu_free_at: Vec<f64>,
-    version: Version,
-    next_group: u64,
-    inflight_resets: usize,
-    /// Requests blocked by a suspended proxy.
-    pending_requests: Vec<SimRequest>,
-    // trainer state
-    trainer_busy: bool,
-    trainer_idle_since: f64,
-    inflight_train_tokens: f64,
-    pending_batch: Option<(usize, f64)>, // (#trajectories, tokens) awaiting sync
-    weights_pushed_at: Option<f64>,      // push start of latest trained weights
-    suspend_draining: bool,
-    train_steps_done: usize,
-    last_train_done: f64,
-    // barrier-mode iteration control
-    iter_launched: bool,
-    // stats accumulators (reset per step)
-    acc_stale: u64,
-    acc_redundant: u64,
-    acc_failures: u64,
-    acc_staleness: f64,
-    acc_exposed_sync: f64,
-    acc_recompute: f64,
-    acc_train: f64,
-    acc_wait: f64,
-    reward_busy_s: f64,
-    result: ScenarioResult,
-}
-
-/// Per-call reward execution sample.
-fn reward_exec(cfg: &Scenario, rng: &mut SimRng) -> f64 {
-    match &cfg.reward {
-        RewardDeploy::DedicatedGpus { exec_s, .. } => exec_s.sample(rng),
-        RewardDeploy::Serverless { exec_s } => exec_s.sample(rng),
-    }
-}
-
-impl<'a> Driver<'a> {
-    fn new(cfg: &'a Scenario) -> Self {
-        let mut engines = Vec::new();
-        let mut eid = 0;
-        for pool in &cfg.gen_pools {
-            for _ in 0..pool.engines {
-                engines.push(EngineSim::new(
-                    eid,
-                    pool.class,
-                    pool.gpus_per_engine,
-                    cfg.model.clone(),
-                    pool.max_batch,
-                ));
-                eid += 1;
-            }
-        }
-        let n_engines = engines.len();
-        assert!(n_engines > 0, "scenario needs at least one engine");
-        let mut proxy = LlmProxy::new(engines);
-        if cfg.affinity_routing {
-            // R1: prefill-heavy → compute-optimized, decode-heavy →
-            // bandwidth-optimized (domain-level declarations).
-            for d in TaskDomain::ALL {
-                let class = if DomainProfile::of(d).prefill_heavy {
-                    GpuClass::H800
-                } else {
-                    GpuClass::H20
-                };
-                proxy.set_affinity(d, class);
-            }
-        }
-        let reward_gpus = match &cfg.reward {
-            RewardDeploy::DedicatedGpus { gpus, .. } => *gpus,
-            RewardDeploy::Serverless { .. } => 0,
-        };
-        // Elastic runs bind every engine through the resource plane so
-        // scale decisions contend for real capacity; the elastic class
-        // gets headroom up to the policy's max fleet size.
-        let (rm, engine_bindings, scaler) = match &cfg.elastic {
-            None => (None, vec![None; n_engines], None),
-            Some(policy) => {
-                let mut rm = ResourceManager::new();
-                for p in &cfg.gen_pools {
-                    rm.add_pool(ResourceClass::Gpu(p.class), p.engines * p.gpus_per_engine);
-                }
-                let have = proxy
-                    .engines()
-                    .iter()
-                    .filter(|e| e.class == policy.class)
-                    .count();
-                if policy.max_engines > have {
-                    rm.add_pool(
-                        ResourceClass::Gpu(policy.class),
-                        (policy.max_engines - have) * policy.gpus_per_engine,
-                    );
-                }
-                let bindings: Vec<Option<u64>> = proxy
-                    .engines()
-                    .iter()
-                    .map(|e| {
-                        rm.bind(Role::ActorGen, &[ResourceClass::Gpu(e.class)], e.gpus)
-                            .ok()
-                            .map(|b| b.id)
-                    })
-                    .collect();
-                (Some(rm), bindings, Some(AutoScaler::new(policy.clone())))
-            }
-        };
-        let env_target = cfg.concurrent_envs.unwrap_or(cfg.batch_size);
-        Driver {
-            cfg,
-            q: EventQueue::new(),
-            rng: SimRng::new(cfg.seed),
-            mgrs: Vec::new(),
-            proxy,
-            engine_busy: vec![false; n_engines],
-            fault_on: cfg.fault.is_active(),
-            fault_report: FaultReport::default(),
-            reset_sampler: ResetSampler::new(&cfg.envpool),
-            engine_down: vec![false; n_engines],
-            engine_retired: vec![false; n_engines],
-            engine_epoch: vec![0; n_engines],
-            engine_fail_nth: vec![0; n_engines],
-            down_since: std::collections::BTreeMap::new(),
-            engine_up_since: vec![Some(0.0); n_engines],
-            engine_alive_s: vec![0.0; n_engines],
-            scaler,
-            rm,
-            engine_bindings,
-            pending_provisions: 0,
-            env_target,
-            initial_engines: n_engines,
-            acc_engine_failures: 0,
-            acc_requeued: 0,
-            groups: GroupTracker::new(),
-            staged: std::collections::BTreeMap::new(),
-            group_domain: std::collections::BTreeMap::new(),
-            buffer: {
-                // RollArt keeps GRPO groups whole: a stale member
-                // evicts its entire group (partial groups would
-                // corrupt the advantage baseline).  The AReaL/One-off
-                // baselines keep their per-trajectory semantics.
-                let mut b = SampleBuffer::new(cfg.alpha, cfg.staleness);
-                b.set_group_aware(cfg.mode == Mode::RollArt);
-                b
-            },
-            store: MooncakeStore::default(),
-            serverless: ServerlessPlatform::new(ServerlessConfig {
-                // tight reclaim: reward bursts are short-lived (Fig 12)
-                idle_timeout_s: 15.0,
-                ..ServerlessConfig::default()
-            }),
-            reward_gpu_free_at: vec![0.0; reward_gpus],
-            version: Version(0),
-            next_group: 0,
-            inflight_resets: 0,
-            pending_requests: Vec::new(),
-            trainer_busy: false,
-            trainer_idle_since: 0.0,
-            inflight_train_tokens: 0.0,
-            pending_batch: None,
-            weights_pushed_at: None,
-            suspend_draining: false,
-            train_steps_done: 0,
-            last_train_done: 0.0,
-            iter_launched: false,
-            acc_stale: 0,
-            acc_redundant: 0,
-            acc_failures: 0,
-            acc_staleness: 0.0,
-            acc_exposed_sync: 0.0,
-            acc_recompute: 0.0,
-            acc_train: 0.0,
-            acc_wait: 0.0,
-            reward_busy_s: 0.0,
-            result: ScenarioResult::default(),
-        }
-    }
-
-    fn now(&self) -> f64 {
-        self.q.now().as_secs()
-    }
-
-    fn continuous(&self) -> bool {
-        // One-off pipelines rollout continuously too (Fig 2-Right: the
-        // next iteration's rollout overlaps training); only Sync+ stops
-        // the world between iterations.
-        matches!(self.cfg.mode, Mode::OneOff | Mode::AReaL | Mode::RollArt)
-    }
-
-    /// Active (non-terminal) trajectory count.
-    fn active(&self) -> usize {
-        self.mgrs.iter().filter(|m| !m.is_terminal()).count()
-    }
-
-    /// Launch one GRPO group (G + redundancy members).
-    fn launch_group(&mut self) {
-        let g = self.next_group;
-        self.next_group += 1;
-        let members = self.cfg.group_size
-            + if self.cfg.mode == Mode::RollArt {
-                self.cfg.redundancy
-            } else {
-                0
-            };
-        self.groups.add_group(g, self.cfg.group_size);
-        let domain = *self.rng.choose(&self.cfg.task_mix);
-        self.group_domain.insert(g, domain);
-        let profile = DomainProfile::of(domain);
-        for _ in 0..members {
-            let idx = self.mgrs.len();
-            let id = TrajectoryId(idx as u64);
-            let shape = profile.sample_trajectory(&mut self.rng);
-            let m = EnvManagerSim::new(id, shape, self.version, g, self.now());
-            self.mgrs.push(m);
-            self.groups.launch(g, id);
-            self.schedule_reset(idx);
-        }
-    }
-
-    fn schedule_reset(&mut self, mgr: usize) {
-        let mut r = self.rng.stream("reset", mgr as u64);
-        let o = self.reset_sampler.sample(self.inflight_resets, &mut r);
-        self.inflight_resets += 1;
-        if o.failed {
-            self.acc_failures += 1;
-            self.q
-                .schedule_in(o.latency_s, Ev::ResetRetry { mgr });
-        } else {
-            self.q.schedule_in(o.latency_s, Ev::ResetDone { mgr });
-        }
-    }
-
-    /// Keep the continuous modes at target concurrency.  The target is
-    /// elastic: it tracks the live generation fleet so a grown pool is
-    /// fed and a shrunken one is not drowned.
-    fn refill(&mut self) {
-        if !self.continuous() {
-            return;
-        }
-        while self.active() < self.env_target {
-            self.launch_group();
-        }
-    }
-
-    /// Resize the environment-pool target after fleet changes
-    /// (elastic runs only; fault-only runs keep the configured target).
-    fn update_env_target(&mut self) {
-        if self.scaler.is_none() {
-            return;
-        }
-        let base = self.cfg.concurrent_envs.unwrap_or(self.cfg.batch_size);
-        let live = self.proxy.live_engines().max(1);
-        let scaled = base * live / self.initial_engines.max(1);
-        let lo = self.cfg.group_size.max(base / 2);
-        let hi = (2 * base).max(lo);
-        self.env_target = scaled.clamp(lo, hi);
-    }
-
-    /// Barrier modes: launch one iteration's worth of groups.
-    fn launch_iteration(&mut self) {
-        let n_groups = (self.cfg.batch_size / self.cfg.group_size).max(1);
-        for _ in 0..n_groups {
-            self.launch_group();
-        }
-        self.iter_launched = true;
-    }
-
-    fn dispatch(&mut self, req: SimRequest) {
-        if self.proxy.is_suspended() || self.proxy.live_engines() == 0 {
-            // Suspended for weight sync, or the whole fleet is down
-            // (chaos): hold the request; it re-dispatches on resume /
-            // recovery / provisioning.
-            self.pending_requests.push(req);
-            return;
-        }
-        if let Some(e) = self.proxy.add(req) {
-            self.kick_engine(e);
-        }
-    }
-
-    fn kick_engine(&mut self, e: usize) {
-        if self.engine_busy[e] || self.engine_down[e] || self.proxy.is_suspended() {
-            return;
-        }
-        let outcome = self.proxy.engines_mut()[e].step();
-        if let crate::proxy::StepOutcome::Busy {
-            elapsed, completed, ..
-        } = outcome
-        {
-            self.engine_busy[e] = true;
-            let epoch = self.engine_epoch[e];
-            self.q.schedule_in(
-                elapsed,
-                Ev::EngineFree {
-                    engine: e,
-                    epoch,
-                    completed,
-                },
-            );
-        }
-    }
-
-    fn kick_all_engines(&mut self) {
-        for e in 0..self.engine_busy.len() {
-            self.kick_engine(e);
-        }
-    }
-
-    fn env_step_latency(&mut self, mgr: usize) -> f64 {
-        let domain = self.mgrs[mgr].domain();
-        let turn = self.mgrs[mgr].turns_done();
-        let mut r = self
-            .rng
-            .stream("envstep", (mgr * 1000 + turn) as u64);
-        match &self.cfg.env_step_override {
-            Some(d) => d.sample(&mut r),
-            None => self.cfg.envpool.sample_step(domain, &mut r),
-        }
-    }
-
-    fn handle_action(&mut self, mgr: usize, action: EnvAction) {
-        match action {
-            EnvAction::Generate(req) => {
-                // RollArt's per-iteration staleness enforcement (§6.2
-                // fn.1): abort mid-flight trajectories whose start
-                // version left the α window, instead of letting them
-                // generate a stale tail that get_batch would evict
-                // anyway (AReaL's behaviour).
-                if self.cfg.mode == Mode::RollArt
-                    && !self.mgrs[mgr]
-                        .traj
-                        .fresh_at_start(self.version, self.cfg.alpha)
-                {
-                    self.abort_mgr(mgr, true);
-                    return;
-                }
-                self.dispatch(req);
-            }
-            EnvAction::StepEnv => {
-                // Fault plane: this step may kill its env worker.  The
-                // crash is detected after the health-check delay and
-                // recovered at trajectory level (group backfill).
-                if self.fault_on
-                    && self
-                        .cfg
-                        .fault
-                        .env_step_crashes(&self.rng, mgr, self.mgrs[mgr].turns_done())
-                {
-                    self.q.schedule_in(
-                        self.cfg.fault.env_crash_detect_s,
-                        Ev::EnvCrashed { mgr },
-                    );
-                    return;
-                }
-                let lat = self.env_step_latency(mgr);
-                self.q.schedule_in(lat, Ev::EnvStepDone { mgr });
-            }
-            EnvAction::Complete => {
-                self.dispatch_reward(mgr);
-            }
-        }
-    }
-
-    fn abort_mgr(&mut self, mgr: usize, stale: bool) {
-        let id = self.mgrs[mgr].id;
-        let group = self.mgrs[mgr].traj.group;
-        self.mgrs[mgr].abort();
-        self.proxy.abort(id);
-        self.groups.fail(id);
-        if stale {
-            self.acc_stale += 1;
-        } else {
-            self.acc_redundant += 1;
-        }
-        // A stale/failed member leaves its group short: relaunch a
-        // replacement at the *current* version so the group can still
-        // fill (the paper re-rolls aborted trajectories).
-        if stale && !self.groups.is_filled(group) {
-            self.launch_member(group);
-        }
-        self.refill();
-    }
-
-    /// Launch one replacement member into an existing group.
-    fn launch_member(&mut self, group: u64) {
-        let domain = self.group_domain[&group];
-        let profile = DomainProfile::of(domain);
-        let idx = self.mgrs.len();
-        let id = TrajectoryId(idx as u64);
-        let shape = profile.sample_trajectory(&mut self.rng);
-        let m = EnvManagerSim::new(id, shape, self.version, group, self.now());
-        self.mgrs.push(m);
-        self.groups.launch(group, id);
-        self.schedule_reset(idx);
-    }
-
-    // ---- fault plane ------------------------------------------------
-
-    /// Shared crash/retire path: mark the engine dead, invalidate its
-    /// in-flight `EngineFree`, account alive time, and return its
-    /// drained requests for re-dispatch.
-    fn take_down_engine(&mut self, e: usize) -> Vec<SimRequest> {
-        self.engine_down[e] = true;
-        self.engine_epoch[e] += 1;
-        self.engine_busy[e] = false;
-        let now = self.now();
-        if let Some(up) = self.engine_up_since[e].take() {
-            self.engine_alive_s[e] += now - up;
-        }
-        self.proxy.engines_mut()[e].set_down(true);
-        self.proxy.engines_mut()[e].drain_requests()
-    }
-
-    /// An engine crashed.  Trajectory-level recovery: every request it
-    /// held (queued or mid-generation) is re-queued through the proxy
-    /// instead of being lost — its trajectory survives, only the
-    /// partially decoded turn is replayed.
-    fn kill_engine(&mut self, e: usize, auto_recover: bool) {
-        if self.engine_down[e] {
-            return;
-        }
-        let reqs = self.take_down_engine(e);
-        self.fault_report.engine_failures += 1;
-        self.acc_engine_failures += 1;
-        self.fault_report.requeued_requests += reqs.len() as u64;
-        self.acc_requeued += reqs.len() as u64;
-        self.down_since.insert(e, self.now());
-        for r in reqs {
-            self.dispatch(r);
-        }
-        if auto_recover {
-            self.q
-                .schedule_in(self.cfg.fault.engine_recovery_s, Ev::EngineRecovered { engine: e });
-        }
-        // A crash mid-drain must not wedge the weight-sync barrier:
-        // the dead engine's EngineFree will never count down.
-        if self.suspend_draining {
-            self.finish_drain();
-        }
-    }
-
-    fn revive_engine(&mut self, e: usize) {
-        if !self.engine_down[e] || self.engine_retired[e] {
-            return;
-        }
-        self.engine_down[e] = false;
-        self.engine_up_since[e] = Some(self.now());
-        self.proxy.engines_mut()[e].set_down(false);
-        if let Some(t0) = self.down_since.remove(&e) {
-            self.fault_report.recoveries += 1;
-            self.fault_report.recovery_latency_s += self.now() - t0;
-        }
-        self.flush_pending();
-        self.kick_engine(e);
-    }
-
-    /// Re-dispatch requests held while the fleet was down/suspended.
-    fn flush_pending(&mut self) {
-        if self.proxy.is_suspended() || self.proxy.live_engines() == 0 {
-            return;
-        }
-        let pending: Vec<SimRequest> = std::mem::take(&mut self.pending_requests);
-        for req in pending {
-            self.dispatch(req);
-        }
-    }
-
-    fn live_engines_of(&self, class: GpuClass) -> Vec<usize> {
-        (0..self.engine_down.len())
-            .filter(|&i| !self.engine_down[i] && self.proxy.engines()[i].class == class)
-            .collect()
-    }
-
-    /// Scheduled chaos: kill `fraction` of the live engines of `class`.
-    fn pool_outage(&mut self, class: GpuClass, fraction: f64) {
-        let live = self.live_engines_of(class);
-        let k = ((live.len() as f64) * fraction).ceil() as usize;
-        // Kill from the back for determinism (highest indices first).
-        for &e in live.iter().rev().take(k) {
-            self.kill_engine(e, false);
-        }
-    }
-
-    /// Scheduled chaos: bring every downed engine of `class` back.
-    fn pool_restore(&mut self, class: GpuClass) {
-        let down: Vec<usize> = (0..self.engine_down.len())
-            .filter(|&i| {
-                self.engine_down[i]
-                    && !self.engine_retired[i]
-                    && self.proxy.engines()[i].class == class
-            })
-            .collect();
-        for e in down {
-            self.revive_engine(e);
-        }
-    }
-
-    /// Schedule engine `e`'s next stochastic failure (MTBF process).
-    fn schedule_engine_failure(&mut self, e: usize) {
-        let nth = self.engine_fail_nth[e];
-        if let Some(dt) = self.cfg.fault.next_engine_failure(&self.rng, e, nth) {
-            self.engine_fail_nth[e] += 1;
-            self.q.schedule_in(dt, Ev::EngineCrashed { engine: e });
-        }
-    }
-
-    // ---- elasticity plane -------------------------------------------
-
-    /// Feed the controller the just-completed iteration's cost and act
-    /// on its decision through the resource plane.
-    fn maybe_autoscale(&mut self) {
-        let Some(scaler) = self.scaler.as_mut() else {
-            return;
-        };
-        let Some(last) = self.result.steps.last() else {
-            return;
-        };
-        let cost = IterationCost {
-            get_batch_wait_s: last.breakdown.get_batch_wait_s,
-            weight_update_s: last.breakdown.weight_sync_s,
-            recompute_s: 0.0,
-            train_s: last.breakdown.train_s,
-            command_s: 0.0,
-        };
-        let class = scaler.policy.class;
-        let live = self
-            .proxy
-            .engines()
-            .iter()
-            .enumerate()
-            .filter(|(i, e)| e.class == class && !self.engine_down[*i])
-            .count();
-        match scaler.observe(&cost, live, self.pending_provisions) {
-            ScaleDecision::Hold => {}
-            ScaleDecision::Up(n) => {
-                for _ in 0..n {
-                    self.provision_engine();
-                }
-            }
-            ScaleDecision::Down(n) => {
-                // Retire the least-loaded live engines of the class:
-                // minimal re-queued work.
-                let mut candidates = self.live_engines_of(class);
-                candidates.sort_by_key(|&i| self.proxy.engines()[i].load());
-                let victims: Vec<usize> = candidates.into_iter().take(n).collect();
-                for e in victims {
-                    self.retire_engine(e);
-                }
-            }
-        }
-    }
-
-    /// Start warming one engine: bind capacity now, join the fleet
-    /// after the provision delay (boot + weight pull).
-    fn provision_engine(&mut self) {
-        let Some(scaler) = self.scaler.as_ref() else {
-            return;
-        };
-        let policy = scaler.policy.clone();
-        let binding = match self.rm.as_mut() {
-            Some(rm) => {
-                match rm.bind(
-                    Role::ActorGen,
-                    &[ResourceClass::Gpu(policy.class)],
-                    policy.gpus_per_engine,
-                ) {
-                    Ok(b) => Some(b.id),
-                    // Resource plane has no capacity left: the decision
-                    // is dropped, not queued (next iteration retries).
-                    Err(_) => return,
-                }
-            }
-            None => None,
-        };
-        let delay = policy.provision_delay_s(&self.cfg.model);
-        if let Some(s) = self.scaler.as_mut() {
-            s.report.provision_wait_s += delay;
-        }
-        self.pending_provisions += 1;
-        self.q
-            .schedule_in(delay, Ev::EngineProvisioned { binding });
-    }
-
-    fn on_engine_provisioned(&mut self, binding: Option<u64>) {
-        self.pending_provisions = self.pending_provisions.saturating_sub(1);
-        let Some(scaler) = self.scaler.as_mut() else {
-            return;
-        };
-        let policy = scaler.policy.clone();
-        scaler.report.engines_added += 1;
-        let e = self.proxy.add_engine(EngineSim::new(
-            self.engine_down.len() as u64,
-            policy.class,
-            policy.gpus_per_engine,
-            self.cfg.model.clone(),
-            policy.max_batch,
-        ));
-        self.engine_busy.push(false);
-        self.engine_down.push(false);
-        self.engine_retired.push(false);
-        self.engine_epoch.push(0);
-        self.engine_fail_nth.push(0);
-        self.engine_up_since.push(Some(self.now()));
-        self.engine_alive_s.push(0.0);
-        self.engine_bindings.push(binding);
-        // The new engine is subject to the same failure process.
-        if self.fault_on {
-            self.schedule_engine_failure(e);
-        }
-        self.update_env_target();
-        self.flush_pending();
-        self.refill();
-        self.kick_engine(e);
-    }
-
-    /// Elastic scale-down: drain, re-queue, release the binding.
-    fn retire_engine(&mut self, e: usize) {
-        if self.engine_down[e] {
-            return;
-        }
-        let reqs = self.take_down_engine(e);
-        self.engine_retired[e] = true;
-        if let Some(s) = self.scaler.as_mut() {
-            s.report.engines_retired += 1;
-        }
-        if let (Some(rm), Some(b)) = (self.rm.as_mut(), self.engine_bindings[e].take()) {
-            rm.release(b);
-        }
-        for r in reqs {
-            self.dispatch(r);
-        }
-        if self.suspend_draining {
-            self.finish_drain();
-        }
-        self.update_env_target();
-    }
-
-    // -----------------------------------------------------------------
-
-    fn dispatch_reward(&mut self, mgr: usize) {
-        let mut r = self.rng.stream("rexec", mgr as u64);
-        let mut exec = reward_exec(self.cfg, &mut r);
-        if self.fault_on && matches!(self.cfg.reward, RewardDeploy::Serverless { .. }) {
-            // Serverless stragglers: the invocation lands on a slow
-            // sandbox and runs straggler_factor× longer.
-            let mult = self.cfg.fault.reward_multiplier(&self.rng, mgr as u64);
-            if mult > 1.0 {
-                exec *= mult;
-                self.fault_report.reward_stragglers += 1;
-            }
-        }
-        match &self.cfg.reward {
-            RewardDeploy::Serverless { .. } => {
-                let inv = self.serverless.invoke(self.now(), exec, &mut r);
-                let delay = (inv.done_s - self.now()).max(0.0);
-                self.q.schedule_in(delay, Ev::RewardDone { mgr });
-            }
-            RewardDeploy::DedicatedGpus { .. } => {
-                // FIFO over the dedicated reward servers.
-                let now = self.now();
-                let slot = self
-                    .reward_gpu_free_at
-                    .iter_mut()
-                    .min_by(|a, b| a.partial_cmp(b).unwrap())
-                    .expect("dedicated reward needs ≥1 GPU");
-                let start = slot.max(now);
-                *slot = start + exec;
-                self.reward_busy_s += exec;
-                let done = *slot;
-                self.q.schedule_in(done - now, Ev::RewardDone { mgr });
-            }
-        }
-    }
-
-    /// Reward scored: group accounting + buffer deposit.
-    ///
-    /// GRPO needs *complete groups* (the group mean/std is the
-    /// advantage baseline), so trajectories are staged until their
-    /// group fills and only then deposited — this is exactly why
-    /// redundant environment rollouts pay off (§6.3): one straggler
-    /// otherwise gates its whole group's availability.
-    fn on_reward_done(&mut self, mgr: usize) {
-        if self.mgrs[mgr].is_terminal() && self.mgrs[mgr].phase == crate::coordinator::EnvPhase::Aborted
-        {
-            return;
-        }
-        let id = self.mgrs[mgr].id;
-        let group = self.mgrs[mgr].traj.group;
-        self.mgrs[mgr].traj.reward = Some(1.0);
-        match self.groups.complete(id) {
-            GroupOutcome::Surplus => {}
-            GroupOutcome::Pending => {
-                let traj = self.mgrs[mgr].traj.clone();
-                self.staged.entry(group).or_default().push(traj);
-            }
-            GroupOutcome::Filled { abort } => {
-                let traj = self.mgrs[mgr].traj.clone();
-                let mut members = self.staged.remove(&group).unwrap_or_default();
-                members.push(traj);
-                if self.cfg.mode == Mode::RollArt {
-                    // Atomic group deposit: all members or none (GRPO
-                    // groups must never enter the buffer partially).
-                    self.buffer.deposit_group(members, self.version);
-                } else {
-                    // Baseline semantics: per-trajectory deposit, a
-                    // stale member is dropped individually (AReaL).
-                    for t in members {
-                        self.buffer.deposit(t, self.version);
-                    }
-                }
-                for t in abort {
-                    let i = t.0 as usize;
-                    if !self.mgrs[i].is_terminal() {
-                        self.abort_mgr(i, false);
-                    }
-                }
-            }
-        }
-        self.refill();
-        self.try_iteration_boundary();
-    }
-
-    /// The scheduling heart: can a train step (and the weight-sync
-    /// protocol) start now?
-    fn try_iteration_boundary(&mut self) {
-        if self.trainer_busy || self.suspend_draining || self.pending_batch.is_some() {
-            return;
-        }
-        let Some(batch) = self.buffer.get_batch(self.cfg.batch_size, self.version) else {
-            // Barrier modes relaunch the next iteration only once the
-            // batch is consumed; nothing to do here.
-            return;
-        };
-        let tokens: f64 = batch.iter().map(|t| t.total_tokens() as f64).sum();
-        let n = batch.len();
-        self.acc_staleness = batch
-            .iter()
-            .map(|t| (self.version.0 - t.min_version().0) as f64)
-            .sum::<f64>()
-            / n.max(1) as f64;
-        self.acc_wait += self.now() - self.trainer_idle_since;
-
-        // Weight sync before this train step (protocol ②–⑤) when the
-        // engines run older weights than the trainer produced.
-        if self.weights_pushed_at.is_some() {
-            self.pending_batch = Some((n, tokens));
-            self.begin_suspend();
-        } else {
-            self.start_train(tokens);
-        }
-        // One-off / Sync+ barrier: next iteration launches are handled
-        // at train start / sync completion respectively.
-    }
-
-    fn begin_suspend(&mut self) {
-        self.proxy.suspend();
-        self.suspend_draining = true;
-        if self.engine_busy.iter().all(|b| !b) {
-            self.finish_drain();
-        }
-        // else: the in-flight EngineFree events trigger finish_drain.
-    }
-
-    fn finish_drain(&mut self) {
-        if !self.suspend_draining || self.engine_busy.iter().any(|b| *b) {
-            return;
-        }
-        // Exposed update (③) + KV recompute (⑤).
-        let push_start = self.weights_pushed_at.take().unwrap_or(self.now());
-        let overlap = self.now() - push_start;
-        let bytes = self.cfg.model.weight_bytes();
-        let exposed = if self.cfg.async_weight_sync {
-            self.store.sync(bytes, overlap).exposed_s
-        } else {
-            // Blocking veRL-style cross-cluster transfer (Fig 14a).
-            self.store.sync(bytes, 0.0).naive_s
-        };
-        let recompute = self.proxy.recompute_cost_s();
-        self.acc_exposed_sync += exposed;
-        self.acc_recompute += recompute;
-        self.q.schedule_in(exposed + recompute, Ev::SyncDone);
-    }
-
-    fn on_sync_done(&mut self) {
-        self.suspend_draining = false;
-        self.version = self.version.next();
-        self.proxy.resume();
-        let pending: Vec<SimRequest> = std::mem::take(&mut self.pending_requests);
-        for req in pending {
-            self.dispatch(req);
-        }
-        self.kick_all_engines();
-        if let Some((_, tokens)) = self.pending_batch.take() {
-            self.start_train(tokens);
-        }
-    }
-
-    fn start_train(&mut self, tokens: f64) {
-        let cost = self.cfg.model.train_cost(tokens, 8000.0);
-        let t = phase_time(&cost, GpuClass::H800.spec(), self.cfg.train_gpus.max(1))
-            * super::TRAIN_OVERHEAD;
-        self.acc_train += t;
-        self.trainer_busy = true;
-        self.inflight_train_tokens = tokens;
-        self.q.schedule_in(t, Ev::TrainDone);
-    }
-
-    fn maybe_launch_barrier_iteration(&mut self) {
-        if self.continuous() || self.iter_launched {
-            return;
-        }
-        self.launch_iteration();
-    }
-
-    fn on_train_done(&mut self, tokens_trained: f64) {
-        self.trainer_busy = false;
-        self.trainer_idle_since = self.now();
-        self.train_steps_done += 1;
-        // Publish new weights to the store (push overlaps rollout).
-        self.weights_pushed_at = Some(self.now());
-
-        // Record the completed step.
-        let step_time = self.now() - self.last_train_done;
-        self.last_train_done = self.now();
-        let breakdown = StepBreakdown {
-            generation_s: 0.0, // filled from engine stats at the end
-            env_reset_s: 0.0,
-            env_step_s: 0.0,
-            reward_s: 0.0,
-            train_s: std::mem::take(&mut self.acc_train),
-            weight_sync_s: std::mem::take(&mut self.acc_exposed_sync)
-                + std::mem::take(&mut self.acc_recompute),
-            get_batch_wait_s: std::mem::take(&mut self.acc_wait),
-            other_s: 0.0,
-        };
-        self.result.steps.push(StepStats {
-            step_time_s: step_time,
-            breakdown,
-            batch_tokens: tokens_trained,
-            mean_staleness: std::mem::take(&mut self.acc_staleness),
-            stale_aborts: std::mem::take(&mut self.acc_stale),
-            redundant_aborts: std::mem::take(&mut self.acc_redundant),
-            env_failures: std::mem::take(&mut self.acc_failures),
-            engine_failures: std::mem::take(&mut self.acc_engine_failures),
-            requeued: std::mem::take(&mut self.acc_requeued),
-        });
-
-        // Elastic controller: one decision per completed iteration,
-        // fed by the iteration cost just recorded.
-        self.maybe_autoscale();
-
-        // Sync+ barrier: next iteration only after train completes.
-        if self.cfg.mode == Mode::SyncPlus {
-            self.iter_launched = false;
-            // Pay the weight sync *now*, blocking (synchronous training):
-            self.begin_suspend();
-            // next iteration launches on SyncDone via pending flag below
-        }
-        self.try_iteration_boundary();
-    }
-
-    fn run(mut self) -> ScenarioResult {
-        self.trainer_idle_since = 0.0;
-        if self.fault_on {
-            // Deterministic chaos schedule + per-engine MTBF processes.
-            for (idx, f) in self.cfg.fault.scheduled.iter().enumerate() {
-                self.q.schedule(SimTime::secs(f.at_s), Ev::Scheduled { idx });
-            }
-            for e in 0..self.engine_down.len() {
-                self.schedule_engine_failure(e);
-            }
-        }
-        if self.continuous() {
-            self.refill();
-        } else {
-            self.launch_iteration();
-        }
-
-        let target_steps = self.cfg.iterations;
-        while let Some((t, ev)) = self.q.pop() {
-            if self.fault_on && t.as_secs() > MAX_SIM_S {
-                break; // chaos deadlock backstop; results are partial
-            }
-            match ev {
-                Ev::ResetRetry { mgr } => {
-                    self.inflight_resets = self.inflight_resets.saturating_sub(1);
-                    if !self.mgrs[mgr].is_terminal() {
-                        self.schedule_reset(mgr);
-                    }
-                }
-                Ev::ResetDone { mgr } => {
-                    self.inflight_resets = self.inflight_resets.saturating_sub(1);
-                    if !self.mgrs[mgr].is_terminal() {
-                        let v = self.version;
-                        let action = self.mgrs[mgr].on_reset_done(v);
-                        self.handle_action(mgr, action);
-                    }
-                }
-                Ev::EngineFree { engine, epoch, completed } => {
-                    if epoch != self.engine_epoch[engine] {
-                        // The engine crashed (or was retired) while
-                        // this step was in flight: its work was drained
-                        // and re-queued; the completions never
-                        // happened.
-                        continue;
-                    }
-                    self.engine_busy[engine] = false;
-                    for (tid, _ctx) in completed {
-                        let mgr = tid.0 as usize;
-                        if self.mgrs[mgr].is_terminal() {
-                            continue;
-                        }
-                        if self.mgrs[mgr].phase == crate::coordinator::EnvPhase::Generating {
-                            let v = self.version;
-                            let action = self.mgrs[mgr].on_generation_done(v);
-                            self.handle_action(mgr, action);
-                        }
-                    }
-                    if self.suspend_draining {
-                        self.finish_drain();
-                    } else {
-                        self.kick_engine(engine);
-                    }
-                }
-                Ev::EnvStepDone { mgr } => {
-                    if !self.mgrs[mgr].is_terminal() {
-                        let v = self.version;
-                        let now = self.now();
-                        let action = self.mgrs[mgr].on_env_step_done(v, now);
-                        self.handle_action(mgr, action);
-                    }
-                }
-                Ev::EnvCrashed { mgr } => {
-                    if self.mgrs[mgr].is_terminal() {
-                        continue;
-                    }
-                    // Trajectory-level recovery: the dead worker's
-                    // trajectory is abandoned, but its GRPO group is
-                    // backfilled with a fresh member at the current
-                    // version (§6.3 redundancy machinery).
-                    let id = self.mgrs[mgr].id;
-                    let group = self.mgrs[mgr].traj.group;
-                    self.mgrs[mgr].abort();
-                    self.proxy.abort(id);
-                    self.groups.fail(id);
-                    self.fault_report.env_crashes += 1;
-                    self.acc_failures += 1;
-                    if !self.groups.is_filled(group) {
-                        self.fault_report.trajectories_relaunched += 1;
-                        self.launch_member(group);
-                    }
-                    self.refill();
-                }
-                Ev::EngineCrashed { engine } => {
-                    if !self.engine_down[engine] && !self.engine_retired[engine] {
-                        self.kill_engine(engine, true);
-                    }
-                    // The failure process continues either way.
-                    self.schedule_engine_failure(engine);
-                }
-                Ev::EngineRecovered { engine } => {
-                    self.revive_engine(engine);
-                }
-                Ev::Scheduled { idx } => {
-                    let event = self.cfg.fault.scheduled[idx].event.clone();
-                    match event {
-                        FaultEvent::EngineCrash { engine } => {
-                            if engine < self.engine_down.len() && !self.engine_retired[engine] {
-                                self.kill_engine(engine, true);
-                            }
-                        }
-                        FaultEvent::PoolOutage { class, fraction } => {
-                            self.pool_outage(class, fraction);
-                        }
-                        FaultEvent::PoolRestore { class } => {
-                            self.pool_restore(class);
-                        }
-                    }
-                }
-                Ev::EngineProvisioned { binding } => {
-                    self.on_engine_provisioned(binding);
-                }
-                Ev::RewardDone { mgr } => {
-                    self.on_reward_done(mgr);
-                }
-                Ev::TrainDone => {
-                    let tokens = self.inflight_train_tokens;
-                    self.on_train_done(tokens);
-                    if self.train_steps_done >= target_steps {
-                        break;
-                    }
-                }
-                Ev::SyncDone => {
-                    self.on_sync_done();
-                    if self.cfg.mode == Mode::SyncPlus {
-                        self.maybe_launch_barrier_iteration();
-                    }
-                }
-            }
-        }
-
-        // Final stats.
-        let total = self.now().max(1e-9);
-        self.result.total_time_s = total;
-        let n_engines = self.engine_busy.len() as f64;
-        let busy: f64 = self
-            .proxy
-            .engines()
-            .iter()
-            .map(|e| e.stats.busy_s)
-            .sum();
-        if self.fault_on || self.scaler.is_some() {
-            // Engines churned: utilization over engine-*alive* seconds,
-            // and the fault/elastic reports become part of the result.
-            let mut alive: f64 = self.engine_alive_s.iter().sum();
-            for up in self.engine_up_since.iter().flatten() {
-                alive += total - up;
-            }
-            self.result.gen_util = (busy / alive.max(1e-9)).min(1.0);
-        } else {
-            self.result.gen_util = (busy / (total * n_engines)).min(1.0);
-        }
-        self.result.gen_tokens = self
-            .proxy
-            .engines()
-            .iter()
-            .map(|e| e.stats.prefill_tokens + e.stats.decode_tokens)
-            .sum();
-        self.result.faults = self.fault_report;
-        if let Some(s) = &self.scaler {
-            self.result.elastic = s.report;
-        }
-        self.result.reward_util = match &self.cfg.reward {
-            RewardDeploy::DedicatedGpus { gpus, .. } => {
-                self.reward_busy_s / (total * (*gpus).max(1) as f64)
-            }
-            RewardDeploy::Serverless { .. } => self.serverless.utilization(total),
-        };
-        // Spread generation time into per-step breakdowns (engines are
-        // shared across steps; attribute uniformly).
-        let steps = self.result.steps.len().max(1) as f64;
-        for s in &mut self.result.steps {
-            s.breakdown.generation_s = busy / steps;
-        }
-        self.result
-    }
-}
-
-/// Run a trajectory-level scenario.
-pub fn run(cfg: &Scenario) -> ScenarioResult {
-    assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
-    Driver::new(cfg).run()
-}
+pub use super::driver::run;
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use super::run;
     use crate::llm::QWEN3_8B;
+    use crate::sim::{Mode, Scenario};
 
     fn scenario(mode: Mode) -> Scenario {
         let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);

@@ -1,0 +1,272 @@
+//! Trajectory-lifecycle state machine.
+//!
+//! Every trajectory the driver owns moves through one explicit phase
+//! chain —
+//!
+//! ```text
+//! Queued → Prefilling → Decoding → EnvStep ─┬→ Prefilling (next turn)
+//!                                           └→ Reward → Deposited
+//! ```
+//!
+//! — with three cross-cutting edges shared by every scenario:
+//!
+//! * **Suspended**: the request is parked (weight-sync suspend, or the
+//!   target pool has no live engine); it re-enters Prefilling/Decoding
+//!   on resume/recovery.
+//! * **Recovering**: the request was drained off a crashed engine and
+//!   is being re-queued (trajectory-level fault recovery).
+//! * **Aborted**: terminal — stale under α, redundant after its group
+//!   filled, surplus, or its env worker died.
+//!
+//! Colocated engines process prefill and decode in one continuous
+//! batch, so the driver cannot observe the Prefilling→Decoding boundary
+//! there and collapses it (Prefilling→EnvStep is a legal edge).  The PD
+//! execution mode *does* observe it: the boundary is exactly the KV
+//! transfer between pools.
+//!
+//! The [`LifecycleTracker`] is the driver's single funnel for phase
+//! changes: it validates each edge against the table above, counts
+//! edges, and records (rather than panics on) violations so a modeling
+//! bug surfaces as a failed invariant check, not a poisoned run.  The
+//! fault-recovery and autoscaler hooks that used to be scattered
+//! through the monolithic driver hang off these edges in
+//! [`super::core`].
+
+use std::collections::BTreeMap;
+
+/// Driver-visible phase of one trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TrajPhase {
+    /// Launched; waiting for `env.reset` (or a reset retry).
+    Queued,
+    /// Generation request dispatched; prefill not yet known complete.
+    /// In PD mode this also covers the KV transfer to the decode pool.
+    Prefilling,
+    /// Decode phase in flight (observable in PD mode; colocated engines
+    /// collapse Prefilling→EnvStep).
+    Decoding,
+    /// `env.step` executing on the CPU cluster.
+    EnvStep,
+    /// Reward invocation in flight, or scored and staged awaiting its
+    /// GRPO group to fill.
+    Reward,
+    /// Terminal: entered the sample buffer with its whole group.
+    Deposited,
+    /// Request parked while the proxy is suspended / target pool down.
+    Suspended,
+    /// Request drained off a crashed engine, being re-queued.
+    Recovering,
+    /// Terminal: stale, redundant, surplus, or env-worker death.
+    Aborted,
+}
+
+impl TrajPhase {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TrajPhase::Deposited | TrajPhase::Aborted)
+    }
+
+    /// Is `self → to` a legal edge?  Self-loops on non-terminal phases
+    /// are legal (e.g. a parked request re-parked because its pool is
+    /// still down).
+    pub fn can_transition(self, to: TrajPhase) -> bool {
+        use TrajPhase::*;
+        if self.is_terminal() {
+            return false;
+        }
+        if self == to {
+            return true;
+        }
+        match (self, to) {
+            (Queued, Prefilling | Suspended | Aborted) => true,
+            (Prefilling, Decoding | EnvStep | Recovering | Suspended | Aborted) => true,
+            (Decoding, EnvStep | Recovering | Suspended | Aborted) => true,
+            // EnvStep → Suspended: the step finished while the proxy
+            // was suspended for weight sync (or the target pool was
+            // down), so the next turn's request parks.
+            (EnvStep, Prefilling | Reward | Suspended | Aborted) => true,
+            (Reward, Deposited | Aborted) => true,
+            (Suspended, Prefilling | Decoding | Recovering | Aborted) => true,
+            (Recovering, Prefilling | Decoding | Suspended | Aborted) => true,
+            _ => false,
+        }
+    }
+}
+
+/// One recorded transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LifecycleEdge {
+    pub from: TrajPhase,
+    pub to: TrajPhase,
+    /// False when the edge violated the transition table (recorded, not
+    /// applied-around — the tracker still moves to `to` so the run
+    /// continues deterministically).
+    pub legal: bool,
+}
+
+/// Aggregate lifecycle activity of one run (exposed through
+/// [`super::run_traced`] for invariant checks and diagnostics).
+#[derive(Clone, Debug, Default)]
+pub struct LifecycleStats {
+    /// Trajectories ever spawned.
+    pub spawned: u64,
+    /// Edge → traversal count.
+    pub edges: BTreeMap<(TrajPhase, TrajPhase), u64>,
+    /// Transitions that violated the table (must be 0 in a correct
+    /// driver; asserted by the driver's invariant tests).
+    pub violations: u64,
+}
+
+impl LifecycleStats {
+    /// Traversals of one edge.
+    pub fn edge(&self, from: TrajPhase, to: TrajPhase) -> u64 {
+        self.edges.get(&(from, to)).copied().unwrap_or(0)
+    }
+
+    /// Total arrivals into `phase`.
+    pub fn entered(&self, phase: TrajPhase) -> u64 {
+        self.edges
+            .iter()
+            .filter(|((from, to), _)| *to == phase && *from != phase)
+            .map(|(_, n)| n)
+            .sum()
+    }
+}
+
+/// Phase registry for every trajectory of one run.
+#[derive(Clone, Debug, Default)]
+pub struct LifecycleTracker {
+    phases: Vec<TrajPhase>,
+    stats: LifecycleStats,
+}
+
+impl LifecycleTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a freshly launched trajectory (starts Queued).  Returns
+    /// its index, which the driver keeps equal to the mgr index.
+    pub fn spawn(&mut self) -> usize {
+        self.phases.push(TrajPhase::Queued);
+        self.stats.spawned += 1;
+        self.phases.len() - 1
+    }
+
+    pub fn phase(&self, idx: usize) -> TrajPhase {
+        self.phases[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// Move trajectory `idx` to `to`, validating the edge.  Self-loops
+    /// are counted but legal; terminal-exit or table-violating edges
+    /// increment `violations`.  The move is applied either way so the
+    /// run stays deterministic.
+    pub fn transition(&mut self, idx: usize, to: TrajPhase) -> LifecycleEdge {
+        let from = self.phases[idx];
+        let legal = from.can_transition(to);
+        if !legal {
+            self.stats.violations += 1;
+        }
+        *self.stats.edges.entry((from, to)).or_insert(0) += 1;
+        self.phases[idx] = to;
+        LifecycleEdge { from, to, legal }
+    }
+
+    pub fn stats(&self) -> &LifecycleStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> LifecycleStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use TrajPhase::*;
+
+    #[test]
+    fn happy_path_is_legal() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn();
+        for to in [Prefilling, EnvStep, Prefilling, Decoding, EnvStep, Reward, Deposited] {
+            assert!(t.transition(i, to).legal, "{to:?}");
+        }
+        assert_eq!(t.stats().violations, 0);
+        assert_eq!(t.phase(i), Deposited);
+        assert_eq!(t.stats().edge(EnvStep, Prefilling), 1);
+        assert_eq!(t.stats().entered(EnvStep), 2);
+    }
+
+    #[test]
+    fn pd_path_observes_the_phase_boundary() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn();
+        for to in [Prefilling, Decoding, EnvStep, Reward, Deposited] {
+            assert!(t.transition(i, to).legal, "{to:?}");
+        }
+        assert_eq!(t.stats().violations, 0);
+    }
+
+    #[test]
+    fn suspend_and_recovery_edges() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn();
+        assert!(t.transition(i, Suspended).legal, "queued but proxy suspended");
+        assert!(t.transition(i, Prefilling).legal);
+        assert!(t.transition(i, Recovering).legal, "engine crashed");
+        assert!(t.transition(i, Suspended).legal, "fleet fully down");
+        assert!(t.transition(i, Suspended).legal, "self-loop: still down");
+        assert!(t.transition(i, Decoding).legal, "PD decode half re-queued");
+        assert!(t.transition(i, Aborted).legal);
+        assert_eq!(t.stats().violations, 0);
+        // A turn boundary crossing a weight-sync suspend parks too.
+        let j = t.spawn();
+        t.transition(j, Prefilling);
+        t.transition(j, EnvStep);
+        assert!(t.transition(j, Suspended).legal, "next turn parks mid-sync");
+        assert!(t.transition(j, Prefilling).legal, "resumes on sync done");
+        assert_eq!(t.stats().violations, 0);
+    }
+
+    #[test]
+    fn terminal_phases_reject_exits() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn();
+        t.transition(i, Aborted);
+        let e = t.transition(i, Prefilling);
+        assert!(!e.legal);
+        assert_eq!(t.stats().violations, 1);
+        // The move is still applied (deterministic continue).
+        assert_eq!(t.phase(i), Prefilling);
+    }
+
+    #[test]
+    fn illegal_shortcuts_are_recorded() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn();
+        assert!(!t.transition(i, Reward).legal, "Queued cannot skip to Reward");
+        let j = t.spawn();
+        t.transition(j, Prefilling);
+        t.transition(j, EnvStep);
+        assert!(!t.transition(j, Decoding).legal, "EnvStep cannot re-enter Decoding");
+        assert_eq!(t.stats().violations, 2);
+        assert_eq!(t.stats().spawned, 2);
+    }
+
+    #[test]
+    fn abort_legal_from_every_non_terminal_phase() {
+        for phase in [Queued, Prefilling, Decoding, EnvStep, Reward, Suspended, Recovering] {
+            assert!(phase.can_transition(Aborted), "{phase:?}");
+        }
+        assert!(!Deposited.can_transition(Aborted));
+    }
+}

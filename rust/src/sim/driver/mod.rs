@@ -1,0 +1,29 @@
+//! The trajectory-level scheduler plane: a thin event-loop core with
+//! pluggable policies.
+//!
+//! This subsystem replaces the old `async_driver` monolith (one
+//! ~1,200-line `run()` with per-mode conditionals).  It is split along
+//! the paper's own seams:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`lifecycle`] | the trajectory state machine (Queued → Prefilling → Decoding → EnvStep → Reward → Deposited, with Suspended/Recovering/Aborted edges) every phase change funnels through |
+//! | [`policy`] | [`SchedPolicy`](policy::SchedPolicy): one small struct per [`Mode`](crate::sim::Mode) — admission/staleness gating, redundancy, deposit atomicity, weight-sync discipline |
+//! | [`pd`] | prefill-decode disaggregation as a simulated execution mode (xPyD pools, KV hop over a [`Link`](crate::net::Link)), composing with faults, elasticity and staleness |
+//! | [`core`] | the mode-agnostic DES loop: dispatch, fault recovery, elastic scaling, weight-sync protocol, iteration accounting |
+//!
+//! Routing is equally pluggable on the proxy side — see
+//! [`crate::proxy::route`].
+//!
+//! [`crate::sim::async_driver`] remains as a compatibility shim over
+//! [`run`].
+
+pub mod core;
+pub mod lifecycle;
+pub mod pd;
+pub mod policy;
+
+pub use self::core::{run, run_traced};
+pub use lifecycle::{LifecycleStats, LifecycleTracker, TrajPhase};
+pub use pd::PdScenario;
+pub use policy::{policy_for, SchedPolicy};

@@ -1,0 +1,203 @@
+//! The scheduling-policy plane: one small struct per coordination mode.
+//!
+//! The pre-refactor driver encoded every baseline as inline
+//! `cfg.mode == Mode::X` conditionals scattered through a ~1,200-line
+//! event loop; adding a scenario meant editing the monolith.  Each
+//! [`Mode`] is now a [`SchedPolicy`] — the complete set of decisions
+//! that distinguish the §7.1 baselines:
+//!
+//! | decision | Sync+ | One-off | AReaL | RollArt |
+//! |---|---|---|---|---|
+//! | rollout | barrier | continuous | continuous | continuous |
+//! | group redundancy (§6.3) | 0 | 0 | 0 | cfg.redundancy |
+//! | buffer deposits | per-traj | per-traj | per-traj | group-atomic |
+//! | mid-flight staleness abort | — | — | — | α at every turn start |
+//! | weight sync | blocking after train | lazy before next batch | lazy | lazy |
+//!
+//! Everything else — the trajectory lifecycle, fault recovery, elastic
+//! scaling, PD phase dispatch — lives in the mode-agnostic
+//! [`super::core`] and composes with any policy.
+
+use crate::rl::{Trajectory, Version};
+use crate::sim::{Mode, Scenario};
+
+/// Mode-specific scheduling decisions consulted by the driver core.
+///
+/// Default methods encode the baseline (non-RollArt) behaviour so a new
+/// policy only overrides what it changes.
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Continuous rollout (keep the env pool refilled to the target
+    /// concurrency) vs barrier iterations (launch one batch, wait).
+    fn continuous_rollout(&self) -> bool;
+
+    /// Redundant environments launched per GRPO group (§6.3).
+    fn group_redundancy(&self, _cfg: &Scenario) -> usize {
+        0
+    }
+
+    /// Deposit filled GRPO groups atomically (all members or none)
+    /// instead of per-trajectory.
+    fn group_atomic_deposits(&self) -> bool {
+        false
+    }
+
+    /// Admission gate before each generation turn: may `traj` start
+    /// another turn at `current`?  Returning false aborts the
+    /// trajectory mid-flight (RollArt's per-iteration staleness
+    /// enforcement, §6.2 fn.1); baselines let stale tails finish and
+    /// rely on buffer eviction.
+    fn admit_turn(&self, _traj: &Trajectory, _current: Version, _alpha: u64) -> bool {
+        true
+    }
+
+    /// Pay the weight sync blocking at the end of every train step
+    /// (synchronous training) instead of lazily when the next batch is
+    /// ready.
+    fn sync_blocking_after_train(&self) -> bool {
+        false
+    }
+}
+
+/// Sync+ (§7.1): async env interaction and async serverless reward, but
+/// synchronous training — one batch per iteration, blocking weight
+/// sync at the barrier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncPlusPolicy;
+
+impl SchedPolicy for SyncPlusPolicy {
+    fn name(&self) -> &'static str {
+        "Sync+"
+    }
+
+    fn continuous_rollout(&self) -> bool {
+        false
+    }
+
+    fn sync_blocking_after_train(&self) -> bool {
+        true
+    }
+}
+
+/// One-off asynchrony [32]: rollout k+1 overlaps train k; batch
+/// boundaries preserved, staleness fixed at 1 by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OneOffPolicy;
+
+impl SchedPolicy for OneOffPolicy {
+    fn name(&self) -> &'static str {
+        "One-off"
+    }
+
+    fn continuous_rollout(&self) -> bool {
+        true
+    }
+}
+
+/// AReaL-style continuous rollout: staleness bounded at trajectory
+/// *start* only — stale tails generate to completion and are evicted at
+/// `get_batch` (the waste RollArt's mid-flight abort removes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ARealPolicy;
+
+impl SchedPolicy for ARealPolicy {
+    fn name(&self) -> &'static str {
+        "AReaL"
+    }
+
+    fn continuous_rollout(&self) -> bool {
+        true
+    }
+}
+
+/// RollArt: continuous rollout, per-iteration staleness bound with
+/// mid-flight aborts, group-atomic deposits, redundant environment
+/// rollouts (§6.2, §6.3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RollArtPolicy;
+
+impl SchedPolicy for RollArtPolicy {
+    fn name(&self) -> &'static str {
+        "RollArt"
+    }
+
+    fn continuous_rollout(&self) -> bool {
+        true
+    }
+
+    fn group_redundancy(&self, cfg: &Scenario) -> usize {
+        cfg.redundancy
+    }
+
+    fn group_atomic_deposits(&self) -> bool {
+        true
+    }
+
+    fn admit_turn(&self, traj: &Trajectory, current: Version, alpha: u64) -> bool {
+        traj.fresh_at_start(current, alpha)
+    }
+}
+
+/// The policy implementing `mode`.  `Mode::Sync` runs on the
+/// phase-structured [`crate::sim::sync_driver`], not this event loop.
+pub fn policy_for(mode: Mode) -> Box<dyn SchedPolicy> {
+    match mode {
+        Mode::Sync => panic!("use sync_driver for Mode::Sync"),
+        Mode::SyncPlus => Box::new(SyncPlusPolicy),
+        Mode::OneOff => Box::new(OneOffPolicy),
+        Mode::AReaL => Box::new(ARealPolicy),
+        Mode::RollArt => Box::new(RollArtPolicy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::TaskDomain;
+    use crate::llm::QWEN3_8B;
+    use crate::rl::TrajectoryId;
+
+    #[test]
+    fn policy_table_matches_modes() {
+        for (mode, name, continuous, atomic, blocking) in [
+            (Mode::SyncPlus, "Sync+", false, false, true),
+            (Mode::OneOff, "One-off", true, false, false),
+            (Mode::AReaL, "AReaL", true, false, false),
+            (Mode::RollArt, "RollArt", true, true, false),
+        ] {
+            let p = policy_for(mode);
+            assert_eq!(p.name(), name);
+            assert_eq!(p.continuous_rollout(), continuous, "{name}");
+            assert_eq!(p.group_atomic_deposits(), atomic, "{name}");
+            assert_eq!(p.sync_blocking_after_train(), blocking, "{name}");
+        }
+    }
+
+    #[test]
+    fn only_rollart_uses_redundancy() {
+        let mut cfg = Scenario::rollart_default(QWEN3_8B.clone(), 0.05);
+        cfg.redundancy = 3;
+        assert_eq!(policy_for(Mode::RollArt).group_redundancy(&cfg), 3);
+        for mode in [Mode::SyncPlus, Mode::OneOff, Mode::AReaL] {
+            assert_eq!(policy_for(mode).group_redundancy(&cfg), 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn only_rollart_aborts_stale_mid_flight() {
+        let traj = Trajectory::new(TrajectoryId(0), TaskDomain::Web, Version(0));
+        // Version 0 start, current 5, α=1: far outside the window.
+        assert!(!policy_for(Mode::RollArt).admit_turn(&traj, Version(5), 1));
+        assert!(policy_for(Mode::RollArt).admit_turn(&traj, Version(1), 1));
+        for mode in [Mode::SyncPlus, Mode::OneOff, Mode::AReaL] {
+            assert!(policy_for(mode).admit_turn(&traj, Version(5), 1), "{mode:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sync_driver")]
+    fn sync_mode_panics() {
+        policy_for(Mode::Sync);
+    }
+}

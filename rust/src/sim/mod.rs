@@ -6,15 +6,19 @@
 //!   pipeline (the paper's Sync baseline): batched env interaction,
 //!   dedicated reward GPUs, blocking weight sync, blocking training.
 //!   Produces the Fig 3 step breakdowns and Fig 6 utilization directly.
-//! * [`async_driver`] — the event-driven trajectory-level pipeline used
-//!   by Sync+, One-off, AReaL and RollArt; the [`Mode`] knob selects
-//!   the coordination semantics (§7.1 baselines).
+//! * [`driver`] — the trajectory-level scheduler plane used by Sync+,
+//!   One-off, AReaL and RollArt: a mode-agnostic event-loop core
+//!   ([`driver::core`]) with per-mode [`driver::policy`] structs, an
+//!   explicit trajectory [`driver::lifecycle`] state machine, and PD
+//!   disaggregation as a simulated execution mode ([`driver::pd`]).
+//!   [`async_driver`] remains as a compatibility shim over it.
 //!
 //! Scenario configs mirror the paper's §7.1 setup; each bench in
 //! `rust/benches/paper_figures.rs` instantiates one scenario per table
 //! or figure row.
 
 pub mod async_driver;
+pub mod driver;
 pub mod sync_driver;
 
 /// Trainer time over the raw roofline: RL training steps run at low
@@ -32,6 +36,7 @@ use crate::fault::{FaultProfile, FaultReport};
 use crate::hw::GpuClass;
 use crate::llm::LlmSpec;
 use crate::metrics::StepBreakdown;
+use crate::proxy::RouteKind;
 use crate::simkit::dist::Dist;
 
 /// Coordination semantics (§7.1's baseline grid).
@@ -129,6 +134,15 @@ pub struct Scenario {
     pub fault: FaultProfile,
     /// Optional autoscaling controller over the generation pool.
     pub elastic: Option<ElasticPolicy>,
+    /// Prefill-decode disaggregation as a simulated execution mode
+    /// (§6.3): when set, the `xPyD` deployment replaces `gen_pools`
+    /// and every generation request is split into a prefill half and a
+    /// decode half with the KV cache shipped between the pools.  See
+    /// [`driver::pd::PdScenario`].
+    pub pd: Option<driver::pd::PdScenario>,
+    /// Dispatch discipline of the generation proxy (R1 affinity
+    /// routing by default; see [`crate::proxy::route`]).
+    pub route: RouteKind,
 }
 
 impl Scenario {
@@ -188,6 +202,8 @@ impl Scenario {
             seed: 17,
             fault: FaultProfile::none(),
             elastic: None,
+            pd: None,
+            route: RouteKind::Affinity,
         }
     }
 

@@ -13,6 +13,13 @@
 //!
 //! Reward/generation utilization and the Fig 3 component breakdown fall
 //! out of the phase times directly.
+//!
+//! Chaos model: scheduled pool outages are paid *in kind* — a downed
+//! engine's environment shard is adopted by a survivor and runs there
+//! as an additional serialized wave (per-engine queueing), rather than
+//! rescaling an aggregate capacity.  Engine crashes and env-worker
+//! deaths remain analytic stalls: the monolith has no re-queue path, so
+//! the whole barrier waits out each recovery.
 
 use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::coordinator::GroupTracker;
@@ -39,6 +46,9 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
     // Scheduled single-engine crashes are paid exactly once, in the
     // iteration whose start crosses their timestamp.
     let mut scheduled_crash_done = vec![false; cfg.fault.scheduled.len()];
+    // Outage state carried across iterations (per-engine failure
+    // accounting: an engine counts as failed once per downtime spell).
+    let mut was_down: Vec<bool> = Vec::new();
 
     // Engine fleet (no affinity in the Sync baseline: whole pool).
     let mut engines: Vec<EngineSim> = Vec::new();
@@ -56,11 +66,75 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         }
     }
     assert!(!engines.is_empty());
+    was_down.resize(engines.len(), false);
 
     for iter in 0..cfg.iterations {
         let mut rng = root.stream("iter", iter as u64);
         let mut breakdown = StepBreakdown::default();
         let mut env_failures = 0u64;
+        let mut engine_failures = 0u64;
+
+        // ---- scheduled chaos: per-engine outage state ---------------
+        // Pool outages that have fired by this iteration's start take
+        // concrete engines out of the rollout rotation (killed from the
+        // back within their class, mirroring the async driver); the
+        // batched rounds then *queue* their work on the survivors
+        // instead of rescaling an aggregate capacity — one surviving
+        // engine with 4× the requests takes ~4× the round, which is the
+        // per-engine queueing model the aggregate rescale lacked.
+        let mut engine_live = vec![true; engines.len()];
+        if !cfg.fault.scheduled.is_empty() {
+            // Apply the chaos schedule in *timestamp* order — the
+            // async driver processes it through a time-ordered event
+            // queue, and an unsorted profile (restore listed before
+            // the outage it clears) must not change the outcome.
+            let mut fired: Vec<&crate::fault::ScheduledFault> = cfg
+                .fault
+                .scheduled
+                .iter()
+                .filter(|f| f.at_s <= clock)
+                .collect();
+            fired.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+            let mut outage: std::collections::BTreeMap<crate::hw::GpuClass, f64> =
+                std::collections::BTreeMap::new();
+            for f in fired {
+                match f.event {
+                    FaultEvent::PoolOutage { class, fraction } => {
+                        let e = outage.entry(class).or_insert(0.0);
+                        *e = (*e + fraction).min(1.0);
+                    }
+                    FaultEvent::PoolRestore { class } => {
+                        outage.insert(class, 0.0);
+                    }
+                    FaultEvent::EngineCrash { .. } => {}
+                }
+            }
+            for (&class, &fraction) in &outage {
+                let members: Vec<usize> = engines
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.class == class)
+                    .map(|(i, _)| i)
+                    .collect();
+                let k = ((members.len() as f64) * fraction).ceil() as usize;
+                for &i in members.iter().rev().take(k) {
+                    engine_live[i] = false;
+                }
+            }
+            // The monolith has no replacement machinery: a fully-dead
+            // fleet degenerates to one skeleton engine carrying the
+            // whole batch rather than a dead stop.
+            if engine_live.iter().all(|l| !l) {
+                engine_live[0] = true;
+            }
+            for i in 0..engines.len() {
+                if !engine_live[i] && !was_down[i] {
+                    engine_failures += 1;
+                }
+                was_down[i] = !engine_live[i];
+            }
+        }
+        let live_idx: Vec<usize> = (0..engines.len()).filter(|&i| engine_live[i]).collect();
 
         // ---- sample the batch's trajectory shapes -------------------
         let mut groups = GroupTracker::new();
@@ -126,11 +200,42 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
             if active == 0 {
                 break;
             }
-            // batched: the round lasts as long as the slowest engine.
-            let round: f64 = engines
-                .iter_mut()
-                .map(|e| e.run_to_idle().0)
-                .fold(0.0, f64::max);
+            // Batched: the round lasts as long as the slowest engine.
+            // Per-engine queueing under outages: each engine's shard of
+            // environments runs as one batched wave; a dead engine's
+            // shard is adopted by a survivor (round-robin) and runs
+            // there as an *additional* wave — monolithic frameworks
+            // shard envs statically per engine process, so an adopted
+            // shard queues behind the survivor's own work instead of
+            // merging into its batch.  The barrier ends at the survivor
+            // with the most queued waves.
+            let round: f64 = if live_idx.len() == engines.len() {
+                engines
+                    .iter_mut()
+                    .map(|e| e.run_to_idle().0)
+                    .fold(0.0, f64::max)
+            } else {
+                let mut round_time = vec![0.0; engines.len()];
+                for &i in &live_idx {
+                    round_time[i] = engines[i].run_to_idle().0;
+                }
+                let dead: Vec<usize> =
+                    (0..engines.len()).filter(|&i| !engine_live[i]).collect();
+                let mut rr = 0usize;
+                for i in dead {
+                    let reqs = engines[i].drain_requests();
+                    if reqs.is_empty() {
+                        continue;
+                    }
+                    let s = live_idx[rr % live_idx.len()];
+                    rr += 1;
+                    for r in reqs {
+                        engines[s].enqueue(r);
+                    }
+                    round_time[s] += engines[s].run_to_idle().0;
+                }
+                round_time.iter().cloned().fold(0.0, f64::max)
+            };
             gen_time += round;
 
             // env round: barrier at the slowest environment step.
@@ -196,65 +301,33 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
 
         // ---- fault plane (analytic): the monolithic baseline has no
         // recovery machinery, so every fault stalls the whole barrier
-        // pipeline ------------------------------------------------------
-        let mut engine_failures = 0u64;
+        // pipeline.  Pool outages are already paid in kind above — the
+        // rollout rounds actually queued on the survivors --------------
         if cfg.fault.is_active() {
             // Same seeding convention as the async driver: the stream
             // is salted, so salt sweeps replay independent patterns.
             let mut fr = cfg.fault.stream(&root, "fault/sync", iter as u64);
             let mut stall = 0.0;
-            // Scheduled chaos, analytically: pool outages that have
-            // fired by this iteration's start shrink the effective
-            // rollout fleet (rounds redistribute over the survivors);
-            // restores undo them.  Scheduled single-engine crashes pay
-            // one recovery stall in the iteration they land in.
-            if !cfg.fault.scheduled.is_empty() {
-                let mut outage: std::collections::BTreeMap<crate::hw::GpuClass, f64> =
-                    std::collections::BTreeMap::new();
-                for f in &cfg.fault.scheduled {
-                    if f.at_s > clock {
-                        continue;
-                    }
-                    match f.event {
-                        FaultEvent::PoolOutage { class, fraction } => {
-                            let e = outage.entry(class).or_insert(0.0);
-                            *e = (*e + fraction).min(1.0);
-                        }
-                        FaultEvent::PoolRestore { class } => {
-                            outage.insert(class, 0.0);
-                        }
-                        FaultEvent::EngineCrash { .. } => {}
-                    }
-                }
-                let total = engines.len() as f64;
-                let live: f64 = engines
-                    .iter()
-                    .map(|e| 1.0 - outage.get(&e.class).copied().unwrap_or(0.0))
-                    .sum();
-                if live < total {
-                    // At least a token fleet survives in this model; a
-                    // 100% outage degenerates to a 100x slowdown.
-                    let slowdown = total / live.max(total * 0.01);
-                    breakdown.generation_s *= slowdown;
-                }
-                for (fi, f) in cfg.fault.scheduled.iter().enumerate() {
-                    if f.at_s <= clock
-                        && !scheduled_crash_done[fi]
-                        && matches!(f.event, FaultEvent::EngineCrash { .. })
-                    {
-                        scheduled_crash_done[fi] = true;
-                        engine_failures += 1;
-                        stall += cfg.fault.engine_recovery_s
-                            + breakdown.generation_s / (max_turns.max(1) as f64);
-                    }
+            // Scheduled single-engine crashes pay one recovery stall in
+            // the iteration they land in.
+            for (fi, f) in cfg.fault.scheduled.iter().enumerate() {
+                if f.at_s <= clock
+                    && !scheduled_crash_done[fi]
+                    && matches!(f.event, FaultEvent::EngineCrash { .. })
+                {
+                    scheduled_crash_done[fi] = true;
+                    engine_failures += 1;
+                    stall += cfg.fault.engine_recovery_s
+                        + breakdown.generation_s / (max_turns.max(1) as f64);
                 }
             }
             // Engine crashes during the rollout phase: the interrupted
             // batched round is redone on the recovered engine, and the
             // whole batch waits out the recovery (no re-queue path).
+            // Only live engines draw from the MTBF process.
             if let Some(mtbf) = cfg.fault.engine_mtbf_s {
                 let round = breakdown.generation_s / (max_turns.max(1) as f64);
-                for _e in 0..engines.len() {
+                for _e in 0..live_idx.len() {
                     let mut t = exp_sample(mtbf, &mut fr);
                     while t < breakdown.generation_s {
                         engine_failures += 1;
@@ -448,6 +521,100 @@ mod tests {
         let gen_f: f64 = rf.steps.iter().map(|s| s.breakdown.generation_s).sum();
         assert!(gen_f > 1.5 * gen_c, "{gen_f} vs {gen_c}");
         assert!(rf.mean_step_time() > clean.mean_step_time());
+    }
+
+    #[test]
+    fn outage_queueing_scales_with_severity() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        use crate::hw::GpuClass;
+        let mk = |fraction: f64| {
+            let mut s = small_sync();
+            s.fault = FaultProfile {
+                scheduled: [GpuClass::H800, GpuClass::H20]
+                    .into_iter()
+                    .map(|class| ScheduledFault {
+                        at_s: 0.0,
+                        event: FaultEvent::PoolOutage { class, fraction },
+                    })
+                    .collect(),
+                ..FaultProfile::none()
+            };
+            s
+        };
+        let gen = |r: &crate::sim::ScenarioResult| -> f64 {
+            r.steps.iter().map(|s| s.breakdown.generation_s).sum()
+        };
+        let clean = run(&small_sync());
+        let light = run(&mk(0.25));
+        let heavy = run(&mk(0.75));
+        // Per-engine queueing: the survivors' queues grow with outage
+        // severity, superlinearly past the point where one engine
+        // carries most of the batch.
+        assert!(gen(&light) > gen(&clean), "{} vs {}", gen(&light), gen(&clean));
+        assert!(
+            gen(&heavy) > 1.5 * gen(&light),
+            "{} vs {}",
+            gen(&heavy),
+            gen(&light)
+        );
+    }
+
+    #[test]
+    fn unordered_chaos_schedule_applies_in_time_order() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        use crate::hw::GpuClass;
+        let outage = ScheduledFault {
+            at_s: 1.0,
+            event: FaultEvent::PoolOutage {
+                class: GpuClass::H800,
+                fraction: 1.0,
+            },
+        };
+        let restore = ScheduledFault {
+            at_s: 100.0,
+            event: FaultEvent::PoolRestore {
+                class: GpuClass::H800,
+            },
+        };
+        let mk = |scheduled: Vec<ScheduledFault>| {
+            let mut s = small_sync();
+            s.fault = FaultProfile {
+                scheduled,
+                ..FaultProfile::none()
+            };
+            run(&s)
+        };
+        // A restore listed *before* the outage it clears must behave
+        // identically to the chronological listing.
+        let a = mk(vec![outage.clone(), restore.clone()]);
+        let b = mk(vec![restore, outage]);
+        assert_eq!(a.mean_step_time(), b.mean_step_time());
+        assert_eq!(a.faults.engine_failures, b.faults.engine_failures);
+    }
+
+    #[test]
+    fn outage_engines_counted_once_per_spell() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        use crate::hw::GpuClass;
+        let mut s = small_sync();
+        s.fault = FaultProfile {
+            scheduled: [GpuClass::H800, GpuClass::H20]
+                .into_iter()
+                .map(|class| ScheduledFault {
+                    at_s: 0.0,
+                    event: FaultEvent::PoolOutage {
+                        class,
+                        fraction: 0.25,
+                    },
+                })
+                .collect(),
+            ..FaultProfile::none()
+        };
+        let r = run(&s);
+        // scale 0.1 fleet: 6×H800 + 3×H20; a 25% outage downs
+        // ceil(1.5)=2 + ceil(0.75)=1 engines, each counted once even
+        // though the outage persists across all iterations.
+        assert_eq!(r.faults.engine_failures, 3, "{:?}", r.faults);
     }
 
     #[test]
