@@ -1,0 +1,94 @@
+//! Fig 5-style per-mode phase breakdown from the lifecycle tracker:
+//! where a trajectory's wall-clock goes (queueing, prefill, decode,
+//! env interaction, reward, suspend/recovery) under each coordination
+//! mode, plus the PD execution mode where the Prefilling→Decoding
+//! boundary — and the KV hop inside it — becomes observable.
+//!
+//! The paper shows environment latency CDFs (Fig 5a) and the batched
+//! barrier cost (Fig 5b); this bench is the trajectory-side complement
+//! the ROADMAP asked for: per-phase residency histograms per mode,
+//! measured by [`rollart::sim::driver::lifecycle`] instead of being
+//! re-derived from step breakdowns.
+
+use crate::support::*;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::sim::driver::{run_traced, PdScenario, TrajPhase};
+use rollart::sim::{Mode, Scenario};
+
+const PHASES: [TrajPhase; 7] = [
+    TrajPhase::Queued,
+    TrajPhase::Prefilling,
+    TrajPhase::Decoding,
+    TrajPhase::EnvStep,
+    TrajPhase::Reward,
+    TrajPhase::Suspended,
+    TrajPhase::Recovering,
+];
+
+pub fn run() {
+    banner(
+        "Fig phases",
+        "trajectory phase residency per mode (lifecycle tracker)",
+    );
+    let mut csv = CsvWriter::for_bench(
+        "fig_phases",
+        &["mode", "phase", "visits", "mean_s", "p50_s", "p99_s", "total_s"],
+    );
+    let arms: Vec<(String, Scenario)> = {
+        let mut v = Vec::new();
+        for mode in [Mode::SyncPlus, Mode::OneOff, Mode::AReaL, Mode::RollArt] {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+            s.mode = mode;
+            v.push((mode.name().to_string(), quick(s, 4)));
+        }
+        let mut pd = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+        pd.pd = Some(PdScenario {
+            gpus_per_node: 4,
+            max_batch: 32,
+            ..PdScenario::xpyd(2, 2)
+        });
+        v.push(("RollArt-2P2D".to_string(), quick(pd, 4)));
+        v
+    };
+
+    for (name, cfg) in arms {
+        let (_, mut lc) = run_traced(&cfg);
+        let total: f64 = PHASES.iter().map(|&p| lc.residency_s(p)).sum();
+        for phase in PHASES {
+            let total_s = lc.residency_s(phase);
+            let (visits, mean, p50, p99) = match lc.residency.get_mut(&phase) {
+                Some(h) if !h.is_empty() => (h.len(), h.mean(), h.p50(), h.p99()),
+                _ => (0, 0.0, 0.0, 0.0),
+            };
+            if visits > 0 {
+                row(
+                    &format!("{name} {phase:?}"),
+                    "per-mode breakdown",
+                    &format!(
+                        "{:>5.1}% of residency (mean {mean:.2}s, p99 {p99:.1}s, {visits} visits)",
+                        100.0 * total_s / total.max(1e-9)
+                    ),
+                );
+            }
+            csv.row([
+                name.clone(),
+                format!("{phase:?}"),
+                visits.to_string(),
+                format!("{mean:.4}"),
+                format!("{p50:.4}"),
+                format!("{p99:.4}"),
+                format!("{total_s:.2}"),
+            ]);
+        }
+        // The PD arm must observe the decode phase the colocated arms
+        // collapse — the claim this bench exists to make visible.
+        if name.contains("2P2D") {
+            assert!(
+                lc.residency_s(TrajPhase::Decoding) > 0.0,
+                "PD must observe the Prefilling→Decoding boundary"
+            );
+        }
+    }
+    csv.flush().unwrap();
+}

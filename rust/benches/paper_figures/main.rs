@@ -21,6 +21,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod fig_fault;
+mod fig_phases;
 mod support;
 mod table3;
 mod table5;
@@ -81,6 +82,9 @@ fn main() {
     }
     if want("fault") {
         fig_fault::run();
+    }
+    if want("phases") {
+        fig_phases::run();
     }
     if want("fig15") {
         fig15::run();

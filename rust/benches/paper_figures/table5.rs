@@ -7,14 +7,19 @@
 //!   [`rollart::proxy::pd`];
 //! * `des` — the event-driven engines of
 //!   [`rollart::sim::driver::pd::rollout_makespan`], with per-request
-//!   KV hops and per-engine weight sweeps.
+//!   KV hops over a *contended* shared link (transfers queue on
+//!   [`PdScenario::kv_slots`] FIFO slots) and per-engine weight
+//!   sweeps.  The KV queue-delay percentiles are printed per arm: at
+//!   batch 128 an admission wave's transfers land on the link at once,
+//!   so the delay is nonzero — the high-batch sharpening the ROADMAP
+//!   predicted.
 
 use crate::support::*;
 use rollart::llm::{QWEN3_30B_A3B, QWEN3_32B};
 use rollart::metrics::CsvWriter;
 use rollart::net::NVLINK_INTRA;
 use rollart::proxy::pd::PdConfig;
-use rollart::sim::driver::pd::{rollout_makespan, PdScenario};
+use rollart::sim::driver::pd::{rollout_makespan, rollout_makespan_traced, PdScenario};
 
 pub fn run() {
     banner("Table 5", "PD disaggregation vs colocation (analytic + DES)");
@@ -37,6 +42,10 @@ pub fn run() {
             "des_pd_s",
             "des_colocate_s",
             "des_speedup",
+            "kv_queued_frac",
+            "kv_q_p50_s",
+            "kv_q_p99_s",
+            "kv_q_max_s",
         ],
     );
     for (spec, (name, p1, p2)) in [&QWEN3_32B, &QWEN3_30B_A3B].iter().zip(paper) {
@@ -46,7 +55,7 @@ pub fn run() {
             let cfg = PdConfig::new(p, d, NVLINK_INTRA.clone());
             let pd = cfg.rollout_time(spec, BATCH, PROMPT, DECODE);
             let colo = PdConfig::colocated_time(spec, (p + d) * 8, BATCH, PROMPT, DECODE);
-            let des_pd = rollout_makespan(
+            let (des_pd, mut kv) = rollout_makespan_traced(
                 spec,
                 &PdScenario::xpyd(p, d),
                 BATCH as usize,
@@ -65,6 +74,23 @@ pub fn run() {
                 &x(colo_paper / pd_paper),
                 &format!("{} (des {})", x(colo / pd), x(des_colo / des_pd)),
             );
+            let queued_frac = kv.queued_transfers as f64 / kv.transfers.max(1) as f64;
+            let (q_p50, q_p99) = if kv.queue_delay.is_empty() {
+                (0.0, 0.0)
+            } else {
+                (kv.queue_delay.p50(), kv.queue_delay.p99())
+            };
+            row(
+                &format!("{name} {cfg_name} KV queue delay"),
+                "nonzero at batch 128",
+                &format!(
+                    "{:.0}% queued, p50 {:.4}s p99 {:.4}s max {:.4}s",
+                    100.0 * queued_frac,
+                    q_p50,
+                    q_p99,
+                    kv.queue_delay_max_s
+                ),
+            );
             csv.row([
                 name.to_string(),
                 cfg_name.to_string(),
@@ -74,6 +100,10 @@ pub fn run() {
                 format!("{des_pd:.1}"),
                 format!("{des_colo:.1}"),
                 format!("{:.3}", des_colo / des_pd),
+                format!("{queued_frac:.3}"),
+                format!("{q_p50:.5}"),
+                format!("{q_p99:.5}"),
+                format!("{:.5}", kv.queue_delay_max_s),
             ]);
         }
         // footnote 2: 3P1D is worst
@@ -93,6 +123,10 @@ pub fn run() {
             "".to_string(),
             "".to_string(),
             format!("{t_des:.1}"),
+            "".to_string(),
+            "".to_string(),
+            "".to_string(),
+            "".to_string(),
             "".to_string(),
             "".to_string(),
         ]);

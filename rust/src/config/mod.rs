@@ -149,6 +149,7 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             "affinity" => crate::proxy::RouteKind::Affinity,
             "least_loaded" => crate::proxy::RouteKind::LeastLoaded,
             "domain_fair" => crate::proxy::RouteKind::DomainFair,
+            "token_backlog" => crate::proxy::RouteKind::TokenBacklog,
             other => return Err(format!("unknown route policy {other}")),
         };
     }
@@ -171,10 +172,26 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             }
             pd.max_batch = m;
         }
+        if let Some(k) = p.get("kv_slots").and_then(|v| v.as_usize()) {
+            if k == 0 {
+                return Err("pd.kv_slots must be ≥ 1".to_string());
+            }
+            pd.kv_slots = k;
+        }
         if let Some(d) = p.get("disaggregated").and_then(|v| v.as_bool()) {
             pd.disaggregated = d;
         }
         s.pd = Some(pd);
+    }
+    if let Some(true) = j.get("pd_elastic").and_then(|v| v.as_bool()) {
+        let pd = s
+            .pd
+            .as_ref()
+            .ok_or("pd_elastic requires a pd deployment")?;
+        if !pd.disaggregated {
+            return Err("pd_elastic requires a disaggregated pd".to_string());
+        }
+        s.pd_elastic = Some(crate::elastic::PdElasticPolicy::for_pd(pd));
     }
     if let Some(r) = j.get("reward") {
         let kind = r.get("kind").and_then(|k| k.as_str()).unwrap_or("serverless");
@@ -245,7 +262,8 @@ mod tests {
     #[test]
     fn pd_and_route_knobs_parse() {
         let s = scenario_from_json(
-            r#"{"pd": {"prefill_nodes": 2, "decode_nodes": 2, "gpus_per_node": 4},
+            r#"{"pd": {"prefill_nodes": 2, "decode_nodes": 2, "gpus_per_node": 4,
+                       "kv_slots": 2},
                 "route": "domain_fair"}"#,
         )
         .unwrap();
@@ -253,6 +271,7 @@ mod tests {
         assert_eq!(pd.prefill_nodes, 2);
         assert_eq!(pd.decode_nodes, 2);
         assert_eq!(pd.gpus_per_node, 4);
+        assert_eq!(pd.kv_slots, 2);
         assert!(pd.disaggregated);
         assert_eq!(pd.name(), "2P2D");
         assert_eq!(s.route, crate::proxy::RouteKind::DomainFair);
@@ -261,6 +280,30 @@ mod tests {
         let clean = scenario_from_json("{}").unwrap();
         assert!(clean.pd.is_none());
         assert_eq!(clean.route, crate::proxy::RouteKind::Affinity);
+        let tb = scenario_from_json(r#"{"route": "token_backlog"}"#).unwrap();
+        assert_eq!(tb.route, crate::proxy::RouteKind::TokenBacklog);
+    }
+
+    #[test]
+    fn pd_elastic_knob_builds_the_split_controller() {
+        let s = scenario_from_json(
+            r#"{"pd": {"prefill_nodes": 1, "decode_nodes": 3}, "pd_elastic": true}"#,
+        )
+        .unwrap();
+        let pe = s.pd_elastic.expect("split controller");
+        let pd = s.pd.expect("pd config");
+        assert_eq!(pe.prefill.class, pd.prefill_class);
+        assert_eq!(pe.decode.class, pd.decode_class);
+        assert!(s.elastic.is_none());
+        // Validation: pd_elastic without pd, or on the colocated arm.
+        assert!(scenario_from_json(r#"{"pd_elastic": true}"#).is_err());
+        assert!(scenario_from_json(
+            r#"{"pd": {"disaggregated": false}, "pd_elastic": true}"#
+        )
+        .is_err());
+        // false is a no-op either way.
+        let off = scenario_from_json(r#"{"pd_elastic": false}"#).unwrap();
+        assert!(off.pd_elastic.is_none());
     }
 
     #[test]
@@ -272,6 +315,7 @@ mod tests {
         assert!(scenario_from_json(r#"{"pd": {"prefill_nodes": 0}}"#).is_err());
         assert!(scenario_from_json(r#"{"pd": {"gpus_per_node": 0}}"#).is_err());
         assert!(scenario_from_json(r#"{"pd": {"max_batch": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"pd": {"kv_slots": 0}}"#).is_err());
         // A zero/negative MTBF would make the failure process fire at
         // zero-delay forever (the sim clock never advances).
         assert!(scenario_from_json(r#"{"engine_mtbf_s": 0.0}"#).is_err());

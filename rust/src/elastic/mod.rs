@@ -24,14 +24,52 @@
 //! The environment pool scales in lock-step: its CpuSlot bindings track
 //! the live generation fleet, so a scale-down returns real environment
 //! capacity to the resource plane (see [`ElasticReport::env_slots_released`]).
+//!
+//! PD deployments get a *split* controller: [`PdAutoScaler`] watches
+//! per-class bottleneck signals ([`PdSignals`]: prefill queue wait,
+//! decode token backlog, KV-link queue delay) and resizes the prefill
+//! and decode pools independently — a decode-bound run grows the
+//! decode pool while the idle prefill pool shrinks, and a KV-bound
+//! iteration holds both (no pool can fix a saturated link).
 
 use crate::coordinator::IterationCost;
 use crate::hw::GpuClass;
 use crate::llm::LlmSpec;
 use crate::mooncake::MooncakeStore;
 use crate::serverless::ServerlessConfig;
+use crate::sim::driver::pd::PdScenario;
 
 /// Scaling rules for one generation pool.
+///
+/// # Writing your own scaling behaviour
+///
+/// The policy is declarative: tune the thresholds and hand it to an
+/// [`AutoScaler`], which turns per-iteration costs into
+/// [`ScaleDecision`]s.  A controller that grows aggressively but never
+/// shrinks below four engines:
+///
+/// ```
+/// use rollart::coordinator::IterationCost;
+/// use rollart::elastic::{AutoScaler, ElasticPolicy, ScaleDecision};
+/// use rollart::hw::GpuClass;
+///
+/// let mut policy = ElasticPolicy::new(GpuClass::H20, 2, 32);
+/// policy.min_engines = 4;
+/// policy.step_engines = 4;
+/// policy.scale_up_wait_ratio = 0.5; // grow as soon as wait > train/2
+/// policy.cooldown_steps = 0; // decide every iteration
+/// let mut scaler = AutoScaler::new(policy);
+///
+/// // An iteration that waited 60 s on a 40 s train step is
+/// // rollout-bound: the controller grows the pool.
+/// let cost = IterationCost { get_batch_wait_s: 60.0, train_s: 40.0, ..Default::default() };
+/// assert_eq!(scaler.observe(&cost, 8, 0), ScaleDecision::Up(4));
+///
+/// // An idle pipeline shrinks, but never below `min_engines`.
+/// let idle = IterationCost { get_batch_wait_s: 0.0, train_s: 40.0, ..Default::default() };
+/// assert_eq!(scaler.observe(&idle, 5, 0), ScaleDecision::Down(1));
+/// assert_eq!(scaler.observe(&idle, 4, 0), ScaleDecision::Hold);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct ElasticPolicy {
     /// GPU class of the pool this policy resizes.
@@ -115,6 +153,17 @@ pub struct ElasticReport {
     pub env_slots_bound: u64,
     /// CpuSlot bindings released back on environment-pool scale-down.
     pub env_slots_released: u64,
+    /// PD split controller: scale-up decisions on the *prefill* pool.
+    pub prefill_scale_ups: u64,
+    /// PD split controller: scale-down decisions on the prefill pool.
+    pub prefill_scale_downs: u64,
+    /// PD split controller: scale-up decisions on the *decode* pool.
+    pub decode_scale_ups: u64,
+    /// PD split controller: scale-down decisions on the decode pool.
+    pub decode_scale_downs: u64,
+    /// Iterations where the KV link — not either pool — was the
+    /// bottleneck, so the split controller held both pools.
+    pub kv_bound_holds: u64,
 }
 
 /// The feedback controller over [`IterationCost`] measurements.
@@ -172,6 +221,179 @@ impl AutoScaler {
             }
         }
         ScaleDecision::Hold
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-class PD elasticity
+// ---------------------------------------------------------------------
+
+/// Split-controller configuration for a PD deployment: one
+/// [`ElasticPolicy`] per pool plus the bottleneck detectors that
+/// decide *which* pool an iteration's rollout-boundness is charged to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PdElasticPolicy {
+    /// Scaling rules for the prefill pool (compute-optimized class).
+    pub prefill: ElasticPolicy,
+    /// Scaling rules for the decode pool (bandwidth-optimized class).
+    pub decode: ElasticPolicy,
+    /// The prefill pool counts as the bottleneck when the iteration's
+    /// summed Prefilling residency exceeds this many seconds per live
+    /// prefill engine (trajectories queueing on prefill admission).
+    pub prefill_wait_per_engine_s: f64,
+    /// The decode pool counts as the bottleneck when outstanding
+    /// decode tokens exceed this per live decode engine.
+    pub decode_backlog_per_engine: f64,
+    /// The KV *link* counts as the bottleneck when its accumulated
+    /// queue delay this iteration exceeds this fraction of the train
+    /// step — then neither pool is grown (a saturated link cannot be
+    /// fixed by more engines on either side).
+    pub kv_bound_ratio: f64,
+}
+
+impl PdElasticPolicy {
+    /// Split controller sized to one [`PdScenario`]: each pool's
+    /// policy provisions engines of that pool's class and node width.
+    pub fn for_pd(pd: &PdScenario) -> Self {
+        let mk = |class: GpuClass| {
+            let mut p = ElasticPolicy::new(class, pd.gpus_per_node, pd.max_batch);
+            p.min_engines = 1;
+            p
+        };
+        PdElasticPolicy {
+            prefill: mk(pd.prefill_class),
+            decode: mk(pd.decode_class),
+            // One engine's worth of queued prefill work per engine.
+            prefill_wait_per_engine_s: 30.0,
+            // Roughly half an engine's continuous-batching capacity at
+            // a long-decode working point.
+            decode_backlog_per_engine: pd.max_batch as f64 * 1024.0,
+            kv_bound_ratio: 0.5,
+        }
+    }
+}
+
+/// Per-iteration bottleneck signals of a PD deployment, measured by
+/// the driver core.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PdSignals {
+    /// `get_batch` wait of the iteration (overall rollout-boundness).
+    pub get_batch_wait_s: f64,
+    /// Train time of the iteration (the wait ratios' denominator).
+    pub train_s: f64,
+    /// Summed Prefilling-phase residency this iteration (from
+    /// [`LifecycleStats`](crate::sim::driver::LifecycleStats)), with
+    /// the KV hop's end-to-end transfer time already subtracted by the
+    /// measuring driver (the lifecycle books the hop under Prefilling;
+    /// without the correction a congested link would masquerade as
+    /// prefill-engine pressure): time trajectories spent queued or
+    /// running in the prefill pool.
+    pub prefill_wait_s: f64,
+    /// Outstanding decode tokens on the decode pool's live engines at
+    /// the iteration boundary (queued + unfinished decode budgets).
+    pub decode_backlog_tokens: f64,
+    /// KV-link queue delay accumulated this iteration (from
+    /// [`SharedLinkStats`](crate::net::SharedLinkStats)).
+    pub kv_queue_delay_s: f64,
+}
+
+/// The split feedback controller of a PD deployment: one
+/// [`AutoScaler`] per pool (each with its own thresholds, cooldown
+/// and bounds) over one [`PdSignals`] measurement.
+///
+/// Decision rule per iteration:
+/// 1. rollout-bound **and** KV-bound → hold both pools
+///    ([`ElasticReport::kv_bound_holds`]); both cooldowns also pause —
+///    a KV-bound spell should not burn a pool's cooldown;
+/// 2. rollout-bound but *neither* detector fired → hold both (the
+///    bottleneck is outside the two pools; shrinking a starved
+///    pipeline would make it worse);
+/// 3. otherwise each pool is judged by its own [`AutoScaler`] fed a
+///    gated cost: the iteration's `get_batch` wait *if its bottleneck
+///    detector fired*, zero if not — so the bottleneck pool grows
+///    while the idle pool is free to shrink in the same iteration,
+///    and the threshold controller itself exists exactly once
+///    ([`AutoScaler::observe`]).
+#[derive(Clone, Debug)]
+pub struct PdAutoScaler {
+    pub policy: PdElasticPolicy,
+    prefill: AutoScaler,
+    decode: AutoScaler,
+    pub report: ElasticReport,
+}
+
+impl PdAutoScaler {
+    pub fn new(policy: PdElasticPolicy) -> Self {
+        assert_ne!(
+            policy.prefill.class, policy.decode.class,
+            "PD pools are told apart by GPU class"
+        );
+        PdAutoScaler {
+            prefill: AutoScaler::new(policy.prefill.clone()),
+            decode: AutoScaler::new(policy.decode.clone()),
+            policy,
+            report: ElasticReport::default(),
+        }
+    }
+
+    /// Feed one iteration's signals; returns the (prefill, decode)
+    /// pool decisions and records them per class in the report.
+    pub fn observe(
+        &mut self,
+        sig: &PdSignals,
+        live_prefill: usize,
+        live_decode: usize,
+        provisioning_prefill: usize,
+        provisioning_decode: usize,
+    ) -> (ScaleDecision, ScaleDecision) {
+        let train = sig.train_s.max(1e-9);
+        let up_ratio = self
+            .policy
+            .prefill
+            .scale_up_wait_ratio
+            .min(self.policy.decode.scale_up_wait_ratio);
+        let rollout_bound = sig.get_batch_wait_s > up_ratio * train;
+        if rollout_bound && sig.kv_queue_delay_s > self.policy.kv_bound_ratio * train {
+            self.report.kv_bound_holds += 1;
+            return (ScaleDecision::Hold, ScaleDecision::Hold);
+        }
+        let prefill_bound = sig.prefill_wait_s
+            > self.policy.prefill_wait_per_engine_s * live_prefill.max(1) as f64;
+        let decode_bound = sig.decode_backlog_tokens
+            > self.policy.decode_backlog_per_engine * live_decode.max(1) as f64;
+        if rollout_bound && !prefill_bound && !decode_bound {
+            // Rollout-bound but neither detector fired: the bottleneck
+            // is elsewhere (env pool, reward path, mis-tuned
+            // thresholds).  Zero-gating both pools here would shrink a
+            // *starved* pipeline — hold instead.
+            return (ScaleDecision::Hold, ScaleDecision::Hold);
+        }
+        // Gate the wait signal per class and let the single-pool
+        // controller do the thresholding: the diagnosed bottleneck
+        // pool sees the real wait (may grow), the other sees zero
+        // (may shrink — intentional rebalancing toward the bottleneck).
+        let gated = |bound: bool| IterationCost {
+            get_batch_wait_s: if bound { sig.get_batch_wait_s } else { 0.0 },
+            train_s: sig.train_s,
+            ..IterationCost::default()
+        };
+        let dp = self
+            .prefill
+            .observe(&gated(prefill_bound), live_prefill, provisioning_prefill);
+        let dd = self
+            .decode
+            .observe(&gated(decode_bound), live_decode, provisioning_decode);
+        // The inner controllers already count their own decisions;
+        // mirror them into the combined report (single counting
+        // source) rather than tallying the decisions a second time.
+        self.report.prefill_scale_ups = self.prefill.report.scale_ups;
+        self.report.prefill_scale_downs = self.prefill.report.scale_downs;
+        self.report.decode_scale_ups = self.decode.report.scale_ups;
+        self.report.decode_scale_downs = self.decode.report.scale_downs;
+        self.report.scale_ups = self.report.prefill_scale_ups + self.report.decode_scale_ups;
+        self.report.scale_downs =
+            self.report.prefill_scale_downs + self.report.decode_scale_downs;
+        (dp, dd)
     }
 }
 
@@ -249,6 +471,124 @@ mod tests {
         // it lands would thrash.
         let mut s = scaler();
         assert_eq!(s.observe(&cost(0.0, 80.0), 4, 1), ScaleDecision::Hold);
+    }
+
+    fn pd_policy() -> PdElasticPolicy {
+        let pd = PdScenario::xpyd(2, 2);
+        let mut p = PdElasticPolicy::for_pd(&pd);
+        p.prefill.cooldown_steps = 0;
+        p.decode.cooldown_steps = 0;
+        p
+    }
+
+    /// Rollout-bound signals with the bottleneck detectors set per
+    /// class: prefill wait 100 s/engine, decode backlog per the given
+    /// tokens, no KV queueing.
+    fn sig(prefill_wait: f64, backlog: f64, kv: f64) -> PdSignals {
+        PdSignals {
+            get_batch_wait_s: 300.0,
+            train_s: 80.0,
+            prefill_wait_s: prefill_wait,
+            decode_backlog_tokens: backlog,
+            kv_queue_delay_s: kv,
+        }
+    }
+
+    #[test]
+    fn decode_bound_grows_decode_and_shrinks_prefill() {
+        let mut s = PdAutoScaler::new(pd_policy());
+        // Backlog far above threshold, prefill idle: the decode pool
+        // grows while the prefill pool independently shrinks.
+        let (dp, dd) = s.observe(&sig(0.0, 1e9, 0.0), 4, 4, 0, 0);
+        assert_eq!(dd, ScaleDecision::Up(2));
+        assert_eq!(dp, ScaleDecision::Down(2));
+        assert_eq!(s.report.decode_scale_ups, 1);
+        assert_eq!(s.report.prefill_scale_downs, 1);
+        assert_eq!(s.report.decode_scale_downs, 0);
+        assert_eq!(s.report.prefill_scale_ups, 0);
+        assert_eq!(s.report.scale_ups, 1);
+        assert_eq!(s.report.scale_downs, 1);
+    }
+
+    #[test]
+    fn prefill_bound_grows_prefill_only() {
+        let mut s = PdAutoScaler::new(pd_policy());
+        // 1e6 s of prefill residency over 4 engines ≫ threshold; no
+        // decode backlog.
+        let (dp, dd) = s.observe(&sig(1e6, 0.0, 0.0), 4, 4, 0, 0);
+        assert_eq!(dp, ScaleDecision::Up(2));
+        assert_eq!(dd, ScaleDecision::Down(2), "idle decode pool shrinks");
+        assert_eq!(s.report.prefill_scale_ups, 1);
+        assert_eq!(s.report.decode_scale_ups, 0);
+    }
+
+    #[test]
+    fn both_bound_grows_both_pools() {
+        let mut s = PdAutoScaler::new(pd_policy());
+        let (dp, dd) = s.observe(&sig(1e6, 1e9, 0.0), 4, 4, 0, 0);
+        assert_eq!(dp, ScaleDecision::Up(2));
+        assert_eq!(dd, ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn undiagnosed_rollout_bound_holds_instead_of_shrinking() {
+        // Rollout-bound (wait 300 ≫ train 80) but neither per-class
+        // detector fires: the bottleneck is outside the pools, and a
+        // starved pipeline must not lose capacity.
+        let mut s = PdAutoScaler::new(pd_policy());
+        let (dp, dd) = s.observe(&sig(0.0, 0.0, 0.0), 4, 4, 0, 0);
+        assert_eq!(dp, ScaleDecision::Hold);
+        assert_eq!(dd, ScaleDecision::Hold);
+        assert_eq!(s.report.scale_downs, 0, "{:?}", s.report);
+        assert_eq!(s.report.kv_bound_holds, 0, "not a KV hold");
+    }
+
+    #[test]
+    fn kv_bound_iteration_holds_both_pools() {
+        let mut s = PdAutoScaler::new(pd_policy());
+        // Queue delay of 60 s on an 80 s train step > kv_bound_ratio:
+        // more engines on either side cannot fix the link.
+        let (dp, dd) = s.observe(&sig(1e6, 1e9, 60.0), 4, 4, 0, 0);
+        assert_eq!(dp, ScaleDecision::Hold);
+        assert_eq!(dd, ScaleDecision::Hold);
+        assert_eq!(s.report.kv_bound_holds, 1);
+        assert_eq!(s.report.scale_ups, 0);
+    }
+
+    #[test]
+    fn pd_cooldowns_are_per_class() {
+        let mut p = pd_policy();
+        p.decode.cooldown_steps = 1;
+        let mut s = PdAutoScaler::new(p);
+        let (_, dd) = s.observe(&sig(0.0, 1e9, 0.0), 4, 4, 0, 0);
+        assert_eq!(dd, ScaleDecision::Up(2));
+        // Decode cools down; prefill keeps deciding independently.
+        let (dp, dd) = s.observe(&sig(1e6, 1e9, 0.0), 4, 4, 0, 2);
+        assert_eq!(dd, ScaleDecision::Hold);
+        assert_eq!(dp, ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn pd_respects_min_and_provisioning() {
+        let mut s = PdAutoScaler::new(pd_policy());
+        // Prefill already at min: no shrink below it.
+        let (dp, _) = s.observe(&sig(0.0, 1e9, 0.0), 1, 4, 0, 0);
+        assert_eq!(dp, ScaleDecision::Hold);
+        // Decode warming engines block a second scale-up past max.
+        let mut s = PdAutoScaler::new(pd_policy());
+        let max = s.policy.decode.max_engines;
+        let (_, dd) = s.observe(&sig(0.0, 1e9, 0.0), 4, max - 1, 0, 1);
+        assert_eq!(dd, ScaleDecision::Hold, "live + warming at max");
+    }
+
+    #[test]
+    fn for_pd_mirrors_the_deployment() {
+        let pd = PdScenario::xpyd(3, 1);
+        let p = PdElasticPolicy::for_pd(&pd);
+        assert_eq!(p.prefill.class, pd.prefill_class);
+        assert_eq!(p.decode.class, pd.decode_class);
+        assert_eq!(p.prefill.gpus_per_engine, pd.gpus_per_node);
+        assert_eq!(p.decode.max_batch, pd.max_batch);
     }
 
     #[test]

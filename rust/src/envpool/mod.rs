@@ -47,7 +47,7 @@ pub struct EnvPoolConfig {
     /// latency stream, so fault-related tests can pin the failure
     /// pattern independently of latency draws.  `None` (the default)
     /// keeps the historical single-stream behaviour bit-for-bit.
-    /// Seeding convention: [`crate::simkit`] module docs.
+    /// Seeding convention: `docs/DETERMINISM.md` (see also [`crate::simkit`]).
     pub fault_seed: Option<u64>,
 }
 

@@ -21,10 +21,11 @@
 //!   `examples/chaos_train.rs`.
 //!
 //! All stochastic draws come from dedicated [`SimRng`] streams salted
-//! with [`FaultProfile::seed_salt`] (see the seeding convention in
-//! [`crate::simkit`]), so enabling injection never perturbs the draws
-//! of any other component — and with the profile inactive no fault
-//! stream is ever sampled, making injection *zero-cost when off*.
+//! with [`FaultProfile::seed_salt`] (the salted-stream convention —
+//! see `docs/DETERMINISM.md` for the full seeding contract), so
+//! enabling injection never perturbs the draws of any other component
+//! — and with the profile inactive no fault stream is ever sampled,
+//! making injection *zero-cost when off*.
 //!
 //! The drivers surface the outcome in a [`FaultReport`]: failure
 //! counts, trajectory-level recoveries (re-queued requests, relaunched
@@ -61,6 +62,47 @@ pub struct ScheduledFault {
 /// [`FaultProfile::none`] (the [`Default`]) disables every mechanism;
 /// drivers skip all fault sampling in that case so results are
 /// bit-identical to a build without the fault plane.
+///
+/// # Writing your own chaos profile
+///
+/// Compose the stochastic knobs with a deterministic schedule.  A
+/// profile that crashes engines every ~10 simulated minutes, kills 2%
+/// of env steps, and takes half the H20 pool out for one minute at
+/// t = 300 s:
+///
+/// ```
+/// use rollart::fault::{FaultEvent, FaultProfile, ScheduledFault};
+/// use rollart::hw::GpuClass;
+/// use rollart::simkit::SimRng;
+///
+/// let profile = FaultProfile {
+///     env_crash_p: 0.02,
+///     scheduled: vec![
+///         ScheduledFault {
+///             at_s: 300.0,
+///             event: FaultEvent::PoolOutage { class: GpuClass::H20, fraction: 0.5 },
+///         },
+///         ScheduledFault {
+///             at_s: 360.0,
+///             event: FaultEvent::PoolRestore { class: GpuClass::H20 },
+///         },
+///     ],
+///     ..FaultProfile::mtbf(600.0)
+/// };
+/// assert!(profile.is_active());
+///
+/// // Failure draws are pure functions of (root seed, salt, entity,
+/// // occurrence): the same schedule replays exactly, run after run.
+/// let root = SimRng::new(17);
+/// let a = profile.next_engine_failure(&root, 0, 0).unwrap();
+/// let b = profile.next_engine_failure(&root, 0, 0).unwrap();
+/// assert_eq!(a, b);
+///
+/// // A different salt replays an *independent* failure pattern on
+/// // the same scenario seed (A/B chaos ablations).
+/// let salted = FaultProfile { seed_salt: 1, ..profile.clone() };
+/// assert_ne!(a, salted.next_engine_failure(&root, 0, 0).unwrap());
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct FaultProfile {
     /// Per-engine exponential mean time between failures, seconds.

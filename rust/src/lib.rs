@@ -18,15 +18,17 @@
 //!   it through the same [`proxy::LlmProxy`] / [`coordinator`] machinery
 //!   (see `examples/e2e_train.rs`).
 //!
-//! Module map (DESIGN.md §1 has the paper-section ↔ module table):
+//! Module map (DESIGN.md §1 has the paper-section ↔ module table;
+//! `docs/ARCHITECTURE.md` is the guided tour of the simulation stack,
+//! `docs/DETERMINISM.md` the RNG seeding contract):
 //!
 //! | plane | modules |
 //! |---|---|
-//! | resource | [`resource`], [`hw`], [`llm`], [`net`] |
+//! | resource | [`resource`], [`hw`], [`llm`], [`net`] (incl. the shared-bandwidth [`net::SharedLink`]) |
 //! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
 //! | control | [`coordinator`], [`proxy`] (incl. pluggable [`proxy::route`] policies), [`buffer`], [`rl`] |
-//! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine, [`sim::driver::pd`] PD execution mode |
-//! | fault & elasticity | [`fault`], [`elastic`] |
+//! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine + phase residency, [`sim::driver::pd`] PD execution mode |
+//! | fault & elasticity | [`fault`], [`elastic`] (single-pool [`elastic::AutoScaler`] + per-class PD [`elastic::PdAutoScaler`]) |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
 //! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |
 

@@ -11,7 +11,7 @@ pub use util::UtilizationTracker;
 
 
 /// Per-iteration latency breakdown (paper Fig 3 / Fig 15b categories).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepBreakdown {
     pub generation_s: f64,
     pub env_reset_s: f64,

@@ -1,5 +1,6 @@
-//! Network fabric model: links, transfer times, and the small-packet
-//! jitter path used by trajectory/env I/O (§3.2).
+//! Network fabric model: links, transfer times, shared-bandwidth
+//! queueing, and the small-packet jitter path used by trajectory/env
+//! I/O (§3.2).
 //!
 //! Calibration anchors from the paper:
 //! * Table 3 — Mooncake weight transfer, training→inference cluster:
@@ -7,7 +8,13 @@
 //!   because RDMA's fixed session setup amortizes (1.26×→3.14×).
 //! * §7.5 — env-interaction I/O ≤2.7 MB/call, overhead mean 0.02 s /
 //!   max 1.4 s; serverless reward I/O ≤5.2 MB, mean 0.01 s / max 2.1 s.
+//!
+//! [`Link`] is the stateless single-transfer model; [`SharedLink`]
+//! wraps it in FIFO transfer slots so concurrent transfers *contend*
+//! (the PD KV hop uses this — see [`crate::sim::driver::pd`]).
 
 mod link;
+mod shared;
 
 pub use link::{jittered_small_transfer, Link, NVLINK_INTRA, RDMA_400IB, TCP_200GBE};
+pub use shared::{balanced_makespan, Grant, KvLinkReport, SharedLink, SharedLinkStats};

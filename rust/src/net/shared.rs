@@ -1,0 +1,289 @@
+//! Shared-bandwidth queueing over a point-to-point [`Link`].
+//!
+//! [`Link::transfer_time`] answers "how long does *one* transfer take
+//! on an idle link"; it has no state, so two concurrent transfers
+//! overlap for free.  That is the wrong model for the PD KV hop: at
+//! high batch a prefill engine completes a whole admission wave at
+//! once and every request's KV cache hits the inter-pool link in the
+//! same instant.  [`SharedLink`] makes the link a *contended* resource:
+//! a fixed number of transfer slots (NIC queues / NVLink channels),
+//! each serving transfers FIFO at the link's effective bandwidth.  A
+//! burst of `k` transfers over `s` slots therefore queues — the
+//! sharpening of Table 5 at high batch the ROADMAP predicted — and
+//! every transfer's queue delay is recorded in [`SharedLinkStats`].
+//!
+//! The model is deliberately simple (earliest-free-slot FIFO, no
+//! preemption, full per-slot bandwidth): for equal-size bursts it
+//! coincides with the balanced fair-share bound
+//! [`balanced_makespan`], which is also the analytic term the
+//! synchronous baseline's PD path uses.
+
+use super::Link;
+use crate::metrics::Histogram;
+
+/// Admission of one transfer onto a [`SharedLink`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grant {
+    /// When the transfer starts moving bytes (≥ the request time).
+    pub start_s: f64,
+    /// When the last byte lands on the far side.
+    pub done_s: f64,
+    /// Time spent waiting for a free transfer slot.
+    pub queue_delay_s: f64,
+}
+
+/// Per-transfer contention statistics of one [`SharedLink`].
+#[derive(Clone, Debug, Default)]
+pub struct SharedLinkStats {
+    /// Transfers admitted.
+    pub transfers: u64,
+    /// Transfers that had to wait for a slot.
+    pub queued_transfers: u64,
+    /// Total queue delay across transfers.
+    pub queue_delay_total_s: f64,
+    /// Worst single-transfer queue delay.
+    pub queue_delay_max_s: f64,
+    /// Bytes moved.
+    pub bytes_total: f64,
+    /// Per-transfer queue-delay samples (percentiles for the benches).
+    pub queue_delay: Histogram,
+}
+
+impl SharedLinkStats {
+    /// Mean per-transfer queue delay.
+    pub fn mean_queue_delay_s(&self) -> f64 {
+        if self.transfers == 0 {
+            return 0.0;
+        }
+        self.queue_delay_total_s / self.transfers as f64
+    }
+
+    /// Compact copyable summary for [`crate::sim::ScenarioResult`].
+    pub fn report(&self) -> KvLinkReport {
+        KvLinkReport {
+            transfers: self.transfers,
+            queued_transfers: self.queued_transfers,
+            queue_delay_total_s: self.queue_delay_total_s,
+            queue_delay_max_s: self.queue_delay_max_s,
+        }
+    }
+}
+
+/// Copyable summary of a run's KV-link contention (the histogram stays
+/// on the [`SharedLink`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvLinkReport {
+    pub transfers: u64,
+    pub queued_transfers: u64,
+    pub queue_delay_total_s: f64,
+    pub queue_delay_max_s: f64,
+}
+
+/// A [`Link`] with `slots` FIFO transfer slots.
+///
+/// Each slot serves one transfer at a time at the link's full
+/// single-transfer goodput (`setup + bytes/bw`); an arriving transfer
+/// takes the earliest-free slot and queues behind its current work.
+/// The one-way base latency is paid after the bytes finish moving.
+#[derive(Clone, Debug)]
+pub struct SharedLink {
+    link: Link,
+    /// Per-slot busy-until time, seconds.
+    slots: Vec<f64>,
+    pub stats: SharedLinkStats,
+}
+
+impl SharedLink {
+    pub fn new(link: Link, slots: usize) -> Self {
+        assert!(slots > 0, "a link needs at least one transfer slot");
+        SharedLink {
+            link,
+            slots: vec![0.0; slots],
+            stats: SharedLinkStats::default(),
+        }
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Service time of one transfer once it holds a slot (setup +
+    /// bytes at effective bandwidth; excludes queueing and latency).
+    pub fn service_time(&self, bytes: f64) -> f64 {
+        self.link.setup_s + bytes / self.link.effective_bytes_per_s
+    }
+
+    /// Total end-to-end wall-clock the link's transfers have taken:
+    /// queueing + setup + bytes at bandwidth + delivery latency,
+    /// summed over all transfers *admitted* so far (an in-flight
+    /// transfer counts in full — for per-delivery accounting the PD
+    /// driver books each hop at its completion event instead).
+    pub fn total_transfer_time_s(&self) -> f64 {
+        self.stats.queue_delay_total_s
+            + self.stats.transfers as f64 * (self.link.setup_s + self.link.latency_s)
+            + self.stats.bytes_total / self.link.effective_bytes_per_s
+    }
+
+    /// Admit one transfer of `bytes` at time `now`: it occupies the
+    /// earliest-free slot FIFO and completes at `done_s`.
+    pub fn acquire(&mut self, now: f64, bytes: f64) -> Grant {
+        let slot = (0..self.slots.len())
+            .min_by(|&a, &b| self.slots[a].total_cmp(&self.slots[b]))
+            .expect("slots is non-empty");
+        let start = self.slots[slot].max(now);
+        let queue_delay = start - now;
+        let free_at = start + self.service_time(bytes);
+        self.slots[slot] = free_at;
+        let done = free_at + self.link.latency_s;
+
+        self.stats.transfers += 1;
+        if queue_delay > 1e-12 {
+            self.stats.queued_transfers += 1;
+        }
+        self.stats.queue_delay_total_s += queue_delay;
+        self.stats.queue_delay_max_s = self.stats.queue_delay_max_s.max(queue_delay);
+        self.stats.bytes_total += bytes;
+        self.stats.queue_delay.record(queue_delay);
+
+        Grant {
+            start_s: start,
+            done_s: done,
+            queue_delay_s: queue_delay,
+        }
+    }
+}
+
+/// Balanced fair-share makespan of a burst of transfers that all
+/// arrive at once on an idle link with `slots` transfer slots:
+///
+/// ```text
+/// latency + Σᵢ (setup + bytesᵢ / bandwidth) / slots
+/// ```
+///
+/// This is the analytic counterpart of [`SharedLink`]'s FIFO model —
+/// for equal-size transfers whose count divides `slots` the two agree
+/// exactly — and the transfer term the synchronous baseline's PD path
+/// uses (see [`crate::sim::sync_driver`]).
+pub fn balanced_makespan(link: &Link, slots: usize, transfer_bytes: &[f64]) -> f64 {
+    assert!(slots > 0);
+    if transfer_bytes.is_empty() {
+        return 0.0;
+    }
+    let service: f64 = transfer_bytes
+        .iter()
+        .map(|&b| link.setup_s + b / link.effective_bytes_per_s)
+        .sum();
+    link.latency_s + service / slots as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NVLINK_INTRA;
+
+    fn shared(slots: usize) -> SharedLink {
+        SharedLink::new(NVLINK_INTRA.clone(), slots)
+    }
+
+    #[test]
+    fn lone_transfer_pays_no_queue_delay() {
+        let mut l = shared(1);
+        let g = l.acquire(5.0, 1e9);
+        assert_eq!(g.queue_delay_s, 0.0);
+        assert_eq!(g.start_s, 5.0);
+        let expect = 5.0 + l.service_time(1e9) + NVLINK_INTRA.latency_s;
+        assert!((g.done_s - expect).abs() < 1e-12);
+        assert_eq!(l.stats.transfers, 1);
+        assert_eq!(l.stats.queued_transfers, 0);
+    }
+
+    #[test]
+    fn concurrent_transfers_contend_on_one_slot() {
+        let mut l = shared(1);
+        let a = l.acquire(0.0, 1e9);
+        let b = l.acquire(0.0, 1e9);
+        let service = l.service_time(1e9);
+        assert!((b.queue_delay_s - service).abs() < 1e-12, "{b:?}");
+        assert!(b.done_s > a.done_s);
+        assert_eq!(l.stats.queued_transfers, 1);
+        assert!((l.stats.queue_delay_max_s - service).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extra_slots_absorb_the_burst() {
+        let mut l = shared(2);
+        let a = l.acquire(0.0, 1e9);
+        let b = l.acquire(0.0, 1e9);
+        assert_eq!(a.queue_delay_s, 0.0);
+        assert_eq!(b.queue_delay_s, 0.0);
+        let c = l.acquire(0.0, 1e9);
+        assert!(c.queue_delay_s > 0.0, "third transfer queues");
+    }
+
+    #[test]
+    fn later_arrival_can_start_immediately() {
+        let mut l = shared(1);
+        let a = l.acquire(0.0, 1e9);
+        // Arrives after the slot frees: no queueing.
+        let b = l.acquire(a.done_s + 1.0, 1e9);
+        assert_eq!(b.queue_delay_s, 0.0);
+        assert_eq!(b.start_s, a.done_s + 1.0);
+    }
+
+    #[test]
+    fn fifo_burst_matches_the_balanced_bound() {
+        // 8 equal transfers over 2 slots: last completion equals the
+        // balanced fair-share makespan (the analytic formula is exact
+        // when the count divides the slot count).
+        let bytes = vec![2e9; 8];
+        let mut l = shared(2);
+        let mut last = 0.0f64;
+        for &b in &bytes {
+            last = last.max(l.acquire(0.0, b).done_s);
+        }
+        let bound = balanced_makespan(&NVLINK_INTRA, 2, &bytes);
+        assert!((last - bound).abs() < 1e-9, "{last} vs {bound}");
+    }
+
+    #[test]
+    fn balanced_makespan_formula_is_pinned() {
+        let link = &NVLINK_INTRA;
+        let bytes = [1e9, 3e9, 5e9];
+        let expect = link.latency_s
+            + bytes
+                .iter()
+                .map(|b| link.setup_s + b / link.effective_bytes_per_s)
+                .sum::<f64>()
+                / 4.0;
+        assert!((balanced_makespan(link, 4, &bytes) - expect).abs() < 1e-12);
+        assert_eq!(balanced_makespan(link, 4, &[]), 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate_and_summarize() {
+        let mut l = shared(1);
+        for _ in 0..4 {
+            l.acquire(0.0, 1e9);
+        }
+        assert_eq!(l.stats.transfers, 4);
+        assert_eq!(l.stats.queued_transfers, 3);
+        assert_eq!(l.stats.bytes_total, 4e9);
+        assert!(l.stats.mean_queue_delay_s() > 0.0);
+        assert_eq!(l.stats.queue_delay.len(), 4);
+        let r = l.stats.report();
+        assert_eq!(r.transfers, 4);
+        assert_eq!(r.queued_transfers, 3);
+        assert!((r.queue_delay_total_s - l.stats.queue_delay_total_s).abs() < 1e-12);
+        // End-to-end occupancy: queueing + per-transfer (setup +
+        // latency) + total bytes at bandwidth.
+        let link = &NVLINK_INTRA;
+        let expect = l.stats.queue_delay_total_s
+            + 4.0 * (link.setup_s + link.latency_s)
+            + 4e9 / link.effective_bytes_per_s;
+        assert!((l.total_transfer_time_s() - expect).abs() < 1e-12);
+    }
+}

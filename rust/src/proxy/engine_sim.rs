@@ -134,6 +134,27 @@ impl EngineSim {
         self.waiting.len() + self.active.len()
     }
 
+    /// Outstanding *token* work: prefill tokens not yet admitted plus
+    /// decode tokens not yet produced, across waiting and active
+    /// requests.  This is what
+    /// [`TokenBacklogRoute`](crate::proxy::route::TokenBacklogRoute)
+    /// balances on — two engines with equal request counts can differ
+    /// by orders of magnitude in token backlog when decode budgets are
+    /// long.
+    pub fn backlog_tokens(&self) -> f64 {
+        let waiting: f64 = self
+            .waiting
+            .iter()
+            .map(|r| r.new_tokens + r.decode_budget)
+            .sum();
+        let active: f64 = self
+            .active
+            .iter()
+            .map(|a| (a.req.decode_budget - a.decoded).max(0.0))
+            .sum();
+        waiting + active
+    }
+
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
@@ -382,6 +403,23 @@ mod tests {
         assert_eq!(e.load(), 0);
         assert_eq!(e.stats.aborted, 2);
         assert_eq!(e.step(), StepOutcome::Idle);
+    }
+
+    #[test]
+    fn backlog_counts_waiting_and_remaining_decode() {
+        let mut e = engine(GpuClass::H20, 1);
+        e.set_decode_chunk(1.0);
+        assert_eq!(e.backlog_tokens(), 0.0);
+        e.enqueue(req(1, 100.0, 40.0));
+        e.enqueue(req(2, 10.0, 5.0));
+        // Waiting: prefill + full decode budgets.
+        assert_eq!(e.backlog_tokens(), 155.0);
+        e.step(); // admission: both active, prefill done
+        assert_eq!(e.backlog_tokens(), 45.0, "prefill tokens retired");
+        e.step(); // decode 1 token each
+        assert_eq!(e.backlog_tokens(), 43.0);
+        e.run_to_idle();
+        assert_eq!(e.backlog_tokens(), 0.0);
     }
 
     #[test]

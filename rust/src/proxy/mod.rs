@@ -20,6 +20,7 @@ pub mod route;
 pub use engine_sim::{EngineSim, EngineStats, SimRequest, StepOutcome};
 pub use route::{
     AffinityRoute, DomainFairRoute, LeastLoadedRoute, RouteCtx, RouteKind, RoutePolicy,
+    TokenBacklogRoute,
 };
 
 use crate::env::TaskDomain;
@@ -320,7 +321,12 @@ mod tests {
 
     #[test]
     fn dispatch_while_suspended_holds_for_every_policy() {
-        for kind in [RouteKind::Affinity, RouteKind::LeastLoaded, RouteKind::DomainFair] {
+        for kind in [
+            RouteKind::Affinity,
+            RouteKind::LeastLoaded,
+            RouteKind::DomainFair,
+            RouteKind::TokenBacklog,
+        ] {
             let mut p = proxy();
             p.set_route_policy(kind.make());
             p.suspend();

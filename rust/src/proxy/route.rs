@@ -17,6 +17,11 @@
 //!   live class capacity, so no domain monopolizes the premium pool
 //!   (the multi-tenant fairness discipline AgentRL argues for in
 //!   multi-task asynchrony).
+//! * [`TokenBacklogRoute`] — balances by outstanding prefill + decode
+//!   *token* estimates instead of request count: long-decode domains
+//!   (ProRL-style agentic rollouts) make request count a poor load
+//!   proxy, because one 20k-token decode weighs as much as dozens of
+//!   short tool calls.
 //!
 //! Policies see only the live fleet and a [`RouteCtx`] snapshot of the
 //! proxy's declarations, so they stay independently unit-testable.
@@ -35,6 +40,46 @@ pub struct RouteCtx<'a> {
 }
 
 /// A dispatch discipline: pick the engine one request lands on.
+///
+/// # Writing your own routing policy
+///
+/// Implement `pick` over the live fleet and hand the policy to
+/// [`LlmProxy::set_route_policy`](super::LlmProxy::set_route_policy).
+/// A policy that pins every domain to the lowest-numbered live engine
+/// (useful as a worst-case baseline in routing ablations):
+///
+/// ```
+/// use rollart::env::TaskDomain;
+/// use rollart::hw::GpuClass;
+/// use rollart::llm::QWEN3_8B;
+/// use rollart::proxy::{EngineSim, RouteCtx, RoutePolicy};
+///
+/// struct FirstLive;
+/// impl RoutePolicy for FirstLive {
+///     fn name(&self) -> &'static str {
+///         "first_live"
+///     }
+///     fn pick(
+///         &mut self,
+///         engines: &[EngineSim],
+///         _domain: TaskDomain,
+///         _ctx: &RouteCtx,
+///     ) -> Option<usize> {
+///         (0..engines.len()).find(|&i| !engines[i].is_down())
+///     }
+/// }
+///
+/// let mut engines = vec![
+///     EngineSim::new(0, GpuClass::H800, 1, QWEN3_8B.clone(), 8),
+///     EngineSim::new(1, GpuClass::H20, 1, QWEN3_8B.clone(), 8),
+/// ];
+/// let affinity = std::collections::BTreeMap::new();
+/// let ctx = RouteCtx { affinity: &affinity, default_class: None };
+/// let mut p = FirstLive;
+/// assert_eq!(p.pick(&engines, TaskDomain::Swe, &ctx), Some(0));
+/// engines[0].set_down(true);
+/// assert_eq!(p.pick(&engines, TaskDomain::Swe, &ctx), Some(1));
+/// ```
 pub trait RoutePolicy {
     fn name(&self) -> &'static str;
 
@@ -55,6 +100,8 @@ pub enum RouteKind {
     LeastLoaded,
     /// Capacity-weighted per-domain fair share across GPU classes.
     DomainFair,
+    /// Least outstanding prefill+decode *tokens*, affinity ignored.
+    TokenBacklog,
 }
 
 impl RouteKind {
@@ -63,6 +110,7 @@ impl RouteKind {
             RouteKind::Affinity => "affinity",
             RouteKind::LeastLoaded => "least_loaded",
             RouteKind::DomainFair => "domain_fair",
+            RouteKind::TokenBacklog => "token_backlog",
         }
     }
 
@@ -72,6 +120,7 @@ impl RouteKind {
             RouteKind::Affinity => Box::new(AffinityRoute),
             RouteKind::LeastLoaded => Box::new(LeastLoadedRoute),
             RouteKind::DomainFair => Box::new(DomainFairRoute::new()),
+            RouteKind::TokenBacklog => Box::new(TokenBacklogRoute),
         }
     }
 }
@@ -195,6 +244,28 @@ impl RoutePolicy for DomainFairRoute {
     }
 }
 
+/// Least outstanding *token* work across the live fleet
+/// ([`EngineSim::backlog_tokens`]: un-admitted prefill tokens plus
+/// unfinished decode budgets).  Request count treats a 20k-token SWE
+/// decode and a 40-token game action as equal load; in long-decode
+/// domains that skews the balance badly — this policy weighs requests
+/// by the work they still represent.  Ties break to the lowest engine
+/// index, so dispatch stays deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TokenBacklogRoute;
+
+impl RoutePolicy for TokenBacklogRoute {
+    fn name(&self) -> &'static str {
+        "token_backlog"
+    }
+
+    fn pick(&mut self, engines: &[EngineSim], _domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
+        (0..engines.len())
+            .filter(|&i| !engines[i].is_down())
+            .min_by(|&a, &b| engines[a].backlog_tokens().total_cmp(&engines[b].backlog_tokens()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,8 +381,68 @@ mod tests {
     }
 
     #[test]
+    fn token_backlog_outweighs_request_count() {
+        // Engine 0: one huge-decode request.  Engine 1: three tiny
+        // requests.  Least-loaded (request count) picks engine 0; the
+        // token-backlog policy must pick engine 1.
+        let mut engines = fleet();
+        let affinity = BTreeMap::new();
+        engines[0].enqueue(crate::proxy::SimRequest {
+            traj: crate::rl::TrajectoryId(0),
+            domain: TaskDomain::Swe,
+            new_tokens: 12_000.0,
+            ctx_tokens: 0.0,
+            decode_budget: 20_000.0,
+        });
+        for i in 0..3 {
+            engines[1].enqueue(crate::proxy::SimRequest {
+                traj: crate::rl::TrajectoryId(1 + i),
+                domain: TaskDomain::Game,
+                new_tokens: 50.0,
+                ctx_tokens: 0.0,
+                decode_budget: 40.0,
+            });
+        }
+        let mut ll = LeastLoadedRoute;
+        let by_count = ll
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(by_count, 2, "least-loaded prefers the empty engine");
+        engines[2].set_down(true);
+        let by_count = ll
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(by_count, 0, "one request beats three");
+        let mut tb = TokenBacklogRoute;
+        let by_tokens = tb
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(by_tokens, 1, "270 outstanding tokens beat 32k");
+    }
+
+    #[test]
+    fn token_backlog_skips_down_engines_and_breaks_ties_low() {
+        let mut engines = fleet();
+        let affinity = BTreeMap::new();
+        let mut p = TokenBacklogRoute;
+        // Empty fleet: all tie at 0 backlog → lowest index.
+        assert_eq!(p.pick(&engines, TaskDomain::Web, &ctx(&affinity, None)), Some(0));
+        engines[0].set_down(true);
+        assert_eq!(p.pick(&engines, TaskDomain::Web, &ctx(&affinity, None)), Some(1));
+        for e in &mut engines {
+            e.set_down(true);
+        }
+        assert_eq!(p.pick(&engines, TaskDomain::Web, &ctx(&affinity, None)), None);
+    }
+
+    #[test]
     fn route_kind_round_trip() {
-        for k in [RouteKind::Affinity, RouteKind::LeastLoaded, RouteKind::DomainFair] {
+        for k in [
+            RouteKind::Affinity,
+            RouteKind::LeastLoaded,
+            RouteKind::DomainFair,
+            RouteKind::TokenBacklog,
+        ] {
             assert_eq!(k.make().name(), k.name());
         }
         assert_eq!(RouteKind::default(), RouteKind::Affinity);

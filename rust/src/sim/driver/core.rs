@@ -20,11 +20,13 @@
 //! pool — via the [`crate::resource`] plane.
 
 use super::lifecycle::{LifecycleStats, LifecycleTracker, TrajPhase};
-use super::pd::{kv_transfer_s, split_request, PdScenario};
+use super::pd::{kv_bytes, shared_kv_link, split_request, PdScenario};
 use super::policy::{policy_for, SchedPolicy};
 use crate::buffer::SampleBuffer;
 use crate::coordinator::{EnvAction, EnvManagerSim, GroupOutcome, GroupTracker, IterationCost};
-use crate::elastic::{AutoScaler, ScaleDecision};
+use crate::elastic::{
+    AutoScaler, ElasticPolicy, ElasticReport, PdAutoScaler, PdSignals, ScaleDecision,
+};
 use crate::env::profile::DomainProfile;
 use crate::env::TaskDomain;
 use crate::envpool::ResetSampler;
@@ -32,6 +34,7 @@ use crate::fault::{FaultEvent, FaultReport};
 use crate::hw::{phase_time, GpuClass};
 use crate::metrics::StepBreakdown;
 use crate::mooncake::MooncakeStore;
+use crate::net::SharedLink;
 use crate::proxy::{EngineSim, LlmProxy, SimRequest};
 use crate::resource::{ResourceClass, ResourceManager, Role};
 use crate::rl::{TrajectoryId, Version};
@@ -62,9 +65,15 @@ enum Ev {
     EngineRecovered { engine: usize },
     /// Deterministic chaos event `cfg.fault.scheduled[idx]` fires.
     Scheduled { idx: usize },
-    /// An elastic scale-up finished warming: the engine joins the
-    /// fleet holding `binding` in the resource plane.
-    EngineProvisioned { binding: Option<u64> },
+    /// An elastic scale-up finished warming: an engine of `class`
+    /// (`gpus` wide, `max_batch` slots) joins the fleet holding
+    /// `binding` in the resource plane.
+    EngineProvisioned {
+        binding: Option<u64>,
+        class: GpuClass,
+        gpus: usize,
+        max_batch: usize,
+    },
     /// PD mode: `tid`'s KV cache finished its hop to the decode pool.
     KvDone { tid: TrajectoryId },
 }
@@ -97,12 +106,24 @@ struct PdPending {
     phase: PdPhase,
     prefill: SimRequest,
     decode: SimRequest,
+    /// End-to-end duration of the turn's KV hop (queue + service +
+    /// latency), set when the transfer is admitted.  Booked into
+    /// `kv_hop_booked_s` at KvDone — the same event whose dispatch
+    /// moves the trajectory out of Prefilling — so the prefill-wait
+    /// correction and the residency it corrects land in the same
+    /// iteration.
+    hop_s: f64,
 }
 
-/// PD runtime state: the deployment config plus each in-flight turn's
-/// split request.
+/// PD runtime state: the deployment config, the contended KV link, and
+/// each in-flight turn's split request.
 struct PdState {
     cfg: PdScenario,
+    /// The shared-bandwidth KV link: transfers queue on its FIFO slots
+    /// instead of overlapping for free, and per-transfer queue delays
+    /// accumulate in its stats (surfaced as
+    /// [`crate::sim::ScenarioResult::kv_link`]).
+    shared: SharedLink,
     pending: BTreeMap<TrajectoryId, PdPending>,
 }
 
@@ -143,13 +164,31 @@ struct DriverCore<'a> {
     engine_up_since: Vec<Option<f64>>,
     engine_alive_s: Vec<f64>,
     scaler: Option<AutoScaler>,
+    /// Split per-class controller of an elastic PD run (mutually
+    /// exclusive with `scaler`).
+    pd_scaler: Option<PdAutoScaler>,
+    /// Prefilling-phase residency already charged to past iterations
+    /// (the PD controller's prefill-wait signal is the per-iteration
+    /// delta).
+    charged_prefill_res_s: f64,
+    /// KV-link queue delay already charged to past iterations.
+    charged_kv_queue_s: f64,
+    /// Cumulative KV hop time of turns whose transfer has *delivered*
+    /// (booked at KvDone).  A trajectory stays lifecycle-Prefilling
+    /// while its KV rides the link, so the per-iteration delta of this
+    /// is subtracted from the Prefilling-residency delta to keep the
+    /// prefill-bound detector measuring the *engines*, not the hop.
+    kv_hop_booked_s: f64,
+    /// Portion of `kv_hop_booked_s` already charged to past iterations.
+    charged_kv_transfer_s: f64,
     /// Resource-plane view backing the elastic controller's bindings.
     rm: Option<ResourceManager>,
     engine_bindings: Vec<Option<u64>>,
     /// CpuSlot bindings backing the environment pool (elastic runs):
     /// one binding per concurrent environment, released on scale-down.
     env_bindings: Vec<u64>,
-    pending_provisions: usize,
+    /// Engines still warming up, per GPU class.
+    pending_provisions: BTreeMap<GpuClass, usize>,
     /// Environment-pool size target (elastic: scales with the live
     /// generation fleet).
     env_target: usize,
@@ -251,15 +290,31 @@ impl<'a> DriverCore<'a> {
             RewardDeploy::Serverless { .. } => 0,
         };
         // Elastic runs bind every engine through the resource plane so
-        // scale decisions contend for real capacity; the elastic class
-        // gets headroom up to the policy's max fleet size.
-        let (mut rm, engine_bindings, mut scaler) = match &cfg.elastic {
-            None => (None, vec![None; n_engines], None),
-            Some(policy) => {
-                let mut rm = ResourceManager::new();
-                for e in proxy.engines() {
-                    rm.add_pool(ResourceClass::Gpu(e.class), e.gpus);
-                }
+        // scale decisions contend for real capacity; each elastic class
+        // gets headroom up to its policy's max fleet size.
+        assert!(
+            cfg.elastic.is_none() || cfg.pd_elastic.is_none(),
+            "Scenario::elastic and Scenario::pd_elastic are mutually exclusive"
+        );
+        let elastic_classes: Vec<ElasticPolicy> = match (&cfg.elastic, &cfg.pd_elastic) {
+            (Some(p), None) => vec![p.clone()],
+            (None, Some(pp)) => {
+                assert!(
+                    cfg.pd.as_ref().is_some_and(|p| p.disaggregated),
+                    "pd_elastic requires a disaggregated Scenario::pd"
+                );
+                vec![pp.prefill.clone(), pp.decode.clone()]
+            }
+            _ => Vec::new(),
+        };
+        let (mut rm, engine_bindings) = if elastic_classes.is_empty() {
+            (None, vec![None; n_engines])
+        } else {
+            let mut rm = ResourceManager::new();
+            for e in proxy.engines() {
+                rm.add_pool(ResourceClass::Gpu(e.class), e.gpus);
+            }
+            for policy in &elastic_classes {
                 let have = proxy
                     .engines()
                     .iter()
@@ -271,33 +326,42 @@ impl<'a> DriverCore<'a> {
                         (policy.max_engines - have) * policy.gpus_per_engine,
                     );
                 }
-                let bindings: Vec<Option<u64>> = proxy
-                    .engines()
-                    .iter()
-                    .map(|e| {
-                        rm.bind(Role::ActorGen, &[ResourceClass::Gpu(e.class)], e.gpus)
-                            .ok()
-                            .map(|b| b.id)
-                    })
-                    .collect();
-                (Some(rm), bindings, Some(AutoScaler::new(policy.clone())))
             }
+            let bindings: Vec<Option<u64>> = proxy
+                .engines()
+                .iter()
+                .map(|e| {
+                    rm.bind(Role::ActorGen, &[ResourceClass::Gpu(e.class)], e.gpus)
+                        .ok()
+                        .map(|b| b.id)
+                })
+                .collect();
+            (Some(rm), bindings)
         };
+        let mut scaler = cfg.elastic.as_ref().map(|p| AutoScaler::new(p.clone()));
+        let mut pd_scaler = cfg.pd_elastic.as_ref().map(|p| PdAutoScaler::new(p.clone()));
         let env_target = cfg.concurrent_envs.unwrap_or(cfg.batch_size);
         // The environment pool is resource-plane-backed too (elastic
         // runs): one CpuSlot binding per concurrent environment, with
         // headroom for the target's upper clamp, so scale-down can
         // *release* slots instead of merely shrinking a number.
         let mut env_bindings = Vec::new();
-        if let (Some(rm), Some(sc)) = (rm.as_mut(), scaler.as_mut()) {
-            let base = cfg.concurrent_envs.unwrap_or(cfg.batch_size);
-            let lo = cfg.group_size.max(base / 2);
-            let hi = (2 * base).max(lo);
-            rm.add_pool(ResourceClass::CpuSlot, hi);
-            for _ in 0..env_target {
-                if let Ok(b) = rm.bind(Role::Environment, &[ResourceClass::CpuSlot], 1) {
-                    env_bindings.push(b.id);
-                    sc.report.env_slots_bound += 1;
+        {
+            let report = match (scaler.as_mut(), pd_scaler.as_mut()) {
+                (Some(s), _) => Some(&mut s.report),
+                (None, Some(s)) => Some(&mut s.report),
+                (None, None) => None,
+            };
+            if let (Some(rm), Some(report)) = (rm.as_mut(), report) {
+                let base = cfg.concurrent_envs.unwrap_or(cfg.batch_size);
+                let lo = cfg.group_size.max(base / 2);
+                let hi = (2 * base).max(lo);
+                rm.add_pool(ResourceClass::CpuSlot, hi);
+                for _ in 0..env_target {
+                    if let Ok(b) = rm.bind(Role::Environment, &[ResourceClass::CpuSlot], 1) {
+                        env_bindings.push(b.id);
+                        report.env_slots_bound += 1;
+                    }
                 }
             }
         }
@@ -312,6 +376,7 @@ impl<'a> DriverCore<'a> {
         };
         let pd = cfg.pd.as_ref().filter(|p| p.disaggregated).map(|p| PdState {
             cfg: p.clone(),
+            shared: shared_kv_link(p),
             pending: BTreeMap::new(),
         });
         DriverCore {
@@ -336,10 +401,15 @@ impl<'a> DriverCore<'a> {
             engine_up_since: vec![Some(0.0); n_engines],
             engine_alive_s: vec![0.0; n_engines],
             scaler,
+            pd_scaler,
+            charged_prefill_res_s: 0.0,
+            charged_kv_queue_s: 0.0,
+            kv_hop_booked_s: 0.0,
+            charged_kv_transfer_s: 0.0,
             rm,
             engine_bindings,
             env_bindings,
-            pending_provisions: 0,
+            pending_provisions: BTreeMap::new(),
             env_target,
             initial_engines: n_engines,
             acc_engine_failures: 0,
@@ -388,17 +458,44 @@ impl<'a> DriverCore<'a> {
     // ---- lifecycle funnel -------------------------------------------
 
     /// The single phase-change funnel: every trajectory transition goes
-    /// through here, gets validated against the lifecycle table, and
-    /// triggers the cross-cutting edge hooks (today: PD-state cleanup
-    /// on abort; the per-reason fault/redundancy bookkeeping hangs off
-    /// [`DriverCore::abort_mgr`]).
+    /// through here, gets validated against the lifecycle table (which
+    /// also books the left phase's residency at the current sim time),
+    /// and triggers the cross-cutting edge hooks (today: PD-state
+    /// cleanup on abort; the per-reason fault/redundancy bookkeeping
+    /// hangs off [`DriverCore::abort_mgr`]).
     fn transition(&mut self, mgr: usize, to: TrajPhase) {
-        let edge = self.lifecycle.transition(mgr, to);
+        let now = self.now();
+        let edge = self.lifecycle.transition_at(mgr, to, now);
         if edge.to == TrajPhase::Aborted {
             if let Some(pd) = self.pd.as_mut() {
-                pd.pending.remove(&TrajectoryId(mgr as u64));
+                if let Some(entry) = pd.pending.remove(&TrajectoryId(mgr as u64)) {
+                    if entry.phase == PdPhase::Transfer {
+                        // Aborted mid-hop: the admitted transfer still
+                        // occupies (and completes on) the link, and the
+                        // abort edge just booked the trajectory's
+                        // Prefilling residency — book the hop too so
+                        // the prefill-wait correction is not starved of
+                        // its matching subtraction.
+                        self.kv_hop_booked_s += entry.hop_s;
+                    }
+                }
             }
         }
+    }
+
+    /// The active elastic controller's report (single-pool or PD
+    /// split), if any — env-slot and retirement accounting is shared
+    /// between the two controller kinds.
+    fn elastic_report_mut(&mut self) -> Option<&mut ElasticReport> {
+        if let Some(s) = self.scaler.as_mut() {
+            return Some(&mut s.report);
+        }
+        self.pd_scaler.as_mut().map(|s| &mut s.report)
+    }
+
+    /// Is any elastic controller active?
+    fn elastic_on(&self) -> bool {
+        self.scaler.is_some() || self.pd_scaler.is_some()
     }
 
     // -----------------------------------------------------------------
@@ -423,7 +520,7 @@ impl<'a> DriverCore<'a> {
             let shape = profile.sample_trajectory(&mut self.rng);
             let m = EnvManagerSim::new(id, shape, self.version, g, self.now());
             self.mgrs.push(m);
-            let li = self.lifecycle.spawn();
+            let li = self.lifecycle.spawn_at(self.now());
             debug_assert_eq!(li, idx);
             self.groups.launch(g, id);
             self.schedule_reset(idx);
@@ -458,7 +555,7 @@ impl<'a> DriverCore<'a> {
     /// (elastic runs only; fault-only runs keep the configured target),
     /// and mirror it into the CpuSlot bindings.
     fn update_env_target(&mut self) {
-        if self.scaler.is_none() {
+        if !self.elastic_on() {
             return;
         }
         let base = self.cfg.concurrent_envs.unwrap_or(self.cfg.batch_size);
@@ -476,22 +573,27 @@ impl<'a> DriverCore<'a> {
     /// follow-up), and a grow binds more — dropped without queueing
     /// when the pool is exhausted, like engine provisioning.
     fn sync_env_slots(&mut self) {
-        let Some(rm) = self.rm.as_mut() else {
+        if self.rm.is_none() {
             return;
-        };
+        }
         while self.env_bindings.len() > self.env_target {
             let b = self.env_bindings.pop().expect("len checked");
-            rm.release(b);
-            if let Some(s) = self.scaler.as_mut() {
-                s.report.env_slots_released += 1;
+            self.rm.as_mut().expect("checked above").release(b);
+            if let Some(r) = self.elastic_report_mut() {
+                r.env_slots_released += 1;
             }
         }
         while self.env_bindings.len() < self.env_target {
-            match rm.bind(Role::Environment, &[ResourceClass::CpuSlot], 1) {
+            let bound = self
+                .rm
+                .as_mut()
+                .expect("checked above")
+                .bind(Role::Environment, &[ResourceClass::CpuSlot], 1);
+            match bound {
                 Ok(b) => {
                     self.env_bindings.push(b.id);
-                    if let Some(s) = self.scaler.as_mut() {
-                        s.report.env_slots_bound += 1;
+                    if let Some(r) = self.elastic_report_mut() {
+                        r.env_slots_bound += 1;
                     }
                 }
                 Err(_) => break,
@@ -554,6 +656,7 @@ impl<'a> DriverCore<'a> {
                     phase: PdPhase::Prefill,
                     prefill,
                     decode,
+                    hop_s: 0.0,
                 }
             });
             match entry.phase {
@@ -718,7 +821,7 @@ impl<'a> DriverCore<'a> {
         let shape = profile.sample_trajectory(&mut self.rng);
         let m = EnvManagerSim::new(id, shape, self.version, group, self.now());
         self.mgrs.push(m);
-        let li = self.lifecycle.spawn();
+        let li = self.lifecycle.spawn_at(self.now());
         debug_assert_eq!(li, idx);
         self.groups.launch(group, id);
         self.schedule_reset(idx);
@@ -875,10 +978,41 @@ impl<'a> DriverCore<'a> {
 
     // ---- elasticity plane -------------------------------------------
 
+    /// Count live engines of one class.
+    fn live_count_of(&self, class: GpuClass) -> usize {
+        self.live_engines_of(class).len()
+    }
+
+    /// Act on one controller decision for one class's pool.
+    fn apply_scale_decision(&mut self, decision: ScaleDecision, policy: &ElasticPolicy) {
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up(n) => {
+                for _ in 0..n {
+                    self.provision_engine(policy);
+                }
+            }
+            ScaleDecision::Down(n) => {
+                // Retire the least-loaded live engines of the class:
+                // minimal re-queued work.
+                let mut candidates = self.live_engines_of(policy.class);
+                candidates.sort_by_key(|&i| self.proxy.engines()[i].load());
+                let victims: Vec<usize> = candidates.into_iter().take(n).collect();
+                for e in victims {
+                    self.retire_engine(e);
+                }
+            }
+        }
+    }
+
     /// Feed the controller the just-completed iteration's cost and act
     /// on its decision through the resource plane.
     fn maybe_autoscale(&mut self) {
-        let Some(scaler) = self.scaler.as_mut() else {
+        if self.pd_scaler.is_some() {
+            self.maybe_autoscale_pd();
+            return;
+        }
+        let Some(policy) = self.scaler.as_ref().map(|s| s.policy.clone()) else {
             return;
         };
         let Some(last) = self.result.steps.last() else {
@@ -891,41 +1025,78 @@ impl<'a> DriverCore<'a> {
             train_s: last.breakdown.train_s,
             command_s: 0.0,
         };
-        let class = scaler.policy.class;
-        let live = self
+        let live = self.live_count_of(policy.class);
+        let provisioning = self.pending_provisions.get(&policy.class).copied().unwrap_or(0);
+        let decision = self
+            .scaler
+            .as_mut()
+            .expect("checked above")
+            .observe(&cost, live, provisioning);
+        self.apply_scale_decision(decision, &policy);
+    }
+
+    /// PD split controller: measure the iteration's per-class
+    /// bottleneck signals and resize the prefill and decode pools
+    /// independently.
+    fn maybe_autoscale_pd(&mut self) {
+        let Some(last) = self.result.steps.last() else {
+            return;
+        };
+        let (p_class, d_class, kv_queue_total) = match self.pd.as_ref() {
+            Some(pd) => (
+                pd.cfg.prefill_class,
+                pd.cfg.decode_class,
+                pd.shared.stats.queue_delay_total_s,
+            ),
+            None => return,
+        };
+        // Per-iteration deltas of the cumulative signals.
+        let prefill_res = self.lifecycle.stats().residency_s(TrajPhase::Prefilling);
+        let prefill_res_delta = (prefill_res - self.charged_prefill_res_s).max(0.0);
+        self.charged_prefill_res_s = prefill_res;
+        let kv_queue = (kv_queue_total - self.charged_kv_queue_s).max(0.0);
+        self.charged_kv_queue_s = kv_queue_total;
+        let kv_transfer = (self.kv_hop_booked_s - self.charged_kv_transfer_s).max(0.0);
+        self.charged_kv_transfer_s = self.kv_hop_booked_s;
+        // Prefilling residency includes the KV hop (the lifecycle
+        // phase only advances on KvDone): subtract the delivered hops'
+        // end-to-end time so a congested link cannot masquerade as
+        // prefill-engine pressure and grow the wrong pool.
+        let prefill_wait = (prefill_res_delta - kv_transfer).max(0.0);
+        // Outstanding decode tokens on the decode pool right now.
+        let backlog: f64 = self
             .proxy
             .engines()
             .iter()
             .enumerate()
-            .filter(|(i, e)| e.class == class && !self.engine_down[*i])
-            .count();
-        match scaler.observe(&cost, live, self.pending_provisions) {
-            ScaleDecision::Hold => {}
-            ScaleDecision::Up(n) => {
-                for _ in 0..n {
-                    self.provision_engine();
-                }
-            }
-            ScaleDecision::Down(n) => {
-                // Retire the least-loaded live engines of the class:
-                // minimal re-queued work.
-                let mut candidates = self.live_engines_of(class);
-                candidates.sort_by_key(|&i| self.proxy.engines()[i].load());
-                let victims: Vec<usize> = candidates.into_iter().take(n).collect();
-                for e in victims {
-                    self.retire_engine(e);
-                }
-            }
-        }
+            .filter(|(i, e)| e.class == d_class && !self.engine_down[*i])
+            .map(|(_, e)| e.backlog_tokens())
+            .sum();
+        let sig = PdSignals {
+            get_batch_wait_s: last.breakdown.get_batch_wait_s,
+            train_s: last.breakdown.train_s,
+            prefill_wait_s: prefill_wait,
+            decode_backlog_tokens: backlog,
+            kv_queue_delay_s: kv_queue,
+        };
+        let live_p = self.live_count_of(p_class);
+        let live_d = self.live_count_of(d_class);
+        let prov_p = self.pending_provisions.get(&p_class).copied().unwrap_or(0);
+        let prov_d = self.pending_provisions.get(&d_class).copied().unwrap_or(0);
+        let scaler = self.pd_scaler.as_mut().expect("pd autoscale without scaler");
+        let (dp, dd) = scaler.observe(&sig, live_p, live_d, prov_p, prov_d);
+        let (prefill_policy, decode_policy) = {
+            let s = self.pd_scaler.as_ref().expect("checked above");
+            (s.policy.prefill.clone(), s.policy.decode.clone())
+        };
+        self.apply_scale_decision(dp, &prefill_policy);
+        self.apply_scale_decision(dd, &decode_policy);
     }
 
-    /// Start warming one engine: bind capacity now, join the fleet
-    /// after the provision delay (boot + weight pull).
-    fn provision_engine(&mut self) {
-        let Some(scaler) = self.scaler.as_ref() else {
-            return;
-        };
-        let policy = scaler.policy.clone();
+    /// Start warming one engine of `policy`'s class: bind capacity
+    /// now, join the fleet after the provision delay (boot + weight
+    /// pull).
+    fn provision_engine(&mut self, policy: &ElasticPolicy) {
         let binding = match self.rm.as_mut() {
             Some(rm) => {
                 match rm.bind(
@@ -942,26 +1113,41 @@ impl<'a> DriverCore<'a> {
             None => None,
         };
         let delay = policy.provision_delay_s(&self.cfg.model);
-        if let Some(s) = self.scaler.as_mut() {
-            s.report.provision_wait_s += delay;
+        if let Some(r) = self.elastic_report_mut() {
+            r.provision_wait_s += delay;
         }
-        self.pending_provisions += 1;
-        self.q.schedule_in(delay, Ev::EngineProvisioned { binding });
+        *self.pending_provisions.entry(policy.class).or_insert(0) += 1;
+        self.q.schedule_in(
+            delay,
+            Ev::EngineProvisioned {
+                binding,
+                class: policy.class,
+                gpus: policy.gpus_per_engine,
+                max_batch: policy.max_batch,
+            },
+        );
     }
 
-    fn on_engine_provisioned(&mut self, binding: Option<u64>) {
-        self.pending_provisions = self.pending_provisions.saturating_sub(1);
-        let Some(scaler) = self.scaler.as_mut() else {
+    fn on_engine_provisioned(
+        &mut self,
+        binding: Option<u64>,
+        class: GpuClass,
+        gpus: usize,
+        max_batch: usize,
+    ) {
+        if let Some(n) = self.pending_provisions.get_mut(&class) {
+            *n = n.saturating_sub(1);
+        }
+        let Some(r) = self.elastic_report_mut() else {
             return;
         };
-        let policy = scaler.policy.clone();
-        scaler.report.engines_added += 1;
+        r.engines_added += 1;
         let e = self.proxy.add_engine(EngineSim::new(
             self.engine_down.len() as u64,
-            policy.class,
-            policy.gpus_per_engine,
+            class,
+            gpus,
             self.cfg.model.clone(),
-            policy.max_batch,
+            max_batch,
         ));
         self.engine_busy.push(false);
         self.engine_down.push(false);
@@ -989,8 +1175,8 @@ impl<'a> DriverCore<'a> {
         }
         let (reqs, lost) = self.take_down_engine(e);
         self.engine_retired[e] = true;
-        if let Some(s) = self.scaler.as_mut() {
-            s.report.engines_retired += 1;
+        if let Some(r) = self.elastic_report_mut() {
+            r.engines_retired += 1;
         }
         if let (Some(rm), Some(b)) = (self.rm.as_mut(), self.engine_bindings[e].take()) {
             rm.release(b);
@@ -1263,17 +1449,21 @@ impl<'a> DriverCore<'a> {
             }
             return;
         }
+        let now = self.now();
         let mut kv_delay = None;
         if let Some(pd) = self.pd.as_mut() {
             match pd.pending.get(&tid).map(|e| e.phase) {
                 Some(PdPhase::Prefill) => {
                     let entry = pd.pending.get_mut(&tid).expect("entry just seen");
                     entry.phase = PdPhase::Transfer;
-                    kv_delay = Some(kv_transfer_s(
-                        &pd.cfg,
-                        &self.cfg.model,
-                        entry.prefill.new_tokens,
-                    ));
+                    // Ship the KV over the *contended* link: an
+                    // admission wave's worth of prefills completes in
+                    // one engine step, so these transfers queue on the
+                    // shared slots instead of overlapping for free.
+                    let bytes = kv_bytes(&self.cfg.model, entry.prefill.new_tokens);
+                    let grant = pd.shared.acquire(now, bytes);
+                    entry.hop_s = grant.done_s - now;
+                    kv_delay = Some(entry.hop_s);
                 }
                 // A completion for a transfer-phase entry cannot arrive
                 // (nothing is on an engine); ignore defensively.
@@ -1340,6 +1530,11 @@ impl<'a> DriverCore<'a> {
                 return;
             };
             entry.phase = PdPhase::Decode;
+            // The hop has delivered: book its duration now, the same
+            // event whose dispatch moves the trajectory out of
+            // Prefilling, so the prefill-wait correction lands in the
+            // same iteration as the residency it corrects.
+            self.kv_hop_booked_s += entry.hop_s;
             entry.decode.clone()
         };
         self.dispatch(decode);
@@ -1412,7 +1607,12 @@ impl<'a> DriverCore<'a> {
                 }
                 Ev::EngineRecovered { engine } => self.revive_engine(engine),
                 Ev::Scheduled { idx } => self.on_scheduled(idx),
-                Ev::EngineProvisioned { binding } => self.on_engine_provisioned(binding),
+                Ev::EngineProvisioned {
+                    binding,
+                    class,
+                    gpus,
+                    max_batch,
+                } => self.on_engine_provisioned(binding, class, gpus, max_batch),
                 Ev::KvDone { tid } => self.on_kv_done(tid),
                 Ev::RewardDone { mgr } => self.on_reward_done(mgr),
                 Ev::TrainDone => {
@@ -1439,7 +1639,7 @@ impl<'a> DriverCore<'a> {
         self.result.total_time_s = total;
         let n_engines = self.engine_busy.len() as f64;
         let busy: f64 = self.proxy.engines().iter().map(|e| e.stats.busy_s).sum();
-        if self.fault_on || self.scaler.is_some() {
+        if self.fault_on || self.elastic_on() {
             // Engines churned: utilization over engine-*alive* seconds,
             // and the fault/elastic reports become part of the result.
             let mut alive: f64 = self.engine_alive_s.iter().sum();
@@ -1459,6 +1659,12 @@ impl<'a> DriverCore<'a> {
         self.result.faults = self.fault_report;
         if let Some(s) = &self.scaler {
             self.result.elastic = s.report;
+        }
+        if let Some(s) = &self.pd_scaler {
+            self.result.elastic = s.report;
+        }
+        if let Some(pd) = &self.pd {
+            self.result.kv_link = pd.shared.stats.report();
         }
         self.result.reward_util = match &self.cfg.reward {
             RewardDeploy::DedicatedGpus { gpus, .. } => {
@@ -1650,7 +1856,11 @@ mod tests {
     #[test]
     fn route_policies_run_and_stay_deterministic() {
         use crate::proxy::RouteKind;
-        for kind in [RouteKind::LeastLoaded, RouteKind::DomainFair] {
+        for kind in [
+            RouteKind::LeastLoaded,
+            RouteKind::DomainFair,
+            RouteKind::TokenBacklog,
+        ] {
             let mut cfg = scenario(Mode::RollArt);
             cfg.route = kind;
             let a = run(&cfg);
@@ -1658,5 +1868,76 @@ mod tests {
             assert_eq!(a.steps.len(), 3, "{kind:?}");
             assert_eq!(a.mean_step_time(), b.mean_step_time(), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn pd_run_reports_kv_link_activity() {
+        let r = run(&pd_scenario(Mode::RollArt));
+        assert!(r.kv_link.transfers > 0, "{:?}", r.kv_link);
+        // Non-PD runs never touch the link.
+        let plain = run(&scenario(Mode::RollArt));
+        assert_eq!(plain.kv_link.transfers, 0);
+        assert_eq!(plain.kv_link.queue_delay_total_s, 0.0);
+    }
+
+    #[test]
+    fn pd_run_records_phase_residency() {
+        let (_, lc) = run_traced(&pd_scenario(Mode::RollArt));
+        // Every observable phase of the PD chain accumulated residency.
+        for phase in [TrajPhase::Prefilling, TrajPhase::Decoding, TrajPhase::EnvStep] {
+            assert!(
+                lc.residency_s(phase) > 0.0,
+                "{phase:?}: {:?}",
+                lc.residency_totals
+            );
+        }
+        assert!(lc.mean_residency_s(TrajPhase::Decoding) > 0.0);
+    }
+
+    #[test]
+    fn pd_pools_scale_independently() {
+        use crate::elastic::PdElasticPolicy;
+        // 1P2D so the decode pool has shrink slack and the prefill
+        // pool sits at its minimum.
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.iterations = 4;
+        cfg.pd = Some(PdScenario {
+            gpus_per_node: 2,
+            max_batch: 8,
+            ..PdScenario::xpyd(1, 2)
+        });
+        let mut pol = PdElasticPolicy::for_pd(cfg.pd.as_ref().unwrap());
+        // Force a decode-bound regime: any backlog trips the decode
+        // detector, the prefill detector never fires, and every
+        // iteration is rollout-bound.
+        pol.decode_backlog_per_engine = -1.0;
+        pol.prefill_wait_per_engine_s = f64::INFINITY;
+        pol.kv_bound_ratio = f64::INFINITY;
+        pol.decode.scale_up_wait_ratio = 1e-6;
+        pol.decode.scale_down_wait_ratio = 1e-7;
+        pol.decode.cooldown_steps = 0;
+        pol.prefill.cooldown_steps = 0;
+        cfg.pd_elastic = Some(pol);
+        let r = run(&cfg);
+        assert_eq!(r.steps.len(), 4);
+        // The split controller acted on the decode pool but not the
+        // prefill pool: an independent P-vs-D decision.
+        assert!(r.elastic.decode_scale_ups > 0, "{:?}", r.elastic);
+        assert_eq!(r.elastic.prefill_scale_ups, 0, "{:?}", r.elastic);
+        // Determinism holds for the split controller too.
+        let again = run(&cfg);
+        assert_eq!(r.elastic, again.elastic);
+        assert_eq!(r.mean_step_time(), again.mean_step_time());
+    }
+
+    #[test]
+    #[should_panic(expected = "pd_elastic requires a disaggregated")]
+    fn pd_elastic_requires_disaggregated_pd() {
+        use crate::elastic::PdElasticPolicy;
+        let mut cfg = scenario(Mode::RollArt);
+        let pd = PdScenario::xpyd(1, 1);
+        cfg.pd_elastic = Some(PdElasticPolicy::for_pd(&pd));
+        // No Scenario::pd at all: the driver must refuse.
+        run(&cfg);
     }
 }

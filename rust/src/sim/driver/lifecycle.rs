@@ -26,12 +26,16 @@
 //!
 //! The [`LifecycleTracker`] is the driver's single funnel for phase
 //! changes: it validates each edge against the table above, counts
-//! edges, and records (rather than panics on) violations so a modeling
-//! bug surfaces as a failed invariant check, not a poisoned run.  The
-//! fault-recovery and autoscaler hooks that used to be scattered
-//! through the monolithic driver hang off these edges in
-//! [`super::core`].
+//! edges, measures *phase residency* (time spent in each phase, per
+//! visit), and records (rather than panics on) violations so a
+//! modeling bug surfaces as a failed invariant check, not a poisoned
+//! run.  The fault-recovery and autoscaler hooks that used to be
+//! scattered through the monolithic driver hang off these edges in
+//! [`super::core`]; the residency histograms feed the `fig_phases`
+//! bench (a Fig 5-style per-mode breakdown) and the per-class PD
+//! elastic controller ([`crate::elastic::PdAutoScaler`]).
 
+use crate::metrics::Histogram;
 use std::collections::BTreeMap;
 
 /// Driver-visible phase of one trajectory.
@@ -114,6 +118,16 @@ pub struct LifecycleStats {
     /// Transitions that violated the table (must be 0 in a correct
     /// driver; asserted by the driver's invariant tests).
     pub violations: u64,
+    /// Per-visit phase-residency samples: every time a trajectory
+    /// *leaves* a phase, the seconds it spent there are recorded under
+    /// that phase (terminal phases are never left, so they have no
+    /// residency).  Mutable access because [`Histogram`] quantiles
+    /// sort lazily.
+    pub residency: BTreeMap<TrajPhase, Histogram>,
+    /// Total residency seconds per phase (cheap running sums; the
+    /// per-iteration deltas drive the PD elastic controller's
+    /// prefill-bound detector).
+    pub residency_totals: BTreeMap<TrajPhase, f64>,
 }
 
 impl LifecycleStats {
@@ -130,12 +144,27 @@ impl LifecycleStats {
             .map(|(_, n)| n)
             .sum()
     }
+
+    /// Total seconds trajectories spent in `phase` (completed visits).
+    pub fn residency_s(&self, phase: TrajPhase) -> f64 {
+        self.residency_totals.get(&phase).copied().unwrap_or(0.0)
+    }
+
+    /// Mean seconds per completed visit to `phase`.
+    pub fn mean_residency_s(&self, phase: TrajPhase) -> f64 {
+        match self.residency.get(&phase) {
+            Some(h) if !h.is_empty() => h.mean(),
+            _ => 0.0,
+        }
+    }
 }
 
 /// Phase registry for every trajectory of one run.
 #[derive(Clone, Debug, Default)]
 pub struct LifecycleTracker {
     phases: Vec<TrajPhase>,
+    /// Simulation time each trajectory entered its current phase.
+    entered_at: Vec<f64>,
     stats: LifecycleStats,
 }
 
@@ -144,10 +173,12 @@ impl LifecycleTracker {
         Self::default()
     }
 
-    /// Register a freshly launched trajectory (starts Queued).  Returns
-    /// its index, which the driver keeps equal to the mgr index.
-    pub fn spawn(&mut self) -> usize {
+    /// Register a trajectory launched at simulation time `now` (starts
+    /// Queued).  Returns its index, which the driver keeps equal to
+    /// the mgr index.
+    pub fn spawn_at(&mut self, now: f64) -> usize {
         self.phases.push(TrajPhase::Queued);
+        self.entered_at.push(now);
         self.stats.spawned += 1;
         self.phases.len() - 1
     }
@@ -164,18 +195,28 @@ impl LifecycleTracker {
         self.phases.is_empty()
     }
 
-    /// Move trajectory `idx` to `to`, validating the edge.  Self-loops
-    /// are counted but legal; terminal-exit or table-violating edges
-    /// increment `violations`.  The move is applied either way so the
-    /// run stays deterministic.
-    pub fn transition(&mut self, idx: usize, to: TrajPhase) -> LifecycleEdge {
+    /// Move trajectory `idx` to `to` at simulation time `now`,
+    /// validating the edge and recording the residency of the phase
+    /// being left.  Self-loops are counted but legal (the segment
+    /// still books under the phase); terminal-exit or table-violating
+    /// edges increment `violations`.  The move is applied either way
+    /// so the run stays deterministic.
+    pub fn transition_at(&mut self, idx: usize, to: TrajPhase, now: f64) -> LifecycleEdge {
         let from = self.phases[idx];
         let legal = from.can_transition(to);
         if !legal {
             self.stats.violations += 1;
         }
         *self.stats.edges.entry((from, to)).or_insert(0) += 1;
+        let dwell = (now - self.entered_at[idx]).max(0.0);
+        self.stats
+            .residency
+            .entry(from)
+            .or_default()
+            .record(dwell);
+        *self.stats.residency_totals.entry(from).or_insert(0.0) += dwell;
         self.phases[idx] = to;
+        self.entered_at[idx] = now;
         LifecycleEdge { from, to, legal }
     }
 
@@ -196,9 +237,9 @@ mod tests {
     #[test]
     fn happy_path_is_legal() {
         let mut t = LifecycleTracker::new();
-        let i = t.spawn();
+        let i = t.spawn_at(0.0);
         for to in [Prefilling, EnvStep, Prefilling, Decoding, EnvStep, Reward, Deposited] {
-            assert!(t.transition(i, to).legal, "{to:?}");
+            assert!(t.transition_at(i, to, 0.0).legal, "{to:?}");
         }
         assert_eq!(t.stats().violations, 0);
         assert_eq!(t.phase(i), Deposited);
@@ -209,9 +250,9 @@ mod tests {
     #[test]
     fn pd_path_observes_the_phase_boundary() {
         let mut t = LifecycleTracker::new();
-        let i = t.spawn();
+        let i = t.spawn_at(0.0);
         for to in [Prefilling, Decoding, EnvStep, Reward, Deposited] {
-            assert!(t.transition(i, to).legal, "{to:?}");
+            assert!(t.transition_at(i, to, 0.0).legal, "{to:?}");
         }
         assert_eq!(t.stats().violations, 0);
     }
@@ -219,30 +260,30 @@ mod tests {
     #[test]
     fn suspend_and_recovery_edges() {
         let mut t = LifecycleTracker::new();
-        let i = t.spawn();
-        assert!(t.transition(i, Suspended).legal, "queued but proxy suspended");
-        assert!(t.transition(i, Prefilling).legal);
-        assert!(t.transition(i, Recovering).legal, "engine crashed");
-        assert!(t.transition(i, Suspended).legal, "fleet fully down");
-        assert!(t.transition(i, Suspended).legal, "self-loop: still down");
-        assert!(t.transition(i, Decoding).legal, "PD decode half re-queued");
-        assert!(t.transition(i, Aborted).legal);
+        let i = t.spawn_at(0.0);
+        assert!(t.transition_at(i, Suspended, 0.0).legal, "queued but proxy suspended");
+        assert!(t.transition_at(i, Prefilling, 0.0).legal);
+        assert!(t.transition_at(i, Recovering, 0.0).legal, "engine crashed");
+        assert!(t.transition_at(i, Suspended, 0.0).legal, "fleet fully down");
+        assert!(t.transition_at(i, Suspended, 0.0).legal, "self-loop: still down");
+        assert!(t.transition_at(i, Decoding, 0.0).legal, "PD decode half re-queued");
+        assert!(t.transition_at(i, Aborted, 0.0).legal);
         assert_eq!(t.stats().violations, 0);
         // A turn boundary crossing a weight-sync suspend parks too.
-        let j = t.spawn();
-        t.transition(j, Prefilling);
-        t.transition(j, EnvStep);
-        assert!(t.transition(j, Suspended).legal, "next turn parks mid-sync");
-        assert!(t.transition(j, Prefilling).legal, "resumes on sync done");
+        let j = t.spawn_at(0.0);
+        t.transition_at(j, Prefilling, 0.0);
+        t.transition_at(j, EnvStep, 0.0);
+        assert!(t.transition_at(j, Suspended, 0.0).legal, "next turn parks mid-sync");
+        assert!(t.transition_at(j, Prefilling, 0.0).legal, "resumes on sync done");
         assert_eq!(t.stats().violations, 0);
     }
 
     #[test]
     fn terminal_phases_reject_exits() {
         let mut t = LifecycleTracker::new();
-        let i = t.spawn();
-        t.transition(i, Aborted);
-        let e = t.transition(i, Prefilling);
+        let i = t.spawn_at(0.0);
+        t.transition_at(i, Aborted, 0.0);
+        let e = t.transition_at(i, Prefilling, 0.0);
         assert!(!e.legal);
         assert_eq!(t.stats().violations, 1);
         // The move is still applied (deterministic continue).
@@ -252,14 +293,48 @@ mod tests {
     #[test]
     fn illegal_shortcuts_are_recorded() {
         let mut t = LifecycleTracker::new();
-        let i = t.spawn();
-        assert!(!t.transition(i, Reward).legal, "Queued cannot skip to Reward");
-        let j = t.spawn();
-        t.transition(j, Prefilling);
-        t.transition(j, EnvStep);
-        assert!(!t.transition(j, Decoding).legal, "EnvStep cannot re-enter Decoding");
+        let i = t.spawn_at(0.0);
+        assert!(!t.transition_at(i, Reward, 0.0).legal, "Queued cannot skip to Reward");
+        let j = t.spawn_at(0.0);
+        t.transition_at(j, Prefilling, 0.0);
+        t.transition_at(j, EnvStep, 0.0);
+        assert!(!t.transition_at(j, Decoding, 0.0).legal, "EnvStep cannot re-enter Decoding");
         assert_eq!(t.stats().violations, 2);
         assert_eq!(t.stats().spawned, 2);
+    }
+
+    #[test]
+    fn residency_accumulates_per_phase_visit() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn_at(1.0);
+        t.transition_at(i, Prefilling, 3.0); // Queued held 2 s
+        t.transition_at(i, Decoding, 8.0); // Prefilling held 5 s
+        t.transition_at(i, EnvStep, 8.5); // Decoding held 0.5 s
+        t.transition_at(i, Prefilling, 10.0); // next turn
+        t.transition_at(i, Aborted, 14.0); // Prefilling held 4 s
+        let s = t.stats();
+        assert_eq!(s.residency_s(Queued), 2.0);
+        assert_eq!(s.residency_s(Prefilling), 9.0);
+        assert_eq!(s.residency_s(Decoding), 0.5);
+        assert_eq!(s.residency_s(EnvStep), 1.5);
+        assert_eq!(s.residency_s(Aborted), 0.0, "terminal: never left");
+        // Two Prefilling visits, mean 4.5 s each.
+        assert_eq!(s.mean_residency_s(Prefilling), 4.5);
+        let mut stats = t.into_stats();
+        let h = stats.residency.get_mut(&Prefilling).unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.quantile(1.0), 5.0);
+    }
+
+    #[test]
+    fn residency_self_loop_books_under_the_phase() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn_at(0.0);
+        t.transition_at(i, Suspended, 0.0);
+        t.transition_at(i, Suspended, 2.0); // re-parked: still suspended
+        t.transition_at(i, Prefilling, 3.0);
+        assert_eq!(t.stats().residency_s(Suspended), 3.0);
+        assert_eq!(t.stats().residency.get(&Suspended).unwrap().len(), 2);
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! * the driver core splits every generation request into a prefill
 //!   half pinned to the prefill pool and a decode half pinned to the
 //!   decode pool ([`split_request`]), with the KV cache shipped over
-//!   the configured [`Link`] in between ([`kv_transfer_s`]);
+//!   the configured [`Link`] in between — as a *contended*
+//!   [`SharedLink`] with [`PdScenario::kv_slots`] FIFO transfer slots,
+//!   so a high-batch admission wave's simultaneous KV transfers queue
+//!   instead of overlapping for free ([`kv_transfer_s`] remains the
+//!   uncontended single-transfer estimate);
 //! * because the halves flow through the ordinary dispatch/re-queue
 //!   machinery, PD composes with everything the driver already does: a
 //!   prefill-pool engine crash drains and re-queues its in-flight
@@ -31,7 +35,7 @@
 
 use crate::hw::GpuClass;
 use crate::llm::LlmSpec;
-use crate::net::{Link, NVLINK_INTRA};
+use crate::net::{Link, SharedLink, SharedLinkStats, NVLINK_INTRA};
 use crate::proxy::pd::colocation_interference;
 use crate::proxy::{EngineSim, SimRequest, StepOutcome};
 use crate::rl::TrajectoryId;
@@ -51,6 +55,10 @@ pub struct PdScenario {
     pub decode_class: GpuClass,
     /// Link carrying the KV cache from prefill to decode pool.
     pub kv_link: Link,
+    /// Concurrent transfer slots on the KV link (NIC queues / NVLink
+    /// channels).  Transfers beyond this queue FIFO — the shared-
+    /// bandwidth contention model (see [`SharedLink`]).
+    pub kv_slots: usize,
     /// Continuous-batching slots per engine.
     pub max_batch: usize,
     /// True: split phases across the two pools.  False: build the
@@ -72,6 +80,7 @@ impl PdScenario {
             prefill_class: GpuClass::H800,
             decode_class: GpuClass::H20,
             kv_link: NVLINK_INTRA.clone(),
+            kv_slots: 4,
             max_batch: 128,
             disaggregated: true,
         }
@@ -129,12 +138,24 @@ pub fn split_request(req: &SimRequest) -> (SimRequest, SimRequest) {
     (prefill, decode)
 }
 
-/// Time to ship one request's freshly prefilled KV to the decode pool.
-/// Under prefix caching only the *new* tokens' KV moves; earlier turns
-/// already live on the decode side.
+/// Bytes of KV cache one request ships after prefill.  Under prefix
+/// caching only the *new* tokens' KV moves; earlier turns already live
+/// on the decode side.
+pub fn kv_bytes(model: &LlmSpec, new_tokens: f64) -> f64 {
+    new_tokens * model.kv_bytes_per_token()
+}
+
+/// Uncontended single-transfer estimate of one request's KV hop (the
+/// queueing-free lower bound; the drivers route actual transfers
+/// through a [`SharedLink`] built by [`shared_kv_link`]).
 pub fn kv_transfer_s(pd: &PdScenario, model: &LlmSpec, new_tokens: f64) -> f64 {
-    pd.kv_link
-        .transfer_time(new_tokens * model.kv_bytes_per_token())
+    pd.kv_link.transfer_time(kv_bytes(model, new_tokens))
+}
+
+/// The contended KV link of one deployment: the configured [`Link`]
+/// behind [`PdScenario::kv_slots`] FIFO transfer slots.
+pub fn shared_kv_link(pd: &PdScenario) -> SharedLink {
+    SharedLink::new(pd.kv_link.clone(), pd.kv_slots)
 }
 
 /// Build the engine fleet a [`PdScenario`] describes.  Engine ids start
@@ -205,7 +226,20 @@ pub fn rollout_makespan(
     prompt: f64,
     decode: f64,
 ) -> f64 {
+    rollout_makespan_traced(model, pd, batch, prompt, decode).0
+}
+
+/// [`rollout_makespan`] plus the KV link's contention statistics —
+/// the table5 bench prints the queue-delay percentiles from these.
+pub fn rollout_makespan_traced(
+    model: &LlmSpec,
+    pd: &PdScenario,
+    batch: usize,
+    prompt: f64,
+    decode: f64,
+) -> (f64, SharedLinkStats) {
     assert!(batch > 0);
+    let mut kv_link = shared_kv_link(pd);
     let mut engines = build_engines(pd, model);
     let n = engines.len();
     let mut busy = vec![false; n];
@@ -267,9 +301,12 @@ pub fn rollout_makespan(
                 busy[engine] = false;
                 for (tid, _ctx) in completed {
                     if pd.disaggregated && decode_half.contains_key(&tid) {
-                        // Prefill half finished: ship the KV.
-                        let dt = kv_transfer_s(pd, model, prompt);
-                        q.schedule_in(dt, Ev::Kv { tid });
+                        // Prefill half finished: ship the KV over the
+                        // contended link.  A whole admission wave
+                        // completes at once, so these transfers queue
+                        // on the shared transfer slots.
+                        let grant = kv_link.acquire(t.as_secs(), kv_bytes(model, prompt));
+                        q.schedule_in(grant.done_s - t.as_secs(), Ev::Kv { tid });
                     } else {
                         done += 1;
                         finished_at = t.as_secs();
@@ -286,7 +323,7 @@ pub fn rollout_makespan(
         }
     }
     assert_eq!(done, batch, "every request must finish");
-    finished_at
+    (finished_at, kv_link.stats)
 }
 
 #[cfg(test)]
@@ -386,6 +423,49 @@ mod tests {
             assert!(a_gap > 0.0, "{x}P{y}D analytic MoE advantage {a_gap}");
             assert!(d_gap > 0.0, "{x}P{y}D des MoE advantage {d_gap}");
         }
+    }
+
+    #[test]
+    fn uncontended_shared_hop_matches_the_single_transfer_estimate() {
+        // With an idle link, the contended model reduces exactly to
+        // the classic Link::transfer_time lower bound.
+        let pd = PdScenario::xpyd(1, 1);
+        let mut link = shared_kv_link(&pd);
+        let est = kv_transfer_s(&pd, &QWEN3_32B, 5_000.0);
+        let g = link.acquire(2.0, kv_bytes(&QWEN3_32B, 5_000.0));
+        assert!((g.done_s - 2.0 - est).abs() < 1e-12, "{g:?} vs {est}");
+        assert_eq!(g.queue_delay_s, 0.0);
+    }
+
+    #[test]
+    fn high_batch_kv_transfers_queue_on_the_shared_link() {
+        // A prefill admission wave completes ~max_batch requests at
+        // once; their KV transfers burst onto kv_slots FIFO slots, so
+        // contention must be visible at the Table 5 batch size.
+        let (_, stats) = rollout_makespan_traced(
+            &QWEN3_32B,
+            &PdScenario::xpyd(2, 2),
+            BATCH,
+            PROMPT,
+            DECODE,
+        );
+        assert_eq!(stats.transfers, BATCH as u64);
+        assert!(stats.queued_transfers > 0, "{stats:?}");
+        assert!(stats.queue_delay_max_s > 0.0, "{stats:?}");
+        assert!(stats.queue_delay_total_s > 0.0, "{stats:?}");
+    }
+
+    #[test]
+    fn more_kv_slots_mean_less_queueing() {
+        let mut wide = PdScenario::xpyd(2, 2);
+        wide.kv_slots = 64;
+        let narrow = PdScenario::xpyd(2, 2); // 4 slots
+        let (_, sw) = rollout_makespan_traced(&QWEN3_32B, &wide, BATCH, PROMPT, DECODE);
+        let (_, sn) = rollout_makespan_traced(&QWEN3_32B, &narrow, BATCH, PROMPT, DECODE);
+        assert!(
+            sw.queue_delay_total_s < sn.queue_delay_total_s,
+            "wide {sw:?} vs narrow {sn:?}"
+        );
     }
 
     #[test]

@@ -25,6 +25,46 @@ use crate::sim::{Mode, Scenario};
 ///
 /// Default methods encode the baseline (non-RollArt) behaviour so a new
 /// policy only overrides what it changes.
+///
+/// # Writing your own scheduling policy
+///
+/// Implement the trait and override only the decisions your mode
+/// changes.  A "RollArt but with a hard α=0 freshness gate" variant —
+/// continuous rollout, group-atomic deposits, and an admission gate
+/// that aborts any trajectory whose start version is not *current*:
+///
+/// ```
+/// use rollart::env::TaskDomain;
+/// use rollart::rl::{Trajectory, TrajectoryId, Version};
+/// use rollart::sim::driver::SchedPolicy;
+///
+/// struct FreshOnly;
+/// impl SchedPolicy for FreshOnly {
+///     fn name(&self) -> &'static str {
+///         "fresh-only"
+///     }
+///     fn continuous_rollout(&self) -> bool {
+///         true
+///     }
+///     fn group_atomic_deposits(&self) -> bool {
+///         true
+///     }
+///     fn admit_turn(&self, traj: &Trajectory, current: Version, _alpha: u64) -> bool {
+///         traj.version_started == current
+///     }
+/// }
+///
+/// let p = FreshOnly;
+/// let traj = Trajectory::new(TrajectoryId(0), TaskDomain::Swe, Version(3));
+/// assert!(p.admit_turn(&traj, Version(3), 1));
+/// assert!(!p.admit_turn(&traj, Version(4), 1), "one version behind: abort");
+/// // Decisions not overridden keep the baseline defaults.
+/// assert!(!p.sync_blocking_after_train());
+/// ```
+///
+/// The driver core consults exactly these methods — wiring a new
+/// policy in means extending [`policy_for`] (or constructing the
+/// driver with it directly); the event loop itself never changes.
 pub trait SchedPolicy {
     fn name(&self) -> &'static str;
 

@@ -29,13 +29,14 @@ pub mod sync_driver;
 pub const TRAIN_OVERHEAD: f64 = 8.0;
 
 use crate::buffer::StalenessPolicy;
-use crate::elastic::{ElasticPolicy, ElasticReport};
+use crate::elastic::{ElasticPolicy, ElasticReport, PdElasticPolicy};
 use crate::env::TaskDomain;
 use crate::envpool::EnvPoolConfig;
 use crate::fault::{FaultProfile, FaultReport};
 use crate::hw::GpuClass;
 use crate::llm::LlmSpec;
 use crate::metrics::StepBreakdown;
+use crate::net::KvLinkReport;
 use crate::proxy::RouteKind;
 use crate::simkit::dist::Dist;
 
@@ -133,13 +134,20 @@ pub struct Scenario {
     /// results are bit-identical to a fault-free build.
     pub fault: FaultProfile,
     /// Optional autoscaling controller over the generation pool.
+    /// Mutually exclusive with `pd_elastic`.
     pub elastic: Option<ElasticPolicy>,
     /// Prefill-decode disaggregation as a simulated execution mode
     /// (§6.3): when set, the `xPyD` deployment replaces `gen_pools`
     /// and every generation request is split into a prefill half and a
-    /// decode half with the KV cache shipped between the pools.  See
-    /// [`driver::pd::PdScenario`].
+    /// decode half with the KV cache shipped between the pools over a
+    /// *contended* shared link.  See [`driver::pd::PdScenario`].
     pub pd: Option<driver::pd::PdScenario>,
+    /// Split autoscaling controller for a PD deployment: resizes the
+    /// prefill and decode pools *independently* on per-class bottleneck
+    /// signals (prefill queue wait / decode token backlog / KV-link
+    /// queue delay).  Requires a disaggregated `pd`; mutually exclusive
+    /// with `elastic`.
+    pub pd_elastic: Option<PdElasticPolicy>,
     /// Dispatch discipline of the generation proxy (R1 affinity
     /// routing by default; see [`crate::proxy::route`]).
     pub route: RouteKind,
@@ -203,6 +211,7 @@ impl Scenario {
             fault: FaultProfile::none(),
             elastic: None,
             pd: None,
+            pd_elastic: None,
             route: RouteKind::Affinity,
         }
     }
@@ -216,7 +225,7 @@ impl Scenario {
 }
 
 /// One training iteration's results.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepStats {
     /// Wall-clock of this iteration (train-step to train-step).
     pub step_time_s: f64,
@@ -241,7 +250,11 @@ pub struct StepStats {
 }
 
 /// Scenario outcome.
-#[derive(Clone, Debug, Default)]
+///
+/// Derives `PartialEq` so the determinism regression test (see
+/// `docs/DETERMINISM.md`) can assert that two runs of the same seeded
+/// scenario produce *bit-identical* results, field for field.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ScenarioResult {
     pub steps: Vec<StepStats>,
     /// Reward-resource utilization over the run (Fig 6/12).
@@ -255,8 +268,12 @@ pub struct ScenarioResult {
     pub gen_tokens: f64,
     /// Fault-plane activity over the run.
     pub faults: FaultReport,
-    /// Elastic-controller activity over the run.
+    /// Elastic-controller activity over the run (single-pool or PD
+    /// split controller; the latter also fills the per-class fields).
     pub elastic: ElasticReport,
+    /// KV-link contention of a PD run (zero when `pd` is unset): how
+    /// many transfers queued on the shared link and for how long.
+    pub kv_link: KvLinkReport,
 }
 
 impl ScenarioResult {

@@ -20,6 +20,14 @@
 //! rescaling an aggregate capacity.  Engine crashes and env-worker
 //! deaths remain analytic stalls: the monolith has no re-queue path, so
 //! the whole barrier waits out each recovery.
+//!
+//! PD model: with a disaggregated [`Scenario::pd`] the monolith pays
+//! the prefill→decode KV hop *analytically* — each rollout round adds
+//! the balanced fair-share makespan of the turn's KV transfers over
+//! the shared link ([`crate::net::balanced_makespan`], booked under
+//! `other_s`).  The pools themselves are not split (the barrier model
+//! has no per-phase dispatch); the term exists so sync-vs-async PD
+//! comparisons are not biased by a free KV hop on the sync side.
 
 use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::coordinator::GroupTracker;
@@ -28,7 +36,7 @@ use crate::envpool::ResetSampler;
 use crate::fault::{exp_sample, FaultEvent};
 use crate::hw::phase_time;
 use crate::metrics::StepBreakdown;
-use crate::net::NVLINK_INTRA;
+use crate::net::{balanced_makespan, NVLINK_INTRA};
 use crate::proxy::{EngineSim, SimRequest};
 use crate::rl::TrajectoryId;
 use crate::simkit::SimRng;
@@ -173,10 +181,15 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         let max_turns = shapes.iter().map(|s| s.turns()).max().unwrap_or(0);
         let mut gen_time = 0.0;
         let mut env_time = 0.0;
+        let mut kv_time = 0.0;
+        // Disaggregated PD arm: the monolith ships every turn's fresh
+        // KV between the pools (analytic transfer term; see module doc).
+        let pd_link = cfg.pd.as_ref().filter(|p| p.disaggregated);
         let mut ctx: Vec<f64> = shapes.iter().map(|_| 0.0).collect();
         for turn in 0..max_turns {
             // generation: active trajectories spread across engines.
             let mut active = 0;
+            let mut kv_transfer_bytes: Vec<f64> = Vec::new();
             for (i, s) in shapes.iter().enumerate() {
                 if turn < s.turns() {
                     let (obs, act) = s.per_turn[turn];
@@ -193,12 +206,21 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
                         ctx_tokens: ctx[i],
                         decode_budget: act,
                     });
+                    if pd_link.is_some() {
+                        kv_transfer_bytes
+                            .push(crate::sim::driver::pd::kv_bytes(&cfg.model, new));
+                    }
                     ctx[i] += new + act;
                     active += 1;
                 }
             }
             if active == 0 {
                 break;
+            }
+            if let Some(p) = pd_link {
+                // Each round's freshly prefilled KV crosses the shared
+                // link before decode; the batch barrier waits it out.
+                kv_time += balanced_makespan(&p.kv_link, p.kv_slots, &kv_transfer_bytes);
             }
             // Batched: the round lasts as long as the slowest engine.
             // Per-engine queueing under outages: each engine's shard of
@@ -254,6 +276,9 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         }
         breakdown.generation_s = gen_time;
         breakdown.env_step_s = env_time;
+        // The KV hop is network time, not GPU busy time: it lengthens
+        // the step (other_s) without counting toward gen utilization.
+        breakdown.other_s += kv_time;
         gen_busy += gen_time;
 
         // ---- phase 3: batched reward ---------------------------------
@@ -615,6 +640,52 @@ mod tests {
         // ceil(1.5)=2 + ceil(0.75)=1 engines, each counted once even
         // though the outage persists across all iterations.
         assert_eq!(r.faults.engine_failures, 3, "{:?}", r.faults);
+    }
+
+    #[test]
+    fn pd_arm_pays_the_kv_transfer_term() {
+        use crate::sim::driver::pd::PdScenario;
+        // The analytic formula itself is pinned in
+        // `net::shared::tests::balanced_makespan_formula_is_pinned`;
+        // here: the sync driver actually charges it, scaled by link
+        // quality, and only on the disaggregated arm.
+        let other = |r: &crate::sim::ScenarioResult| -> f64 {
+            r.steps.iter().map(|s| s.breakdown.other_s).sum()
+        };
+        let plain = run(&small_sync());
+        assert_eq!(other(&plain), 0.0, "no PD: no transfer term");
+
+        let mut pd = small_sync();
+        pd.pd = Some(PdScenario::xpyd(1, 1));
+        let r_pd = run(&pd);
+        assert!(other(&r_pd) > 0.0, "disaggregated PD ships KV every round");
+        assert!(r_pd.mean_step_time() > plain.mean_step_time());
+
+        // An undersized link (1 slot, 0.1 GB/s) inflates the term.
+        let mut slow = small_sync();
+        let mut p = PdScenario::xpyd(1, 1);
+        p.kv_link.effective_bytes_per_s = 1e8;
+        p.kv_slots = 1;
+        slow.pd = Some(p);
+        let r_slow = run(&slow);
+        assert!(
+            other(&r_slow) > 10.0 * other(&r_pd),
+            "{} vs {}",
+            other(&r_slow),
+            other(&r_pd)
+        );
+
+        // The colocated ablation arm ships no KV.
+        let mut colo = small_sync();
+        colo.pd = Some(PdScenario::colocated_baseline(1, 1));
+        let r_colo = run(&colo);
+        assert_eq!(other(&r_colo), 0.0);
+        // Generation time itself is untouched by the PD term (same
+        // engines, same rounds).
+        let gen = |r: &crate::sim::ScenarioResult| -> f64 {
+            r.steps.iter().map(|s| s.breakdown.generation_s).sum()
+        };
+        assert_eq!(gen(&plain), gen(&r_pd));
     }
 
     #[test]

@@ -16,26 +16,11 @@
 //! Every stochastic component derives its own stream from the scenario
 //! root via `root.stream(label, index)`; streams are a pure function of
 //! `(root seed, label, index)`, never of draw order, so adding a
-//! component cannot perturb another's draws.  The conventions:
-//!
-//! * **labels are `"component"` or `"component/aspect"`** — e.g.
-//!   `"reset"`, `"envstep"`, `"rexec"`, `"fault/engine"`,
-//!   `"fault/envstep"`, `"fault/straggler"`, `"envpool/fault"`,
-//!   `"fault/sync"`; pick a fresh label for a new component, never
-//!   reuse one;
-//! * **indexes identify the entity** (engine id, manager id, iteration)
-//!   and, for repeated draws per entity, mix in an occurrence counter
-//!   (e.g. the fault plane keys the nth failure of engine *e* as
-//!   `e * 1_000_003 + n`);
-//! * **failure injection is separately seedable**: the fault plane
-//!   salts its indexes with `FaultProfile::seed_salt`, and the env-pool
-//!   can pin its reset-failure pattern via `EnvPoolConfig::fault_seed`
-//!   (consumed by `envpool::ResetSampler`), so fault-related tests
-//!   replay the exact same failure schedule while latency draws — and
-//!   therefore everything else — vary freely;
-//! * **inactive components draw nothing**: a disabled fault profile
-//!   must never touch its streams, which is what makes injection
-//!   bit-for-bit zero-cost when off.
+//! component cannot perturb another's draws.  The full contract —
+//! label naming, entity/occurrence indexing, separately-salted failure
+//! streams, the zero-cost-when-off guarantee, and the regression test
+//! that enforces bit-identical replays — lives in one place:
+//! **`docs/DETERMINISM.md`**.
 
 mod engine;
 pub mod dist;

@@ -1,0 +1,103 @@
+//! Determinism regression: same seed + same scenario ⇒ bit-identical
+//! [`ScenarioResult`] twice (see `docs/DETERMINISM.md` for the seeding
+//! contract this enforces).
+//!
+//! The comparison is full structural equality — every step's
+//! breakdown, every fault/elastic/KV-link counter — not just a summary
+//! statistic, so a component that starts drawing from another
+//! component's stream (the failure mode the salted-stream convention
+//! exists to prevent) fails loudly here.
+
+use rollart::elastic::{ElasticPolicy, PdElasticPolicy};
+use rollart::fault::FaultProfile;
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::sim::driver::pd::PdScenario;
+use rollart::sim::{driver, sync_driver, Mode, Scenario, ScenarioResult};
+
+fn base(mode: Mode) -> Scenario {
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
+    s.mode = mode;
+    s.batch_size = 16;
+    s.group_size = 4;
+    s.iterations = 3;
+    s
+}
+
+fn run(cfg: &Scenario) -> ScenarioResult {
+    match cfg.mode {
+        Mode::Sync => sync_driver::run(cfg),
+        _ => driver::run(cfg),
+    }
+}
+
+/// Two runs of the same scenario must agree on *every* field.
+fn assert_bit_identical(cfg: &Scenario, what: &str) {
+    let a = run(cfg);
+    let b = run(cfg);
+    assert_eq!(a, b, "{what}: results diverged between identical runs");
+    // And a different seed must actually change the outcome (the test
+    // would be vacuous if the scenario ignored its seed).
+    let mut reseeded = cfg.clone();
+    reseeded.seed ^= 0x5eed;
+    let c = run(&reseeded);
+    assert_ne!(
+        a.mean_step_time(),
+        c.mean_step_time(),
+        "{what}: reseeding had no effect"
+    );
+}
+
+#[test]
+fn every_mode_is_bit_deterministic() {
+    for mode in [
+        Mode::Sync,
+        Mode::SyncPlus,
+        Mode::OneOff,
+        Mode::AReaL,
+        Mode::RollArt,
+    ] {
+        assert_bit_identical(&base(mode), &format!("{mode:?}"));
+    }
+}
+
+#[test]
+fn chaos_runs_are_bit_deterministic() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.fault = FaultProfile {
+        env_crash_p: 0.01,
+        ..FaultProfile::mtbf(400.0)
+    };
+    assert_bit_identical(&cfg, "RollArt+chaos");
+}
+
+#[test]
+fn elastic_runs_are_bit_deterministic() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.iterations = 4;
+    let mut policy = ElasticPolicy::new(GpuClass::H800, cfg.model.rollout_tp, 32);
+    policy.scale_up_wait_ratio = 0.1;
+    policy.scale_down_wait_ratio = 0.01;
+    policy.cooldown_steps = 0;
+    cfg.elastic = Some(policy);
+    assert_bit_identical(&cfg, "RollArt+elastic");
+}
+
+#[test]
+fn pd_runs_are_bit_deterministic() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(1, 2)
+    });
+    assert_bit_identical(&cfg, "RollArt+PD");
+
+    // PD + the split elastic controller: the heaviest composition.
+    let mut pol = PdElasticPolicy::for_pd(cfg.pd.as_ref().unwrap());
+    pol.decode.scale_up_wait_ratio = 0.1;
+    pol.decode.scale_down_wait_ratio = 0.01;
+    pol.decode_backlog_per_engine = -1.0;
+    cfg.pd_elastic = Some(pol);
+    assert_bit_identical(&cfg, "RollArt+PD+pd_elastic");
+}
