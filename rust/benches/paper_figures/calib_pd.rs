@@ -1,0 +1,95 @@
+//! Calibration: `PdElasticPolicy` bottleneck-detector thresholds
+//! (ROADMAP follow-up).
+//!
+//! The split PD controller diagnoses each iteration as prefill-bound
+//! (Prefilling residency per live prefill engine), decode-bound
+//! (outstanding decode tokens per live decode engine) or KV-bound
+//! (link queue delay vs train time) before letting either pool's
+//! `AutoScaler` act.  This bench sweeps the two pool detectors over a
+//! 2P2D deployment and prints the resulting behaviour as a table —
+//! step time, goodput, and how often each pool was resized — so the
+//! shipped defaults are a documented choice, not folklore.
+//!
+//! Chosen defaults (see [`PdElasticPolicy::for_pd`]): prefill wait
+//! 30 s/engine — one engine's worth of queued prefill work — and
+//! decode backlog `max_batch × 1024` tokens/engine — roughly half an
+//! engine's continuous-batching capacity at a long-decode working
+//! point.  In this sweep they sit in the stable middle: tighter
+//! thresholds flap (resizes every other iteration), looser ones never
+//! fire and leave a starved pool unfixed.
+
+use crate::support::*;
+use rollart::elastic::PdElasticPolicy;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::sim::driver::PdScenario;
+use rollart::sim::{driver, Scenario};
+
+pub fn run() {
+    banner(
+        "Calib pd-elastic",
+        "PdElasticPolicy threshold sweep (2P2D, split controller)",
+    );
+    let mut csv = CsvWriter::for_bench(
+        "calib_pd_elastic",
+        &[
+            "prefill_wait_s",
+            "decode_backlog_x",
+            "step_time_s",
+            "goodput_tok_s",
+            "prefill_resizes",
+            "decode_resizes",
+            "kv_bound_holds",
+        ],
+    );
+    println!(
+        "  {:>14} {:>16} {:>12} {:>12} {:>16} {:>15} {:>9}",
+        "prefill_wait/e", "decode_backlog/e", "step_time", "goodput", "prefill resizes", "decode resizes", "kv_holds"
+    );
+    let waits: &[f64] = if quick_mode() { &[30.0] } else { &[10.0, 30.0, 90.0] };
+    let backlogs: &[f64] = if quick_mode() { &[1.0] } else { &[0.5, 1.0, 2.0] };
+    for &wait in waits {
+        for &backlog_x in backlogs {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+            s.pd = Some(PdScenario {
+                gpus_per_node: 4,
+                max_batch: 32,
+                ..PdScenario::xpyd(2, 2)
+            });
+            let mut pol = PdElasticPolicy::for_pd(s.pd.as_ref().expect("pd set"));
+            pol.prefill_wait_per_engine_s = wait;
+            pol.decode_backlog_per_engine *= backlog_x;
+            s.pd_elastic = Some(pol);
+            let s = quick(s, 5);
+            let r = driver::run(&s);
+            let e = &r.elastic;
+            let prefill_resizes = e.prefill_scale_ups + e.prefill_scale_downs;
+            let decode_resizes = e.decode_scale_ups + e.decode_scale_downs;
+            println!(
+                "  {:>14.0} {:>15.0}x {:>11.1}s {:>12.0} {:>16} {:>15} {:>9}",
+                wait,
+                backlog_x,
+                r.mean_step_time(),
+                r.goodput(),
+                prefill_resizes,
+                decode_resizes,
+                e.kv_bound_holds
+            );
+            csv.row([
+                format!("{wait:.0}"),
+                format!("{backlog_x:.1}"),
+                format!("{:.2}", r.mean_step_time()),
+                format!("{:.1}", r.goodput()),
+                prefill_resizes.to_string(),
+                decode_resizes.to_string(),
+                e.kv_bound_holds.to_string(),
+            ]);
+        }
+    }
+    row(
+        "chosen defaults",
+        "stable middle",
+        "wait 30s/e, backlog max_batch*1024 tok/e (PdElasticPolicy::for_pd)",
+    );
+    csv.flush().unwrap();
+}

@@ -25,7 +25,7 @@ fn scenario(rollout_gpus: usize, reward: RewardDeploy) -> Scenario {
         max_batch: 24,
     }];
     s.reward = reward;
-    s.iterations = 5;
+    s.iterations = iters(5);
     s
 }
 

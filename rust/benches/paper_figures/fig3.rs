@@ -31,7 +31,7 @@ fn scenario(failure_p: f64) -> Scenario {
         reset_failure_p: failure_p,
         ..EnvPoolConfig::registry_only()
     };
-    s.iterations = 5;
+    s.iterations = iters(5);
     s
 }
 

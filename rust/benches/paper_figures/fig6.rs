@@ -25,7 +25,7 @@ pub fn run() {
         gpus: 4,
         exec_s: Dist::lognormal_median(2.5, 0.5),
     };
-    s.iterations = 5;
+    s.iterations = iters(5);
     let r = sync_driver::run(&s);
 
     row(

@@ -1,0 +1,147 @@
+//! Fig wsync: weight-dissemination strategies on the RollArt-mode
+//! scenario — strategy × model size × α.
+//!
+//! The paper's Table 4 measures the *store* costs of one sync (push /
+//! accumulated pull / exposed); this bench measures what the
+//! dissemination **discipline** does to the training pipeline around
+//! those costs, via the weight plane ([`rollart::weights`]):
+//!
+//! * `blocking` — the fleet drain (pre-refactor semantics): every
+//!   publish suspends the whole fleet and exposes the store sync + KV
+//!   recompute to the trainer;
+//! * `rolling` — k engines refresh at a time while the rest keep
+//!   decoding at the old version: the trainer never stalls, engines
+//!   pay their pull individually on the contended fan-out link;
+//! * `lazy` — engines pull at idle gaps, α-forced at most;
+//! * `overlapped` — chunked push streams behind decode, exposing only
+//!   the cutover per engine.
+//!
+//! The acceptance claim (checked by assertion): rolling and lazy
+//! *strictly reduce* exposed sync time vs blocking at equal α, with
+//! the per-engine version lag — the price paid — reported alongside.
+
+use crate::support::*;
+use rollart::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
+use rollart::metrics::CsvWriter;
+use rollart::sim::{driver, Scenario};
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+
+const STRATEGIES: [SyncStrategyKind; 4] = [
+    SyncStrategyKind::BlockingBroadcast,
+    SyncStrategyKind::RollingSubset { k: 2 },
+    SyncStrategyKind::LazyPull,
+    SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+];
+
+fn exposed_sync_s(r: &rollart::sim::ScenarioResult) -> f64 {
+    let steps: Vec<f64> = r
+        .steps
+        .iter()
+        .skip(1)
+        .map(|s| s.breakdown.weight_sync_s)
+        .collect();
+    if steps.is_empty() {
+        return 0.0;
+    }
+    steps.iter().sum::<f64>() / steps.len() as f64
+}
+
+pub fn run() {
+    banner(
+        "Fig wsync",
+        "weight dissemination: blocking vs rolling vs lazy vs overlapped",
+    );
+    let mut csv = CsvWriter::for_bench(
+        "fig_wsync",
+        &[
+            "model",
+            "alpha",
+            "strategy",
+            "exposed_sync_s",
+            "step_time_s",
+            "overlap_ratio",
+            "mean_lag",
+            "max_lag",
+            "engine_offline_s",
+            "link_queue_delay_s",
+        ],
+    );
+    let models: Vec<&rollart::llm::LlmSpec> = if quick_mode() {
+        vec![&QWEN3_8B]
+    } else {
+        vec![&QWEN3_8B, &QWEN3_14B, &QWEN3_32B]
+    };
+    let alphas: &[u64] = if quick_mode() { &[1] } else { &[1, 4] };
+    for spec in models {
+        for &alpha in alphas {
+            let mut exposed_blocking = None;
+            for kind in STRATEGIES {
+                let mut s: Scenario =
+                    quick(Scenario::rollart_default((*spec).clone(), SCALE), 4);
+                s.alpha = alpha;
+                s.weights = WeightsScenario::with_strategy(kind);
+                let r = driver::run(&s);
+                let exposed = exposed_sync_s(&r);
+                let w = &r.weights;
+                row(
+                    &format!("{} α={alpha} {}", spec.name, kind.name()),
+                    "rolling/lazy < blocking",
+                    &format!(
+                        "exposed {exposed:.2}s step {:.1}s overlap {:.2} lag mean {:.2} max {} offline {:.1}s",
+                        r.mean_step_time(),
+                        w.overlap_ratio(),
+                        w.mean_lag(),
+                        w.lag_max,
+                        w.engine_offline_s
+                    ),
+                );
+                csv.row([
+                    spec.name.to_string(),
+                    alpha.to_string(),
+                    kind.name().to_string(),
+                    format!("{exposed:.4}"),
+                    format!("{:.2}", r.mean_step_time()),
+                    format!("{:.4}", w.overlap_ratio()),
+                    format!("{:.3}", w.mean_lag()),
+                    w.lag_max.to_string(),
+                    format!("{:.2}", w.engine_offline_s),
+                    format!("{:.4}", w.link_queue_delay_s),
+                ]);
+                match kind {
+                    SyncStrategyKind::BlockingBroadcast => {
+                        assert!(
+                            exposed > 0.0,
+                            "{} α={alpha}: the fleet drain must expose sync time",
+                            spec.name
+                        );
+                        exposed_blocking = Some(exposed);
+                    }
+                    SyncStrategyKind::RollingSubset { .. } | SyncStrategyKind::LazyPull => {
+                        // The acceptance criterion: strictly less
+                        // exposed sync at equal α on the RollArt mode.
+                        let blocking =
+                            exposed_blocking.expect("blocking runs first in STRATEGIES");
+                        assert!(
+                            exposed < blocking,
+                            "{} α={alpha} {}: exposed {exposed} must beat blocking {blocking}",
+                            spec.name,
+                            kind.name()
+                        );
+                        assert!(
+                            r.weights.lag_max >= 1,
+                            "{} α={alpha} {}: lag must be reported",
+                            spec.name,
+                            kind.name()
+                        );
+                    }
+                    SyncStrategyKind::OverlappedBroadcast { .. } => {
+                        let blocking =
+                            exposed_blocking.expect("blocking runs first in STRATEGIES");
+                        assert!(exposed < blocking, "{}: overlapped", spec.name);
+                    }
+                }
+            }
+        }
+    }
+    csv.flush().unwrap();
+}

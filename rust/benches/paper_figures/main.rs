@@ -10,6 +10,7 @@
 //! claims checked here are the paper's *shapes*: who wins, by what
 //! factor, where crossovers fall.  EXPERIMENTS.md records the output.
 
+mod calib_pd;
 mod fig10;
 mod fig11;
 mod fig12;
@@ -22,6 +23,7 @@ mod fig5;
 mod fig6;
 mod fig_fault;
 mod fig_phases;
+mod fig_wsync;
 mod support;
 mod table3;
 mod table5;
@@ -85,6 +87,12 @@ fn main() {
     }
     if want("phases") {
         fig_phases::run();
+    }
+    if want("wsync") {
+        fig_wsync::run();
+    }
+    if want("calib_pd") {
+        calib_pd::run();
     }
     if want("fig15") {
         fig15::run();

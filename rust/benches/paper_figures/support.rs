@@ -7,6 +7,14 @@ use rollart::sim::Scenario;
 /// within seconds of DES wall-clock while preserving the pool ratios.
 pub const SCALE: f64 = 0.25;
 
+/// CI smoke mode: `ROLLART_BENCH_QUICK=1` shrinks every bench to tiny
+/// iteration counts so the whole suite *executes* (not just compiles)
+/// in the CI budget.  Quick runs exercise every code path and CSV
+/// writer; the printed numbers are not calibration-grade.
+pub fn quick_mode() -> bool {
+    std::env::var("ROLLART_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
 /// Banner for one figure/table.
 pub fn banner(id: &str, title: &str) {
     println!("\n=== {id}: {title} ===");
@@ -26,8 +34,18 @@ pub fn secs(v: f64) -> String {
     format!("{v:.1}s")
 }
 
-/// Shrink a scenario further for the heavier sweeps.
+/// Shrink a scenario further for the heavier sweeps (and clamp it to
+/// two iterations in quick mode — enough for one post-warm-up step).
 pub fn quick(mut s: Scenario, iterations: usize) -> Scenario {
-    s.iterations = iterations;
+    s.iterations = if quick_mode() { iterations.min(2) } else { iterations };
     s
+}
+
+/// Iteration count for benches that size themselves directly.
+pub fn iters(n: usize) -> usize {
+    if quick_mode() {
+        n.min(2)
+    } else {
+        n
+    }
 }

@@ -23,7 +23,9 @@ use rollart::sim::driver::pd::{rollout_makespan, rollout_makespan_traced, PdScen
 
 pub fn run() {
     banner("Table 5", "PD disaggregation vs colocation (analytic + DES)");
-    const BATCH: f64 = 128.0;
+    // Quick mode trims the batch: the DES arm walks every request
+    // event, and 32 is enough to exercise the contended-link path.
+    let batch: f64 = if quick_mode() { 32.0 } else { 128.0 };
     const PROMPT: f64 = 12_000.0;
     const DECODE: f64 = 20_000.0;
 
@@ -53,19 +55,19 @@ pub fn run() {
             [("1P3D", 1usize, 3usize, p1), ("2P2D", 2, 2, p2)]
         {
             let cfg = PdConfig::new(p, d, NVLINK_INTRA.clone());
-            let pd = cfg.rollout_time(spec, BATCH, PROMPT, DECODE);
-            let colo = PdConfig::colocated_time(spec, (p + d) * 8, BATCH, PROMPT, DECODE);
+            let pd = cfg.rollout_time(spec, batch, PROMPT, DECODE);
+            let colo = PdConfig::colocated_time(spec, (p + d) * 8, batch, PROMPT, DECODE);
             let (des_pd, mut kv) = rollout_makespan_traced(
                 spec,
                 &PdScenario::xpyd(p, d),
-                BATCH as usize,
+                batch as usize,
                 PROMPT,
                 DECODE,
             );
             let des_colo = rollout_makespan(
                 spec,
                 &PdScenario::colocated_baseline(p, d),
-                BATCH as usize,
+                batch as usize,
                 PROMPT,
                 DECODE,
             );
@@ -108,11 +110,11 @@ pub fn run() {
         }
         // footnote 2: 3P1D is worst
         let cfg = PdConfig::new(3, 1, NVLINK_INTRA.clone());
-        let t = cfg.rollout_time(spec, BATCH, PROMPT, DECODE);
+        let t = cfg.rollout_time(spec, batch, PROMPT, DECODE);
         let t_des = rollout_makespan(
             spec,
             &PdScenario::xpyd(3, 1),
-            BATCH as usize,
+            batch as usize,
             PROMPT,
             DECODE,
         );

@@ -78,6 +78,13 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
     if let Some(t) = j.get("train_gpus").and_then(|v| v.as_usize()) {
         s.train_gpus = t;
     }
+    if let Some(c) = j.get("train_class").and_then(|v| v.as_str()) {
+        s.train_class = match c {
+            "H800" | "h800" => GpuClass::H800,
+            "H20" | "h20" => GpuClass::H20,
+            other => return Err(format!("unknown train_class {other}")),
+        };
+    }
     if let Some(i) = j.get("iterations").and_then(|v| v.as_usize()) {
         s.iterations = i;
     }
@@ -181,6 +188,9 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
         if let Some(d) = p.get("disaggregated").and_then(|v| v.as_bool()) {
             pd.disaggregated = d;
         }
+        if let Some(r) = p.get("prefix_reuse").and_then(|v| v.as_bool()) {
+            pd.prefix_reuse = r;
+        }
         s.pd = Some(pd);
     }
     if let Some(true) = j.get("pd_elastic").and_then(|v| v.as_bool()) {
@@ -192,6 +202,43 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             return Err("pd_elastic requires a disaggregated pd".to_string());
         }
         s.pd_elastic = Some(crate::elastic::PdElasticPolicy::for_pd(pd));
+    }
+    if let Some(w) = j.get("weights") {
+        use crate::weights::{SyncStrategyKind, WeightsScenario};
+        let mut ws = WeightsScenario::default();
+        if let Some(st) = w.get("strategy").and_then(|v| v.as_str()) {
+            ws.strategy = match st {
+                "blocking" => SyncStrategyKind::BlockingBroadcast,
+                "rolling" => SyncStrategyKind::RollingSubset {
+                    k: w.get("k").and_then(|v| v.as_usize()).unwrap_or(2),
+                },
+                "lazy" => SyncStrategyKind::LazyPull,
+                "overlapped" => SyncStrategyKind::OverlappedBroadcast {
+                    chunks: w.get("chunks").and_then(|v| v.as_usize()).unwrap_or(8),
+                },
+                other => return Err(format!("unknown weight strategy {other}")),
+            };
+        }
+        if let Some(n) = w.get("fanout_slots").and_then(|v| v.as_usize()) {
+            ws.fanout_slots = n;
+        }
+        if let Some(b) = w.get("share_kv_link").and_then(|v| v.as_bool()) {
+            ws.share_kv_link = b;
+        }
+        ws.validate()?;
+        // Mode legality mirrors the driver's assertion so a bad config
+        // file errors instead of panicking mid-run (the monolithic Sync
+        // driver accepts any strategy and pays the analytic term).
+        if s.mode != Mode::Sync
+            && !crate::sim::driver::policy_for(s.mode).strategy_legal(ws.strategy)
+        {
+            return Err(format!(
+                "mode {:?} does not admit weight strategy {}",
+                s.mode,
+                ws.strategy.name()
+            ));
+        }
+        s.weights = ws;
     }
     if let Some(r) = j.get("reward") {
         let kind = r.get("kind").and_then(|k| k.as_str()).unwrap_or("serverless");
@@ -304,6 +351,56 @@ mod tests {
         // false is a no-op either way.
         let off = scenario_from_json(r#"{"pd_elastic": false}"#).unwrap();
         assert!(off.pd_elastic.is_none());
+    }
+
+    #[test]
+    fn weights_and_train_class_knobs_parse() {
+        use crate::weights::SyncStrategyKind;
+        let s = scenario_from_json(
+            r#"{"weights": {"strategy": "rolling", "k": 3, "fanout_slots": 4,
+                            "share_kv_link": true},
+                "train_class": "h20"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.weights.strategy, SyncStrategyKind::RollingSubset { k: 3 });
+        assert_eq!(s.weights.fanout_slots, 4);
+        assert!(s.weights.share_kv_link);
+        assert_eq!(s.train_class, GpuClass::H20);
+        let lazy = scenario_from_json(r#"{"weights": {"strategy": "lazy"}}"#).unwrap();
+        assert_eq!(lazy.weights.strategy, SyncStrategyKind::LazyPull);
+        let ov = scenario_from_json(r#"{"weights": {"strategy": "overlapped"}}"#).unwrap();
+        assert_eq!(
+            ov.weights.strategy,
+            SyncStrategyKind::OverlappedBroadcast { chunks: 8 }
+        );
+        let clean = scenario_from_json("{}").unwrap();
+        assert_eq!(clean.weights.strategy, SyncStrategyKind::BlockingBroadcast);
+        assert_eq!(clean.train_class, GpuClass::H800);
+        let pr = scenario_from_json(r#"{"pd": {"prefix_reuse": true}}"#).unwrap();
+        assert!(pr.pd.unwrap().prefix_reuse);
+    }
+
+    #[test]
+    fn weight_strategy_legality_is_config_checked() {
+        // Sync+ trains behind a blocking barrier: only the fleet drain.
+        assert!(scenario_from_json(
+            r#"{"mode": "sync+", "weights": {"strategy": "rolling"}}"#
+        )
+        .is_err());
+        assert!(scenario_from_json(
+            r#"{"mode": "sync+", "weights": {"strategy": "blocking"}}"#
+        )
+        .is_ok());
+        // The monolithic Sync driver pays the analytic term instead.
+        assert!(scenario_from_json(
+            r#"{"mode": "sync", "weights": {"strategy": "overlapped"}}"#
+        )
+        .is_ok());
+        // Degenerate knobs error.
+        assert!(scenario_from_json(r#"{"weights": {"strategy": "telekinesis"}}"#).is_err());
+        assert!(scenario_from_json(r#"{"weights": {"strategy": "rolling", "k": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"weights": {"fanout_slots": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"train_class": "TPU"}"#).is_err());
     }
 
     #[test]

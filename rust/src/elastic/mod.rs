@@ -264,9 +264,14 @@ impl PdElasticPolicy {
             prefill: mk(pd.prefill_class),
             decode: mk(pd.decode_class),
             // One engine's worth of queued prefill work per engine.
+            // Calibrated by the `calib_pd` bench's threshold sweep
+            // (10/30/90 s × 0.5/1/2× backlog on a 2P2D deployment):
+            // 30 s sits in the stable middle — 10 s flaps the prefill
+            // pool, 90 s never fires and leaves a starved pool unfixed.
             prefill_wait_per_engine_s: 30.0,
             // Roughly half an engine's continuous-batching capacity at
-            // a long-decode working point.
+            // a long-decode working point (same sweep: 0.5× resizes on
+            // ordinary bursts, 2× is effectively dead).
             decode_backlog_per_engine: pd.max_batch as f64 * 1024.0,
             kv_bound_ratio: 0.5,
         }

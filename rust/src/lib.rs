@@ -24,10 +24,11 @@
 //!
 //! | plane | modules |
 //! |---|---|
-//! | resource | [`resource`], [`hw`], [`llm`], [`net`] (incl. the shared-bandwidth [`net::SharedLink`]) |
+//! | resource | [`resource`], [`hw`], [`llm`], [`net`] (incl. the shared-bandwidth [`net::SharedLink`] with bidirectional transfer slots) |
 //! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
 //! | control | [`coordinator`], [`proxy`] (incl. pluggable [`proxy::route`] policies), [`buffer`], [`rl`] |
 //! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine + phase residency, [`sim::driver::pd`] PD execution mode |
+//! | weights | [`weights`]: per-engine weight versions + pluggable [`weights::SyncStrategy`] dissemination (blocking / rolling / lazy / overlapped) over a contended fan-out link |
 //! | fault & elasticity | [`fault`], [`elastic`] (single-pool [`elastic::AutoScaler`] + per-class PD [`elastic::PdAutoScaler`]) |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
 //! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |
@@ -56,3 +57,4 @@ pub mod sim;
 pub mod simkit;
 pub mod trace;
 pub mod util;
+pub mod weights;

@@ -99,6 +99,14 @@ impl MooncakeStore {
         bytes / self.cfg.pull_bytes_per_s + n as f64 * self.cfg.per_bucket_latency_s
     }
 
+    /// Host→GPU weight (re)load time at the suspend point — the one
+    /// unavoidable exposed cost of any dissemination strategy.  The
+    /// weight plane ([`crate::weights`]) charges this per engine at its
+    /// cutover.
+    pub fn gpu_load_time(&self, bytes: f64) -> f64 {
+        bytes / self.cfg.gpu_load_bytes_per_s
+    }
+
     /// Compute one synchronization's cost decomposition.
     ///
     /// `overlap_window_s` is how much ongoing-rollout time is available

@@ -33,9 +33,11 @@ pub struct Grant {
 }
 
 /// Per-transfer contention statistics of one [`SharedLink`].
+/// Both directions accumulate here; the `reverse_*` counters break the
+/// reverse direction out.
 #[derive(Clone, Debug, Default)]
 pub struct SharedLinkStats {
-    /// Transfers admitted.
+    /// Transfers admitted (both directions).
     pub transfers: u64,
     /// Transfers that had to wait for a slot.
     pub queued_transfers: u64,
@@ -45,6 +47,11 @@ pub struct SharedLinkStats {
     pub queue_delay_max_s: f64,
     /// Bytes moved.
     pub bytes_total: f64,
+    /// Reverse-direction transfers ([`SharedLink::acquire_reverse`]).
+    pub reverse_transfers: u64,
+    /// Reverse-direction transfers that queued (behind other *reverse*
+    /// traffic — the fabric is full duplex).
+    pub reverse_queued: u64,
     /// Per-transfer queue-delay samples (percentiles for the benches).
     pub queue_delay: Histogram,
 }
@@ -65,6 +72,8 @@ impl SharedLinkStats {
             queued_transfers: self.queued_transfers,
             queue_delay_total_s: self.queue_delay_total_s,
             queue_delay_max_s: self.queue_delay_max_s,
+            reverse_transfers: self.reverse_transfers,
+            reverse_queued: self.reverse_queued,
         }
     }
 }
@@ -77,20 +86,50 @@ pub struct KvLinkReport {
     pub queued_transfers: u64,
     pub queue_delay_total_s: f64,
     pub queue_delay_max_s: f64,
+    /// Reverse-direction (decode→prefill prefix reuse) transfers.
+    pub reverse_transfers: u64,
+    pub reverse_queued: u64,
 }
 
-/// A [`Link`] with `slots` FIFO transfer slots.
+/// A [`Link`] with `slots` FIFO transfer slots per direction.
 ///
 /// Each slot serves one transfer at a time at the link's full
 /// single-transfer goodput (`setup + bytes/bw`); an arriving transfer
 /// takes the earliest-free slot and queues behind its current work.
 /// The one-way base latency is paid after the bytes finish moving.
+///
+/// The fabric is modeled full duplex: the forward direction
+/// ([`SharedLink::acquire`], e.g. prefill→decode KV hops) and the
+/// reverse direction ([`SharedLink::acquire_reverse`], e.g.
+/// decode→prefill prefix reuse) each own a slot pool, so traffic queues
+/// only against its own direction while both directions share the
+/// statistics.
 #[derive(Clone, Debug)]
 pub struct SharedLink {
     link: Link,
-    /// Per-slot busy-until time, seconds.
+    /// Per-slot busy-until time, seconds (forward direction).
     slots: Vec<f64>,
+    /// Reverse-direction slot pool (same width; full duplex).
+    rev_slots: Vec<f64>,
     pub stats: SharedLinkStats,
+}
+
+/// Earliest-free-slot FIFO admission over one direction's slot pool.
+/// `service_s` comes from [`SharedLink::service_time`] so both
+/// directions and the public accessor share one service model.
+fn grant_on(slots: &mut [f64], service_s: f64, latency_s: f64, now: f64) -> Grant {
+    let slot = (0..slots.len())
+        .min_by(|&a, &b| slots[a].total_cmp(&slots[b]))
+        .expect("slots is non-empty");
+    let start = slots[slot].max(now);
+    let queue_delay = start - now;
+    let free_at = start + service_s;
+    slots[slot] = free_at;
+    Grant {
+        start_s: start,
+        done_s: free_at + latency_s,
+        queue_delay_s: queue_delay,
+    }
 }
 
 impl SharedLink {
@@ -99,6 +138,7 @@ impl SharedLink {
         SharedLink {
             link,
             slots: vec![0.0; slots],
+            rev_slots: vec![0.0; slots],
             stats: SharedLinkStats::default(),
         }
     }
@@ -128,32 +168,42 @@ impl SharedLink {
             + self.stats.bytes_total / self.link.effective_bytes_per_s
     }
 
-    /// Admit one transfer of `bytes` at time `now`: it occupies the
-    /// earliest-free slot FIFO and completes at `done_s`.
+    /// Admit one forward-direction transfer of `bytes` at time `now`:
+    /// it occupies the earliest-free slot FIFO and completes at
+    /// `done_s`.
     pub fn acquire(&mut self, now: f64, bytes: f64) -> Grant {
-        let slot = (0..self.slots.len())
-            .min_by(|&a, &b| self.slots[a].total_cmp(&self.slots[b]))
-            .expect("slots is non-empty");
-        let start = self.slots[slot].max(now);
-        let queue_delay = start - now;
-        let free_at = start + self.service_time(bytes);
-        self.slots[slot] = free_at;
-        let done = free_at + self.link.latency_s;
+        let service = self.service_time(bytes);
+        let grant = grant_on(&mut self.slots, service, self.link.latency_s, now);
+        self.record(grant, bytes, false);
+        grant
+    }
 
+    /// Admit one *reverse-direction* transfer (decode→prefill prefix
+    /// reuse): queues only against other reverse traffic — the fabric
+    /// is full duplex — but shares the link's statistics.
+    pub fn acquire_reverse(&mut self, now: f64, bytes: f64) -> Grant {
+        let service = self.service_time(bytes);
+        let grant = grant_on(&mut self.rev_slots, service, self.link.latency_s, now);
+        self.record(grant, bytes, true);
+        grant
+    }
+
+    fn record(&mut self, grant: Grant, bytes: f64, reverse: bool) {
+        let queued = grant.queue_delay_s > 1e-12;
         self.stats.transfers += 1;
-        if queue_delay > 1e-12 {
+        if queued {
             self.stats.queued_transfers += 1;
         }
-        self.stats.queue_delay_total_s += queue_delay;
-        self.stats.queue_delay_max_s = self.stats.queue_delay_max_s.max(queue_delay);
-        self.stats.bytes_total += bytes;
-        self.stats.queue_delay.record(queue_delay);
-
-        Grant {
-            start_s: start,
-            done_s: done,
-            queue_delay_s: queue_delay,
+        if reverse {
+            self.stats.reverse_transfers += 1;
+            if queued {
+                self.stats.reverse_queued += 1;
+            }
         }
+        self.stats.queue_delay_total_s += grant.queue_delay_s;
+        self.stats.queue_delay_max_s = self.stats.queue_delay_max_s.max(grant.queue_delay_s);
+        self.stats.bytes_total += bytes;
+        self.stats.queue_delay.record(grant.queue_delay_s);
     }
 }
 
@@ -261,6 +311,42 @@ mod tests {
                 / 4.0;
         assert!((balanced_makespan(link, 4, &bytes) - expect).abs() < 1e-12);
         assert_eq!(balanced_makespan(link, 4, &[]), 0.0);
+    }
+
+    #[test]
+    fn cross_direction_queueing_is_independent() {
+        // Saturate the single forward slot: a reverse transfer admitted
+        // at the same instant starts immediately (full duplex), while a
+        // second reverse transfer queues behind the first — reverse
+        // traffic contends only with itself.
+        let mut l = shared(1);
+        let f1 = l.acquire(0.0, 1e9);
+        let f2 = l.acquire(0.0, 1e9);
+        assert!(f2.queue_delay_s > 0.0, "forward saturated");
+        let r1 = l.acquire_reverse(0.0, 1e9);
+        assert_eq!(
+            r1.queue_delay_s, 0.0,
+            "reverse must not queue behind forward traffic"
+        );
+        assert_eq!(r1.start_s, 0.0);
+        let r2 = l.acquire_reverse(0.0, 1e9);
+        assert!(
+            (r2.queue_delay_s - l.service_time(1e9)).abs() < 1e-12,
+            "second reverse queues behind the first: {r2:?}"
+        );
+        // And a forward arrival is untouched by the reverse backlog
+        // (beyond its own queue): it waits on the forward slot only.
+        let f3 = l.acquire(0.0, 1e9);
+        assert!((f3.start_s - f2.done_s + NVLINK_INTRA.latency_s).abs() < 1e-9);
+        // Direction-split accounting.
+        assert_eq!(l.stats.transfers, 5);
+        assert_eq!(l.stats.reverse_transfers, 2);
+        assert_eq!(l.stats.reverse_queued, 1);
+        assert_eq!(l.stats.queued_transfers, 3, "f2, r2, f3");
+        let r = l.stats.report();
+        assert_eq!(r.reverse_transfers, 2);
+        assert_eq!(r.reverse_queued, 1);
+        assert_eq!((f1.queue_delay_s, r1.queue_delay_s), (0.0, 0.0));
     }
 
     #[test]

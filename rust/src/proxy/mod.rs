@@ -150,8 +150,15 @@ impl LlmProxy {
         if self.suspended {
             return None;
         }
+        // Per-engine suspend (weight plane): a pool member mid-swap is
+        // skipped like a down one — the caller holds when the whole
+        // pool is refreshing.
         let idx = (0..self.engines.len())
-            .filter(|&i| !self.engines[i].is_down() && self.engines[i].class == class)
+            .filter(|&i| {
+                !self.engines[i].is_down()
+                    && !self.engines[i].is_suspended()
+                    && self.engines[i].class == class
+            })
             .min_by_key(|&i| self.engines[i].load())?;
         *self.dispatched.entry(req.domain).or_insert(0) += 1;
         self.engines[idx].enqueue(req);

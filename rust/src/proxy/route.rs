@@ -126,8 +126,12 @@ impl RouteKind {
 }
 
 /// Least-loaded live engine over an iterator of candidate indices.
+/// Suspended engines are skipped too: the weight plane suspends
+/// engines *individually* while they pull new weights (see
+/// [`crate::weights`]), and routing fresh work onto a mid-swap engine
+/// would queue it behind the whole transfer.
 fn least_loaded(engines: &[EngineSim], idxs: impl Iterator<Item = usize>) -> Option<usize> {
-    idxs.filter(|&i| !engines[i].is_down())
+    idxs.filter(|&i| !engines[i].is_down() && !engines[i].is_suspended())
         .min_by_key(|&i| engines[i].load())
 }
 
@@ -213,9 +217,13 @@ impl RoutePolicy for DomainFairRoute {
 
     fn pick(&mut self, engines: &[EngineSim], domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
         // Live capacity per class (GPUs, not engines: a wide engine is
-        // proportionally more of the fleet).
+        // proportionally more of the fleet).  Mid-swap (suspended)
+        // engines are no more dispatchable than down ones, so a class
+        // whose members are all pulling weights holds zero capacity
+        // and the pick falls to another class instead of returning
+        // None while free engines exist.
         let mut cap: BTreeMap<GpuClass, f64> = BTreeMap::new();
-        for e in engines.iter().filter(|e| !e.is_down()) {
+        for e in engines.iter().filter(|e| !e.is_down() && !e.is_suspended()) {
             *cap.entry(e.class).or_insert(0.0) += e.gpus as f64;
         }
         let total: f64 = cap.values().sum();
@@ -261,7 +269,7 @@ impl RoutePolicy for TokenBacklogRoute {
 
     fn pick(&mut self, engines: &[EngineSim], _domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
         (0..engines.len())
-            .filter(|&i| !engines[i].is_down())
+            .filter(|&i| !engines[i].is_down() && !engines[i].is_suspended())
             .min_by(|&a, &b| engines[a].backlog_tokens().total_cmp(&engines[b].backlog_tokens()))
     }
 }

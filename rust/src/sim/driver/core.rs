@@ -18,6 +18,20 @@
 //! [`ElasticPolicy`](crate::elastic::ElasticPolicy) controller resizes
 //! the generation pool — and, through CpuSlot bindings, the environment
 //! pool — via the [`crate::resource`] plane.
+//!
+//! The weight-dissemination plane (see [`crate::weights`]) threads
+//! through it too: every engine carries its own weight [`Version`], and
+//! the scenario's [`SyncStrategy`] decides which engines refresh when a
+//! freshly trained version publishes.  The legacy fleet drain
+//! (`begin_suspend`/`finish_drain`/`SyncDone`) survives as the
+//! [`BlockingBroadcast`](crate::weights::BlockingBroadcast) strategy's
+//! implementation — byte-for-byte the pre-refactor semantics — while
+//! the event strategies (rolling / lazy / overlapped) suspend engines
+//! *individually*, route their pulls over a contended fan-out
+//! [`SharedLink`], and let the trainer proceed without a barrier.
+//! Staleness admission consults the *engines'* versions
+//! (`DriverCore::gen_version`) and every turn is recorded at the
+//! version of the engine that generated it.
 
 use super::lifecycle::{LifecycleStats, LifecycleTracker, TrajPhase};
 use super::pd::{kv_bytes, shared_kv_link, split_request, PdScenario};
@@ -41,6 +55,7 @@ use crate::rl::{TrajectoryId, Version};
 use crate::serverless::{ServerlessConfig, ServerlessPlatform};
 use crate::sim::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::simkit::{EventQueue, SimRng, SimTime};
+use crate::weights::{FleetView, SyncStrategy, WeightSyncReport};
 use std::collections::BTreeMap;
 
 /// Safety horizon: a mis-configured chaos scenario (e.g. a permanent
@@ -76,6 +91,29 @@ enum Ev {
     },
     /// PD mode: `tid`'s KV cache finished its hop to the decode pool.
     KvDone { tid: TrajectoryId },
+    /// Weight plane: engine finished its pull + cutover and now serves
+    /// the version it committed to (event-driven strategies only).
+    WsyncDone { engine: usize, epoch: u64 },
+    /// Weight plane (overlapped strategy): the engine's background
+    /// weight stream delivered; cut over at the next step boundary.
+    WsyncStreamed { engine: usize, epoch: u64 },
+}
+
+/// Where one engine is in its per-engine weight sync (event-driven
+/// strategies; the blocking baseline never leaves `Idle`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EngineSync {
+    Idle,
+    /// Committed to a wave; suspends for the pull at its next step
+    /// boundary.
+    AwaitFree,
+    /// Overlapped strategy: transfer streaming behind ongoing decode.
+    Streaming,
+    /// Overlapped stream delivered mid-step; cut over at the next step
+    /// boundary.
+    AwaitCutover,
+    /// Suspended: pulling weights and/or loading them into the GPU.
+    Offline,
 }
 
 /// Why a trajectory is being aborted — drives the per-reason hooks on
@@ -122,7 +160,9 @@ struct PdState {
     /// The shared-bandwidth KV link: transfers queue on its FIFO slots
     /// instead of overlapping for free, and per-transfer queue delays
     /// accumulate in its stats (surfaced as
-    /// [`crate::sim::ScenarioResult::kv_link`]).
+    /// [`crate::sim::ScenarioResult::kv_link`]).  With
+    /// `weights.share_kv_link` the weight plane's per-engine pulls ride
+    /// (and contend on) the same slots.
     shared: SharedLink,
     pending: BTreeMap<TrajectoryId, PdPending>,
 }
@@ -210,6 +250,29 @@ struct DriverCore<'a> {
     inflight_resets: usize,
     /// Requests blocked by a suspended proxy or a dead target pool.
     pending_requests: Vec<SimRequest>,
+    // ---- weight-dissemination plane -----------------------------
+    /// Per-engine weight version: the fleet may disagree under the
+    /// rolling / lazy / overlapped strategies; the blocking baseline
+    /// keeps it uniform (flipped fleet-wide at `SyncDone`).
+    engine_version: Vec<Version>,
+    /// The scenario's dissemination discipline (see [`crate::weights`]).
+    wstrategy: Box<dyn SyncStrategy>,
+    /// Trainer-side fan-out link the per-engine pulls contend on
+    /// (bypassed when `weights.share_kv_link` routes them over the PD
+    /// KV link).
+    wlink: SharedLink,
+    /// Per-engine sync progress (event-driven strategies).
+    wsync: Vec<EngineSync>,
+    /// The version each engine's in-flight sync will flip it to.
+    wsync_version: Vec<Version>,
+    /// Wall-clock the open dissemination window started (publish →
+    /// last live engine current), if one is converging.
+    wdissem_started: Option<f64>,
+    wreport: WeightSyncReport,
+    /// PD prefix-reuse: per-trajectory completion time of the reverse
+    /// (decode→prefill) KV hop the next turn's prefill must wait for.
+    pd_reverse_ready: BTreeMap<usize, f64>,
+    // -------------------------------------------------------------
     // trainer state
     trainer_busy: bool,
     trainer_idle_since: f64,
@@ -217,6 +280,11 @@ struct DriverCore<'a> {
     pending_batch: Option<(usize, f64)>, // (#trajectories, tokens) awaiting sync
     weights_pushed_at: Option<f64>,      // push start of latest trained weights
     suspend_draining: bool,
+    /// A `SyncDone` is already in flight: `finish_drain` must not fire
+    /// again off a crash/retire event landing inside the exposed-sync
+    /// window (it would double-bump the version and double-charge the
+    /// exposed cost).
+    sync_scheduled: bool,
     train_steps_done: usize,
     last_train_done: f64,
     // barrier-mode iteration control
@@ -245,6 +313,15 @@ fn reward_exec(cfg: &Scenario, rng: &mut SimRng) -> f64 {
 impl<'a> DriverCore<'a> {
     fn new(cfg: &'a Scenario) -> Self {
         let policy = policy_for(cfg.mode);
+        if let Err(e) = cfg.weights.validate() {
+            panic!("invalid weights config: {e}");
+        }
+        assert!(
+            policy.strategy_legal(cfg.weights.strategy),
+            "mode {:?} does not admit weight strategy {:?} (see SchedPolicy::strategy_legal)",
+            cfg.mode,
+            cfg.weights.strategy.name()
+        );
         // PD mode replaces the configured gen pools with the xPyD
         // deployment (or its colocated ablation arm).
         let engines = match &cfg.pd {
@@ -411,6 +488,14 @@ impl<'a> DriverCore<'a> {
             env_bindings,
             pending_provisions: BTreeMap::new(),
             env_target,
+            engine_version: vec![Version(0); n_engines],
+            wstrategy: cfg.weights.strategy.make(),
+            wlink: SharedLink::new(cfg.weights.link.clone(), cfg.weights.fanout_slots),
+            wsync: vec![EngineSync::Idle; n_engines],
+            wsync_version: vec![Version(0); n_engines],
+            wdissem_started: None,
+            wreport: WeightSyncReport::default(),
+            pd_reverse_ready: BTreeMap::new(),
             initial_engines: n_engines,
             acc_engine_failures: 0,
             acc_requeued: 0,
@@ -435,6 +520,7 @@ impl<'a> DriverCore<'a> {
             pending_batch: None,
             weights_pushed_at: None,
             suspend_draining: false,
+            sync_scheduled: false,
             train_steps_done: 0,
             last_train_done: 0.0,
             iter_launched: false,
@@ -498,6 +584,196 @@ impl<'a> DriverCore<'a> {
         self.scaler.is_some() || self.pd_scaler.is_some()
     }
 
+    // ---- weight-dissemination plane ---------------------------------
+
+    /// The version the fleet can currently generate at: the newest
+    /// weights any live engine serves.  Under the blocking baseline
+    /// every engine agrees and this equals the pre-refactor global
+    /// version at every admission point; under rolling/lazy
+    /// dissemination it leads the laggards.  Falls back to the
+    /// trainer-side version when the whole fleet is down (chaos).
+    fn gen_version(&self) -> Version {
+        (0..self.engine_version.len())
+            .filter(|&i| !self.engine_down[i])
+            .map(|i| self.engine_version[i])
+            .max()
+            .unwrap_or(self.version)
+    }
+
+    /// A freshly trained version starts disseminating (event-driven
+    /// strategies): open — or re-target — the dissemination window and
+    /// ask the strategy for its first wave.  Engines mid-sync complete
+    /// to the version they committed to and are re-picked.
+    fn begin_dissemination(&mut self) {
+        self.wreport.publishes += 1;
+        if self.wdissem_started.is_none() {
+            self.wdissem_started = Some(self.now());
+        }
+        self.start_waves();
+    }
+
+    /// Ask the strategy which engines refresh next and start them.
+    /// No-op for the blocking baseline and while no dissemination
+    /// window is open.
+    fn start_waves(&mut self) {
+        if self.wstrategy.blocking() || self.wdissem_started.is_none() {
+            return;
+        }
+        let syncing: Vec<bool> = self.wsync.iter().map(|s| *s != EngineSync::Idle).collect();
+        let wave = {
+            let fleet = FleetView {
+                target: self.version,
+                engine_version: &self.engine_version,
+                engine_down: &self.engine_down,
+                syncing: &syncing,
+                alpha: self.cfg.alpha,
+            };
+            self.wstrategy.next_wave(&fleet)
+        };
+        for e in wave {
+            self.start_engine_sync(e);
+        }
+        self.check_dissemination_done();
+    }
+
+    /// Commit engine `e` to a sync toward the current trainer version.
+    /// Overlapped strategies start streaming immediately (the engine
+    /// keeps decoding); the others suspend at the engine's next step
+    /// boundary — now, if it is idle.
+    fn start_engine_sync(&mut self, e: usize) {
+        if self.engine_down[e]
+            || self.wsync[e] != EngineSync::Idle
+            || self.engine_version[e] >= self.version
+        {
+            return;
+        }
+        self.wsync_version[e] = self.version;
+        if self.wstrategy.overlapped() {
+            self.wsync[e] = EngineSync::Streaming;
+            let now = self.now();
+            let done = self.acquire_weight_transfer(now, self.cfg.model.weight_bytes());
+            self.q.schedule_in(
+                (done - now).max(0.0),
+                Ev::WsyncStreamed {
+                    engine: e,
+                    epoch: self.engine_epoch[e],
+                },
+            );
+        } else if self.engine_busy[e] {
+            self.wsync[e] = EngineSync::AwaitFree;
+        } else {
+            self.engine_sync_transfer(e);
+        }
+    }
+
+    /// Suspend engine `e` and pull the new weights: a transfer on the
+    /// contended fan-out link, then the cutover (GPU load + in-flight
+    /// KV recompute, protocol step ⑤).
+    fn engine_sync_transfer(&mut self, e: usize) {
+        self.wsync[e] = EngineSync::Offline;
+        self.proxy.engines_mut()[e].suspend();
+        let now = self.now();
+        let done = self.acquire_weight_transfer(now, self.cfg.model.weight_bytes());
+        let total = (done - now).max(0.0) + self.engine_cutover_s(e);
+        self.wreport.engine_offline_s += total;
+        self.q.schedule_in(
+            total,
+            Ev::WsyncDone {
+                engine: e,
+                epoch: self.engine_epoch[e],
+            },
+        );
+    }
+
+    /// Overlapped strategy: the stream has delivered and the engine is
+    /// at a step boundary — suspend only for the cutover.
+    fn begin_cutover(&mut self, e: usize) {
+        self.wsync[e] = EngineSync::Offline;
+        self.proxy.engines_mut()[e].suspend();
+        let cut = self.engine_cutover_s(e);
+        self.wreport.engine_offline_s += cut;
+        self.q.schedule_in(
+            cut,
+            Ev::WsyncDone {
+                engine: e,
+                epoch: self.engine_epoch[e],
+            },
+        );
+    }
+
+    /// Admit one weight pull on the configured path: the dedicated
+    /// fan-out link, or the PD deployment's KV link when the scenario
+    /// makes weight and KV traffic contend (`weights.share_kv_link`).
+    /// Returns the transfer's completion time.
+    fn acquire_weight_transfer(&mut self, now: f64, bytes: f64) -> f64 {
+        let grant = match (self.cfg.weights.share_kv_link, self.pd.as_mut()) {
+            (true, Some(pd)) => pd.shared.acquire(now, bytes),
+            _ => self.wlink.acquire(now, bytes),
+        };
+        self.wreport.transfers += 1;
+        if grant.queue_delay_s > 1e-12 {
+            self.wreport.queued_transfers += 1;
+        }
+        self.wreport.link_queue_delay_s += grant.queue_delay_s;
+        grant.done_s
+    }
+
+    /// Exposed cutover of one engine's weight swap: the (chunked) GPU
+    /// load plus the KV recompute of its in-flight contexts.
+    fn engine_cutover_s(&self, e: usize) -> f64 {
+        let chunks = self.wstrategy.chunks().max(1) as f64;
+        let load = self
+            .store
+            .gpu_load_time(self.cfg.model.weight_bytes() / chunks);
+        load + self.proxy.engines()[e].recompute_cost_s()
+    }
+
+    /// Engine `e` finished its pull + cutover: flip its version, bring
+    /// it back, and let the strategy launch the next wave.
+    fn on_wsync_done(&mut self, e: usize, epoch: u64) {
+        if epoch != self.engine_epoch[e] || self.wsync[e] != EngineSync::Offline {
+            return; // crashed/retired mid-sync; recovery reloads weights
+        }
+        self.wsync[e] = EngineSync::Idle;
+        self.engine_version[e] = self.wsync_version[e];
+        self.wreport.engine_syncs += 1;
+        if !self.proxy.is_suspended() {
+            self.proxy.engines_mut()[e].resume();
+        }
+        self.flush_pending();
+        self.kick_engine(e);
+        self.start_waves();
+    }
+
+    /// Overlapped stream delivered: cut over now if the engine sits at
+    /// a step boundary, else at its next `EngineFree`.
+    fn on_wsync_streamed(&mut self, e: usize, epoch: u64) {
+        if epoch != self.engine_epoch[e] || self.wsync[e] != EngineSync::Streaming {
+            return;
+        }
+        if self.engine_busy[e] {
+            self.wsync[e] = EngineSync::AwaitCutover;
+        } else {
+            self.begin_cutover(e);
+        }
+    }
+
+    /// Close the dissemination window once every live engine serves the
+    /// trainer-side version with no sync in flight.
+    fn check_dissemination_done(&mut self) {
+        let Some(t0) = self.wdissem_started else {
+            return;
+        };
+        let settled = (0..self.engine_version.len()).all(|e| {
+            self.engine_down[e]
+                || (self.wsync[e] == EngineSync::Idle && self.engine_version[e] >= self.version)
+        });
+        if settled {
+            self.wdissem_started = None;
+            self.wreport.dissemination_s += self.now() - t0;
+        }
+    }
+
     // -----------------------------------------------------------------
 
     /// Active (non-terminal) trajectory count.
@@ -518,7 +794,7 @@ impl<'a> DriverCore<'a> {
             let idx = self.mgrs.len();
             let id = TrajectoryId(idx as u64);
             let shape = profile.sample_trajectory(&mut self.rng);
-            let m = EnvManagerSim::new(id, shape, self.version, g, self.now());
+            let m = EnvManagerSim::new(id, shape, self.gen_version(), g, self.now());
             self.mgrs.push(m);
             let li = self.lifecycle.spawn_at(self.now());
             debug_assert_eq!(li, idx);
@@ -636,9 +912,19 @@ impl<'a> DriverCore<'a> {
             self.pending_requests.push(req);
             return;
         }
-        if let Some(e) = self.proxy.add(req) {
-            self.transition(mgr, TrajPhase::Prefilling);
-            self.kick_engine(e);
+        match self.proxy.add(req.clone()) {
+            Some(e) => {
+                self.transition(mgr, TrajPhase::Prefilling);
+                self.kick_engine(e);
+            }
+            None => {
+                // Every live engine is suspended for a weight pull
+                // (per-engine suspend replaces the all-or-nothing proxy
+                // suspend): hold the request; it re-dispatches when a
+                // sync completes.
+                self.transition(mgr, TrajPhase::Suspended);
+                self.pending_requests.push(req);
+            }
         }
     }
 
@@ -740,9 +1026,14 @@ impl<'a> DriverCore<'a> {
                 // trajectories whose start version left the α window
                 // instead of letting them generate a stale tail that
                 // get_batch would evict anyway (AReaL's behaviour).
+                // The gate consults the *engines'* version — the newest
+                // weights the fleet can actually generate this turn at
+                // — not the trainer-side counter, so rolling / lazy
+                // dissemination does not abort trajectories for a
+                // version no engine serves yet.
                 if !self
                     .policy
-                    .admit_turn(&self.mgrs[mgr].traj, self.version, self.cfg.alpha)
+                    .admit_turn(&self.mgrs[mgr].traj, self.gen_version(), self.cfg.alpha)
                 {
                     self.abort_mgr(mgr, AbortReason::Stale);
                     return;
@@ -750,6 +1041,15 @@ impl<'a> DriverCore<'a> {
                 self.dispatch(req);
             }
             EnvAction::StepEnv => {
+                // PD prefix reuse: the next turn's prefill cannot start
+                // until this turn's reverse (decode→prefill) KV hop
+                // lands back home — fold any residual transfer time
+                // into the env-interaction wait.
+                let reverse_gap = self
+                    .pd_reverse_ready
+                    .remove(&mgr)
+                    .map(|t| (t - self.now()).max(0.0))
+                    .unwrap_or(0.0);
                 // Fault plane: this step may kill its env worker.  The
                 // crash is detected after the health-check delay and
                 // recovered at trajectory level (group backfill).
@@ -763,7 +1063,7 @@ impl<'a> DriverCore<'a> {
                         .schedule_in(self.cfg.fault.env_crash_detect_s, Ev::EnvCrashed { mgr });
                     return;
                 }
-                let lat = self.env_step_latency(mgr);
+                let lat = self.env_step_latency(mgr).max(reverse_gap);
                 self.q.schedule_in(lat, Ev::EnvStepDone { mgr });
             }
             EnvAction::Complete => {
@@ -819,7 +1119,7 @@ impl<'a> DriverCore<'a> {
         let idx = self.mgrs.len();
         let id = TrajectoryId(idx as u64);
         let shape = profile.sample_trajectory(&mut self.rng);
-        let m = EnvManagerSim::new(id, shape, self.version, group, self.now());
+        let m = EnvManagerSim::new(id, shape, self.gen_version(), group, self.now());
         self.mgrs.push(m);
         let li = self.lifecycle.spawn_at(self.now());
         debug_assert_eq!(li, idx);
@@ -837,6 +1137,9 @@ impl<'a> DriverCore<'a> {
         self.engine_down[e] = true;
         self.engine_epoch[e] += 1;
         self.engine_busy[e] = false;
+        // A sync interrupted by the crash is void (its WsyncDone rides
+        // the invalidated epoch); recovery reloads current weights.
+        self.wsync[e] = EngineSync::Idle;
         let now = self.now();
         if let Some(up) = self.engine_up_since[e].take() {
             self.engine_alive_s[e] += now - up;
@@ -874,7 +1177,7 @@ impl<'a> DriverCore<'a> {
                 continue;
             }
             self.transition(mgr, TrajPhase::Recovering);
-            let req = self.mgrs[mgr].regen_request(self.version);
+            let req = self.mgrs[mgr].regen_request(self.gen_version());
             self.dispatch(req);
         }
     }
@@ -907,6 +1210,11 @@ impl<'a> DriverCore<'a> {
         if self.suspend_draining {
             self.finish_drain();
         }
+        // Likewise a crash mid-wave must not wedge the event-driven
+        // plane: the dead engine frees its wave slot (rolling) and no
+        // longer blocks the dissemination window.
+        self.start_waves();
+        self.check_dissemination_done();
         self.update_env_target();
     }
 
@@ -917,6 +1225,14 @@ impl<'a> DriverCore<'a> {
         self.engine_down[e] = false;
         self.engine_up_since[e] = Some(self.now());
         self.proxy.engines_mut()[e].set_down(false);
+        // Recovery reloads the *current* weights (the reboot pulls from
+        // the store as part of engine_recovery_s) and clears any
+        // suspend a cancelled per-engine sync left behind.
+        self.engine_version[e] = self.version;
+        self.wsync[e] = EngineSync::Idle;
+        if !self.proxy.is_suspended() {
+            self.proxy.engines_mut()[e].resume();
+        }
         if let Some(t0) = self.down_since.remove(&e) {
             self.fault_report.recoveries += 1;
             self.fault_report.recovery_latency_s += self.now() - t0;
@@ -1158,6 +1474,11 @@ impl<'a> DriverCore<'a> {
         self.engine_up_since.push(Some(self.now()));
         self.engine_alive_s.push(0.0);
         self.engine_bindings.push(binding);
+        // A provisioned engine's warm-up included the weight pull: it
+        // joins the fleet at the current trainer-side version.
+        self.engine_version.push(self.version);
+        self.wsync.push(EngineSync::Idle);
+        self.wsync_version.push(self.version);
         // The new engine is subject to the same failure process.
         if self.fault_on {
             self.schedule_engine_failure(e);
@@ -1186,6 +1507,8 @@ impl<'a> DriverCore<'a> {
         if self.suspend_draining {
             self.finish_drain();
         }
+        self.start_waves();
+        self.check_dissemination_done();
         self.update_env_target();
     }
 
@@ -1306,10 +1629,22 @@ impl<'a> DriverCore<'a> {
         self.acc_wait += self.now() - self.trainer_idle_since;
 
         // Weight sync before this train step (protocol ②–⑤) when the
-        // engines run older weights than the trainer produced.
+        // engines run older weights than the trainer produced.  The
+        // blocking baseline pays the fleet drain here; the event-driven
+        // strategies bump the trainer-side version, hand the fleet to
+        // the dissemination plane, and train immediately — the α
+        // machinery (admission gate + buffer eviction) bounds how far
+        // a lagging engine's output can drift.
         if self.weights_pushed_at.is_some() {
-            self.pending_batch = Some((n, tokens));
-            self.begin_suspend();
+            if self.wstrategy.blocking() {
+                self.pending_batch = Some((n, tokens));
+                self.begin_suspend();
+            } else {
+                self.weights_pushed_at = None;
+                self.version = self.version.next();
+                self.begin_dissemination();
+                self.start_train(tokens);
+            }
         } else {
             self.start_train(tokens);
         }
@@ -1327,7 +1662,7 @@ impl<'a> DriverCore<'a> {
     }
 
     fn finish_drain(&mut self) {
-        if !self.suspend_draining || self.engine_busy.iter().any(|b| *b) {
+        if !self.suspend_draining || self.sync_scheduled || self.engine_busy.iter().any(|b| *b) {
             return;
         }
         // Exposed update (③) + KV recompute (⑤).
@@ -1343,12 +1678,29 @@ impl<'a> DriverCore<'a> {
         let recompute = self.proxy.recompute_cost_s();
         self.acc_exposed_sync += exposed;
         self.acc_recompute += recompute;
+        // Blocking-strategy report: the whole window is trainer-exposed
+        // and the whole live fleet sits offline through it.
+        let live = (0..self.engine_down.len())
+            .filter(|&i| !self.engine_down[i])
+            .count();
+        self.wreport.publishes += 1;
+        self.wreport.engine_syncs += live as u64;
+        self.wreport.exposed_stall_s += exposed + recompute;
+        self.wreport.dissemination_s += exposed + recompute;
+        self.wreport.engine_offline_s += (exposed + recompute) * live as f64;
+        self.sync_scheduled = true;
         self.q.schedule_in(exposed + recompute, Ev::SyncDone);
     }
 
     fn on_sync_done(&mut self) {
+        self.sync_scheduled = false;
         self.suspend_draining = false;
         self.version = self.version.next();
+        // The fleet drain flips every engine at once — the per-engine
+        // version vector stays uniform under the blocking baseline.
+        for v in &mut self.engine_version {
+            *v = self.version;
+        }
         self.proxy.resume();
         self.flush_pending();
         self.kick_all_engines();
@@ -1358,8 +1710,19 @@ impl<'a> DriverCore<'a> {
     }
 
     fn start_train(&mut self, tokens: f64) {
+        // Per-engine version lag at the moment training consumes its
+        // batch: the live counterpart of the α window.
+        for e in 0..self.engine_version.len() {
+            if self.engine_down[e] {
+                continue;
+            }
+            let lag = self.version.0.saturating_sub(self.engine_version[e].0);
+            self.wreport.lag_samples += 1;
+            self.wreport.lag_sum += lag;
+            self.wreport.lag_max = self.wreport.lag_max.max(lag);
+        }
         let cost = self.cfg.model.train_cost(tokens, 8000.0);
-        let t = phase_time(&cost, GpuClass::H800.spec(), self.cfg.train_gpus.max(1))
+        let t = phase_time(&cost, self.cfg.train_class.spec(), self.cfg.train_gpus.max(1))
             * crate::sim::TRAIN_OVERHEAD;
         self.acc_train += t;
         self.trainer_busy = true;
@@ -1425,7 +1788,7 @@ impl<'a> DriverCore<'a> {
     fn on_reset_done(&mut self, mgr: usize) {
         self.inflight_resets = self.inflight_resets.saturating_sub(1);
         if !self.mgrs[mgr].is_terminal() {
-            let v = self.version;
+            let v = self.gen_version();
             let action = self.mgrs[mgr].on_reset_done(v);
             self.handle_action(mgr, action);
         }
@@ -1440,8 +1803,10 @@ impl<'a> DriverCore<'a> {
 
     /// One trajectory's engine work finished.  In PD mode a prefill
     /// half triggers the KV hop; a decode half (or any colocated
-    /// completion) finishes the turn.
-    fn on_generation_complete(&mut self, tid: TrajectoryId) {
+    /// completion) finishes the turn.  `gen_v` is the weight version of
+    /// the engine the work completed on — the version this turn is
+    /// recorded at (per-engine under rolling/lazy dissemination).
+    fn on_generation_complete(&mut self, tid: TrajectoryId, gen_v: Version) {
         let mgr = tid.0 as usize;
         if self.mgrs[mgr].is_terminal() {
             if let Some(pd) = self.pd.as_mut() {
@@ -1469,7 +1834,25 @@ impl<'a> DriverCore<'a> {
                 // (nothing is on an engine); ignore defensively.
                 Some(PdPhase::Transfer) => return,
                 Some(PdPhase::Decode) => {
-                    pd.pending.remove(&tid);
+                    let entry = pd.pending.remove(&tid);
+                    // Decode→prefill prefix reuse (ROADMAP follow-up):
+                    // the turn's freshly decoded KV ships *back* so the
+                    // next turn's prefill sees the full context — a
+                    // reverse-direction transfer on the same shared
+                    // link, queueing only against other reverse traffic
+                    // (full-duplex fabric).
+                    if pd.cfg.prefix_reuse {
+                        let more_turns = self.mgrs[mgr].turns_done() + 1
+                            < self.mgrs[mgr].turns_total();
+                        if let Some(entry) = entry {
+                            if more_turns && entry.decode.decode_budget > 0.0 {
+                                let bytes =
+                                    kv_bytes(&self.cfg.model, entry.decode.decode_budget);
+                                let grant = pd.shared.acquire_reverse(now, bytes);
+                                self.pd_reverse_ready.insert(mgr, grant.done_s);
+                            }
+                        }
+                    }
                 }
                 None => {}
             }
@@ -1481,8 +1864,7 @@ impl<'a> DriverCore<'a> {
             return;
         }
         if self.mgrs[mgr].phase == crate::coordinator::EnvPhase::Generating {
-            let v = self.version;
-            let action = self.mgrs[mgr].on_generation_done(v);
+            let action = self.mgrs[mgr].on_generation_done(gen_v);
             self.transition(mgr, TrajPhase::EnvStep);
             self.handle_action(mgr, action);
         }
@@ -1497,19 +1879,50 @@ impl<'a> DriverCore<'a> {
         }
         self.engine_busy[engine] = false;
         self.engine_inflight_done[engine].clear();
+        // Turns are recorded at the version of the engine that
+        // generated them (exact per-engine attribution under rolling /
+        // lazy dissemination; uniform under the blocking baseline).
+        let gen_v = self.engine_version[engine];
         for (tid, _ctx) in completed {
-            self.on_generation_complete(tid);
+            self.on_generation_complete(tid, gen_v);
         }
         if self.suspend_draining {
             self.finish_drain();
-        } else {
-            self.kick_engine(engine);
+            return;
         }
+        // Weight plane: an engine committed to a sync acts at its step
+        // boundary (the completions above may have re-kicked it; if so
+        // it stays committed and acts at the next boundary)...
+        match self.wsync[engine] {
+            EngineSync::AwaitFree if !self.engine_busy[engine] => {
+                self.engine_sync_transfer(engine);
+                return;
+            }
+            EngineSync::AwaitCutover if !self.engine_busy[engine] => {
+                self.begin_cutover(engine);
+                return;
+            }
+            _ => {}
+        }
+        // ...and a lazy engine takes its idle gap: behind the trainer
+        // with nothing queued, it pulls now instead of idling.
+        if self.wstrategy.pull_on_idle()
+            && self.wsync[engine] == EngineSync::Idle
+            && !self.engine_busy[engine]
+            && !self.engine_down[engine]
+            && self.engine_version[engine] < self.version
+            && self.proxy.engines()[engine].load() == 0
+        {
+            self.wsync_version[engine] = self.version;
+            self.engine_sync_transfer(engine);
+            return;
+        }
+        self.kick_engine(engine);
     }
 
     fn on_env_step_done(&mut self, mgr: usize) {
         if !self.mgrs[mgr].is_terminal() {
-            let v = self.version;
+            let v = self.gen_version();
             let now = self.now();
             let action = self.mgrs[mgr].on_env_step_done(v, now);
             self.handle_action(mgr, action);
@@ -1614,6 +2027,8 @@ impl<'a> DriverCore<'a> {
                     max_batch,
                 } => self.on_engine_provisioned(binding, class, gpus, max_batch),
                 Ev::KvDone { tid } => self.on_kv_done(tid),
+                Ev::WsyncDone { engine, epoch } => self.on_wsync_done(engine, epoch),
+                Ev::WsyncStreamed { engine, epoch } => self.on_wsync_streamed(engine, epoch),
                 Ev::RewardDone { mgr } => self.on_reward_done(mgr),
                 Ev::TrainDone => {
                     let tokens = self.inflight_train_tokens;
@@ -1637,6 +2052,12 @@ impl<'a> DriverCore<'a> {
     fn finish(mut self) -> (ScenarioResult, LifecycleStats) {
         let total = self.now().max(1e-9);
         self.result.total_time_s = total;
+        // A dissemination window still converging at run end (a lazy
+        // fleet floating inside its α slack) closes here.
+        if let Some(t0) = self.wdissem_started.take() {
+            self.wreport.dissemination_s += total - t0;
+        }
+        self.result.weights = self.wreport;
         let n_engines = self.engine_busy.len() as f64;
         let busy: f64 = self.proxy.engines().iter().map(|e| e.stats.busy_s).sum();
         if self.fault_on || self.elastic_on() {
@@ -1939,5 +2360,244 @@ mod tests {
         cfg.pd_elastic = Some(PdElasticPolicy::for_pd(&pd));
         // No Scenario::pd at all: the driver must refuse.
         run(&cfg);
+    }
+
+    // ---- weight-dissemination plane ---------------------------------
+
+    use crate::weights::{SyncStrategyKind, WeightsScenario};
+
+    fn with_strategy(mode: Mode, kind: SyncStrategyKind) -> Scenario {
+        let mut cfg = scenario(mode);
+        cfg.weights = WeightsScenario::with_strategy(kind);
+        cfg
+    }
+
+    fn exposed_sync_total(r: &ScenarioResult) -> f64 {
+        r.steps.iter().map(|s| s.breakdown.weight_sync_s).sum()
+    }
+
+    const EVENT_STRATEGIES: [SyncStrategyKind; 3] = [
+        SyncStrategyKind::RollingSubset { k: 1 },
+        SyncStrategyKind::LazyPull,
+        SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+    ];
+
+    #[test]
+    fn blocking_broadcast_is_the_legacy_fleet_drain() {
+        // The pin for the pre-refactor numbers: the default knob IS
+        // BlockingBroadcast, an explicit construction must be
+        // bit-identical, and the run must show the fleet-drain
+        // signature — exposed weight_sync_s every post-warm-up
+        // iteration, per-engine versions uniform (zero lag at every
+        // train start), zero overlap.
+        let cfg = scenario(Mode::RollArt);
+        let a = run(&cfg);
+        let b = run(&with_strategy(Mode::RollArt, SyncStrategyKind::BlockingBroadcast));
+        assert_eq!(a, b, "explicit BlockingBroadcast must equal the default");
+        assert!(
+            a.steps.iter().skip(1).all(|s| s.breakdown.weight_sync_s > 0.0),
+            "fleet drain exposes sync every post-warm-up iteration: {:?}",
+            a.steps.iter().map(|s| s.breakdown.weight_sync_s).collect::<Vec<_>>()
+        );
+        assert_eq!(a.weights.lag_max, 0, "{:?}", a.weights);
+        assert_eq!(a.weights.overlap_ratio(), 0.0);
+        // One publish per post-warm-up train (a final boundary racing
+        // the loop exit may add one more).
+        assert!(a.weights.publishes >= 2, "{:?}", a.weights);
+        assert!(a.weights.exposed_stall_s > 0.0);
+        assert!(a.weights.engine_offline_s > a.weights.exposed_stall_s);
+        assert_eq!(a.weights.transfers, 0, "the drain is analytic, not per-engine");
+    }
+
+    #[test]
+    fn event_strategies_cut_exposed_sync_and_run_clean() {
+        // The acceptance criterion: RollingSubset / LazyPull (and the
+        // overlapped push) strictly reduce exposed sync time at equal α
+        // on the RollArt-mode scenario, while completing the same
+        // number of iterations with only legal lifecycle edges.
+        let blocking = run(&scenario(Mode::RollArt));
+        assert!(exposed_sync_total(&blocking) > 0.0);
+        for kind in EVENT_STRATEGIES {
+            let cfg = with_strategy(Mode::RollArt, kind);
+            let (r, lc) = run_traced(&cfg);
+            assert_eq!(r.steps.len(), 3, "{kind:?}");
+            assert_eq!(lc.violations, 0, "{kind:?}: {:?}", lc.edges);
+            assert!(lc.entered(TrajPhase::Deposited) > 0, "{kind:?}");
+            assert!(
+                exposed_sync_total(&r) < exposed_sync_total(&blocking),
+                "{kind:?} must strictly cut exposed sync"
+            );
+            assert_eq!(
+                exposed_sync_total(&r),
+                0.0,
+                "{kind:?}: the trainer never stalls on dissemination"
+            );
+            assert!(r.weights.publishes >= 2, "{kind:?}: {:?}", r.weights);
+            assert!(r.weights.engine_syncs > 0, "{kind:?}");
+            assert!(r.weights.transfers > 0, "{kind:?}: pulls ride the link");
+            assert!(r.weights.engine_offline_s > 0.0, "{kind:?}");
+            assert!(
+                r.weights.overlap_ratio() > 0.99,
+                "{kind:?}: {:?}",
+                r.weights
+            );
+            assert!(
+                r.weights.lag_max >= 1,
+                "{kind:?}: engines must visibly lag the trainer at train start"
+            );
+            // Bit-deterministic.
+            let again = run(&cfg);
+            assert_eq!(r, again, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn per_engine_versions_attribute_turns_and_bound_lag() {
+        // Rolling one engine at a time: the fleet disagrees mid-window,
+        // yet the α machinery keeps every *trained* batch inside the
+        // window — mean staleness stays bounded by α + 1 versions.
+        let cfg = with_strategy(Mode::RollArt, SyncStrategyKind::RollingSubset { k: 1 });
+        let r = run(&cfg);
+        for s in r.steps.iter().skip(1) {
+            assert!(
+                s.mean_staleness <= (cfg.alpha + 1) as f64 + 1e-9,
+                "trained staleness must stay α-bounded: {}",
+                s.mean_staleness
+            );
+        }
+        assert!(r.weights.mean_lag() > 0.0, "{:?}", r.weights);
+    }
+
+    #[test]
+    fn overlapped_push_pays_less_engine_offline_than_rolling() {
+        // The whole point of chunked streaming: the transfer hides
+        // behind decode, engines suspend only for the cutover.
+        let rolling = run(&with_strategy(
+            Mode::RollArt,
+            SyncStrategyKind::RollingSubset { k: 2 },
+        ));
+        let overlapped = run(&with_strategy(
+            Mode::RollArt,
+            SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+        ));
+        assert!(
+            overlapped.weights.engine_offline_s < rolling.weights.engine_offline_s,
+            "overlapped {} vs rolling {}",
+            overlapped.weights.engine_offline_s,
+            rolling.weights.engine_offline_s
+        );
+    }
+
+    #[test]
+    fn weight_pulls_contend_on_the_fanout_link() {
+        // Overlapped broadcast streams the whole fleet at once over
+        // fanout_slots FIFO slots: the burst must queue.
+        let mut cfg = with_strategy(
+            Mode::RollArt,
+            SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+        );
+        cfg.weights.fanout_slots = 1;
+        let narrow = run(&cfg);
+        assert!(narrow.weights.queued_transfers > 0, "{:?}", narrow.weights);
+        assert!(narrow.weights.link_queue_delay_s > 0.0);
+        cfg.weights.fanout_slots = 64;
+        let wide = run(&cfg);
+        assert!(
+            wide.weights.link_queue_delay_s < narrow.weights.link_queue_delay_s,
+            "wide {:?} vs narrow {:?}",
+            wide.weights,
+            narrow.weights
+        );
+    }
+
+    #[test]
+    fn strategies_compose_with_pd_and_share_the_kv_link() {
+        for kind in EVENT_STRATEGIES {
+            let mut cfg = pd_scenario(Mode::RollArt);
+            cfg.weights = WeightsScenario::with_strategy(kind);
+            let (r, lc) = run_traced(&cfg);
+            assert_eq!(r.steps.len(), 3, "{kind:?}");
+            assert_eq!(lc.violations, 0, "{kind:?}: {:?}", lc.edges);
+            assert!(r.weights.engine_syncs > 0, "{kind:?}");
+        }
+        // share_kv_link: weight pulls ride the PD KV link and show up
+        // in its transfer count on top of the KV hops.
+        let mut apart = pd_scenario(Mode::RollArt);
+        apart.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+        let r_apart = run(&apart);
+        let mut shared = pd_scenario(Mode::RollArt);
+        shared.weights =
+            WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+        shared.weights.share_kv_link = true;
+        let r_shared = run(&shared);
+        assert!(
+            r_shared.kv_link.transfers > r_apart.kv_link.transfers,
+            "weight traffic must land on the shared KV link: {:?} vs {:?}",
+            r_shared.kv_link,
+            r_apart.kv_link
+        );
+        assert!(r_shared.weights.transfers > 0);
+    }
+
+    #[test]
+    fn strategies_compose_with_chaos() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        for kind in EVENT_STRATEGIES {
+            let mut cfg = with_strategy(Mode::RollArt, kind);
+            cfg.fault = FaultProfile {
+                env_crash_p: 0.01,
+                engine_recovery_s: 3.0,
+                scheduled: (1..60)
+                    .map(|i| ScheduledFault {
+                        at_s: 20.0 * i as f64,
+                        event: FaultEvent::EngineCrash { engine: 0 },
+                    })
+                    .collect(),
+                ..FaultProfile::none()
+            };
+            let (r, lc) = run_traced(&cfg);
+            assert_eq!(r.steps.len(), 3, "{kind:?}");
+            assert_eq!(lc.violations, 0, "{kind:?}: {:?}", lc.edges);
+            let again = run(&cfg);
+            assert_eq!(r.mean_step_time(), again.mean_step_time(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not admit weight strategy")]
+    fn barrier_mode_rejects_event_strategies() {
+        run(&with_strategy(Mode::SyncPlus, SyncStrategyKind::LazyPull));
+    }
+
+    #[test]
+    fn pd_prefix_reuse_ships_reverse_kv() {
+        let mut cfg = pd_scenario(Mode::RollArt);
+        cfg.pd.as_mut().expect("pd set").prefix_reuse = true;
+        let (r, lc) = run_traced(&cfg);
+        assert_eq!(r.steps.len(), 3);
+        assert_eq!(lc.violations, 0, "{:?}", lc.edges);
+        assert!(
+            r.kv_link.reverse_transfers > 0,
+            "multi-turn decodes must ship prefix KV back: {:?}",
+            r.kv_link
+        );
+        // Off by default: no reverse traffic.
+        let plain = run(&pd_scenario(Mode::RollArt));
+        assert_eq!(plain.kv_link.reverse_transfers, 0);
+        // Deterministic with the reverse hops in play.
+        let again = run(&cfg);
+        assert_eq!(r.mean_step_time(), again.mean_step_time());
+    }
+
+    #[test]
+    fn train_class_threads_through_the_event_driver() {
+        let fast = run(&scenario(Mode::RollArt));
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.train_class = GpuClass::H20;
+        let slow = run(&cfg);
+        let t = |r: &ScenarioResult| -> f64 {
+            r.steps.iter().map(|s| s.breakdown.train_s).sum()
+        };
+        assert!(t(&slow) > t(&fast), "{} vs {}", t(&slow), t(&fast));
     }
 }

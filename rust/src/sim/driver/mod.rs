@@ -9,8 +9,8 @@
 //! |---|---|
 //! | [`lifecycle`] | the trajectory state machine (Queued → Prefilling → Decoding → EnvStep → Reward → Deposited, with Suspended/Recovering/Aborted edges) every phase change funnels through |
 //! | [`policy`] | [`SchedPolicy`](policy::SchedPolicy): one small struct per [`Mode`](crate::sim::Mode) — admission/staleness gating, redundancy, deposit atomicity, weight-sync discipline |
-//! | [`pd`] | prefill-decode disaggregation as a simulated execution mode (xPyD pools, KV hop over a [`Link`](crate::net::Link)), composing with faults, elasticity and staleness |
-//! | [`core`] | the mode-agnostic DES loop: dispatch, fault recovery, elastic scaling, weight-sync protocol, iteration accounting |
+//! | [`pd`] | prefill-decode disaggregation as a simulated execution mode (xPyD pools, KV hop over a [`Link`](crate::net::Link), optional decode→prefill prefix-reuse reverse hops), composing with faults, elasticity and staleness |
+//! | [`core`] | the mode-agnostic DES loop: dispatch, fault recovery, elastic scaling, weight dissemination (per-engine versions driven by a [`crate::weights::SyncStrategy`]), iteration accounting |
 //!
 //! Routing is equally pluggable on the proxy side — see
 //! [`crate::proxy::route`].

@@ -66,6 +66,15 @@ pub struct PdScenario {
     /// `prefill_nodes + decode_nodes` nodes of `prefill_class`, paying
     /// the interference tax).
     pub disaggregated: bool,
+    /// Model decode→prefill prefix reuse: after each turn's decode the
+    /// freshly decoded tokens' KV ships *back* to the prefill pool (the
+    /// next turn's prefill needs the full context resident), as a
+    /// reverse-direction transfer on the same shared link
+    /// ([`SharedLink::acquire_reverse`]).  The next turn's prefill
+    /// waits for the hop when it outlasts the env step.  Off by
+    /// default (the forward-only model assumes the prefill pool keeps
+    /// its own prefix cache).
+    pub prefix_reuse: bool,
 }
 
 impl PdScenario {
@@ -83,6 +92,7 @@ impl PdScenario {
             kv_slots: 4,
             max_batch: 128,
             disaggregated: true,
+            prefix_reuse: false,
         }
     }
 

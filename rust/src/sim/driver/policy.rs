@@ -20,6 +20,7 @@
 
 use crate::rl::{Trajectory, Version};
 use crate::sim::{Mode, Scenario};
+use crate::weights::SyncStrategyKind;
 
 /// Mode-specific scheduling decisions consulted by the driver core.
 ///
@@ -97,6 +98,21 @@ pub trait SchedPolicy {
     /// ready.
     fn sync_blocking_after_train(&self) -> bool {
         false
+    }
+
+    /// May `strategy` disseminate weights under this coordination mode?
+    ///
+    /// The mapping mirrors each mode's semantics: a mode whose training
+    /// barrier *is* the weight sync (Sync+) only admits the fleet-drain
+    /// [`SyncStrategyKind::BlockingBroadcast`] — a rolling or lazy plane
+    /// would dissolve the very barrier the baseline exists to measure.
+    /// Continuous modes (One-off, AReaL, RollArt) admit every strategy:
+    /// their trains are decoupled from engine refreshes, and the
+    /// α-staleness machinery (admission gate + buffer eviction) bounds
+    /// how far a lazily-updated engine can drift.
+    fn strategy_legal(&self, strategy: SyncStrategyKind) -> bool {
+        !self.sync_blocking_after_train()
+            || matches!(strategy, SyncStrategyKind::BlockingBroadcast)
     }
 }
 
@@ -239,5 +255,29 @@ mod tests {
     #[should_panic(expected = "sync_driver")]
     fn sync_mode_panics() {
         policy_for(Mode::Sync);
+    }
+
+    #[test]
+    fn strategy_legality_follows_the_barrier() {
+        use crate::weights::SyncStrategyKind as K;
+        let all = [
+            K::BlockingBroadcast,
+            K::RollingSubset { k: 2 },
+            K::LazyPull,
+            K::OverlappedBroadcast { chunks: 8 },
+        ];
+        // Sync+ trains behind a blocking barrier: only the fleet drain.
+        let sp = policy_for(Mode::SyncPlus);
+        assert!(sp.strategy_legal(K::BlockingBroadcast));
+        assert!(!sp.strategy_legal(K::RollingSubset { k: 2 }));
+        assert!(!sp.strategy_legal(K::LazyPull));
+        assert!(!sp.strategy_legal(K::OverlappedBroadcast { chunks: 4 }));
+        // Continuous modes admit every strategy.
+        for mode in [Mode::OneOff, Mode::AReaL, Mode::RollArt] {
+            let p = policy_for(mode);
+            for k in all {
+                assert!(p.strategy_legal(k), "{mode:?} must admit {}", k.name());
+            }
+        }
     }
 }

@@ -39,6 +39,7 @@ use crate::metrics::StepBreakdown;
 use crate::net::KvLinkReport;
 use crate::proxy::RouteKind;
 use crate::simkit::dist::Dist;
+use crate::weights::{WeightSyncReport, WeightsScenario};
 
 /// Coordination semantics (§7.1's baseline grid).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,6 +111,9 @@ pub struct Scenario {
     pub redundancy: usize,
     /// Training pool (compute-optimized GPUs).
     pub train_gpus: usize,
+    /// GPU class of the training pool (paper: H800; configurable so
+    /// cost-equivalent H20 training ablations are expressible).
+    pub train_class: GpuClass,
     /// Generation engine pools.
     pub gen_pools: Vec<EnginePool>,
     /// R1: route prefill-heavy domains to H800, decode-heavy to H20.
@@ -151,6 +155,11 @@ pub struct Scenario {
     /// Dispatch discipline of the generation proxy (R1 affinity
     /// routing by default; see [`crate::proxy::route`]).
     pub route: RouteKind,
+    /// Weight-dissemination plane: per-engine weight versions and the
+    /// [`SyncStrategy`](crate::weights::SyncStrategy) that refreshes
+    /// them (default: the legacy fleet-drain
+    /// [`BlockingBroadcast`](crate::weights::BlockingBroadcast)).
+    pub weights: WeightsScenario,
 }
 
 impl Scenario {
@@ -183,6 +192,7 @@ impl Scenario {
             group_size: 8,
             redundancy: 0,
             train_gpus: ((32.0 * scale) as usize).max(2),
+            train_class: GpuClass::H800,
             gen_pools: vec![
                 EnginePool {
                     class: GpuClass::H800,
@@ -213,6 +223,7 @@ impl Scenario {
             pd: None,
             pd_elastic: None,
             route: RouteKind::Affinity,
+            weights: WeightsScenario::default(),
         }
     }
 
@@ -274,6 +285,9 @@ pub struct ScenarioResult {
     /// KV-link contention of a PD run (zero when `pd` is unset): how
     /// many transfers queued on the shared link and for how long.
     pub kv_link: KvLinkReport,
+    /// Weight-dissemination activity: exposed stall, per-engine
+    /// version lag, fan-out link contention (see [`crate::weights`]).
+    pub weights: WeightSyncReport,
 }
 
 impl ScenarioResult {

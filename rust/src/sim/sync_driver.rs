@@ -28,6 +28,17 @@
 //! `other_s`).  The pools themselves are not split (the barrier model
 //! has no per-phase dispatch); the term exists so sync-vs-async PD
 //! comparisons are not biased by a free KV hop on the sync side.
+//!
+//! Weight-plane model: the monolith's sync is blocking by construction
+//! (a barrier pipeline cannot exploit rolling updates), so with the
+//! default [`BlockingBroadcast`](crate::weights::BlockingBroadcast)
+//! knob it pays the legacy colocated NCCL reshard.  When a scenario
+//! configures a non-default dissemination strategy, the monolith pays
+//! the *matching analytic term* instead —
+//! [`WeightsScenario::analytic_fleet_sync_s`](crate::weights::WeightsScenario::analytic_fleet_sync_s),
+//! one full-weight pull per engine over the configured fan-out link —
+//! so blocking-vs-event-strategy comparisons are not biased by the
+//! baselines paying a different transfer cost model.
 
 use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::coordinator::GroupTracker;
@@ -40,6 +51,7 @@ use crate::net::{balanced_makespan, NVLINK_INTRA};
 use crate::proxy::{EngineSim, SimRequest};
 use crate::rl::TrajectoryId;
 use crate::simkit::SimRng;
+use crate::weights::SyncStrategyKind;
 
 use super::TRAIN_OVERHEAD;
 
@@ -307,8 +319,15 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
 
         // ---- phase 4: blocking weight sync ---------------------------
         // Colocated monolith: NCCL reshard between training and rollout
-        // processes over NVLink (fast but blocking).
-        let sync_time = NVLINK_INTRA.transfer_time(cfg.model.weight_bytes()) + 2.0;
+        // processes over NVLink (fast but blocking).  A non-default
+        // weight plane swaps in the matching analytic fan-out term so
+        // the baseline pays the same transfer cost model the async
+        // drivers route through the contended link (see module doc).
+        let sync_time = if matches!(cfg.weights.strategy, SyncStrategyKind::BlockingBroadcast) {
+            NVLINK_INTRA.transfer_time(cfg.model.weight_bytes()) + 2.0
+        } else {
+            cfg.weights.analytic_fleet_sync_s(&cfg.model, engines.len()) + 2.0
+        };
         breakdown.weight_sync_s = sync_time;
 
         // ---- phase 5: blocking training ------------------------------
@@ -317,11 +336,8 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
             batch_tokens,
             shapes.iter().map(|s| s.final_context()).sum::<f64>() / n as f64,
         );
-        let train_time = phase_time(
-            &t_cost,
-            crate::hw::GpuClass::H800.spec(),
-            cfg.train_gpus.max(1),
-        ) * TRAIN_OVERHEAD;
+        let train_time = phase_time(&t_cost, cfg.train_class.spec(), cfg.train_gpus.max(1))
+            * TRAIN_OVERHEAD;
         breakdown.train_s = train_time;
 
         // ---- fault plane (analytic): the monolithic baseline has no
@@ -422,6 +438,17 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         .iter()
         .map(|e| e.stats.prefill_tokens + e.stats.decode_tokens)
         .sum();
+    // Weight-plane report, analytic: the monolith's sync is fully
+    // exposed (overlap ratio 0) and the whole fleet sits through it.
+    let sync_total: f64 = result.steps.iter().map(|s| s.breakdown.weight_sync_s).sum();
+    result.weights = crate::weights::WeightSyncReport {
+        publishes: result.steps.len() as u64,
+        engine_syncs: (engines.len() * result.steps.len()) as u64,
+        exposed_stall_s: sync_total,
+        dissemination_s: sync_total,
+        engine_offline_s: sync_total * engines.len() as f64,
+        ..Default::default()
+    };
     result
 }
 
@@ -686,6 +713,44 @@ mod tests {
             r.steps.iter().map(|s| s.breakdown.generation_s).sum()
         };
         assert_eq!(gen(&plain), gen(&r_pd));
+    }
+
+    #[test]
+    fn non_default_weight_plane_swaps_the_sync_term() {
+        use crate::weights::{SyncStrategyKind, WeightsScenario};
+        let legacy = run(&small_sync());
+        let mut cfg = small_sync();
+        cfg.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 2 });
+        let r = run(&cfg);
+        let sync = |r: &crate::sim::ScenarioResult| r.steps[0].breakdown.weight_sync_s;
+        // The analytic fan-out term replaces the legacy NCCL reshard,
+        // pinned against the formula the async drivers' link model
+        // reduces to for a simultaneous fleet-wide burst.
+        let n: usize = cfg.gen_pools.iter().map(|p| p.engines).sum();
+        let expect = cfg.weights.analytic_fleet_sync_s(&cfg.model, n) + 2.0;
+        assert!((sync(&r) - expect).abs() < 1e-9, "{} vs {expect}", sync(&r));
+        assert_ne!(sync(&legacy), sync(&r));
+        // The monolith's sync is fully exposed: no overlap, whole fleet
+        // offline through it.
+        assert_eq!(r.weights.publishes, 3);
+        assert!(r.weights.exposed_stall_s > 0.0);
+        assert_eq!(r.weights.overlap_ratio(), 0.0);
+        assert_eq!(r.weights.engine_syncs, (n * 3) as u64);
+        // The legacy default also fills the report (for the benches).
+        assert_eq!(legacy.weights.publishes, 3);
+        assert!(legacy.weights.exposed_stall_s > 0.0);
+    }
+
+    #[test]
+    fn train_class_threads_through_the_monolith() {
+        let fast = run(&small_sync());
+        let mut cfg = small_sync();
+        cfg.train_class = crate::hw::GpuClass::H20;
+        let slow = run(&cfg);
+        let t = |r: &crate::sim::ScenarioResult| r.steps[0].breakdown.train_s;
+        // Training is compute-bound: the bandwidth-optimized class must
+        // pay for its thin FLOPs.
+        assert!(t(&slow) > t(&fast), "{} vs {}", t(&slow), t(&fast));
     }
 
     #[test]

@@ -1,0 +1,551 @@
+//! Weight-dissemination plane: event-driven, per-engine weight sync
+//! over the contended network (§6.2/§6.3, Table 4).
+//!
+//! The pre-refactor driver modeled weight sync as a *fleet-wide stall*:
+//! drain every engine, charge one analytic
+//! [`MooncakeStore::sync`](crate::mooncake::MooncakeStore::sync)
+//! scalar, bump a single global [`Version`].  Rolling updates, lazy
+//! pulls and transfer/decode overlap — the regimes StreamRL's
+//! disaggregated stream generation and rollout-as-a-service systems
+//! exploit — were unrepresentable.  This module promotes dissemination
+//! to a first-class subsystem:
+//!
+//! * every engine carries its **own** weight [`Version`]; the fleet is
+//!   allowed to disagree, and the α-staleness window becomes a real
+//!   scheduling trade-off instead of bookkeeping;
+//! * a pluggable [`SyncStrategy`] decides *which engines refresh when*:
+//!
+//! | strategy | semantics | trainer stall | engine stall |
+//! |---|---|---|---|
+//! | [`BlockingBroadcast`] | the legacy fleet drain: suspend everything, one analytic store sync, global flip | exposed + KV recompute | whole fleet, whole window |
+//! | [`RollingSubset`] | sync `k` engines at a time; the rest keep decoding at the old version | none | per-engine pull + cutover, `k` at a time |
+//! | [`LazyPull`] | each engine pulls at its next idle gap, forced once it would fall α behind | none | per-engine, deferred to idle |
+//! | [`OverlappedBroadcast`] | chunked push streams behind decode; only the last chunk's GPU load + KV recompute is exposed per engine | none | cutover only |
+//!
+//! * weight traffic flows over the [`net`](crate::net) plane: every
+//!   per-engine pull is a transfer on a trainer-side
+//!   [`SharedLink`](crate::net::SharedLink), so concurrent pulls
+//!   *contend* for fan-out bandwidth (and, with
+//!   [`WeightsScenario::share_kv_link`], with PD KV traffic on the same
+//!   link);
+//! * a [`WeightSyncReport`] surfaces the exposed stall, overlap ratio,
+//!   per-engine version lag and link queue delay on
+//!   [`ScenarioResult`](crate::sim::ScenarioResult).
+//!
+//! The driver core (see [`crate::sim::driver::core`]) owns the event
+//! loop; this module owns the *decisions* (strategy) and the *knobs*
+//! (scenario + report).  `BlockingBroadcast` keeps the exact
+//! pre-refactor code path so the fleet-drain numbers are reproduced by
+//! construction (pinned by `blocking_broadcast_is_the_legacy_fleet_drain`
+//! in the driver core's tests).
+
+use crate::llm::LlmSpec;
+use crate::net::{balanced_makespan, Link};
+use crate::rl::Version;
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Store→engine fan-out path for per-engine weight pulls: the Mooncake
+/// pull side of Table 4 (aggregate ≈2.1 GB/s across the inference
+/// fleet), modeled as one contended link with a small per-pull session
+/// cost.
+pub static MOONCAKE_FANOUT: Link = Link {
+    name: "mooncake-fanout",
+    raw_gbps: 200.0,
+    effective_bytes_per_s: 2.1 * GB,
+    setup_s: 0.05,
+    latency_s: 0.002,
+};
+
+/// Declarative strategy selector carried by scenario configs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SyncStrategyKind {
+    /// Today's drain-everything semantics (the baseline): suspend the
+    /// fleet, one analytic store sync, global version bump.
+    #[default]
+    BlockingBroadcast,
+    /// Sync `k` engines at a time while the rest keep decoding.
+    RollingSubset { k: usize },
+    /// Each engine pulls at its next idle gap, bounded by α.
+    LazyPull,
+    /// Chunked push pipelined with decode; `chunks` pipeline stages,
+    /// only the last chunk's GPU load is exposed per engine.
+    OverlappedBroadcast { chunks: usize },
+}
+
+impl SyncStrategyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncStrategyKind::BlockingBroadcast => "blocking",
+            SyncStrategyKind::RollingSubset { .. } => "rolling",
+            SyncStrategyKind::LazyPull => "lazy",
+            SyncStrategyKind::OverlappedBroadcast { .. } => "overlapped",
+        }
+    }
+
+    /// Instantiate the strategy this selector names.
+    pub fn make(self) -> Box<dyn SyncStrategy> {
+        match self {
+            SyncStrategyKind::BlockingBroadcast => Box::new(BlockingBroadcast),
+            SyncStrategyKind::RollingSubset { k } => Box::new(RollingSubset::new(k)),
+            SyncStrategyKind::LazyPull => Box::new(LazyPull),
+            SyncStrategyKind::OverlappedBroadcast { chunks } => {
+                Box::new(OverlappedBroadcast::new(chunks))
+            }
+        }
+    }
+}
+
+/// The `weights` knob of a [`Scenario`](crate::sim::Scenario).
+#[derive(Clone, Debug)]
+pub struct WeightsScenario {
+    pub strategy: SyncStrategyKind,
+    /// Trainer-side fan-out link (store → engines) the per-engine
+    /// pulls ride.
+    pub link: Link,
+    /// Concurrent transfer slots on the fan-out link; pulls beyond
+    /// this queue FIFO ([`SharedLink`](crate::net::SharedLink)).
+    pub fanout_slots: usize,
+    /// Route weight pulls over the PD deployment's KV link instead of
+    /// the dedicated fan-out link, so weight and KV traffic contend for
+    /// the same slots.  Ignored when the scenario has no disaggregated
+    /// PD deployment.
+    pub share_kv_link: bool,
+}
+
+impl Default for WeightsScenario {
+    fn default() -> Self {
+        WeightsScenario {
+            strategy: SyncStrategyKind::BlockingBroadcast,
+            link: MOONCAKE_FANOUT.clone(),
+            fanout_slots: 2,
+            share_kv_link: false,
+        }
+    }
+}
+
+impl WeightsScenario {
+    /// Convenience constructor: `strategy` over the default fan-out.
+    pub fn with_strategy(strategy: SyncStrategyKind) -> Self {
+        WeightsScenario {
+            strategy,
+            ..WeightsScenario::default()
+        }
+    }
+
+    /// Analytic fleet-blocking dissemination time: the balanced
+    /// fair-share makespan of one full-weight pull per engine over the
+    /// fan-out link, plus the in-GPU weight load at the suspend point.
+    /// This is the term the *synchronous* baseline pays when a
+    /// non-legacy weight plane is configured (a barrier pipeline cannot
+    /// exploit rolling updates, but it must pay the same transfer cost
+    /// model so sync-vs-async comparisons stay fair — see
+    /// [`crate::sim::sync_driver`]).
+    pub fn analytic_fleet_sync_s(&self, model: &LlmSpec, n_engines: usize) -> f64 {
+        let bytes = model.weight_bytes();
+        let per_engine: Vec<f64> = vec![bytes; n_engines.max(1)];
+        balanced_makespan(&self.link, self.fanout_slots, &per_engine)
+            + bytes / crate::mooncake::MooncakeConfig::default().gpu_load_bytes_per_s
+    }
+
+    /// Basic sanity of the knob (mirrors the config-file validation).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.fanout_slots == 0 {
+            return Err("weights.fanout_slots must be ≥ 1".to_string());
+        }
+        match self.strategy {
+            SyncStrategyKind::RollingSubset { k } if k == 0 => {
+                Err("weights.rolling k must be ≥ 1".to_string())
+            }
+            SyncStrategyKind::OverlappedBroadcast { chunks } if chunks == 0 => {
+                Err("weights.overlapped chunks must be ≥ 1".to_string())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Fleet snapshot handed to a strategy decision.  Indices are engine
+/// indices in the driver's fleet order.
+pub struct FleetView<'a> {
+    /// The published version dissemination is converging to.
+    pub target: Version,
+    /// Each engine's current weight version.
+    pub engine_version: &'a [Version],
+    /// Down (crashed/retired) engines never sync; they reload current
+    /// weights as part of recovery/provisioning instead.
+    pub engine_down: &'a [bool],
+    /// Engines already committed to an in-flight sync.
+    pub syncing: &'a [bool],
+    /// The scenario's α staleness bound.
+    pub alpha: u64,
+}
+
+impl<'a> FleetView<'a> {
+    /// Engines eligible to start a sync: live, idle (sync-wise) and
+    /// behind the target, stalest first (ties break low index).
+    pub fn behind(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.engine_version.len())
+            .filter(|&i| {
+                !self.engine_down[i] && !self.syncing[i] && self.engine_version[i] < self.target
+            })
+            .collect();
+        v.sort_by_key(|&i| (self.engine_version[i], i));
+        v
+    }
+
+    /// Engines currently committed to a sync.
+    pub fn syncing_count(&self) -> usize {
+        self.syncing.iter().filter(|s| **s).count()
+    }
+
+    /// How many versions engine `i` lags the target.
+    pub fn lag(&self, i: usize) -> u64 {
+        self.target.0.saturating_sub(self.engine_version[i].0)
+    }
+}
+
+/// A weight-dissemination discipline: decides which engines refresh
+/// when, over the driver core's event loop.
+///
+/// The core consults the strategy at three points: when a freshly
+/// trained version begins disseminating, after every per-engine sync
+/// completion (both via [`SyncStrategy::next_wave`]), and — for
+/// idle-pull strategies — whenever an engine finishes a step
+/// ([`SyncStrategy::pull_on_idle`]).  Strategies never touch the event
+/// queue themselves; they return engine sets and the core turns them
+/// into transfer + cutover events, which keeps every strategy
+/// composable with faults, elasticity and PD dispatch.
+pub trait SyncStrategy {
+    fn name(&self) -> &'static str;
+
+    /// The legacy barrier: drain the whole fleet, one analytic store
+    /// sync, global version flip.  When true the core keeps the exact
+    /// pre-refactor suspend/drain path and none of the event-driven
+    /// hooks fire.
+    fn blocking(&self) -> bool {
+        false
+    }
+
+    /// Engines to start syncing now.  Called when dissemination of a
+    /// new version begins and again after every per-engine completion;
+    /// eager strategies return the next wave, lazy ones return only
+    /// engines the α bound forces.
+    fn next_wave(&mut self, fleet: &FleetView) -> Vec<usize>;
+
+    /// Pull at each engine's next idle gap (the core offers every
+    /// engine a sync opportunity at its step boundaries).
+    fn pull_on_idle(&self) -> bool {
+        false
+    }
+
+    /// Stream the transfer *behind* ongoing decode and suspend the
+    /// engine only for the cutover (last chunk's GPU load + KV
+    /// recompute).
+    fn overlapped(&self) -> bool {
+        false
+    }
+
+    /// Pipeline depth of a chunked push (1 = whole-weights swap).
+    fn chunks(&self) -> usize {
+        1
+    }
+}
+
+/// The legacy fleet drain (pre-refactor semantics, kept as baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockingBroadcast;
+
+impl SyncStrategy for BlockingBroadcast {
+    fn name(&self) -> &'static str {
+        "blocking"
+    }
+
+    fn blocking(&self) -> bool {
+        true
+    }
+
+    fn next_wave(&mut self, _fleet: &FleetView) -> Vec<usize> {
+        Vec::new() // the core's legacy drain path handles everything
+    }
+}
+
+/// Sync `k` engines at a time while the rest keep decoding at the old
+/// version: the production rolling-update discipline.
+#[derive(Clone, Copy, Debug)]
+pub struct RollingSubset {
+    pub k: usize,
+}
+
+impl RollingSubset {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "rolling subset needs k ≥ 1");
+        RollingSubset { k }
+    }
+}
+
+impl SyncStrategy for RollingSubset {
+    fn name(&self) -> &'static str {
+        "rolling"
+    }
+
+    fn next_wave(&mut self, fleet: &FleetView) -> Vec<usize> {
+        let in_flight = fleet.syncing_count();
+        if in_flight >= self.k {
+            return Vec::new();
+        }
+        fleet.behind().into_iter().take(self.k - in_flight).collect()
+    }
+}
+
+/// Each engine pulls from the store at its next idle gap; an engine
+/// that would fall α behind the published version is forced to pull at
+/// its next step boundary instead (the α bound keeps lazy laziness from
+/// generating turns the buffer would evict anyway).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LazyPull;
+
+impl SyncStrategy for LazyPull {
+    fn name(&self) -> &'static str {
+        "lazy"
+    }
+
+    fn next_wave(&mut self, fleet: &FleetView) -> Vec<usize> {
+        // Only α-forced engines; voluntary pulls happen at idle gaps
+        // through the `pull_on_idle` hook.
+        fleet
+            .behind()
+            .into_iter()
+            .filter(|&i| fleet.lag(i) >= fleet.alpha.max(1))
+            .collect()
+    }
+
+    fn pull_on_idle(&self) -> bool {
+        true
+    }
+}
+
+/// Chunked/layer-wise push pipelined with decode: the transfer streams
+/// behind ongoing generation and only the cutover (last chunk's GPU
+/// load + KV recompute) suspends the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlappedBroadcast {
+    pub chunks: usize,
+}
+
+impl OverlappedBroadcast {
+    pub fn new(chunks: usize) -> Self {
+        assert!(chunks > 0, "overlapped broadcast needs ≥ 1 chunk");
+        OverlappedBroadcast { chunks }
+    }
+}
+
+impl SyncStrategy for OverlappedBroadcast {
+    fn name(&self) -> &'static str {
+        "overlapped"
+    }
+
+    fn next_wave(&mut self, fleet: &FleetView) -> Vec<usize> {
+        fleet.behind() // everyone streams concurrently (and contends)
+    }
+
+    fn overlapped(&self) -> bool {
+        true
+    }
+
+    fn chunks(&self) -> usize {
+        self.chunks
+    }
+}
+
+/// Dissemination activity over one scenario run, surfaced as
+/// [`ScenarioResult::weights`](crate::sim::ScenarioResult::weights).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WeightSyncReport {
+    /// Trained versions whose dissemination began.
+    pub publishes: u64,
+    /// Per-engine sync completions (blocking: live fleet size per
+    /// publish).
+    pub engine_syncs: u64,
+    /// Trainer-visible stall: wall-clock the training pipeline spent
+    /// blocked on weight sync (blocking: exposed store sync + KV
+    /// recompute per publish; event strategies: none — the fleet
+    /// converges while training proceeds).
+    pub exposed_stall_s: f64,
+    /// Engine-seconds *committed* to weight transfer + cutover,
+    /// charged when each sync is scheduled (the capacity the fleet
+    /// gave up to dissemination).  A sync voided by an engine crash
+    /// stays counted — the fault plane books the downtime that
+    /// replaced it — so under heavy chaos this can exceed the time
+    /// engines actually sat suspended.
+    pub engine_offline_s: f64,
+    /// Dissemination wall-clock: publish begin → last live engine
+    /// current, summed over publishes.
+    pub dissemination_s: f64,
+    /// Queue delay weight pulls accumulated on the fan-out (or shared
+    /// KV) link.
+    pub link_queue_delay_s: f64,
+    /// Weight transfers admitted / of those, queued behind a busy slot.
+    pub transfers: u64,
+    pub queued_transfers: u64,
+    /// Per-engine version lag sampled across live engines at every
+    /// train start (versions behind the trainer).
+    pub lag_samples: u64,
+    pub lag_sum: u64,
+    pub lag_max: u64,
+}
+
+impl WeightSyncReport {
+    /// Mean per-engine version lag at train starts.
+    pub fn mean_lag(&self) -> f64 {
+        if self.lag_samples == 0 {
+            return 0.0;
+        }
+        self.lag_sum as f64 / self.lag_samples as f64
+    }
+
+    /// Fraction of dissemination wall-clock hidden from the trainer
+    /// (0 = fully exposed fleet drain, 1 = fully overlapped).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.dissemination_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.exposed_stall_s / self.dissemination_s).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::QWEN3_8B;
+
+    fn fleet<'a>(
+        target: u64,
+        versions: &'a [Version],
+        down: &'a [bool],
+        syncing: &'a [bool],
+        alpha: u64,
+    ) -> FleetView<'a> {
+        FleetView {
+            target: Version(target),
+            engine_version: versions,
+            engine_down: down,
+            syncing,
+            alpha,
+        }
+    }
+
+    #[test]
+    fn kind_round_trip_and_defaults() {
+        for kind in [
+            SyncStrategyKind::BlockingBroadcast,
+            SyncStrategyKind::RollingSubset { k: 2 },
+            SyncStrategyKind::LazyPull,
+            SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+        ] {
+            assert_eq!(kind.make().name(), kind.name());
+        }
+        assert_eq!(SyncStrategyKind::default(), SyncStrategyKind::BlockingBroadcast);
+        let w = WeightsScenario::default();
+        assert!(w.validate().is_ok());
+        assert!(w.strategy.make().blocking());
+        assert!(!w.share_kv_link);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_knobs() {
+        let mut w = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 0 });
+        assert!(w.validate().is_err());
+        w = WeightsScenario::with_strategy(SyncStrategyKind::OverlappedBroadcast { chunks: 0 });
+        assert!(w.validate().is_err());
+        w = WeightsScenario::default();
+        w.fanout_slots = 0;
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn rolling_waves_respect_k_and_pick_stalest_first() {
+        let versions = [Version(2), Version(0), Version(1), Version(2), Version(1)];
+        let down = [false; 5];
+        let syncing = [false; 5];
+        let mut s = RollingSubset::new(2);
+        let wave = s.next_wave(&fleet(2, &versions, &down, &syncing, 1));
+        assert_eq!(wave, vec![1, 2], "stalest engines first, k bounded");
+        // One slot already in flight: only one more starts.
+        let syncing = [false, true, false, false, false];
+        let wave = s.next_wave(&fleet(2, &versions, &down, &syncing, 1));
+        assert_eq!(wave, vec![2]);
+        // k saturated: nothing starts.
+        let syncing = [false, true, true, false, false];
+        assert!(s.next_wave(&fleet(2, &versions, &down, &syncing, 1)).is_empty());
+    }
+
+    #[test]
+    fn rolling_skips_down_and_current_engines() {
+        let versions = [Version(0), Version(0), Version(2)];
+        let down = [false, true, false];
+        let syncing = [false; 3];
+        let mut s = RollingSubset::new(4);
+        let wave = s.next_wave(&fleet(2, &versions, &down, &syncing, 1));
+        assert_eq!(wave, vec![0], "down engine 1 and current engine 2 skipped");
+    }
+
+    #[test]
+    fn lazy_only_forces_alpha_violations() {
+        // Target 3, α=2: engine at 0 (lag 3) and 1 (lag 2) are forced;
+        // engine at 2 (lag 1) stays lazy.
+        let versions = [Version(0), Version(1), Version(2)];
+        let down = [false; 3];
+        let syncing = [false; 3];
+        let mut s = LazyPull;
+        let wave = s.next_wave(&fleet(3, &versions, &down, &syncing, 2));
+        assert_eq!(wave, vec![0, 1]);
+        assert!(s.pull_on_idle());
+        // α=0 is clamped to 1: any lag forces.
+        let wave = s.next_wave(&fleet(3, &versions, &down, &syncing, 0));
+        assert_eq!(wave, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn overlapped_streams_everyone_at_once() {
+        let versions = [Version(1), Version(1), Version(2)];
+        let down = [false; 3];
+        let syncing = [false; 3];
+        let mut s = OverlappedBroadcast::new(8);
+        let wave = s.next_wave(&fleet(2, &versions, &down, &syncing, 1));
+        assert_eq!(wave, vec![0, 1]);
+        assert!(s.overlapped());
+        assert_eq!(s.chunks(), 8);
+    }
+
+    #[test]
+    fn analytic_fleet_sync_scales_with_fleet_and_model() {
+        let w = WeightsScenario::default();
+        let small = w.analytic_fleet_sync_s(&QWEN3_8B, 2);
+        let large = w.analytic_fleet_sync_s(&QWEN3_8B, 8);
+        assert!(large > small, "{large} vs {small}");
+        let mut wide = WeightsScenario::default();
+        wide.fanout_slots = 8;
+        assert!(
+            wide.analytic_fleet_sync_s(&QWEN3_8B, 8) < large,
+            "more fan-out slots must cut the balanced makespan"
+        );
+    }
+
+    #[test]
+    fn report_summaries() {
+        let mut r = WeightSyncReport::default();
+        assert_eq!(r.mean_lag(), 0.0);
+        assert_eq!(r.overlap_ratio(), 0.0);
+        r.lag_samples = 4;
+        r.lag_sum = 6;
+        r.lag_max = 3;
+        assert!((r.mean_lag() - 1.5).abs() < 1e-12);
+        r.dissemination_s = 10.0;
+        r.exposed_stall_s = 2.5;
+        assert!((r.overlap_ratio() - 0.75).abs() < 1e-12);
+        // Fully exposed fleet drain: ratio 0.
+        r.exposed_stall_s = 10.0;
+        assert_eq!(r.overlap_ratio(), 0.0);
+    }
+}

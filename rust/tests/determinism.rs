@@ -14,6 +14,7 @@ use rollart::hw::GpuClass;
 use rollart::llm::QWEN3_8B;
 use rollart::sim::driver::pd::PdScenario;
 use rollart::sim::{driver, sync_driver, Mode, Scenario, ScenarioResult};
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
 
 fn base(mode: Mode) -> Scenario {
     let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
@@ -81,6 +82,60 @@ fn elastic_runs_are_bit_deterministic() {
     policy.cooldown_steps = 0;
     cfg.elastic = Some(policy);
     assert_bit_identical(&cfg, "RollArt+elastic");
+}
+
+/// Every weight-dissemination strategy, composed with the heaviest
+/// co-features it must stay deterministic under: PD dispatch over the
+/// contended KV link (including `share_kv_link` weight traffic), chaos
+/// injection, elastic scaling, and decode→prefill prefix reuse.
+#[test]
+fn weight_strategies_are_bit_deterministic() {
+    const STRATEGIES: [SyncStrategyKind; 4] = [
+        SyncStrategyKind::BlockingBroadcast,
+        SyncStrategyKind::RollingSubset { k: 1 },
+        SyncStrategyKind::LazyPull,
+        SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+    ];
+    for kind in STRATEGIES {
+        // Plain RollArt.
+        let mut cfg = base(Mode::RollArt);
+        cfg.weights = WeightsScenario::with_strategy(kind);
+        assert_bit_identical(&cfg, &format!("RollArt+{}", kind.name()));
+
+        // + PD (shared KV link carrying the weight pulls too) + prefix
+        // reuse reverse hops.
+        let mut pd = base(Mode::RollArt);
+        pd.weights = WeightsScenario::with_strategy(kind);
+        pd.weights.share_kv_link = true;
+        pd.pd = Some(PdScenario {
+            gpus_per_node: 2,
+            max_batch: 8,
+            prefix_reuse: true,
+            ..PdScenario::xpyd(1, 2)
+        });
+        assert_bit_identical(&pd, &format!("RollArt+PD+{}", kind.name()));
+
+        // + chaos (engine MTBF crashes interrupting in-flight syncs).
+        let mut chaos = base(Mode::RollArt);
+        chaos.weights = WeightsScenario::with_strategy(kind);
+        chaos.fault = FaultProfile {
+            env_crash_p: 0.01,
+            ..FaultProfile::mtbf(400.0)
+        };
+        assert_bit_identical(&chaos, &format!("RollArt+chaos+{}", kind.name()));
+
+        // + elastic scaling (provisioned engines join at the current
+        // version; retirements mid-wave cancel cleanly).
+        let mut el = base(Mode::RollArt);
+        el.iterations = 4;
+        el.weights = WeightsScenario::with_strategy(kind);
+        let mut policy = ElasticPolicy::new(GpuClass::H800, el.model.rollout_tp, 32);
+        policy.scale_up_wait_ratio = 0.1;
+        policy.scale_down_wait_ratio = 0.01;
+        policy.cooldown_steps = 0;
+        el.elastic = Some(policy);
+        assert_bit_identical(&el, &format!("RollArt+elastic+{}", kind.name()));
+    }
 }
 
 #[test]

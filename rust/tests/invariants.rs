@@ -283,6 +283,43 @@ fn prop_advantages_are_normalized_and_pack_is_consistent() {
 }
 
 #[test]
+fn prop_per_engine_suspend_never_wedges_trajectories() {
+    // ∀ event strategies × seeds, with the fan-out link squeezed to one
+    // slot so whole pools can be simultaneously offline for a pull: the
+    // run completes every iteration, every lifecycle edge is legal, and
+    // trajectories still reach the buffer — no trajectory wedged on a
+    // partially-suspended fleet.
+    use rollart::sim::driver::{run_traced, TrajPhase};
+    use rollart::sim::Scenario;
+    use rollart::weights::{SyncStrategyKind, WeightsScenario};
+    let strategies = [
+        SyncStrategyKind::RollingSubset { k: 1 },
+        SyncStrategyKind::RollingSubset { k: 3 },
+        SyncStrategyKind::LazyPull,
+        SyncStrategyKind::OverlappedBroadcast { chunks: 4 },
+    ];
+    for (i, kind) in strategies.into_iter().enumerate() {
+        for seed in 0..3u64 {
+            let mut s = Scenario::rollart_default(rollart::llm::QWEN3_8B.clone(), 0.05);
+            s.batch_size = 8;
+            s.group_size = 4;
+            s.iterations = 2;
+            s.seed = 100 + seed * 7 + i as u64;
+            s.weights = WeightsScenario::with_strategy(kind);
+            s.weights.fanout_slots = 1;
+            let (r, lc) = run_traced(&s);
+            assert_eq!(r.steps.len(), 2, "{kind:?} seed {seed}");
+            assert_eq!(lc.violations, 0, "{kind:?} seed {seed}: {:?}", lc.edges);
+            assert!(
+                lc.entered(TrajPhase::Deposited) > 0,
+                "{kind:?} seed {seed}: nothing reached the buffer"
+            );
+            assert!(r.weights.engine_syncs > 0, "{kind:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
 fn prop_scenario_determinism_across_modes() {
     // Same seed → identical results; different seeds → different ones.
     use rollart::sim::{async_driver, Mode, Scenario};
