@@ -12,6 +12,7 @@
 use crate::support::*;
 use rollart::baselines;
 use rollart::fault::FaultProfile;
+use rollart::hw::GpuClass;
 use rollart::llm::QWEN3_8B;
 use rollart::metrics::CsvWriter;
 use rollart::sim::{Mode, Scenario};
@@ -79,5 +80,58 @@ pub fn run() {
         "barrier stalls: fastest decay",
         "relative goodput column above",
     );
+    csv.flush().unwrap();
+    elastic_replacement();
+}
+
+/// Elastic replacement under churn: the autoscaler backfills crashed
+/// capacity, and every provisioned engine pays its warm-up weight pull
+/// as *real* bucketized traffic on the contended fan-out link (no
+/// analytic `provision_delay_s` on the event path).
+fn elastic_replacement() {
+    use rollart::elastic::ElasticPolicy;
+    let mut csv = CsvWriter::for_bench(
+        "fig_fault_elastic",
+        &[
+            "mtbf_s",
+            "goodput_tok_s",
+            "engines_added",
+            "warmup_pulls",
+            "warmup_bucket_transfers",
+        ],
+    );
+    let mut s = quick(Scenario::rollart_default(QWEN3_8B.clone(), SCALE), 4);
+    s = baselines::configure(&s, Mode::RollArt);
+    s.fault = FaultProfile::mtbf(600.0);
+    let mut pol = ElasticPolicy::new(GpuClass::H800, s.model.rollout_tp, 32);
+    pol.scale_up_wait_ratio = 0.1;
+    pol.scale_down_wait_ratio = 0.01;
+    pol.cooldown_steps = 0;
+    s.elastic = Some(pol);
+    let r = baselines::run(&s);
+    assert!(
+        r.elastic.scale_ups == 0 || r.weights.warmup_pulls > 0,
+        "scale-ups must book real warm-up pulls: {:?} / {:?}",
+        r.elastic,
+        r.weights
+    );
+    row(
+        "elastic + mtbf 600",
+        "warm-up pulls ride the contended link",
+        &format!(
+            "goodput {:.0} tok/s, +{} engines, {} warm-up pulls ({} buckets)",
+            r.goodput(),
+            r.elastic.engines_added,
+            r.weights.warmup_pulls,
+            r.weights.buckets.bucket_transfers
+        ),
+    );
+    csv.row([
+        "600".to_string(),
+        format!("{:.1}", r.goodput()),
+        r.elastic.engines_added.to_string(),
+        r.weights.warmup_pulls.to_string(),
+        r.weights.buckets.bucket_transfers.to_string(),
+    ]);
     csv.flush().unwrap();
 }

@@ -14,11 +14,23 @@
 //!   pay their pull individually on the contended fan-out link;
 //! * `lazy` — engines pull at idle gaps, α-forced at most;
 //! * `overlapped` — chunked push streams behind decode, exposing only
-//!   the cutover per engine.
+//!   the cutover per engine;
+//! * `adaptive` — closed loop: the refresh concurrency k is tuned per
+//!   iteration from the observed `get_batch` wait vs the fleet's
+//!   version lag.
 //!
-//! The acceptance claim (checked by assertion): rolling and lazy
-//! *strictly reduce* exposed sync time vs blocking at equal α, with
-//! the per-engine version lag — the price paid — reported alongside.
+//! Every per-engine pull is a *bucketized* pipeline on the contended
+//! fan-out link (Mooncake bucket model), so the table also surfaces
+//! the Table 4 decomposition ([`rollart::weights::BucketBreakdown`]):
+//! per-publish push, per-engine accumulated pull, per-cutover exposed
+//! swap cost, and the bucket queue delay.  A second sweep varies the
+//! bucket granularity (0.25/0.5/1/2 GB) and asserts the exposed
+//! per-cutover cost is monotone in the bucket-count tail.
+//!
+//! The acceptance claim (checked by assertion): rolling, lazy and
+//! adaptive *strictly reduce* exposed sync time vs blocking at equal
+//! α, with the per-engine version lag — the price paid — reported
+//! alongside.
 
 use crate::support::*;
 use rollart::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
@@ -26,11 +38,12 @@ use rollart::metrics::CsvWriter;
 use rollart::sim::{driver, Scenario};
 use rollart::weights::{SyncStrategyKind, WeightsScenario};
 
-const STRATEGIES: [SyncStrategyKind; 4] = [
+const STRATEGIES: [SyncStrategyKind; 5] = [
     SyncStrategyKind::BlockingBroadcast,
     SyncStrategyKind::RollingSubset { k: 2 },
     SyncStrategyKind::LazyPull,
     SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+    SyncStrategyKind::Adaptive,
 ];
 
 fn exposed_sync_s(r: &rollart::sim::ScenarioResult) -> f64 {
@@ -49,7 +62,7 @@ fn exposed_sync_s(r: &rollart::sim::ScenarioResult) -> f64 {
 pub fn run() {
     banner(
         "Fig wsync",
-        "weight dissemination: blocking vs rolling vs lazy vs overlapped",
+        "weight dissemination: blocking vs rolling vs lazy vs overlapped vs adaptive",
     );
     let mut csv = CsvWriter::for_bench(
         "fig_wsync",
@@ -64,6 +77,11 @@ pub fn run() {
             "max_lag",
             "engine_offline_s",
             "link_queue_delay_s",
+            "push_s_per_publish",
+            "acc_pull_s_per_engine",
+            "exposed_s_per_cutover",
+            "naive_s_per_publish",
+            "bucket_queue_delay_s",
         ],
     );
     let models: Vec<&rollart::llm::LlmSpec> = if quick_mode() {
@@ -85,7 +103,7 @@ pub fn run() {
                 let w = &r.weights;
                 row(
                     &format!("{} α={alpha} {}", spec.name, kind.name()),
-                    "rolling/lazy < blocking",
+                    "rolling/lazy/adaptive < blocking",
                     &format!(
                         "exposed {exposed:.2}s step {:.1}s overlap {:.2} lag mean {:.2} max {} offline {:.1}s",
                         r.mean_step_time(),
@@ -95,6 +113,7 @@ pub fn run() {
                         w.engine_offline_s
                     ),
                 );
+                let pubs = (w.publishes as f64).max(1.0);
                 csv.row([
                     spec.name.to_string(),
                     alpha.to_string(),
@@ -106,6 +125,11 @@ pub fn run() {
                     w.lag_max.to_string(),
                     format!("{:.2}", w.engine_offline_s),
                     format!("{:.4}", w.link_queue_delay_s),
+                    format!("{:.2}", w.buckets.push_s / pubs),
+                    format!("{:.2}", w.buckets.mean_pull_s()),
+                    format!("{:.3}", w.buckets.mean_exposed_s()),
+                    format!("{:.2}", w.buckets.naive_s / pubs),
+                    format!("{:.4}", w.buckets.queue_delay_s),
                 ]);
                 match kind {
                     SyncStrategyKind::BlockingBroadcast => {
@@ -116,7 +140,9 @@ pub fn run() {
                         );
                         exposed_blocking = Some(exposed);
                     }
-                    SyncStrategyKind::RollingSubset { .. } | SyncStrategyKind::LazyPull => {
+                    SyncStrategyKind::RollingSubset { .. }
+                    | SyncStrategyKind::LazyPull
+                    | SyncStrategyKind::Adaptive => {
                         // The acceptance criterion: strictly less
                         // exposed sync at equal α on the RollArt mode.
                         let blocking =
@@ -142,6 +168,62 @@ pub fn run() {
                 }
             }
         }
+    }
+    csv.flush().unwrap();
+    bucket_sweep();
+}
+
+/// Bucket-granularity sweep (runs in quick mode too): finer buckets
+/// mean more per-bucket coordination RPCs on the same bytes, so the
+/// exposed per-cutover swap cost must fall *monotonically* as the
+/// bucket grows and the bucket-count tail shrinks.
+fn bucket_sweep() {
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let mut csv = CsvWriter::for_bench(
+        "fig_wsync_buckets",
+        &[
+            "bucket_gb",
+            "buckets_per_pull",
+            "exposed_s_per_cutover",
+            "acc_pull_s_per_engine",
+            "bucket_queue_delay_s",
+            "push_gate_s",
+        ],
+    );
+    let mut last_exposed = f64::INFINITY;
+    for gb in [0.25, 0.5, 1.0, 2.0] {
+        let mut s: Scenario = quick(Scenario::rollart_default(QWEN3_8B.clone(), SCALE), 4);
+        s.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 2 });
+        s.weights.mooncake.bucket_bytes = gb * GB;
+        let n = s.weights.mooncake.bucket_count(s.model.weight_bytes());
+        let r = driver::run(&s);
+        let b = r.weights.buckets;
+        assert!(b.cutovers > 0, "bucket {gb} GB: no cutovers observed");
+        assert!(b.bucket_transfers >= b.engine_pulls, "{b:?}");
+        let exposed = b.mean_exposed_s();
+        assert!(
+            exposed < last_exposed,
+            "exposed per cutover must be monotone in the bucket-count tail: \
+             {exposed} at {gb} GB vs {last_exposed} at the finer bucket"
+        );
+        last_exposed = exposed;
+        row(
+            &format!("bucket {gb} GB ({n} buckets/pull)"),
+            "exposed falls as buckets coarsen",
+            &format!(
+                "exposed/cutover {exposed:.3}s pull/engine {:.2}s queue {:.3}s",
+                b.mean_pull_s(),
+                b.mean_queue_delay_s()
+            ),
+        );
+        csv.row([
+            format!("{gb}"),
+            n.to_string(),
+            format!("{exposed:.4}"),
+            format!("{:.3}", b.mean_pull_s()),
+            format!("{:.4}", b.queue_delay_s),
+            format!("{:.4}", b.push_gate_s),
+        ]);
     }
     csv.flush().unwrap();
 }

@@ -216,6 +216,7 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
                 "overlapped" => SyncStrategyKind::OverlappedBroadcast {
                     chunks: w.get("chunks").and_then(|v| v.as_usize()).unwrap_or(8),
                 },
+                "adaptive" => SyncStrategyKind::Adaptive,
                 other => return Err(format!("unknown weight strategy {other}")),
             };
         }
@@ -224,6 +225,15 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
         }
         if let Some(b) = w.get("share_kv_link").and_then(|v| v.as_bool()) {
             ws.share_kv_link = b;
+        }
+        if let Some(gb) = w.get("bucket_gb").and_then(|v| v.as_f64()) {
+            // Bucket granularity of the Mooncake model every weight
+            // transfer is priced with (validate() re-checks the
+            // resulting bytes).
+            if gb <= 0.0 || !gb.is_finite() {
+                return Err(format!("weights.bucket_gb must be positive, got {gb}"));
+            }
+            ws.mooncake.bucket_bytes = gb * 1024.0 * 1024.0 * 1024.0;
         }
         ws.validate()?;
         // Mode legality mirrors the driver's assertion so a bad config
@@ -373,6 +383,13 @@ mod tests {
             ov.weights.strategy,
             SyncStrategyKind::OverlappedBroadcast { chunks: 8 }
         );
+        let ad = scenario_from_json(r#"{"weights": {"strategy": "adaptive"}}"#).unwrap();
+        assert_eq!(ad.weights.strategy, SyncStrategyKind::Adaptive);
+        // Bucket granularity of the Mooncake model.
+        let bk =
+            scenario_from_json(r#"{"weights": {"strategy": "rolling", "bucket_gb": 0.5}}"#)
+                .unwrap();
+        assert!((bk.weights.mooncake.bucket_bytes - 0.5 * 1024.0 * 1024.0 * 1024.0).abs() < 1.0);
         let clean = scenario_from_json("{}").unwrap();
         assert_eq!(clean.weights.strategy, SyncStrategyKind::BlockingBroadcast);
         assert_eq!(clean.train_class, GpuClass::H800);
@@ -396,10 +413,17 @@ mod tests {
             r#"{"mode": "sync", "weights": {"strategy": "overlapped"}}"#
         )
         .is_ok());
+        // Sync+ rejects the adaptive plane for the same reason.
+        assert!(scenario_from_json(
+            r#"{"mode": "sync+", "weights": {"strategy": "adaptive"}}"#
+        )
+        .is_err());
         // Degenerate knobs error.
         assert!(scenario_from_json(r#"{"weights": {"strategy": "telekinesis"}}"#).is_err());
         assert!(scenario_from_json(r#"{"weights": {"strategy": "rolling", "k": 0}}"#).is_err());
         assert!(scenario_from_json(r#"{"weights": {"fanout_slots": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"weights": {"bucket_gb": 0.0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"weights": {"bucket_gb": -2.0}}"#).is_err());
         assert!(scenario_from_json(r#"{"train_class": "TPU"}"#).is_err());
     }
 

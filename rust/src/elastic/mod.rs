@@ -116,14 +116,25 @@ impl ElasticPolicy {
         }
     }
 
-    /// Warm-up delay of one freshly provisioned engine: sandbox/runtime
-    /// boot (serverless cold start × multiplier) plus the accumulated
-    /// Mooncake weight pull for `model` — the same cost models the
-    /// reward and weight-sync paths already use.
+    /// Runtime/sandbox boot portion of a provisioned engine's warm-up
+    /// (serverless cold start × multiplier).  The event-driven drivers
+    /// pay the *weight pull* separately, as real bucketized traffic on
+    /// the contended fan-out link (see the driver core's
+    /// `provision_engine`), so only the boot is analytic there.
+    pub fn boot_delay_s(&self) -> f64 {
+        ServerlessConfig::default().cold_start_s * self.provision_boot_multiplier
+    }
+
+    /// Fully analytic warm-up *floor* of one freshly provisioned
+    /// engine: boot plus the default bucket model's accumulated weight
+    /// pull for `model`.  Kept as a declarative reference only — the
+    /// DES drivers route the pull over the real contended link with
+    /// the *scenario's* bucket model and additionally pay the
+    /// host→GPU load at the end, so their measured
+    /// [`ElasticReport::provision_wait_s`] is strictly above
+    /// `n × provision_delay_s`.
     pub fn provision_delay_s(&self, model: &LlmSpec) -> f64 {
-        let boot = ServerlessConfig::default().cold_start_s * self.provision_boot_multiplier;
-        let store = MooncakeStore::default();
-        boot + store.acc_pull_time(model.weight_bytes())
+        self.boot_delay_s() + MooncakeStore::default().acc_pull_time(model.weight_bytes())
     }
 }
 
@@ -601,6 +612,7 @@ mod tests {
         let p = ElasticPolicy::new(GpuClass::H800, 1, 32);
         let d = p.provision_delay_s(&QWEN3_8B);
         let boot = ServerlessConfig::default().cold_start_s * p.provision_boot_multiplier;
+        assert_eq!(p.boot_delay_s(), boot);
         assert!(d > boot, "weight pull must add on top of boot: {d}");
         let store = MooncakeStore::default();
         let pull = store.acc_pull_time(QWEN3_8B.weight_bytes());

@@ -28,7 +28,7 @@
 //! | data | [`cluster`], [`serverless`], [`mooncake`], [`runtime`] |
 //! | control | [`coordinator`], [`proxy`] (incl. pluggable [`proxy::route`] policies), [`buffer`], [`rl`] |
 //! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine + phase residency, [`sim::driver::pd`] PD execution mode |
-//! | weights | [`weights`]: per-engine weight versions + pluggable [`weights::SyncStrategy`] dissemination (blocking / rolling / lazy / overlapped) over a contended fan-out link |
+//! | weights | [`weights`]: per-engine weight versions + pluggable [`weights::SyncStrategy`] dissemination (blocking / rolling / lazy / overlapped / adaptive), bucketized per-engine pulls ([`weights::bucketized_pull`], Mooncake bucket model) over a contended fan-out link |
 //! | fault & elasticity | [`fault`], [`elastic`] (single-pool [`elastic::AutoScaler`] + per-class PD [`elastic::PdAutoScaler`]) |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
 //! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |

@@ -44,6 +44,34 @@ impl Default for MooncakeConfig {
     }
 }
 
+impl MooncakeConfig {
+    /// Number of buckets a `bytes`-sized payload splits into.  An empty
+    /// payload is zero buckets (it must cost nothing — the regression
+    /// the old `.max(1.0)` clamp hid was an empty transfer booking one
+    /// full per-bucket latency); a sub-bucket payload is exactly one
+    /// *partial* bucket.
+    pub fn bucket_count(&self, bytes: f64) -> usize {
+        if bytes <= 0.0 {
+            return 0;
+        }
+        (bytes / self.bucket_bytes).ceil().max(1.0) as usize
+    }
+
+    /// The sequenced bucket sizes of one `bytes`-sized transfer:
+    /// `bucket_count - 1` full buckets followed by the remainder tail
+    /// (which may be a full bucket when `bytes` divides evenly).
+    /// Conservation holds by construction: the sizes sum to `bytes`.
+    pub fn bucket_sizes(&self, bytes: f64) -> Vec<f64> {
+        let n = self.bucket_count(bytes);
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut sizes = vec![self.bucket_bytes; n - 1];
+        sizes.push(bytes - self.bucket_bytes * (n - 1) as f64);
+        sizes
+    }
+}
+
 /// Cost decomposition of one weight synchronization (Table 4 rows).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SyncCost {
@@ -83,8 +111,13 @@ impl MooncakeStore {
         self.version
     }
 
+    /// The bucket model this store prices transfers with.
+    pub fn config(&self) -> &MooncakeConfig {
+        &self.cfg
+    }
+
     fn buckets(&self, bytes: f64) -> usize {
-        (bytes / self.cfg.bucket_bytes).ceil().max(1.0) as usize
+        self.cfg.bucket_count(bytes)
     }
 
     /// Time to stream `bytes` of weights to the store.
@@ -114,6 +147,13 @@ impl MooncakeStore {
     /// real remaining-rollout estimate; `f64::INFINITY` = fully
     /// overlapped pulls, leaving only the GPU load exposed).
     pub fn sync(&mut self, bytes: f64, overlap_window_s: f64) -> SyncCost {
+        self.version += 1;
+        if bytes <= 0.0 {
+            // Empty payload: zero buckets, zero cost everywhere (the
+            // version still advances — a publish of nothing is a
+            // no-op flip, not a stall).
+            return SyncCost::default();
+        }
         let push = self.push_time(bytes);
         let acc_pull = self.acc_pull_time(bytes);
         let n = self.buckets(bytes) as f64;
@@ -134,7 +174,6 @@ impl MooncakeStore {
         let gpu_load = bytes / self.cfg.gpu_load_bytes_per_s;
         let exposed = uncovered + gpu_load + n * self.cfg.per_bucket_latency_s;
 
-        self.version += 1;
         self.bytes_pushed += bytes;
         self.bytes_pulled += bytes;
 
@@ -239,6 +278,53 @@ mod tests {
         store.sync(1e9, f64::INFINITY);
         assert_eq!(store.version(), 2);
         assert!((store.bytes_pushed - 2e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn sub_bucket_payload_is_one_partial_bucket() {
+        // The one-bucket edge: a payload smaller than the bucket
+        // granularity is one *partial* bucket — it pays exactly one
+        // per-bucket latency and moves exactly its own bytes, not a
+        // full bucket's worth.
+        let cfg = MooncakeConfig::default();
+        let bytes = 0.3 * GB;
+        assert_eq!(cfg.bucket_count(bytes), 1);
+        let sizes = cfg.bucket_sizes(bytes);
+        assert_eq!(sizes.len(), 1);
+        assert!((sizes[0] - bytes).abs() < 1e-6, "{sizes:?}");
+        let store = MooncakeStore::default();
+        let expect = bytes / cfg.pull_bytes_per_s + cfg.per_bucket_latency_s;
+        assert!((store.acc_pull_time(bytes) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_byte_payload_costs_nothing() {
+        let cfg = MooncakeConfig::default();
+        assert_eq!(cfg.bucket_count(0.0), 0);
+        assert!(cfg.bucket_sizes(0.0).is_empty());
+        assert!(cfg.bucket_sizes(-1.0).is_empty());
+        let mut store = MooncakeStore::default();
+        assert_eq!(store.push_time(0.0), 0.0);
+        assert_eq!(store.acc_pull_time(0.0), 0.0);
+        let c = store.sync(0.0, f64::INFINITY);
+        assert_eq!(c, SyncCost::default(), "empty sync must be free");
+        assert_eq!(store.version(), 1, "the version still flips");
+        assert_eq!(store.bytes_pushed, 0.0);
+    }
+
+    #[test]
+    fn bucket_sizes_conserve_bytes_and_order() {
+        let cfg = MooncakeConfig::default();
+        for bytes in [0.5 * GB, 1.0 * GB, 1.5 * GB, 15.26 * GB, 61.02 * GB] {
+            let sizes = cfg.bucket_sizes(bytes);
+            assert_eq!(sizes.len(), cfg.bucket_count(bytes));
+            let sum: f64 = sizes.iter().sum();
+            assert!((sum - bytes).abs() < 1e-6 * bytes.max(1.0), "{bytes}: {sum}");
+            for (i, s) in sizes.iter().enumerate() {
+                assert!(*s > 0.0, "bucket {i} of {bytes} is empty");
+                assert!(*s <= cfg.bucket_bytes + 1e-6);
+            }
+        }
     }
 
     #[test]

@@ -168,10 +168,25 @@ impl SharedLink {
             + self.stats.bytes_total / self.link.effective_bytes_per_s
     }
 
+    /// A zero-byte transfer is a no-op: it must neither occupy a slot
+    /// nor book session setup or delivery latency (the empty
+    /// provisioned-pull edge — see [`crate::mooncake`]'s bucket model,
+    /// whose `bucket_count(0) == 0` is the other half of the guard).
+    fn empty_grant(now: f64) -> Grant {
+        Grant {
+            start_s: now,
+            done_s: now,
+            queue_delay_s: 0.0,
+        }
+    }
+
     /// Admit one forward-direction transfer of `bytes` at time `now`:
     /// it occupies the earliest-free slot FIFO and completes at
-    /// `done_s`.
+    /// `done_s`.  Zero-byte transfers are free (no slot, no setup).
     pub fn acquire(&mut self, now: f64, bytes: f64) -> Grant {
+        if bytes <= 0.0 {
+            return Self::empty_grant(now);
+        }
         let service = self.service_time(bytes);
         let grant = grant_on(&mut self.slots, service, self.link.latency_s, now);
         self.record(grant, bytes, false);
@@ -180,8 +195,12 @@ impl SharedLink {
 
     /// Admit one *reverse-direction* transfer (decode→prefill prefix
     /// reuse): queues only against other reverse traffic — the fabric
-    /// is full duplex — but shares the link's statistics.
+    /// is full duplex — but shares the link's statistics.  Zero-byte
+    /// transfers are free (no slot, no setup).
     pub fn acquire_reverse(&mut self, now: f64, bytes: f64) -> Grant {
+        if bytes <= 0.0 {
+            return Self::empty_grant(now);
+        }
         let service = self.service_time(bytes);
         let grant = grant_on(&mut self.rev_slots, service, self.link.latency_s, now);
         self.record(grant, bytes, true);
@@ -347,6 +366,23 @@ mod tests {
         assert_eq!(r.reverse_transfers, 2);
         assert_eq!(r.reverse_queued, 1);
         assert_eq!((f1.queue_delay_s, r1.queue_delay_s), (0.0, 0.0));
+    }
+
+    #[test]
+    fn zero_byte_transfer_is_free_and_books_nothing() {
+        // Regression for the empty-pull edge: a zero-byte transfer must
+        // not occupy a slot, pay setup/latency, or perturb the stats —
+        // a later real transfer sees an untouched link.
+        let mut l = shared(1);
+        let z = l.acquire(3.0, 0.0);
+        assert_eq!((z.start_s, z.done_s, z.queue_delay_s), (3.0, 3.0, 0.0));
+        let zr = l.acquire_reverse(3.0, -1.0);
+        assert_eq!((zr.start_s, zr.done_s), (3.0, 3.0));
+        assert_eq!(l.stats.transfers, 0, "nothing admitted");
+        assert_eq!(l.stats.bytes_total, 0.0);
+        let real = l.acquire(3.0, 1e9);
+        assert_eq!(real.queue_delay_s, 0.0, "slot untouched by the no-ops");
+        assert_eq!(real.start_s, 3.0);
     }
 
     #[test]

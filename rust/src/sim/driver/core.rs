@@ -26,9 +26,17 @@
 //! (`begin_suspend`/`finish_drain`/`SyncDone`) survives as the
 //! [`BlockingBroadcast`](crate::weights::BlockingBroadcast) strategy's
 //! implementation — byte-for-byte the pre-refactor semantics — while
-//! the event strategies (rolling / lazy / overlapped) suspend engines
-//! *individually*, route their pulls over a contended fan-out
-//! [`SharedLink`], and let the trainer proceed without a barrier.
+//! the event strategies (rolling / lazy / overlapped / adaptive) run
+//! the **bucketized pull pipeline**: each engine's pull splits into the
+//! Mooncake bucket model's sequenced bucket transfers on a contended
+//! fan-out [`SharedLink`] ([`crate::weights::bucketized_pull`]), each
+//! bucket gated on the trainer→store push producing it, the whole
+//! stream hidden behind ongoing decode — the engine suspends only for
+//! the cutover (chunked GPU load + per-bucket coordination + KV
+//! recompute), so the DES reproduces Table 4's push/pull/exposed
+//! decomposition per engine ([`WeightSyncReport::buckets`]).  Elastic
+//! scale-ups pay their warm-up weight pull as real bucketized traffic
+//! on the same link instead of the analytic `provision_delay_s`.
 //! Staleness admission consults the *engines'* versions
 //! (`DriverCore::gen_version`) and every turn is recorded at the
 //! version of the engine that generated it.
@@ -55,7 +63,7 @@ use crate::rl::{TrajectoryId, Version};
 use crate::serverless::{ServerlessConfig, ServerlessPlatform};
 use crate::sim::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::simkit::{EventQueue, SimRng, SimTime};
-use crate::weights::{FleetView, SyncStrategy, WeightSyncReport};
+use crate::weights::{bucketized_pull, AdaptDecision, FleetView, SyncStrategy, WeightSyncReport};
 use std::collections::BTreeMap;
 
 /// Safety horizon: a mis-configured chaos scenario (e.g. a permanent
@@ -89,13 +97,24 @@ enum Ev {
         gpus: usize,
         max_batch: usize,
     },
+    /// An elastic scale-up finished booting: admit its warm-up weight
+    /// pull on the contended link *now* (admitting it at decision time
+    /// would reserve FIFO slots the link should be serving during the
+    /// boot), then join the fleet after the pull + GPU load.
+    WarmupPull {
+        binding: Option<u64>,
+        class: GpuClass,
+        gpus: usize,
+        max_batch: usize,
+    },
     /// PD mode: `tid`'s KV cache finished its hop to the decode pool.
     KvDone { tid: TrajectoryId },
-    /// Weight plane: engine finished its pull + cutover and now serves
-    /// the version it committed to (event-driven strategies only).
+    /// Weight plane: engine finished its cutover and now serves the
+    /// version it committed to (event-driven strategies only).
     WsyncDone { engine: usize, epoch: u64 },
-    /// Weight plane (overlapped strategy): the engine's background
-    /// weight stream delivered; cut over at the next step boundary.
+    /// Weight plane: the engine's background bucketized weight stream
+    /// delivered; cut over at the next step boundary (event-driven
+    /// strategies — the transfer rides behind decode).
     WsyncStreamed { engine: usize, epoch: u64 },
 }
 
@@ -104,16 +123,24 @@ enum Ev {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EngineSync {
     Idle,
-    /// Committed to a wave; suspends for the pull at its next step
-    /// boundary.
-    AwaitFree,
-    /// Overlapped strategy: transfer streaming behind ongoing decode.
+    /// Bucketized pull streaming behind ongoing decode (the transfer
+    /// lands host-side; the engine keeps serving).
     Streaming,
-    /// Overlapped stream delivered mid-step; cut over at the next step
-    /// boundary.
+    /// Stream delivered mid-step; cut over at the next step boundary.
     AwaitCutover,
-    /// Suspended: pulling weights and/or loading them into the GPU.
+    /// Suspended for the cutover: (chunked) GPU load + per-bucket
+    /// coordination + KV recompute.
     Offline,
+}
+
+/// Bucketized push schedule of the version currently disseminating:
+/// bucket `i` of the trainer→store push lands at
+/// `start_s + (i + 1) * per_bucket_s`, and per-engine pulls gate each
+/// bucket on it ([`crate::weights::bucketized_pull`]).
+#[derive(Clone, Copy, Debug)]
+struct PushPlan {
+    start_s: f64,
+    per_bucket_s: f64,
 }
 
 /// Why a trajectory is being aborted — drives the per-reason hooks on
@@ -268,6 +295,9 @@ struct DriverCore<'a> {
     /// Wall-clock the open dissemination window started (publish →
     /// last live engine current), if one is converging.
     wdissem_started: Option<f64>,
+    /// Push schedule of the latest published version: per-engine pulls
+    /// admitted while it is current gate their buckets on it.
+    wpush_plan: Option<PushPlan>,
     wreport: WeightSyncReport,
     /// PD prefix-reuse: per-trajectory completion time of the reverse
     /// (decode→prefill) KV hop the next turn's prefill must wait for.
@@ -490,10 +520,11 @@ impl<'a> DriverCore<'a> {
             env_target,
             engine_version: vec![Version(0); n_engines],
             wstrategy: cfg.weights.strategy.make(),
-            wlink: SharedLink::new(cfg.weights.link.clone(), cfg.weights.fanout_slots),
+            wlink: SharedLink::new(cfg.weights.fanout_link(), cfg.weights.fanout_slots),
             wsync: vec![EngineSync::Idle; n_engines],
             wsync_version: vec![Version(0); n_engines],
             wdissem_started: None,
+            wpush_plan: None,
             wreport: WeightSyncReport::default(),
             pd_reverse_ready: BTreeMap::new(),
             initial_engines: n_engines,
@@ -503,7 +534,10 @@ impl<'a> DriverCore<'a> {
             staged: BTreeMap::new(),
             group_domain: BTreeMap::new(),
             buffer,
-            store: MooncakeStore::default(),
+            // Both weight paths — the blocking drain's analytic sync
+            // and the event strategies' bucketized pulls — price
+            // transfers with the scenario's one bucket model.
+            store: MooncakeStore::new(cfg.weights.mooncake.clone()),
             serverless: ServerlessPlatform::new(ServerlessConfig {
                 // tight reclaim: reward bursts are short-lived (Fig 12)
                 idle_timeout_s: 15.0,
@@ -601,11 +635,23 @@ impl<'a> DriverCore<'a> {
     }
 
     /// A freshly trained version starts disseminating (event-driven
-    /// strategies): open — or re-target — the dissemination window and
-    /// ask the strategy for its first wave.  Engines mid-sync complete
-    /// to the version they committed to and are re-picked.
-    fn begin_dissemination(&mut self) {
+    /// strategies): open — or re-target — the dissemination window,
+    /// record the bucketized push schedule pulls will gate on
+    /// (`push_start` is when the trainer began streaming to the store,
+    /// i.e. the train-done instant), and ask the strategy for its
+    /// first wave.  Engines mid-sync complete to the version they
+    /// committed to and are re-picked.
+    fn begin_dissemination(&mut self, push_start: f64) {
         self.wreport.publishes += 1;
+        let bytes = self.cfg.model.weight_bytes();
+        let n = self.cfg.weights.mooncake.bucket_count(bytes);
+        let push = self.store.push_time(bytes);
+        self.wreport.buckets.push_s += push;
+        self.wreport.buckets.naive_s += push + self.store.acc_pull_time(bytes);
+        self.wpush_plan = Some(PushPlan {
+            start_s: push_start,
+            per_bucket_s: if n > 0 { push / n as f64 } else { 0.0 },
+        });
         if self.wdissem_started.is_none() {
             self.wdissem_started = Some(self.now());
         }
@@ -636,10 +682,10 @@ impl<'a> DriverCore<'a> {
         self.check_dissemination_done();
     }
 
-    /// Commit engine `e` to a sync toward the current trainer version.
-    /// Overlapped strategies start streaming immediately (the engine
-    /// keeps decoding); the others suspend at the engine's next step
-    /// boundary — now, if it is idle.
+    /// Commit engine `e` to a sync toward the current trainer version:
+    /// its bucketized pull starts streaming immediately *behind*
+    /// ongoing decode (the buckets land host-side; only the cutover
+    /// will suspend the engine).
     fn start_engine_sync(&mut self, e: usize) {
         if self.engine_down[e]
             || self.wsync[e] != EngineSync::Idle
@@ -648,50 +694,27 @@ impl<'a> DriverCore<'a> {
             return;
         }
         self.wsync_version[e] = self.version;
-        if self.wstrategy.overlapped() {
-            self.wsync[e] = EngineSync::Streaming;
-            let now = self.now();
-            let done = self.acquire_weight_transfer(now, self.cfg.model.weight_bytes());
-            self.q.schedule_in(
-                (done - now).max(0.0),
-                Ev::WsyncStreamed {
-                    engine: e,
-                    epoch: self.engine_epoch[e],
-                },
-            );
-        } else if self.engine_busy[e] {
-            self.wsync[e] = EngineSync::AwaitFree;
-        } else {
-            self.engine_sync_transfer(e);
-        }
-    }
-
-    /// Suspend engine `e` and pull the new weights: a transfer on the
-    /// contended fan-out link, then the cutover (GPU load + in-flight
-    /// KV recompute, protocol step ⑤).
-    fn engine_sync_transfer(&mut self, e: usize) {
-        self.wsync[e] = EngineSync::Offline;
-        self.proxy.engines_mut()[e].suspend();
+        self.wsync[e] = EngineSync::Streaming;
         let now = self.now();
-        let done = self.acquire_weight_transfer(now, self.cfg.model.weight_bytes());
-        let total = (done - now).max(0.0) + self.engine_cutover_s(e);
-        self.wreport.engine_offline_s += total;
+        let done = self.pull_weights(now, self.cfg.model.weight_bytes(), true);
         self.q.schedule_in(
-            total,
-            Ev::WsyncDone {
+            (done - now).max(0.0),
+            Ev::WsyncStreamed {
                 engine: e,
                 epoch: self.engine_epoch[e],
             },
         );
     }
 
-    /// Overlapped strategy: the stream has delivered and the engine is
-    /// at a step boundary — suspend only for the cutover.
+    /// The stream has delivered and the engine is at a step boundary —
+    /// suspend only for the cutover (protocol step ⑤).
     fn begin_cutover(&mut self, e: usize) {
         self.wsync[e] = EngineSync::Offline;
         self.proxy.engines_mut()[e].suspend();
-        let cut = self.engine_cutover_s(e);
+        let (cut, exposed) = self.engine_cutover_s(e);
         self.wreport.engine_offline_s += cut;
+        self.wreport.buckets.exposed_s += exposed;
+        self.wreport.buckets.cutovers += 1;
         self.q.schedule_in(
             cut,
             Ev::WsyncDone {
@@ -701,31 +724,56 @@ impl<'a> DriverCore<'a> {
         );
     }
 
-    /// Admit one weight pull on the configured path: the dedicated
-    /// fan-out link, or the PD deployment's KV link when the scenario
-    /// makes weight and KV traffic contend (`weights.share_kv_link`).
-    /// Returns the transfer's completion time.
-    fn acquire_weight_transfer(&mut self, now: f64, bytes: f64) -> f64 {
-        let grant = match (self.cfg.weights.share_kv_link, self.pd.as_mut()) {
-            (true, Some(pd)) => pd.shared.acquire(now, bytes),
-            _ => self.wlink.acquire(now, bytes),
+    /// Admit one **bucketized** weight pull on the configured path: the
+    /// dedicated fan-out link, or the PD deployment's KV link when the
+    /// scenario makes weight and KV traffic contend
+    /// (`weights.share_kv_link`).  The pull is `bucket_count` sequenced
+    /// bucket transfers (never reordered within one pull); with `gated`
+    /// each bucket additionally waits for the trainer→store push
+    /// pipeline to produce it, so the pull trails the push
+    /// bucket-by-bucket exactly as `MooncakeStore::sync`'s analytic
+    /// pipeline does.  Returns the final bucket's completion time and
+    /// books the pull into [`WeightSyncReport::buckets`].
+    fn pull_weights(&mut self, now: f64, bytes: f64, gated: bool) -> f64 {
+        let plan = if gated { self.wpush_plan } else { None };
+        let ready = move |i: usize| match plan {
+            Some(p) => p.start_s + (i + 1) as f64 * p.per_bucket_s,
+            None => f64::NEG_INFINITY,
         };
-        self.wreport.transfers += 1;
-        if grant.queue_delay_s > 1e-12 {
-            self.wreport.queued_transfers += 1;
-        }
-        self.wreport.link_queue_delay_s += grant.queue_delay_s;
-        grant.done_s
+        let mc = self.cfg.weights.mooncake.clone();
+        let out = match (self.cfg.weights.share_kv_link, self.pd.as_mut()) {
+            (true, Some(pd)) => bucketized_pull(&mut pd.shared, &mc, now, bytes, ready),
+            _ => bucketized_pull(&mut self.wlink, &mc, now, bytes, ready),
+        };
+        let b = &mut self.wreport.buckets;
+        b.engine_pulls += 1;
+        b.bucket_transfers += out.buckets.len() as u64;
+        b.bytes_pulled += bytes.max(0.0);
+        b.acc_pull_s += out.transfer_s;
+        b.queue_delay_s += out.queue_delay_s;
+        b.max_queue_delay_s = b.max_queue_delay_s.max(out.max_queue_delay_s);
+        b.push_gate_s += out.push_gate_s;
+        self.wreport.transfers += out.buckets.len() as u64;
+        self.wreport.queued_transfers += out.queued;
+        self.wreport.link_queue_delay_s += out.queue_delay_s;
+        out.done_s
     }
 
-    /// Exposed cutover of one engine's weight swap: the (chunked) GPU
-    /// load plus the KV recompute of its in-flight contexts.
-    fn engine_cutover_s(&self, e: usize) -> f64 {
+    /// Cutover of one engine's weight swap.  Returns
+    /// `(engine_offline, exposed_swap)`: the offline time adds the KV
+    /// recompute of the engine's in-flight contexts on top of the
+    /// exposed swap cost — the (chunked) GPU load plus the per-bucket
+    /// coordination RPCs, Table 4's exposed residual — which is kept
+    /// separate so [`BucketBreakdown::exposed_s`] stays cross-checkable
+    /// against the analytic store decomposition.
+    fn engine_cutover_s(&self, e: usize) -> (f64, f64) {
+        let bytes = self.cfg.model.weight_bytes();
         let chunks = self.wstrategy.chunks().max(1) as f64;
-        let load = self
-            .store
-            .gpu_load_time(self.cfg.model.weight_bytes() / chunks);
-        load + self.proxy.engines()[e].recompute_cost_s()
+        let load = self.store.gpu_load_time(bytes / chunks);
+        let coord = self.cfg.weights.mooncake.bucket_count(bytes) as f64
+            * self.cfg.weights.mooncake.per_bucket_latency_s;
+        let exposed = load + coord;
+        (exposed + self.proxy.engines()[e].recompute_cost_s(), exposed)
     }
 
     /// Engine `e` finished its pull + cutover: flip its version, bring
@@ -745,7 +793,7 @@ impl<'a> DriverCore<'a> {
         self.start_waves();
     }
 
-    /// Overlapped stream delivered: cut over now if the engine sits at
+    /// Bucketized stream delivered: cut over now if the engine sits at
     /// a step boundary, else at its next `EngineFree`.
     fn on_wsync_streamed(&mut self, e: usize, epoch: u64) {
         if epoch != self.engine_epoch[e] || self.wsync[e] != EngineSync::Streaming {
@@ -1410,8 +1458,13 @@ impl<'a> DriverCore<'a> {
     }
 
     /// Start warming one engine of `policy`'s class: bind capacity
-    /// now, join the fleet after the provision delay (boot + weight
-    /// pull).
+    /// now, join the fleet after the warm-up — runtime boot, then the
+    /// warm-up weight pull as *real* bucketized traffic on the
+    /// contended fan-out (or shared-KV) link, then the host→GPU load.
+    /// A burst of scale-ups therefore queues against in-flight
+    /// refreshes instead of paying the analytic `provision_delay_s`
+    /// (which is kept in [`crate::elastic`] only as the declarative
+    /// reference cost).
     fn provision_engine(&mut self, policy: &ElasticPolicy) {
         let binding = match self.rm.as_mut() {
             Some(rm) => {
@@ -1428,18 +1481,48 @@ impl<'a> DriverCore<'a> {
             }
             None => None,
         };
-        let delay = policy.provision_delay_s(&self.cfg.model);
+        let boot = policy.boot_delay_s();
         if let Some(r) = self.elastic_report_mut() {
-            r.provision_wait_s += delay;
+            r.provision_wait_s += boot;
         }
         *self.pending_provisions.entry(policy.class).or_insert(0) += 1;
         self.q.schedule_in(
-            delay,
-            Ev::EngineProvisioned {
+            boot,
+            Ev::WarmupPull {
                 binding,
                 class: policy.class,
                 gpus: policy.gpus_per_engine,
                 max_batch: policy.max_batch,
+            },
+        );
+    }
+
+    /// Boot finished: pull the warm-up weights as real bucketized
+    /// traffic on the contended link (queueing against in-flight
+    /// refreshes), load them into the GPU, then join the fleet.
+    fn on_warmup_pull(
+        &mut self,
+        binding: Option<u64>,
+        class: GpuClass,
+        gpus: usize,
+        max_batch: usize,
+    ) {
+        let now = self.now();
+        let bytes = self.cfg.model.weight_bytes();
+        // No push gate: the store already holds the published version.
+        let pull_done = self.pull_weights(now, bytes, false);
+        let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
+        self.wreport.warmup_pulls += 1;
+        if let Some(r) = self.elastic_report_mut() {
+            r.provision_wait_s += delay;
+        }
+        self.q.schedule_in(
+            delay,
+            Ev::EngineProvisioned {
+                binding,
+                class,
+                gpus,
+                max_batch,
             },
         );
     }
@@ -1640,9 +1723,9 @@ impl<'a> DriverCore<'a> {
                 self.pending_batch = Some((n, tokens));
                 self.begin_suspend();
             } else {
-                self.weights_pushed_at = None;
+                let push_start = self.weights_pushed_at.take().unwrap_or_else(|| self.now());
                 self.version = self.version.next();
-                self.begin_dissemination();
+                self.begin_dissemination(push_start);
                 self.start_train(tokens);
             }
         } else {
@@ -1770,6 +1853,26 @@ impl<'a> DriverCore<'a> {
             requeued: std::mem::take(&mut self.acc_requeued),
         });
 
+        // Closed-loop dissemination (AdaptiveSync): feed the
+        // iteration's get_batch wait vs the fleet's worst version lag
+        // back into the strategy — the same measured-signal feedback
+        // the elastic controllers run on, so the decisions replay
+        // bit-identically under a fixed seed.
+        let (wait_s, train_s) = {
+            let last = self.result.steps.last().expect("step just recorded");
+            (last.breakdown.get_batch_wait_s, last.breakdown.train_s)
+        };
+        let max_lag = (0..self.engine_version.len())
+            .filter(|&e| !self.engine_down[e])
+            .map(|e| self.version.0.saturating_sub(self.engine_version[e].0))
+            .max()
+            .unwrap_or(0);
+        match self.wstrategy.observe_iteration(wait_s, train_s, max_lag, self.cfg.alpha) {
+            AdaptDecision::Raise => self.wreport.adapt_raises += 1,
+            AdaptDecision::Lower => self.wreport.adapt_drops += 1,
+            AdaptDecision::Hold => {}
+        }
+
         // Elastic controller: one decision per completed iteration,
         // fed by the iteration cost just recorded.
         self.maybe_autoscale();
@@ -1890,22 +1993,18 @@ impl<'a> DriverCore<'a> {
             self.finish_drain();
             return;
         }
-        // Weight plane: an engine committed to a sync acts at its step
-        // boundary (the completions above may have re-kicked it; if so
-        // it stays committed and acts at the next boundary)...
-        match self.wsync[engine] {
-            EngineSync::AwaitFree if !self.engine_busy[engine] => {
-                self.engine_sync_transfer(engine);
-                return;
-            }
-            EngineSync::AwaitCutover if !self.engine_busy[engine] => {
-                self.begin_cutover(engine);
-                return;
-            }
-            _ => {}
+        // Weight plane: an engine whose stream delivered mid-step cuts
+        // over at this boundary (the completions above may have
+        // re-kicked it; if so it stays committed and cuts at the next
+        // boundary)...
+        if self.wsync[engine] == EngineSync::AwaitCutover && !self.engine_busy[engine] {
+            self.begin_cutover(engine);
+            return;
         }
         // ...and a lazy engine takes its idle gap: behind the trainer
-        // with nothing queued, it pulls now instead of idling.
+        // with nothing queued, it starts its bucketized pull now
+        // instead of idling (the cutover follows when the stream
+        // lands).
         if self.wstrategy.pull_on_idle()
             && self.wsync[engine] == EngineSync::Idle
             && !self.engine_busy[engine]
@@ -1913,8 +2012,7 @@ impl<'a> DriverCore<'a> {
             && self.engine_version[engine] < self.version
             && self.proxy.engines()[engine].load() == 0
         {
-            self.wsync_version[engine] = self.version;
-            self.engine_sync_transfer(engine);
+            self.start_engine_sync(engine);
             return;
         }
         self.kick_engine(engine);
@@ -2026,6 +2124,12 @@ impl<'a> DriverCore<'a> {
                     gpus,
                     max_batch,
                 } => self.on_engine_provisioned(binding, class, gpus, max_batch),
+                Ev::WarmupPull {
+                    binding,
+                    class,
+                    gpus,
+                    max_batch,
+                } => self.on_warmup_pull(binding, class, gpus, max_batch),
                 Ev::KvDone { tid } => self.on_kv_done(tid),
                 Ev::WsyncDone { engine, epoch } => self.on_wsync_done(engine, epoch),
                 Ev::WsyncStreamed { engine, epoch } => self.on_wsync_streamed(engine, epoch),
@@ -2376,10 +2480,11 @@ mod tests {
         r.steps.iter().map(|s| s.breakdown.weight_sync_s).sum()
     }
 
-    const EVENT_STRATEGIES: [SyncStrategyKind; 3] = [
+    const EVENT_STRATEGIES: [SyncStrategyKind; 4] = [
         SyncStrategyKind::RollingSubset { k: 1 },
         SyncStrategyKind::LazyPull,
         SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+        SyncStrategyKind::Adaptive,
     ];
 
     #[test]
@@ -2466,6 +2571,83 @@ mod tests {
             );
         }
         assert!(r.weights.mean_lag() > 0.0, "{:?}", r.weights);
+    }
+
+    #[test]
+    fn bucketized_pulls_conserve_bytes_and_fill_the_breakdown() {
+        // The tentpole invariant at driver level: every per-engine pull
+        // moved exactly the model's weight bytes as bucket transfers,
+        // and the Table 4 decomposition is populated per publish /
+        // pull / cutover.  (The analytic cross-check lives in
+        // tests/weights_conformance.rs.)
+        let cfg = with_strategy(Mode::RollArt, SyncStrategyKind::RollingSubset { k: 2 });
+        let r = run(&cfg);
+        let b = &r.weights.buckets;
+        let bytes = cfg.model.weight_bytes();
+        let n = cfg.weights.mooncake.bucket_count(bytes) as u64;
+        assert!(b.engine_pulls > 0, "{b:?}");
+        assert_eq!(b.bucket_transfers, b.engine_pulls * n, "whole pulls only");
+        assert!(
+            (b.bytes_pulled - b.engine_pulls as f64 * bytes).abs() < 1.0,
+            "pipelining must conserve bytes: {b:?}"
+        );
+        assert!(b.push_s > 0.0 && b.acc_pull_s > 0.0 && b.naive_s > b.push_s);
+        assert!(b.cutovers > 0 && b.exposed_s > 0.0);
+        // The pull stream hides behind decode: exposed swap cost per
+        // cutover is far below the per-engine pull it replaces.
+        assert!(b.mean_exposed_s() < 0.5 * b.mean_pull_s(), "{b:?}");
+    }
+
+    #[test]
+    fn provisioned_engines_pay_real_warmup_pulls() {
+        use crate::elastic::ElasticPolicy;
+        use crate::simkit::dist::Dist;
+        // Slow env steps make every iteration rollout-bound, so the
+        // eager thresholds below are guaranteed to scale up.
+        let mut cfg = with_strategy(Mode::RollArt, SyncStrategyKind::RollingSubset { k: 1 });
+        cfg.iterations = 4;
+        cfg.env_step_override = Some(Dist::Constant(30.0));
+        let mut policy = ElasticPolicy::new(GpuClass::H800, cfg.model.rollout_tp, 32);
+        policy.scale_up_wait_ratio = 0.1;
+        policy.scale_down_wait_ratio = 0.01;
+        policy.cooldown_steps = 0;
+        cfg.elastic = Some(policy);
+        let r = run(&cfg);
+        assert!(r.elastic.scale_ups > 0, "{:?}", r.elastic);
+        assert!(
+            r.weights.warmup_pulls > 0,
+            "scale-ups must book their warm-up pull on the link: {:?}",
+            r.weights
+        );
+        assert!(
+            r.weights.warmup_pulls >= r.elastic.engines_added,
+            "every provisioned engine paid a pull: {:?} vs {:?}",
+            r.weights,
+            r.elastic
+        );
+        // Deterministic with warm-up traffic on the contended link.
+        let again = run(&cfg);
+        assert_eq!(r, again);
+    }
+
+    #[test]
+    fn adaptive_sync_closes_the_loop() {
+        let mut cfg = with_strategy(Mode::RollArt, SyncStrategyKind::Adaptive);
+        cfg.iterations = 5;
+        let (r, lc) = run_traced(&cfg);
+        assert_eq!(r.steps.len(), 5);
+        assert_eq!(lc.violations, 0, "{:?}", lc.edges);
+        assert_eq!(exposed_sync_total(&r), 0.0, "adaptive never stalls the trainer");
+        assert!(r.weights.engine_syncs > 0);
+        // The controller made at least one observation pass (counters
+        // may legitimately both be zero on a balanced run, but the
+        // run must stay bit-deterministic with whatever it decided).
+        let again = run(&cfg);
+        assert_eq!(r, again);
+        assert_eq!(
+            (r.weights.adapt_raises, r.weights.adapt_drops),
+            (again.weights.adapt_raises, again.weights.adapt_drops)
+        );
     }
 
     #[test]

@@ -265,6 +265,7 @@ mod tests {
             K::RollingSubset { k: 2 },
             K::LazyPull,
             K::OverlappedBroadcast { chunks: 8 },
+            K::Adaptive,
         ];
         // Sync+ trains behind a blocking barrier: only the fleet drain.
         let sp = policy_for(Mode::SyncPlus);
@@ -272,6 +273,7 @@ mod tests {
         assert!(!sp.strategy_legal(K::RollingSubset { k: 2 }));
         assert!(!sp.strategy_legal(K::LazyPull));
         assert!(!sp.strategy_legal(K::OverlappedBroadcast { chunks: 4 }));
+        assert!(!sp.strategy_legal(K::Adaptive));
         // Continuous modes admit every strategy.
         for mode in [Mode::OneOff, Mode::AReaL, Mode::RollArt] {
             let p = policy_for(mode);

@@ -449,6 +449,32 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         engine_offline_s: sync_total * engines.len() as f64,
         ..Default::default()
     };
+    // Unified bucket model: on the Mooncake-plane arm (non-default
+    // strategy) the monolith reports the same Table 4 decomposition
+    // the DES books per engine — push and per-engine pull per publish,
+    // everything exposed (a barrier pipeline has no overlap window).
+    if !matches!(cfg.weights.strategy, SyncStrategyKind::BlockingBroadcast) {
+        let store = crate::mooncake::MooncakeStore::new(cfg.weights.mooncake.clone());
+        let bytes = cfg.model.weight_bytes();
+        let iters = result.steps.len() as f64;
+        let push = store.push_time(bytes);
+        let pull = store.acc_pull_time(bytes);
+        let pulls = (engines.len() * result.steps.len()) as u64;
+        result.weights.buckets = crate::weights::BucketBreakdown {
+            push_s: push * iters,
+            acc_pull_s: pull * pulls as f64,
+            // Every engine sits through the whole barrier each publish,
+            // so the per-cutover mean is the full per-publish stall
+            // (mirrors engine_offline_s above).
+            exposed_s: sync_total * engines.len() as f64,
+            naive_s: (push + pull) * iters,
+            engine_pulls: pulls,
+            cutovers: pulls,
+            bucket_transfers: pulls * cfg.weights.mooncake.bucket_count(bytes) as u64,
+            bytes_pulled: pulls as f64 * bytes,
+            ..Default::default()
+        };
+    }
     result
 }
 
@@ -736,6 +762,18 @@ mod tests {
         assert!(r.weights.exposed_stall_s > 0.0);
         assert_eq!(r.weights.overlap_ratio(), 0.0);
         assert_eq!(r.weights.engine_syncs, (n * 3) as u64);
+        // The Mooncake-plane arm fills the analytic bucket breakdown;
+        // the legacy NCCL reshard is not bucketized and leaves it zero.
+        let store = crate::mooncake::MooncakeStore::default();
+        let bytes = cfg.model.weight_bytes();
+        assert!(
+            (r.weights.buckets.push_s - 3.0 * store.push_time(bytes)).abs() < 1e-6,
+            "{:?}",
+            r.weights.buckets
+        );
+        assert_eq!(r.weights.buckets.engine_pulls, (n * 3) as u64);
+        assert!(r.weights.buckets.naive_s > r.weights.buckets.push_s);
+        assert_eq!(legacy.weights.buckets, crate::weights::BucketBreakdown::default());
         // The legacy default also fills the report (for the benches).
         assert_eq!(legacy.weights.publishes, 3);
         assert!(legacy.weights.exposed_stall_s > 0.0);

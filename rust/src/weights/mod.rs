@@ -18,42 +18,57 @@
 //! | strategy | semantics | trainer stall | engine stall |
 //! |---|---|---|---|
 //! | [`BlockingBroadcast`] | the legacy fleet drain: suspend everything, one analytic store sync, global flip | exposed + KV recompute | whole fleet, whole window |
-//! | [`RollingSubset`] | sync `k` engines at a time; the rest keep decoding at the old version | none | per-engine pull + cutover, `k` at a time |
-//! | [`LazyPull`] | each engine pulls at its next idle gap, forced once it would fall α behind | none | per-engine, deferred to idle |
-//! | [`OverlappedBroadcast`] | chunked push streams behind decode; only the last chunk's GPU load + KV recompute is exposed per engine | none | cutover only |
+//! | [`RollingSubset`] | `k` engines stream their pull at a time; the rest stay at the old version | none | cutover only, `k` pulls in flight |
+//! | [`LazyPull`] | each engine pulls at its next idle gap, forced once it would fall α behind | none | cutover only, deferred to idle |
+//! | [`OverlappedBroadcast`] | everyone streams at once; the cutover itself is chunked so only the last chunk's GPU load is exposed | none | last-chunk cutover only |
+//! | [`AdaptiveSync`] | closed loop: `k` tuned per iteration from the observed `get_batch` wait vs the fleet's version lag | none | cutover only, adapted `k` |
 //!
-//! * weight traffic flows over the [`net`](crate::net) plane: every
-//!   per-engine pull is a transfer on a trainer-side
-//!   [`SharedLink`](crate::net::SharedLink), so concurrent pulls
-//!   *contend* for fan-out bandwidth (and, with
+//! * every per-engine pull is **bucketized** by the Mooncake model
+//!   ([`MooncakeConfig::bucket_sizes`]): [`bucketized_pull`] admits the
+//!   buckets as *sequenced* transfers on a trainer-side
+//!   [`SharedLink`](crate::net::SharedLink) — never reordered within
+//!   one engine's pull, conserving bytes exactly — each gated on the
+//!   trainer→store push pipeline producing that bucket, so the DES
+//!   reproduces Table 4's push/pull/exposed decomposition *per engine*
+//!   ([`BucketBreakdown`], cross-checked against
+//!   [`MooncakeStore::sync`](crate::mooncake::MooncakeStore::sync) by
+//!   `rust/tests/weights_conformance.rs`).  The transfer streams
+//!   *behind decode*; the engine suspends only for the cutover (chunked
+//!   GPU load + per-bucket coordination + KV recompute).  Concurrent
+//!   pulls contend for the fan-out slots (and, with
 //!   [`WeightsScenario::share_kv_link`], with PD KV traffic on the same
 //!   link);
 //! * a [`WeightSyncReport`] surfaces the exposed stall, overlap ratio,
-//!   per-engine version lag and link queue delay on
-//!   [`ScenarioResult`](crate::sim::ScenarioResult).
+//!   per-engine version lag, link queue delay and the bucket
+//!   decomposition on [`ScenarioResult`](crate::sim::ScenarioResult).
 //!
 //! The driver core (see [`crate::sim::driver::core`]) owns the event
-//! loop; this module owns the *decisions* (strategy) and the *knobs*
-//! (scenario + report).  `BlockingBroadcast` keeps the exact
-//! pre-refactor code path so the fleet-drain numbers are reproduced by
-//! construction (pinned by `blocking_broadcast_is_the_legacy_fleet_drain`
-//! in the driver core's tests).
+//! loop; this module owns the *decisions* (strategy), the *transfer
+//! pipeline* ([`bucketized_pull`]) and the *knobs* (scenario + report).
+//! `BlockingBroadcast` keeps the exact pre-refactor code path so the
+//! fleet-drain numbers are reproduced by construction (pinned by
+//! `blocking_broadcast_is_the_legacy_fleet_drain` in the driver core's
+//! tests).
 
 use crate::llm::LlmSpec;
-use crate::net::{balanced_makespan, Link};
+use crate::mooncake::MooncakeConfig;
+use crate::net::{balanced_makespan, Grant, Link, SharedLink};
 use crate::rl::Version;
 
 const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
 /// Store→engine fan-out path for per-engine weight pulls: the Mooncake
 /// pull side of Table 4 (aggregate ≈2.1 GB/s across the inference
-/// fleet), modeled as one contended link with a small per-pull session
-/// cost.
+/// fleet), modeled as one contended link.  The per-transfer session
+/// cost equals the bucket model's per-bucket coordination latency —
+/// transfers on this link *are* buckets, so one serial bucketized pull
+/// reproduces [`MooncakeStore::acc_pull_time`](crate::mooncake::MooncakeStore::acc_pull_time)
+/// up to the per-bucket delivery latency.
 pub static MOONCAKE_FANOUT: Link = Link {
     name: "mooncake-fanout",
     raw_gbps: 200.0,
     effective_bytes_per_s: 2.1 * GB,
-    setup_s: 0.05,
+    setup_s: 0.01,
     latency_s: 0.002,
 };
 
@@ -71,6 +86,11 @@ pub enum SyncStrategyKind {
     /// Chunked push pipelined with decode; `chunks` pipeline stages,
     /// only the last chunk's GPU load is exposed per engine.
     OverlappedBroadcast { chunks: usize },
+    /// Closed-loop rolling: the concurrency `k` is tuned per iteration
+    /// from the observed `get_batch` wait vs the fleet's version lag
+    /// (same controller shape as the elastic plane's
+    /// [`AutoScaler`](crate::elastic::AutoScaler)).
+    Adaptive,
 }
 
 impl SyncStrategyKind {
@@ -80,6 +100,7 @@ impl SyncStrategyKind {
             SyncStrategyKind::RollingSubset { .. } => "rolling",
             SyncStrategyKind::LazyPull => "lazy",
             SyncStrategyKind::OverlappedBroadcast { .. } => "overlapped",
+            SyncStrategyKind::Adaptive => "adaptive",
         }
     }
 
@@ -92,6 +113,7 @@ impl SyncStrategyKind {
             SyncStrategyKind::OverlappedBroadcast { chunks } => {
                 Box::new(OverlappedBroadcast::new(chunks))
             }
+            SyncStrategyKind::Adaptive => Box::new(AdaptiveSync::new()),
         }
     }
 }
@@ -101,7 +123,11 @@ impl SyncStrategyKind {
 pub struct WeightsScenario {
     pub strategy: SyncStrategyKind,
     /// Trainer-side fan-out link (store → engines) the per-engine
-    /// pulls ride.
+    /// pulls ride.  Its `setup_s` *and* `effective_bytes_per_s` are
+    /// derived from the bucket model (transfers on this link are
+    /// buckets — see [`WeightsScenario::fanout_link`]): tune delivery
+    /// latency and identity here, bandwidth and coordination cost on
+    /// `mooncake`.
     pub link: Link,
     /// Concurrent transfer slots on the fan-out link; pulls beyond
     /// this queue FIFO ([`SharedLink`](crate::net::SharedLink)).
@@ -111,6 +137,11 @@ pub struct WeightsScenario {
     /// the same slots.  Ignored when the scenario has no disaggregated
     /// PD deployment.
     pub share_kv_link: bool,
+    /// The Mooncake bucket model every weight transfer is priced with:
+    /// per-engine pulls split into `bucket_count` sequenced bucket
+    /// transfers, the trainer→store push paces them, and the cutover
+    /// pays the per-bucket coordination residual (Table 4).
+    pub mooncake: MooncakeConfig,
 }
 
 impl Default for WeightsScenario {
@@ -120,6 +151,7 @@ impl Default for WeightsScenario {
             link: MOONCAKE_FANOUT.clone(),
             fanout_slots: 2,
             share_kv_link: false,
+            mooncake: MooncakeConfig::default(),
         }
     }
 }
@@ -133,25 +165,50 @@ impl WeightsScenario {
         }
     }
 
+    /// The fan-out link actually priced: `link` with its per-transfer
+    /// session cost pinned to the bucket model's coordination latency
+    /// and its bandwidth pinned to the bucket model's aggregate pull
+    /// goodput.  Deriving both here (instead of trusting the duplicate
+    /// knobs to stay equal) keeps the DES link pricing and the
+    /// analytic store decomposition from silently desynchronizing when
+    /// either side is re-calibrated — the ROADMAP's "drive the fan-out
+    /// link bandwidth from the Mooncake bucket model", literally.
+    pub fn fanout_link(&self) -> Link {
+        Link {
+            setup_s: self.mooncake.per_bucket_latency_s,
+            effective_bytes_per_s: self.mooncake.pull_bytes_per_s,
+            ..self.link.clone()
+        }
+    }
+
     /// Analytic fleet-blocking dissemination time: the balanced
-    /// fair-share makespan of one full-weight pull per engine over the
-    /// fan-out link, plus the in-GPU weight load at the suspend point.
-    /// This is the term the *synchronous* baseline pays when a
-    /// non-legacy weight plane is configured (a barrier pipeline cannot
-    /// exploit rolling updates, but it must pay the same transfer cost
-    /// model so sync-vs-async comparisons stay fair — see
+    /// fair-share makespan of one full-weight *bucketized* pull per
+    /// engine over the fan-out link (every bucket pays the link's
+    /// per-transfer session cost — the bucket model's coordination
+    /// RPC), plus the in-GPU weight load at the suspend point.  This is
+    /// the term the *synchronous* baseline pays when a non-legacy
+    /// weight plane is configured (a barrier pipeline cannot exploit
+    /// rolling updates, but it must pay the same transfer cost model so
+    /// sync-vs-async comparisons stay fair — see
     /// [`crate::sim::sync_driver`]).
     pub fn analytic_fleet_sync_s(&self, model: &LlmSpec, n_engines: usize) -> f64 {
         let bytes = model.weight_bytes();
-        let per_engine: Vec<f64> = vec![bytes; n_engines.max(1)];
-        balanced_makespan(&self.link, self.fanout_slots, &per_engine)
-            + bytes / crate::mooncake::MooncakeConfig::default().gpu_load_bytes_per_s
+        let per_engine = self.mooncake.bucket_sizes(bytes);
+        let mut transfers: Vec<f64> = Vec::new();
+        for _ in 0..n_engines.max(1) {
+            transfers.extend_from_slice(&per_engine);
+        }
+        balanced_makespan(&self.fanout_link(), self.fanout_slots, &transfers)
+            + bytes / self.mooncake.gpu_load_bytes_per_s
     }
 
     /// Basic sanity of the knob (mirrors the config-file validation).
     pub fn validate(&self) -> Result<(), String> {
         if self.fanout_slots == 0 {
             return Err("weights.fanout_slots must be ≥ 1".to_string());
+        }
+        if self.mooncake.bucket_bytes <= 0.0 || !self.mooncake.bucket_bytes.is_finite() {
+            return Err("weights.mooncake.bucket_bytes must be positive".to_string());
         }
         match self.strategy {
             SyncStrategyKind::RollingSubset { k } if k == 0 => {
@@ -205,17 +262,32 @@ impl<'a> FleetView<'a> {
     }
 }
 
+/// What a closed-loop strategy did with its knob this iteration
+/// (surfaced as [`WeightSyncReport::adapt_raises`] /
+/// [`WeightSyncReport::adapt_drops`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdaptDecision {
+    Hold,
+    /// Sync more aggressively (the fleet's lag approached the α bound).
+    Raise,
+    /// Sync lazier (the iteration was rollout-bound; free the link and
+    /// the cutover stalls for generation).
+    Lower,
+}
+
 /// A weight-dissemination discipline: decides which engines refresh
 /// when, over the driver core's event loop.
 ///
-/// The core consults the strategy at three points: when a freshly
+/// The core consults the strategy at four points: when a freshly
 /// trained version begins disseminating, after every per-engine sync
-/// completion (both via [`SyncStrategy::next_wave`]), and — for
-/// idle-pull strategies — whenever an engine finishes a step
-/// ([`SyncStrategy::pull_on_idle`]).  Strategies never touch the event
-/// queue themselves; they return engine sets and the core turns them
-/// into transfer + cutover events, which keeps every strategy
-/// composable with faults, elasticity and PD dispatch.
+/// completion (both via [`SyncStrategy::next_wave`]), for idle-pull
+/// strategies whenever an engine finishes a step
+/// ([`SyncStrategy::pull_on_idle`]), and once per training iteration
+/// for closed-loop tuning ([`SyncStrategy::observe_iteration`]).
+/// Strategies never touch the event queue themselves; they return
+/// engine sets and the core turns them into bucketized transfer +
+/// cutover events, which keeps every strategy composable with faults,
+/// elasticity and PD dispatch.
 pub trait SyncStrategy {
     fn name(&self) -> &'static str;
 
@@ -239,16 +311,26 @@ pub trait SyncStrategy {
         false
     }
 
-    /// Stream the transfer *behind* ongoing decode and suspend the
-    /// engine only for the cutover (last chunk's GPU load + KV
-    /// recompute).
-    fn overlapped(&self) -> bool {
-        false
-    }
-
-    /// Pipeline depth of a chunked push (1 = whole-weights swap).
+    /// Pipeline depth of the cutover's chunked GPU load (1 =
+    /// whole-weights swap at the suspend point).
     fn chunks(&self) -> usize {
         1
+    }
+
+    /// Closed-loop hook, called once per completed training iteration
+    /// with the iteration's `get_batch` wait and train time plus the
+    /// fleet's worst version lag right after the publish.  The default
+    /// is open-loop (no adaptation).  Decisions must be pure functions
+    /// of these measured signals — no randomness — so seeded replays
+    /// stay bit-identical (see `docs/DETERMINISM.md`).
+    fn observe_iteration(
+        &mut self,
+        _wait_s: f64,
+        _train_s: f64,
+        _max_lag: u64,
+        _alpha: u64,
+    ) -> AdaptDecision {
+        AdaptDecision::Hold
     }
 }
 
@@ -349,12 +431,267 @@ impl SyncStrategy for OverlappedBroadcast {
         fleet.behind() // everyone streams concurrently (and contends)
     }
 
-    fn overlapped(&self) -> bool {
+    fn chunks(&self) -> usize {
+        self.chunks
+    }
+}
+
+/// Closed-loop rolling dissemination: the concurrency `k` — how many
+/// engines may stream a refresh at once beyond the α-forced ones — is
+/// tuned once per training iteration from the observed `get_batch`
+/// wait vs the fleet's version lag, the same feedback shape the
+/// elastic controllers use ([`crate::elastic::AutoScaler`]):
+///
+/// * the fleet's worst lag reached the α bound → staleness (and the
+///   aborts it causes) is the binding constraint: raise `k`;
+/// * the iteration was rollout-bound (`get_batch` wait above
+///   [`AdaptiveSync::rollout_bound_ratio`] × train) with lag in hand →
+///   dissemination is stealing link bandwidth and cutover time from a
+///   starved rollout: lower `k`;
+/// * a cooldown iteration follows every adjustment so the pipeline
+///   re-reaches steady state before the next decision.
+///
+/// Engines at the α bound are *always* refreshed regardless of `k` (α
+/// is a hard bound, not advice), and idle engines pull opportunistically
+/// ([`SyncStrategy::pull_on_idle`]) — laziness never manufactures lag.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveSync {
+    /// Current voluntary-refresh concurrency (the adapted knob).
+    k: usize,
+    /// `k`'s bounds.
+    pub min_k: usize,
+    pub max_k: usize,
+    /// Rollout-bound when `get_batch` wait exceeds this multiple of the
+    /// train time.
+    pub rollout_bound_ratio: f64,
+    /// Iterations to hold after an adjustment.
+    pub cooldown_steps: usize,
+    cooldown: usize,
+}
+
+impl AdaptiveSync {
+    pub fn new() -> Self {
+        AdaptiveSync {
+            k: 1,
+            min_k: 1,
+            max_k: 64,
+            rollout_bound_ratio: 1.0,
+            cooldown_steps: 1,
+            cooldown: 0,
+        }
+    }
+
+    /// The current concurrency the controller has settled on.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Default for AdaptiveSync {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SyncStrategy for AdaptiveSync {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn next_wave(&mut self, fleet: &FleetView) -> Vec<usize> {
+        let forced_lag = fleet.alpha.max(1);
+        let mut voluntary = fleet.syncing_count();
+        let mut wave = Vec::new();
+        for i in fleet.behind() {
+            if fleet.lag(i) >= forced_lag {
+                // α is a hard bound: refresh regardless of k.
+                wave.push(i);
+            } else if voluntary < self.k {
+                wave.push(i);
+                voluntary += 1;
+            }
+        }
+        wave
+    }
+
+    fn pull_on_idle(&self) -> bool {
         true
     }
 
-    fn chunks(&self) -> usize {
-        self.chunks
+    fn observe_iteration(
+        &mut self,
+        wait_s: f64,
+        train_s: f64,
+        max_lag: u64,
+        alpha: u64,
+    ) -> AdaptDecision {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return AdaptDecision::Hold;
+        }
+        let train = train_s.max(1e-9);
+        if max_lag >= alpha.max(1) && self.k < self.max_k {
+            self.k += 1;
+            self.cooldown = self.cooldown_steps;
+            AdaptDecision::Raise
+        } else if wait_s > self.rollout_bound_ratio * train && self.k > self.min_k {
+            self.k -= 1;
+            self.cooldown = self.cooldown_steps;
+            AdaptDecision::Lower
+        } else {
+            AdaptDecision::Hold
+        }
+    }
+}
+
+/// One bucket's admission inside a pipelined pull.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketGrant {
+    /// Bytes this bucket moved (≤ the bucket granularity; the tail
+    /// bucket carries the remainder).
+    pub bytes: f64,
+    /// The link's admission (start / done / queue delay).
+    pub grant: Grant,
+}
+
+/// Outcome of one engine's bucketized pull ([`bucketized_pull`]).
+#[derive(Clone, Debug)]
+pub struct PullOutcome {
+    /// When the final bucket lands (== the admission time for an empty
+    /// payload).
+    pub done_s: f64,
+    /// Pure transfer cost: Σ per-bucket service + delivery latency,
+    /// excluding queueing and push gating — the per-engine counterpart
+    /// of Table 4's accumulated pull.
+    pub transfer_s: f64,
+    /// Queue delay the buckets accumulated on the link's slots.
+    pub queue_delay_s: f64,
+    /// Worst single-bucket queue delay.
+    pub max_queue_delay_s: f64,
+    /// Time bucket admissions spent gated on the trainer→store push
+    /// pipeline (beyond what the pull itself was still busy with).
+    pub push_gate_s: f64,
+    /// Buckets that had to wait for a link slot.
+    pub queued: u64,
+    /// The sequenced per-bucket admissions, in pull order.
+    pub buckets: Vec<BucketGrant>,
+}
+
+/// Admit one engine's weight pull as a **bucketized pipeline** on a
+/// contended link: the payload splits into the Mooncake bucket model's
+/// sequenced buckets ([`MooncakeConfig::bucket_sizes`]), bucket `i+1`
+/// is admitted only after bucket `i` has fully landed (buckets never
+/// reorder within one pull), and each bucket additionally waits for
+/// `push_ready_at(i)` — the time the trainer→store push pipeline
+/// produced it — so a pull launched right at publish trails the push
+/// bucket-by-bucket exactly as
+/// [`MooncakeStore::sync`](crate::mooncake::MooncakeStore::sync)'s
+/// analytic pipeline does.  A zero-byte payload admits nothing and
+/// completes immediately (see the [`SharedLink`] zero-byte guard).
+pub fn bucketized_pull(
+    link: &mut SharedLink,
+    mc: &MooncakeConfig,
+    now: f64,
+    bytes: f64,
+    push_ready_at: impl Fn(usize) -> f64,
+) -> PullOutcome {
+    let mut out = PullOutcome {
+        done_s: now,
+        transfer_s: 0.0,
+        queue_delay_s: 0.0,
+        max_queue_delay_s: 0.0,
+        push_gate_s: 0.0,
+        queued: 0,
+        buckets: Vec::new(),
+    };
+    let latency = link.link().latency_s;
+    let mut t = now;
+    for (i, bucket) in mc.bucket_sizes(bytes).into_iter().enumerate() {
+        let gate = push_ready_at(i);
+        out.push_gate_s += (gate - t).max(0.0);
+        let admit = t.max(gate).max(now);
+        let grant = link.acquire(admit, bucket);
+        out.transfer_s += link.service_time(bucket) + latency;
+        out.queue_delay_s += grant.queue_delay_s;
+        out.max_queue_delay_s = out.max_queue_delay_s.max(grant.queue_delay_s);
+        if grant.queue_delay_s > 1e-12 {
+            out.queued += 1;
+        }
+        t = grant.done_s;
+        out.buckets.push(BucketGrant { bytes: bucket, grant });
+    }
+    out.done_s = t;
+    out
+}
+
+/// Per-run bucket decomposition of the weight plane — the DES
+/// counterpart of Table 4's push / accumulated-pull / exposed / naive
+/// rows, accumulated per publish (push, naive) and per engine pull /
+/// cutover (pull, exposed).  `rust/tests/weights_conformance.rs` pins
+/// the per-publish and per-engine means against
+/// [`MooncakeStore::sync`](crate::mooncake::MooncakeStore::sync)'s
+/// analytic decomposition.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BucketBreakdown {
+    /// Trainer→store bucketized push time, accumulated per publish
+    /// (hidden behind rollout; per-engine pulls gate on its schedule).
+    pub push_s: f64,
+    /// Σ per-engine pull transfer time (service + delivery, excluding
+    /// queueing/gating) — divide by [`BucketBreakdown::engine_pulls`]
+    /// for the per-engine accumulated pull.
+    pub acc_pull_s: f64,
+    /// Σ exposed weight-swap cost per cutover: the (chunked) GPU load
+    /// plus the per-bucket coordination residual.  Excludes the KV
+    /// recompute (which depends on in-flight contexts) so the mean per
+    /// cutover stays cross-checkable against the analytic store.
+    pub exposed_s: f64,
+    /// What naive blocking (push + fleet pull, no overlap) would pay,
+    /// accumulated per publish.
+    pub naive_s: f64,
+    /// Bucketized per-engine pulls admitted (including elastic warm-up
+    /// pulls).
+    pub engine_pulls: u64,
+    /// Cutovers performed (an in-flight pull at run end has no
+    /// cutover yet).
+    pub cutovers: u64,
+    /// Bucket transfers admitted on the fan-out / shared-KV link.
+    pub bucket_transfers: u64,
+    /// Σ bytes across bucket transfers (= `engine_pulls` × weight
+    /// bytes: pipelining conserves bytes).
+    pub bytes_pulled: f64,
+    /// Queue delay the buckets accumulated on the link (contention
+    /// between concurrent pulls, and with KV traffic when shared).
+    pub queue_delay_s: f64,
+    /// Worst single-bucket queue delay.
+    pub max_queue_delay_s: f64,
+    /// Time bucket admissions spent gated on the push pipeline.
+    pub push_gate_s: f64,
+}
+
+impl BucketBreakdown {
+    /// Mean per-engine pull transfer time (Table 4's accumulated pull,
+    /// per engine).
+    pub fn mean_pull_s(&self) -> f64 {
+        if self.engine_pulls == 0 {
+            return 0.0;
+        }
+        self.acc_pull_s / self.engine_pulls as f64
+    }
+
+    /// Mean exposed weight-swap cost per cutover.
+    pub fn mean_exposed_s(&self) -> f64 {
+        if self.cutovers == 0 {
+            return 0.0;
+        }
+        self.exposed_s / self.cutovers as f64
+    }
+
+    /// Mean bucket queue delay per engine pull.
+    pub fn mean_queue_delay_s(&self) -> f64 {
+        if self.engine_pulls == 0 {
+            return 0.0;
+        }
+        self.queue_delay_s / self.engine_pulls as f64
     }
 }
 
@@ -372,10 +709,13 @@ pub struct WeightSyncReport {
     /// recompute per publish; event strategies: none — the fleet
     /// converges while training proceeds).
     pub exposed_stall_s: f64,
-    /// Engine-seconds *committed* to weight transfer + cutover,
-    /// charged when each sync is scheduled (the capacity the fleet
-    /// gave up to dissemination).  A sync voided by an engine crash
-    /// stays counted — the fault plane books the downtime that
+    /// Engine-seconds *committed* to weight-sync suspensions, charged
+    /// when each suspension is scheduled (the capacity the fleet gave
+    /// up to dissemination).  Event strategies suspend only for the
+    /// cutover — the bucketized transfer streams behind decode — so
+    /// this is cutover time there; the blocking drain charges the
+    /// whole exposed window per engine.  A cutover voided by an engine
+    /// crash stays counted — the fault plane books the downtime that
     /// replaced it — so under heavy chaos this can exceed the time
     /// engines actually sat suspended.
     pub engine_offline_s: f64,
@@ -393,6 +733,16 @@ pub struct WeightSyncReport {
     pub lag_samples: u64,
     pub lag_sum: u64,
     pub lag_max: u64,
+    /// Elastic warm-up pulls routed over the contended link (one per
+    /// provisioned engine; real bucketized traffic, not the analytic
+    /// `provision_delay_s`).
+    pub warmup_pulls: u64,
+    /// Closed-loop strategy adjustments ([`AdaptiveSync`]): iterations
+    /// that raised / lowered the refresh concurrency.
+    pub adapt_raises: u64,
+    pub adapt_drops: u64,
+    /// The Table 4 bucket decomposition (see [`BucketBreakdown`]).
+    pub buckets: BucketBreakdown,
 }
 
 impl WeightSyncReport {
@@ -442,6 +792,7 @@ mod tests {
             SyncStrategyKind::RollingSubset { k: 2 },
             SyncStrategyKind::LazyPull,
             SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+            SyncStrategyKind::Adaptive,
         ] {
             assert_eq!(kind.make().name(), kind.name());
         }
@@ -514,8 +865,116 @@ mod tests {
         let mut s = OverlappedBroadcast::new(8);
         let wave = s.next_wave(&fleet(2, &versions, &down, &syncing, 1));
         assert_eq!(wave, vec![0, 1]);
-        assert!(s.overlapped());
         assert_eq!(s.chunks(), 8);
+    }
+
+    #[test]
+    fn adaptive_forces_alpha_and_bounds_voluntary_concurrency() {
+        // Target 3, α=2: engines at lag ≥ 2 are forced regardless of k;
+        // with k=1 only one voluntary (lag-1) engine joins them.
+        let versions = [Version(0), Version(1), Version(2), Version(2)];
+        let down = [false; 4];
+        let syncing = [false; 4];
+        let mut s = AdaptiveSync::new();
+        assert_eq!(s.k(), 1);
+        let wave = s.next_wave(&fleet(3, &versions, &down, &syncing, 2));
+        assert_eq!(wave, vec![0, 1, 2], "0 and 1 forced, one voluntary");
+        // A sync already in flight uses up the voluntary budget: only
+        // the forced engines start.
+        let syncing = [false, false, true, false];
+        let wave = s.next_wave(&fleet(3, &versions, &down, &syncing, 2));
+        assert_eq!(wave, vec![0, 1], "forced only; k budget spent");
+        assert!(s.pull_on_idle());
+    }
+
+    #[test]
+    fn adaptive_observe_tunes_k_with_cooldown() {
+        let mut s = AdaptiveSync::new();
+        s.cooldown_steps = 1;
+        // Lag at the α bound: raise.
+        assert_eq!(s.observe_iteration(0.0, 80.0, 1, 1), AdaptDecision::Raise);
+        assert_eq!(s.k(), 2);
+        // Cooldown holds even under the same pressure.
+        assert_eq!(s.observe_iteration(0.0, 80.0, 2, 1), AdaptDecision::Hold);
+        assert_eq!(s.observe_iteration(0.0, 80.0, 2, 1), AdaptDecision::Raise);
+        assert_eq!(s.k(), 3);
+        // Rollout-bound with lag in hand: lower.
+        assert_eq!(s.observe_iteration(300.0, 80.0, 0, 1), AdaptDecision::Hold);
+        assert_eq!(s.observe_iteration(300.0, 80.0, 0, 1), AdaptDecision::Lower);
+        assert_eq!(s.k(), 2);
+        // Balanced: hold, and k never leaves [min_k, max_k].
+        assert_eq!(s.observe_iteration(10.0, 80.0, 0, 1), AdaptDecision::Hold);
+        let mut floor = AdaptiveSync::new();
+        floor.cooldown_steps = 0;
+        assert_eq!(floor.observe_iteration(300.0, 80.0, 0, 1), AdaptDecision::Hold);
+        assert_eq!(floor.k(), 1, "never below min_k");
+    }
+
+    #[test]
+    fn bucketized_pull_sequences_buckets_and_conserves_bytes() {
+        let mc = MooncakeConfig::default();
+        let mut link = SharedLink::new(MOONCAKE_FANOUT.clone(), 2);
+        let bytes = 3.5 * GB;
+        let out = bucketized_pull(&mut link, &mc, 10.0, bytes, |_| f64::NEG_INFINITY);
+        assert_eq!(out.buckets.len(), 4, "3 full buckets + the tail");
+        let sum: f64 = out.buckets.iter().map(|b| b.bytes).sum();
+        assert!((sum - bytes).abs() < 1e-6, "bytes conserved: {sum}");
+        // Sequenced: bucket i+1 starts only after bucket i landed, even
+        // with two free slots.
+        for w in out.buckets.windows(2) {
+            assert!(w[1].grant.start_s >= w[0].grant.done_s - 1e-9);
+        }
+        // Pure transfer time matches the store's accumulated pull up to
+        // the link's per-bucket delivery latency.
+        let store = crate::mooncake::MooncakeStore::default();
+        let extra = out.buckets.len() as f64 * MOONCAKE_FANOUT.latency_s;
+        assert!(
+            (out.transfer_s - store.acc_pull_time(bytes) - extra).abs() < 1e-9,
+            "{} vs {}",
+            out.transfer_s,
+            store.acc_pull_time(bytes)
+        );
+        assert!((out.done_s - 10.0 - out.transfer_s).abs() < 1e-9, "uncontended serial pull");
+        assert_eq!(out.queued, 0);
+    }
+
+    #[test]
+    fn bucketized_pull_gates_on_the_push_pipeline() {
+        let mc = MooncakeConfig::default();
+        let mut link = SharedLink::new(MOONCAKE_FANOUT.clone(), 4);
+        let bytes = 4.0 * GB;
+        // Push slower than pull (the Table 4 regime): bucket i lands at
+        // i+1 push intervals; the pull trails it bucket-by-bucket and
+        // finishes ≈ one bucket-pull after the push.
+        let per_bucket_push = mc.bucket_bytes / mc.push_bytes_per_s;
+        let gated = bucketized_pull(&mut link, &mc, 0.0, bytes, |i| {
+            (i + 1) as f64 * per_bucket_push
+        });
+        assert!(gated.push_gate_s > 0.0, "pull must trail the slower push");
+        let n = mc.bucket_count(bytes) as f64;
+        let last_push = n * per_bucket_push;
+        assert!(gated.done_s > last_push, "{} vs {last_push}", gated.done_s);
+        assert!(
+            gated.done_s < last_push + 2.0 * gated.transfer_s / n + 1.0,
+            "only the final bucket's pull sticks out: {} vs push end {last_push}",
+            gated.done_s
+        );
+        // An ungated pull of the same bytes is strictly faster.
+        let mut link2 = SharedLink::new(MOONCAKE_FANOUT.clone(), 4);
+        let free = bucketized_pull(&mut link2, &mc, 0.0, bytes, |_| f64::NEG_INFINITY);
+        assert!(free.done_s < gated.done_s);
+        assert_eq!(free.push_gate_s, 0.0);
+    }
+
+    #[test]
+    fn bucketized_pull_empty_payload_is_free() {
+        let mc = MooncakeConfig::default();
+        let mut link = SharedLink::new(MOONCAKE_FANOUT.clone(), 1);
+        let out = bucketized_pull(&mut link, &mc, 5.0, 0.0, |_| 100.0);
+        assert_eq!(out.done_s, 5.0);
+        assert_eq!(out.transfer_s, 0.0);
+        assert!(out.buckets.is_empty());
+        assert_eq!(link.stats.transfers, 0, "nothing touched the link");
     }
 
     #[test]
@@ -530,6 +989,59 @@ mod tests {
             wide.analytic_fleet_sync_s(&QWEN3_8B, 8) < large,
             "more fan-out slots must cut the balanced makespan"
         );
+        // Bucket granularity feeds the analytic term too: finer buckets
+        // mean more per-bucket session costs on the same bytes.
+        let mut fine = WeightsScenario::default();
+        fine.mooncake.bucket_bytes /= 4.0;
+        assert!(
+            fine.analytic_fleet_sync_s(&QWEN3_8B, 4) > w.analytic_fleet_sync_s(&QWEN3_8B, 4),
+            "quartering the bucket must raise the bucketized makespan"
+        );
+    }
+
+    #[test]
+    fn fanout_link_pricing_tracks_the_bucket_model() {
+        // Session cost and bandwidth on the fan-out link always come
+        // from the bucket model: re-calibrating one side cannot
+        // silently desynchronize the DES link from the analytic store.
+        let mut w = WeightsScenario::default();
+        assert_eq!(w.fanout_link().setup_s, w.mooncake.per_bucket_latency_s);
+        assert_eq!(
+            w.fanout_link().effective_bytes_per_s,
+            w.mooncake.pull_bytes_per_s
+        );
+        w.mooncake.per_bucket_latency_s = 0.05;
+        w.mooncake.pull_bytes_per_s = 3.0 * GB;
+        let derived = w.fanout_link();
+        assert_eq!(derived.setup_s, 0.05);
+        assert_eq!(derived.effective_bytes_per_s, 3.0 * GB);
+        // Delivery latency stays the configured link's.
+        assert_eq!(derived.latency_s, w.link.latency_s);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_bucket_model() {
+        let mut w = WeightsScenario::default();
+        w.mooncake.bucket_bytes = 0.0;
+        assert!(w.validate().is_err());
+        w.mooncake.bucket_bytes = f64::INFINITY;
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn bucket_breakdown_means() {
+        let mut b = BucketBreakdown::default();
+        assert_eq!(b.mean_pull_s(), 0.0);
+        assert_eq!(b.mean_exposed_s(), 0.0);
+        assert_eq!(b.mean_queue_delay_s(), 0.0);
+        b.engine_pulls = 4;
+        b.acc_pull_s = 28.0;
+        b.queue_delay_s = 2.0;
+        b.cutovers = 2;
+        b.exposed_s = 5.0;
+        assert!((b.mean_pull_s() - 7.0).abs() < 1e-12);
+        assert!((b.mean_exposed_s() - 2.5).abs() < 1e-12);
+        assert!((b.mean_queue_delay_s() - 0.5).abs() < 1e-12);
     }
 
     #[test]

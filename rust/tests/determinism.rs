@@ -84,17 +84,22 @@ fn elastic_runs_are_bit_deterministic() {
     assert_bit_identical(&cfg, "RollArt+elastic");
 }
 
-/// Every weight-dissemination strategy, composed with the heaviest
+/// Every weight-dissemination strategy — including the closed-loop
+/// `AdaptiveSync`, whose per-iteration k adjustments are pure
+/// functions of measured signals — composed with the heaviest
 /// co-features it must stay deterministic under: PD dispatch over the
 /// contended KV link (including `share_kv_link` weight traffic), chaos
-/// injection, elastic scaling, and decode→prefill prefix reuse.
+/// injection, elastic scaling (whose provisioned engines now pull
+/// their warm-up weights over the same contended link), and
+/// decode→prefill prefix reuse.
 #[test]
 fn weight_strategies_are_bit_deterministic() {
-    const STRATEGIES: [SyncStrategyKind; 4] = [
+    const STRATEGIES: [SyncStrategyKind; 5] = [
         SyncStrategyKind::BlockingBroadcast,
         SyncStrategyKind::RollingSubset { k: 1 },
         SyncStrategyKind::LazyPull,
         SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+        SyncStrategyKind::Adaptive,
     ];
     for kind in STRATEGIES {
         // Plain RollArt.

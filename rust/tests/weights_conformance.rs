@@ -1,0 +1,265 @@
+//! Weight-plane conformance suite: the DES's bucketized per-engine
+//! pulls must reproduce `MooncakeStore::sync`'s Table 4 decomposition
+//! (push / accumulated pull / exposed / naive), and the bucket
+//! pipeline itself must conserve bytes and never reorder buckets
+//! within one engine's pull.
+//!
+//! Tolerance statement for the golden test:
+//! * **push** and **naive** per publish: exact (1e-6 relative) — the
+//!   DES drives the push pipeline off the same analytic bucket model;
+//! * **accumulated pull** per engine pull: exact against the link's
+//!   bucketized cost (analytic pull + one delivery latency per
+//!   bucket), and within **2%** of the raw Table 4 analytic value
+//!   (the delivery latency is the only modeling difference);
+//! * **exposed** per cutover: exact (1e-6 relative) — the chunked GPU
+//!   load plus the per-bucket coordination residual, which for
+//!   whole-weight swaps equals the store's fully-overlapped exposed
+//!   cost to the digit.
+
+use rollart::llm::{LlmSpec, QWEN3_14B, QWEN3_32B, QWEN3_8B};
+use rollart::mooncake::{MooncakeConfig, MooncakeStore};
+use rollart::net::SharedLink;
+use rollart::sim::{driver, Mode, Scenario, ScenarioResult};
+use rollart::simkit::SimRng;
+use rollart::simkit::dist::Dist;
+use rollart::weights::{bucketized_pull, SyncStrategyKind, WeightsScenario, MOONCAKE_FANOUT};
+
+fn scenario(model: &LlmSpec, kind: SyncStrategyKind, alpha: u64, seed: u64) -> Scenario {
+    let mut s = Scenario::rollart_default(model.clone(), 0.06);
+    s.mode = Mode::RollArt;
+    s.batch_size = 16;
+    s.group_size = 4;
+    s.iterations = 4;
+    s.alpha = alpha;
+    s.seed = seed;
+    s.weights = WeightsScenario::with_strategy(kind);
+    s
+}
+
+fn exposed_sync_total(r: &ScenarioResult) -> f64 {
+    r.steps.iter().map(|s| s.breakdown.weight_sync_s).sum()
+}
+
+const EVENT_STRATEGIES: [SyncStrategyKind; 4] = [
+    SyncStrategyKind::RollingSubset { k: 2 },
+    SyncStrategyKind::LazyPull,
+    SyncStrategyKind::OverlappedBroadcast { chunks: 8 },
+    SyncStrategyKind::Adaptive,
+];
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Golden values: for every event strategy × model size, the DES's
+/// per-publish and per-engine bucket means pin to the analytic store
+/// decomposition within the stated tolerances.
+#[test]
+fn golden_bucket_decomposition_matches_the_store() {
+    for spec in [&QWEN3_8B, &QWEN3_14B, &QWEN3_32B] {
+        let bytes = spec.weight_bytes();
+        let mut store = MooncakeStore::default();
+        let analytic = store.sync(bytes, f64::INFINITY);
+        let mc = MooncakeConfig::default();
+        let n = mc.bucket_count(bytes) as f64;
+        for kind in EVENT_STRATEGIES {
+            let r = driver::run(&scenario(spec, kind, 2, 17));
+            let b = &r.weights.buckets;
+            let what = format!("{} × {}", spec.name, kind.name());
+            assert!(r.weights.publishes >= 2, "{what}: {:?}", r.weights);
+            assert!(b.engine_pulls > 0, "{what}: {b:?}");
+            assert!(b.cutovers > 0, "{what}: {b:?}");
+
+            // Push per publish: exact.
+            let push = b.push_s / r.weights.publishes as f64;
+            assert!(
+                rel(push, analytic.push_s) < 1e-6,
+                "{what}: push {push} vs analytic {}",
+                analytic.push_s
+            );
+            // Naive per publish: exact.
+            let naive = b.naive_s / r.weights.publishes as f64;
+            assert!(
+                rel(naive, analytic.naive_s) < 1e-6,
+                "{what}: naive {naive} vs analytic {}",
+                analytic.naive_s
+            );
+            // Accumulated pull per engine: exact against the link's
+            // bucketized cost, 2% against the raw analytic value.
+            let pull = b.mean_pull_s();
+            let link_exact = analytic.acc_pull_s + n * MOONCAKE_FANOUT.latency_s;
+            assert!(
+                rel(pull, link_exact) < 1e-6,
+                "{what}: pull {pull} vs link-exact {link_exact}"
+            );
+            assert!(
+                rel(pull, analytic.acc_pull_s) < 0.02,
+                "{what}: pull {pull} vs Table-4 analytic {}",
+                analytic.acc_pull_s
+            );
+            // Exposed per cutover: chunked GPU load + per-bucket
+            // coordination.  For whole-weight swaps this *is* the
+            // store's fully-overlapped exposed cost.
+            let chunks = match kind {
+                SyncStrategyKind::OverlappedBroadcast { chunks } => chunks as f64,
+                _ => 1.0,
+            };
+            let expect = store.gpu_load_time(bytes / chunks) + n * mc.per_bucket_latency_s;
+            let exposed = b.mean_exposed_s();
+            assert!(
+                rel(exposed, expect) < 1e-6,
+                "{what}: exposed {exposed} vs expected {expect}"
+            );
+            if chunks == 1.0 {
+                assert!(
+                    rel(exposed, analytic.exposed_s) < 1e-6,
+                    "{what}: exposed {exposed} vs store {}",
+                    analytic.exposed_s
+                );
+            }
+            // Byte conservation at fleet scale.
+            assert!(
+                rel(b.bytes_pulled, b.engine_pulls as f64 * bytes) < 1e-9,
+                "{what}: {b:?}"
+            );
+        }
+    }
+}
+
+/// Property: bucket pipelining conserves bytes exactly (Σ bucket
+/// transfers = payload bytes) and never reorders buckets within one
+/// engine's pull, across random payload sizes, bucket granularities,
+/// slot counts and pre-existing link contention.
+#[test]
+fn prop_bucket_pipelining_conserves_bytes_and_never_reorders() {
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let mut rng = SimRng::new(0x6b);
+    for case in 0..250u64 {
+        let mut mc = MooncakeConfig::default();
+        mc.bucket_bytes = rng.uniform(0.2, 2.5) * GB;
+        // Include the degenerate edges: empty payload and sub-bucket
+        // payload (the one-bucket edge).
+        let bytes = match case % 10 {
+            0 => 0.0,
+            1 => rng.uniform(0.0, 1.0) * mc.bucket_bytes,
+            _ => rng.uniform(0.1, 70.0) * GB,
+        };
+        let slots = 1 + rng.below(4);
+        let mut link = SharedLink::new(MOONCAKE_FANOUT.clone(), slots);
+        // Sometimes pre-load the link so buckets queue.
+        if rng.chance(0.5) {
+            for _ in 0..rng.below(6) {
+                link.acquire(0.0, rng.uniform(0.5, 4.0) * GB);
+            }
+        }
+        let now = rng.uniform(0.0, 50.0);
+        let push_start = now - rng.uniform(0.0, 30.0);
+        let per_bucket = rng.uniform(0.0, 4.0);
+        let out = bucketized_pull(&mut link, &mc, now, bytes, |i| {
+            push_start + (i + 1) as f64 * per_bucket
+        });
+        // Conservation: the sequenced buckets sum to the payload.
+        assert_eq!(out.buckets.len(), mc.bucket_count(bytes), "case {case}");
+        let sum: f64 = out.buckets.iter().map(|b| b.bytes).sum();
+        assert!(
+            (sum - bytes.max(0.0)).abs() <= 1e-6 * bytes.max(1.0),
+            "case {case}: {sum} vs {bytes}"
+        );
+        for (i, b) in out.buckets.iter().enumerate() {
+            assert!(b.bytes > 0.0, "case {case}: empty bucket {i}");
+            assert!(
+                b.bytes <= mc.bucket_bytes * (1.0 + 1e-9),
+                "case {case}: oversized bucket {i}"
+            );
+        }
+        // Ordering: bucket i+1 never starts before bucket i has fully
+        // landed, regardless of free slots, queueing or push gating.
+        for w in out.buckets.windows(2) {
+            assert!(
+                w[1].grant.start_s >= w[0].grant.done_s - 1e-9,
+                "case {case}: buckets reordered: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(out.done_s >= now, "case {case}");
+        if let Some(last) = out.buckets.last() {
+            assert!((out.done_s - last.grant.done_s).abs() < 1e-9, "case {case}");
+        } else {
+            assert_eq!(out.done_s, now, "case {case}: empty pull is free");
+        }
+    }
+}
+
+/// Property: under any seed, `AdaptiveSync` keeps the per-engine
+/// version lag sampled at every train start within the α bound, and
+/// never exposes more sync time than `BlockingBroadcast` on the same
+/// scenario (it exposes none — dissemination streams behind decode).
+#[test]
+fn prop_adaptive_sync_bounded_lag() {
+    for seed in [3u64, 11, 29, 57, 101] {
+        for alpha in [1u64, 2] {
+            // Slow env steps keep the publish interval comfortably
+            // above one push+pull pipeline, which is the physical
+            // premise of the α bound (Table 4: the push hides behind
+            // rollout).
+            let mut cfg = scenario(&QWEN3_8B, SyncStrategyKind::Adaptive, alpha, seed);
+            cfg.env_step_override = Some(Dist::Constant(25.0));
+            let r = driver::run(&cfg);
+            assert!(
+                r.weights.lag_max <= alpha,
+                "seed {seed} α={alpha}: lag_max {} exceeds α ({:?})",
+                r.weights.lag_max,
+                r.weights
+            );
+            assert_eq!(
+                exposed_sync_total(&r),
+                0.0,
+                "seed {seed} α={alpha}: adaptive must not stall the trainer"
+            );
+            let mut blocking = cfg.clone();
+            blocking.weights =
+                WeightsScenario::with_strategy(SyncStrategyKind::BlockingBroadcast);
+            let rb = driver::run(&blocking);
+            assert!(
+                exposed_sync_total(&r) <= exposed_sync_total(&rb),
+                "seed {seed} α={alpha}: adaptive exposed more than blocking"
+            );
+            assert!(
+                exposed_sync_total(&rb) > 0.0,
+                "seed {seed} α={alpha}: blocking baseline must expose sync"
+            );
+        }
+    }
+}
+
+/// The one-bucket edge, end to end: a model whose weights fit inside a
+/// single bucket books exactly one bucket transfer per pull — not a
+/// full bucket's latency for phantom bytes.
+#[test]
+fn one_bucket_edge_books_one_transfer_per_pull() {
+    let mut cfg = scenario(&QWEN3_8B, SyncStrategyKind::RollingSubset { k: 2 }, 1, 17);
+    // A bucket bigger than the whole model: every pull is one partial
+    // bucket.
+    cfg.weights.mooncake.bucket_bytes = 2.0 * QWEN3_8B.weight_bytes();
+    let r = driver::run(&cfg);
+    let b = &r.weights.buckets;
+    assert!(b.engine_pulls > 0, "{b:?}");
+    assert_eq!(
+        b.bucket_transfers, b.engine_pulls,
+        "sub-bucket pulls must be exactly one bucket each: {b:?}"
+    );
+    let bytes = QWEN3_8B.weight_bytes();
+    assert!(
+        (b.bytes_pulled - b.engine_pulls as f64 * bytes).abs() < 1.0,
+        "one partial bucket moves the model's bytes, not the bucket's: {b:?}"
+    );
+    // One bucket = one per-bucket coordination charge at the cutover.
+    let store = MooncakeStore::new(cfg.weights.mooncake.clone());
+    let expect = store.gpu_load_time(bytes) + cfg.weights.mooncake.per_bucket_latency_s;
+    assert!(
+        (b.mean_exposed_s() - expect).abs() < 1e-6,
+        "{} vs {expect}",
+        b.mean_exposed_s()
+    );
+}
