@@ -13,7 +13,8 @@
 use crate::support::*;
 use rollart::llm::QWEN3_8B;
 use rollart::metrics::CsvWriter;
-use rollart::sim::driver::{run_traced, PdScenario, TrajPhase};
+use rollart::obs::{TraceRecorder, PID_TRAJ};
+use rollart::sim::driver::{run_with_trace, PdScenario, TrajPhase};
 use rollart::sim::{Mode, Scenario};
 
 const PHASES: [TrajPhase; 7] = [
@@ -53,10 +54,34 @@ pub fn run() {
     };
 
     for (name, cfg) in arms {
-        let (_, mut lc) = run_traced(&cfg);
-        let total: f64 = PHASES.iter().map(|&p| lc.residency_s(p)).sum();
+        // Residency now comes off the telemetry plane's span timeline:
+        // the driver emits one `traj` span per completed phase visit,
+        // so summing span durations per phase rebuilds the lifecycle
+        // tracker's totals exactly (same arithmetic, same order).  The
+        // tracker stays as the cross-check.
+        let mut rec = TraceRecorder::enabled();
+        let (_, mut lc) = run_with_trace(&cfg, &mut rec);
+        let mut span_total: std::collections::BTreeMap<&str, f64> =
+            std::collections::BTreeMap::new();
+        for e in rec.events() {
+            if e.ph == 'X' && e.pid == PID_TRAJ {
+                *span_total.entry(e.name.as_str()).or_insert(0.0) += e.dur_s;
+            }
+        }
+        let residency = |phase: TrajPhase| -> f64 {
+            span_total.get(phase.label()).copied().unwrap_or(0.0)
+        };
         for phase in PHASES {
-            let total_s = lc.residency_s(phase);
+            assert!(
+                (residency(phase) - lc.residency_s(phase)).abs() < 1e-9,
+                "{name} {phase:?}: span timeline {} vs tracker {}",
+                residency(phase),
+                lc.residency_s(phase)
+            );
+        }
+        let total: f64 = PHASES.iter().map(|&p| residency(p)).sum();
+        for phase in PHASES {
+            let total_s = residency(phase);
             let (visits, mean, p50, p99) = match lc.residency.get_mut(&phase) {
                 Some(h) if !h.is_empty() => (h.len(), h.mean(), h.p50(), h.p99()),
                 _ => (0, 0.0, 0.0, 0.0),

@@ -1,0 +1,156 @@
+//! DES self-profiling baseline: events/sec, wall-clock and peak event-
+//! queue depth per standard scenario, committed as `BENCH_6.json` at
+//! the repository root so perf regressions in the simulator core show
+//! up as a diff instead of a vague feeling.
+//!
+//! Two sizes:
+//!
+//! * **full** (default) — paper-ish scale 0.25, 6 iterations; the
+//!   numbers worth eyeballing across machines.
+//! * **quick** (`ROLLART_BENCH_QUICK=1`) — scale 0.06, 3 iterations;
+//!   what CI runs on every push to regenerate and schema-check the
+//!   file in seconds.
+//!
+//! The committed file is validated by `tests/obs_plane.rs`
+//! (`committed_bench_baseline_is_valid`): present, parseable, all four
+//! standard scenarios, all counters positive.  Wall-clock fields are
+//! machine-dependent and only checked for being non-negative.
+//!
+//! The PD+weights arm also exports its Chrome trace to
+//! `target/bench-results/trace_pd_weights.json` — the artifact CI
+//! uploads, openable directly in `chrome://tracing` or Perfetto.
+
+use rollart::llm::QWEN3_8B;
+use rollart::obs::TraceRecorder;
+use rollart::sim::driver::{run_with_trace, PdScenario};
+use rollart::sim::{Mode, Scenario, ScenarioResult};
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+use std::time::Instant;
+
+struct Arm {
+    name: &'static str,
+    cfg: Scenario,
+    /// Export this arm's trace JSON (the acceptance artifact).
+    trace: bool,
+}
+
+fn arms(quick: bool) -> Vec<Arm> {
+    let (scale, iters) = if quick { (0.06, 3) } else { (0.25, 6) };
+    let base = |mode: Mode| {
+        let mut s = Scenario::rollart_default(QWEN3_8B.clone(), scale);
+        s.mode = mode;
+        s.iterations = iters;
+        if quick {
+            s.batch_size = 16;
+            s.group_size = 4;
+        }
+        s
+    };
+    let pd = |weights: bool| {
+        let mut s = base(Mode::RollArt);
+        s.alpha = 2;
+        s.pd = Some(PdScenario {
+            gpus_per_node: if quick { 2 } else { 4 },
+            max_batch: if quick { 8 } else { 32 },
+            ..PdScenario::xpyd(2, 2)
+        });
+        if weights {
+            s.weights =
+                WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+        }
+        s
+    };
+    vec![
+        Arm {
+            name: "rollart",
+            cfg: base(Mode::RollArt),
+            trace: false,
+        },
+        Arm {
+            name: "syncplus",
+            cfg: base(Mode::SyncPlus),
+            trace: false,
+        },
+        Arm {
+            name: "pd",
+            cfg: pd(false),
+            trace: false,
+        },
+        Arm {
+            name: "pd-weights",
+            cfg: pd(true),
+            trace: true,
+        },
+    ]
+}
+
+fn num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn main() {
+    let quick = std::env::var("ROLLART_BENCH_QUICK").is_ok();
+    println!(
+        "perf_baseline ({}) — DES self-profile per standard scenario",
+        if quick { "quick" } else { "full" }
+    );
+    println!(
+        "{:<12} {:>12} {:>10} {:>14} {:>12} {:>12}",
+        "scenario", "sim_events", "wall_s", "events/s", "peak_queue", "sim_time_s"
+    );
+
+    let mut rows = Vec::new();
+    for arm in arms(quick) {
+        let mut rec = if arm.trace {
+            TraceRecorder::enabled()
+        } else {
+            TraceRecorder::disabled()
+        };
+        let t0 = Instant::now();
+        let (r, _): (ScenarioResult, _) = run_with_trace(&arm.cfg, &mut rec);
+        let wall = t0.elapsed().as_secs_f64();
+        let eps = r.sim_events as f64 / wall.max(1e-9);
+        println!(
+            "{:<12} {:>12} {:>10.3} {:>14.0} {:>12} {:>12.1}",
+            arm.name, r.sim_events, wall, eps, r.peak_queue_depth, r.total_time_s
+        );
+        if arm.trace {
+            let dir = std::path::Path::new("target").join("bench-results");
+            let path = dir.join("trace_pd_weights.json");
+            rec.write_json(&path).expect("write trace JSON");
+            println!(
+                "  trace: {} ({} events) — open in chrome://tracing",
+                path.display(),
+                rec.len()
+            );
+        }
+        rows.push(format!(
+            concat!(
+                "    {{\"name\": \"{}\", \"sim_events\": {}, \"wall_s\": {:.4}, ",
+                "\"events_per_s\": {:.0}, \"peak_queue_depth\": {}, ",
+                "\"sim_time_s\": {}, \"steps\": {}}}"
+            ),
+            arm.name,
+            r.sim_events,
+            wall,
+            eps,
+            r.peak_queue_depth,
+            num(r.total_time_s),
+            r.steps.len()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"perf_baseline\",\n  \"quick\": {},\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        quick,
+        rows.join(",\n")
+    );
+    // The committed baseline lives at the repo root, next to ROADMAP.md.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+    std::fs::write(path, &json).expect("write BENCH_6.json");
+    println!("wrote {path}");
+}

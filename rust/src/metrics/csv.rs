@@ -44,8 +44,16 @@ impl CsvWriter {
         self.rows.push(row);
     }
 
+    /// RFC 4180 quoting: a cell containing a separator, a quote, or a
+    /// line break (either `\n` or `\r`) is wrapped in double quotes with
+    /// embedded quotes doubled.  Everything else passes through
+    /// unchanged so numeric columns stay grep-friendly.
     fn escape(cell: &str) -> String {
-        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        if cell.contains(',')
+            || cell.contains('"')
+            || cell.contains('\n')
+            || cell.contains('\r')
+        {
             format!("\"{}\"", cell.replace('"', "\"\""))
         } else {
             cell.to_string()
@@ -102,6 +110,20 @@ mod tests {
     fn row_width_enforced() {
         let mut w = CsvWriter::new("/tmp/never.csv", &["a", "b"]);
         w.row(["only-one"]);
+    }
+
+    #[test]
+    fn line_breaks_are_quoted() {
+        // A stray `\r` (Windows-sourced label, scenario name pasted from
+        // a log) must not split the record: both line-break characters
+        // force quoting.
+        let dir = crate::util::tempdir::TempDir::new("csv").unwrap();
+        let path = dir.path().join("crlf.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(["cr\rhere", "lf\nhere"]);
+        let p = w.flush().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n\"cr\rhere\",\"lf\nhere\"\n");
     }
 
     #[test]

@@ -39,10 +39,16 @@ impl Histogram {
     }
 
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
@@ -54,8 +60,16 @@ impl Histogram {
         }
     }
 
+    /// Exact quantile over the retained samples.
+    ///
+    /// An empty histogram returns `0.0` — the bench tables probe
+    /// quantiles of series that may have recorded nothing (e.g. the KV
+    /// queue-delay histogram on a colocated arm), and a defined zero
+    /// beats a panic in report code.
     pub fn quantile(&mut self, q: f64) -> f64 {
-        assert!(!self.samples.is_empty(), "quantile of empty histogram");
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.ensure_sorted();
         quantile(&self.samples, q)
     }
@@ -72,6 +86,9 @@ impl Histogram {
     /// quantiles — the Fig 5a series.
     pub fn cdf(&mut self, n: usize) -> Vec<(f64, f64)> {
         assert!(n >= 2);
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
         self.ensure_sorted();
         (0..n)
             .map(|i| {
@@ -126,8 +143,21 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "empty")]
-    fn empty_quantile_panics() {
-        Histogram::new().quantile(0.5);
+    fn empty_histogram_has_defined_stats() {
+        // Regression: p99 on an empty histogram used to panic, which
+        // took down whole bench tables whose optional series recorded
+        // nothing (e.g. KV queue delay on a colocated arm).
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert!(h.cdf(5).is_empty());
+        // Recording resumes normal behavior.
+        h.record(3.0);
+        assert_eq!(h.p99(), 3.0);
+        assert_eq!(h.min(), 3.0);
     }
 }

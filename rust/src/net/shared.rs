@@ -30,6 +30,23 @@ pub struct Grant {
     pub done_s: f64,
     /// Time spent waiting for a free transfer slot.
     pub queue_delay_s: f64,
+    /// The FIFO slot that served the transfer (per direction).
+    /// Transfers on one slot are serialized, which is exactly what the
+    /// telemetry plane needs to lay them out as non-overlapping trace
+    /// tracks (one tid per slot).
+    pub slot: usize,
+}
+
+/// One admitted transfer, kept when [`SharedLink::enable_trace`] is on
+/// (the telemetry plane drains these into link-occupancy trace spans).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferRecord {
+    pub start_s: f64,
+    pub done_s: f64,
+    pub queue_delay_s: f64,
+    pub bytes: f64,
+    pub slot: usize,
+    pub reverse: bool,
 }
 
 /// Per-transfer contention statistics of one [`SharedLink`].
@@ -112,6 +129,9 @@ pub struct SharedLink {
     /// Reverse-direction slot pool (same width; full duplex).
     rev_slots: Vec<f64>,
     pub stats: SharedLinkStats,
+    /// Opt-in transfer log ([`SharedLink::enable_trace`]); `None` keeps
+    /// the admission path allocation-free when telemetry is off.
+    trace_log: Option<Vec<TransferRecord>>,
 }
 
 /// Earliest-free-slot FIFO admission over one direction's slot pool.
@@ -129,6 +149,7 @@ fn grant_on(slots: &mut [f64], service_s: f64, latency_s: f64, now: f64) -> Gran
         start_s: start,
         done_s: free_at + latency_s,
         queue_delay_s: queue_delay,
+        slot,
     }
 }
 
@@ -140,6 +161,25 @@ impl SharedLink {
             slots: vec![0.0; slots],
             rev_slots: vec![0.0; slots],
             stats: SharedLinkStats::default(),
+            trace_log: None,
+        }
+    }
+
+    /// Start keeping a [`TransferRecord`] per admitted transfer.
+    /// Purely additive: grants and stats are byte-identical with the
+    /// log on or off.
+    pub fn enable_trace(&mut self) {
+        if self.trace_log.is_none() {
+            self.trace_log = Some(Vec::new());
+        }
+    }
+
+    /// Take the transfer log accumulated since [`SharedLink::enable_trace`]
+    /// (empty when tracing was never enabled).  Tracing stays enabled.
+    pub fn drain_trace(&mut self) -> Vec<TransferRecord> {
+        match self.trace_log.as_mut() {
+            Some(log) => std::mem::take(log),
+            None => Vec::new(),
         }
     }
 
@@ -177,6 +217,7 @@ impl SharedLink {
             start_s: now,
             done_s: now,
             queue_delay_s: 0.0,
+            slot: 0,
         }
     }
 
@@ -223,6 +264,16 @@ impl SharedLink {
         self.stats.queue_delay_max_s = self.stats.queue_delay_max_s.max(grant.queue_delay_s);
         self.stats.bytes_total += bytes;
         self.stats.queue_delay.record(grant.queue_delay_s);
+        if let Some(log) = self.trace_log.as_mut() {
+            log.push(TransferRecord {
+                start_s: grant.start_s,
+                done_s: grant.done_s,
+                queue_delay_s: grant.queue_delay_s,
+                bytes,
+                slot: grant.slot,
+                reverse,
+            });
+        }
     }
 }
 
@@ -383,6 +434,44 @@ mod tests {
         let real = l.acquire(3.0, 1e9);
         assert_eq!(real.queue_delay_s, 0.0, "slot untouched by the no-ops");
         assert_eq!(real.start_s, 3.0);
+    }
+
+    #[test]
+    fn trace_log_records_admitted_transfers_only() {
+        let mut l = shared(2);
+        // Before enable_trace the log stays empty and drain is a no-op.
+        l.acquire(0.0, 1e9);
+        assert!(l.drain_trace().is_empty());
+        l.enable_trace();
+        let g1 = l.acquire(1.0, 1e9);
+        let g2 = l.acquire_reverse(1.0, 2e9);
+        l.acquire(1.0, 0.0); // zero-byte: never admitted, never logged
+        let log = l.drain_trace();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].start_s, g1.start_s);
+        assert_eq!(log[0].done_s, g1.done_s);
+        assert_eq!(log[0].slot, g1.slot);
+        assert_eq!(log[0].bytes, 1e9);
+        assert!(!log[0].reverse);
+        assert_eq!(log[1].slot, g2.slot);
+        assert!(log[1].reverse);
+        // drain resets but keeps tracing on
+        assert!(l.drain_trace().is_empty());
+        l.acquire(2.0, 1e9);
+        assert_eq!(l.drain_trace().len(), 1);
+    }
+
+    #[test]
+    fn grants_carry_the_serving_slot() {
+        let mut l = shared(2);
+        let a = l.acquire(0.0, 1e9);
+        let b = l.acquire(0.0, 1e9);
+        let c = l.acquire(0.0, 1e9);
+        // two slots: first two transfers land on distinct slots, the
+        // third queues behind the earlier-free one
+        assert_ne!(a.slot, b.slot);
+        assert!(c.queue_delay_s > 0.0);
+        assert!(c.slot == a.slot || c.slot == b.slot);
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Idle-bubble attribution: where did each engine's idle seconds go?
+
+use std::fmt;
+
+/// Why an engine sat idle during a bubble window.
+///
+/// A window opens when an engine finishes a step (or comes up) with no
+/// admissible work and closes when work lands on it.  Windows that
+/// overlap a weight cutover/drain are bracketed as `AwaitingWeights`
+/// exactly; the generic windows are attributed by what *ended* them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BubbleCause {
+    /// Engine suspended for a weight cutover, or parked behind a
+    /// blocking fleet drain + broadcast.
+    AwaitingWeights,
+    /// The work that ended the bubble arrived off the PD KV link
+    /// (prefill→decode handoff in flight).
+    KvQueue,
+    /// Default: waiting on environment steps / resets / rewards to
+    /// produce the next admissible turn.
+    #[default]
+    EnvWait,
+    /// The work that ended the bubble was parked in the admission
+    /// buffer (suspended proxy or dead pool) rather than in flight.
+    StarvedAdmission,
+}
+
+impl BubbleCause {
+    /// Stable label used in trace span names and CSV columns.
+    pub fn label(self) -> &'static str {
+        match self {
+            BubbleCause::AwaitingWeights => "awaiting-weights",
+            BubbleCause::KvQueue => "kv-queue",
+            BubbleCause::EnvWait => "env-wait",
+            BubbleCause::StarvedAdmission => "starved-admission",
+        }
+    }
+}
+
+impl fmt::Display for BubbleCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Decomposition of fleet idle time into named causes.
+///
+/// Attribution is *always on* (it costs a couple of vector reads per
+/// engine kick) so traced and untraced runs stay bit-identical.  The
+/// four cause fields partition [`BubbleReport::engine_idle_s`]; the
+/// `*_booked_s` mirror is accumulated at grant-admission time and
+/// cross-checks the window accounting against the link's own stats
+/// (see `tests/obs_plane.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BubbleReport {
+    /// Total engine idle seconds observed via bubble windows
+    /// (summed over engines; excludes downtime).
+    pub engine_idle_s: f64,
+    /// Idle under a weight cutover / blocking sync drain.
+    pub awaiting_weights_s: f64,
+    /// Idle ended by work arriving off the KV link.
+    pub kv_queue_s: f64,
+    /// Idle waiting on env/reward progress (the default cause).
+    pub env_wait_s: f64,
+    /// Idle ended by previously-parked (inadmissible) work.
+    pub starved_admission_s: f64,
+    /// Number of non-zero-length bubble windows closed.
+    pub windows: u64,
+    /// KV-link queue delay booked per forward grant at admission time;
+    /// mirrors `KvLinkReport::queue_delay_total_s` when the link is
+    /// not shared with the weight plane or reverse traffic.
+    pub kv_queue_booked_s: f64,
+}
+
+impl BubbleReport {
+    /// Book a closed window.
+    pub fn book(&mut self, cause: BubbleCause, dur_s: f64) {
+        if dur_s <= 0.0 {
+            return;
+        }
+        self.engine_idle_s += dur_s;
+        self.windows += 1;
+        match cause {
+            BubbleCause::AwaitingWeights => self.awaiting_weights_s += dur_s,
+            BubbleCause::KvQueue => self.kv_queue_s += dur_s,
+            BubbleCause::EnvWait => self.env_wait_s += dur_s,
+            BubbleCause::StarvedAdmission => self.starved_admission_s += dur_s,
+        }
+    }
+
+    /// Sum of the four cause fields; equals
+    /// [`BubbleReport::engine_idle_s`] up to fp rounding.
+    pub fn attributed_s(&self) -> f64 {
+        self.awaiting_weights_s + self.kv_queue_s + self.env_wait_s + self.starved_admission_s
+    }
+
+    /// Fraction of idle time attributed to `cause` (0 when no idle).
+    pub fn fraction(&self, cause: BubbleCause) -> f64 {
+        if self.engine_idle_s <= 0.0 {
+            return 0.0;
+        }
+        let part = match cause {
+            BubbleCause::AwaitingWeights => self.awaiting_weights_s,
+            BubbleCause::KvQueue => self.kv_queue_s,
+            BubbleCause::EnvWait => self.env_wait_s,
+            BubbleCause::StarvedAdmission => self.starved_admission_s,
+        };
+        part / self.engine_idle_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causes_partition_idle() {
+        let mut b = BubbleReport::default();
+        b.book(BubbleCause::AwaitingWeights, 2.0);
+        b.book(BubbleCause::KvQueue, 1.0);
+        b.book(BubbleCause::EnvWait, 3.0);
+        b.book(BubbleCause::StarvedAdmission, 0.5);
+        b.book(BubbleCause::EnvWait, 0.0); // zero-length: ignored
+        assert_eq!(b.windows, 4);
+        assert!((b.attributed_s() - b.engine_idle_s).abs() < 1e-12);
+        assert!((b.engine_idle_s - 6.5).abs() < 1e-12);
+        assert!((b.fraction(BubbleCause::AwaitingWeights) - 2.0 / 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_fractions_are_zero() {
+        let b = BubbleReport::default();
+        assert_eq!(b.fraction(BubbleCause::KvQueue), 0.0);
+        assert_eq!(b.attributed_s(), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Telemetry plane: event tracing, counter sampling, and bubble
+//! attribution for the DES.
+//!
+//! The paper's central claim is that naive disaggregation loses
+//! throughput to *resource bubbles*; until this plane existed the DES
+//! could only report end-of-run aggregates — nobody could see *where*
+//! an engine's idle seconds went.  Three pieces fix that:
+//!
+//! * [`TraceRecorder`] — a zero-cost-when-disabled span/counter
+//!   recorder the drivers thread their phase changes, engine windows,
+//!   link transfers and weight buckets through, exported as
+//!   deterministic Chrome-trace JSON ([`TraceRecorder::to_chrome_json`])
+//!   openable in `chrome://tracing` or Perfetto (pid = pool/engine,
+//!   tid = trajectory).
+//! * the **counter catalog** ([`CTR_ENGINES_BUSY`] and friends) — a
+//!   sim-time-sampled gauge registry the driver emits at every
+//!   iteration boundary (engine utilization, queue depths, link
+//!   occupancy, version lag).
+//! * [`BubbleReport`] — an always-on decomposition of each engine's
+//!   idle time into named causes ([`BubbleCause`]), surfaced on
+//!   [`ScenarioResult`](crate::sim::ScenarioResult) and cross-checked
+//!   against [`WeightSyncReport`](crate::weights::WeightSyncReport)
+//!   and KV-link totals (see `tests/obs_plane.rs`).
+//!
+//! The disabled recorder is a no-op: a determinism test pins traced
+//! and untraced runs to bit-identical `ScenarioResult`s.  See
+//! `docs/OBSERVABILITY.md` for the guided tour.
+
+mod bubble;
+mod trace;
+
+pub use bubble::{BubbleCause, BubbleReport};
+pub use trace::{TraceEvent, TraceRecorder};
+
+// ---- trace-process layout (pid scheme) ------------------------------
+
+/// Driver/trainer process: train spans, fleet-drain spans, counters.
+pub const PID_DRIVER: u64 = 0;
+/// Trajectory process: one tid per trajectory, spans per lifecycle
+/// phase visit.
+pub const PID_TRAJ: u64 = 1;
+/// The PD KV link: one tid per transfer slot (forward), slots + s for
+/// reverse slot s.
+pub const PID_KV_LINK: u64 = 2;
+/// The weight fan-out link: bucketized pull transfers, per slot.
+pub const PID_WEIGHT_LINK: u64 = 3;
+/// Engines: engine `e` traces under pid `PID_ENGINE_BASE + e`.
+pub const PID_ENGINE_BASE: u64 = 100;
+
+// ---- counter catalog (documented in docs/OBSERVABILITY.md) ----------
+
+/// Engines currently mid-step (gauge, sampled at iteration boundaries).
+pub const CTR_ENGINES_BUSY: &str = "engines_busy";
+/// Live (not down/retired) engines.
+pub const CTR_ENGINES_LIVE: &str = "engines_live";
+/// Non-terminal trajectories in flight.
+pub const CTR_ACTIVE_TRAJ: &str = "active_trajectories";
+/// Requests parked by a suspended proxy / dead pool.
+pub const CTR_PENDING_REQS: &str = "pending_requests";
+/// Events waiting in the simulation queue.
+pub const CTR_QUEUE_DEPTH: &str = "event_queue_depth";
+/// Worst live-engine weight-version lag behind the trainer.
+pub const CTR_VERSION_LAG_MAX: &str = "version_lag_max";
+/// Cumulative KV-link queue delay (occupancy proxy), seconds.
+pub const CTR_KV_QUEUE_DELAY: &str = "kv_link_queue_delay_s";
+/// Cumulative weight fan-out link queue delay, seconds.
+pub const CTR_WLINK_QUEUE_DELAY: &str = "weight_link_queue_delay_s";

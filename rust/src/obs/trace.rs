@@ -1,0 +1,349 @@
+//! Span/counter recorder with deterministic Chrome-trace JSON export.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// One recorded trace event.
+///
+/// Timestamps are kept in simulation **seconds** (f64) so in-process
+/// consumers (e.g. the `fig_phases` bench rebuilding phase residency)
+/// see exactly the values the driver computed; conversion to integer
+/// microseconds happens only at JSON export.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Chrome-trace phase: `'X'` complete span, `'C'` counter,
+    /// `'i'` instant, `'M'` process-name metadata.
+    pub ph: char,
+    pub pid: u64,
+    pub tid: u64,
+    pub name: String,
+    pub cat: &'static str,
+    /// Span/instant/counter timestamp, simulation seconds.
+    pub start_s: f64,
+    /// Span duration, simulation seconds (`'X'` only).
+    pub dur_s: f64,
+    /// Counter value (`'C'` only).
+    pub value: f64,
+}
+
+/// Records simulation spans and counters; exports Chrome-trace JSON.
+///
+/// The recorder is the single hook the drivers thread their telemetry
+/// through.  A [`TraceRecorder::disabled`] recorder ignores every call
+/// (one branch per call site), so instrumentation is always compiled
+/// in but free when unused.
+///
+/// # Worked example
+///
+/// Record a tiny timeline by hand and export it:
+///
+/// ```
+/// use rollart::obs::{TraceRecorder, PID_ENGINE_BASE};
+///
+/// let mut rec = TraceRecorder::enabled();
+/// rec.process_name(PID_ENGINE_BASE, "engine-0 (H800)");
+/// // engine busy from t=1.0s for 2.5s, then an idle bubble
+/// rec.span(PID_ENGINE_BASE, 0, "step", "engine", 1.0, 2.5);
+/// rec.span(PID_ENGINE_BASE, 0, "idle:env-wait", "bubble", 3.5, 0.5);
+/// rec.counter(0, "engines_busy", 1.0, 1.0);
+///
+/// let json = rec.to_chrome_json();
+/// // valid JSON (checked with the in-tree parser), openable in
+/// // chrome://tracing or https://ui.perfetto.dev
+/// let doc = rollart::util::json::Json::parse(&json).unwrap();
+/// let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+/// assert_eq!(events.len(), 4);
+/// // spans carry integer-microsecond timestamps
+/// assert_eq!(doc.at("traceEvents.1.ts").unwrap().as_f64(), Some(1_000_000.0));
+/// assert_eq!(doc.at("traceEvents.1.dur").unwrap().as_f64(), Some(2_500_000.0));
+/// ```
+///
+/// In the simulator you never build spans by hand: pass an enabled
+/// recorder to `sim::driver::run_with_trace` (or
+/// `sim::sync_driver::run_with_trace`) and write the result with
+/// [`TraceRecorder::write_json`].
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    on: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    /// A recorder that drops every event (the zero-cost default).
+    pub fn disabled() -> Self {
+        TraceRecorder {
+            on: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// A recorder that keeps everything for export.
+    pub fn enabled() -> Self {
+        TraceRecorder {
+            on: true,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Record a complete span `[start_s, start_s + dur_s]`.
+    ///
+    /// Negative durations are clamped to zero (a span must not end
+    /// before it starts; clamping keeps fp jitter out of the export).
+    pub fn span(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        cat: &'static str,
+        start_s: f64,
+        dur_s: f64,
+    ) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: 'X',
+            pid,
+            tid,
+            name: name.to_string(),
+            cat,
+            start_s,
+            dur_s: dur_s.max(0.0),
+            value: 0.0,
+        });
+    }
+
+    /// Record an instant marker.
+    pub fn instant(&mut self, pid: u64, tid: u64, name: &str, cat: &'static str, t_s: f64) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: 'i',
+            pid,
+            tid,
+            name: name.to_string(),
+            cat,
+            start_s: t_s,
+            dur_s: 0.0,
+            value: 0.0,
+        });
+    }
+
+    /// Record a counter sample (rendered as a track in chrome://tracing).
+    pub fn counter(&mut self, pid: u64, name: &str, t_s: f64, value: f64) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: 'C',
+            pid,
+            tid: 0,
+            name: name.to_string(),
+            cat: "counter",
+            start_s: t_s,
+            dur_s: 0.0,
+            value,
+        });
+    }
+
+    /// Name a trace process (`pid`) for the viewer's sidebar.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: 'M',
+            pid,
+            tid: 0,
+            name: name.to_string(),
+            cat: "__metadata",
+            start_s: 0.0,
+            dur_s: 0.0,
+            value: 0.0,
+        });
+    }
+
+    /// All recorded events, in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize to Chrome-trace JSON (the `{"traceEvents": [...]}`
+    /// form).  Timestamps are integer microseconds; output is fully
+    /// deterministic for a deterministic simulation run, so repeated
+    /// seeded runs export byte-identical files.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            match e.ph {
+                'M' => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+                         \"args\":{{\"name\":\"{}\"}}}}",
+                        e.pid,
+                        escape(&e.name)
+                    );
+                }
+                'C' => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"C\",\"pid\":{},\"tid\":0,\
+                         \"ts\":{},\"args\":{{\"value\":{}}}}}",
+                        escape(&e.name),
+                        escape(e.cat),
+                        e.pid,
+                        micros(e.start_s),
+                        num(e.value)
+                    );
+                }
+                'i' => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"pid\":{},\"tid\":{},\"ts\":{}}}",
+                        escape(&e.name),
+                        escape(e.cat),
+                        e.pid,
+                        e.tid,
+                        micros(e.start_s)
+                    );
+                }
+                _ => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+                         \"ts\":{},\"dur\":{}}}",
+                        escape(&e.name),
+                        escape(e.cat),
+                        e.pid,
+                        e.tid,
+                        micros(e.start_s),
+                        micros(e.dur_s)
+                    );
+                }
+            }
+        }
+        out.push_str("],\"displayTimeUnit\":\"ms\"}");
+        out
+    }
+
+    /// Write the Chrome-trace JSON to `path` (creating parent dirs).
+    pub fn write_json(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+/// Simulation seconds → integer microseconds (Chrome-trace `ts`/`dur`).
+fn micros(s: f64) -> i64 {
+    (s * 1e6).round() as i64
+}
+
+/// Deterministic numeric formatting for counter values.
+fn num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let mut rec = TraceRecorder::disabled();
+        rec.span(1, 2, "x", "c", 0.0, 1.0);
+        rec.counter(0, "n", 0.0, 3.0);
+        rec.instant(0, 0, "i", "c", 0.5);
+        rec.process_name(0, "p");
+        assert!(rec.is_empty());
+        assert_eq!(
+            rec.to_chrome_json(),
+            "{\"traceEvents\":[],\"displayTimeUnit\":\"ms\"}"
+        );
+    }
+
+    #[test]
+    fn export_is_valid_json_with_microsecond_timestamps() {
+        let mut rec = TraceRecorder::enabled();
+        rec.process_name(100, "engine \"zero\"");
+        rec.span(100, 7, "step", "engine", 1.5, 0.25);
+        rec.counter(0, "depth", 2.0, 5.0);
+        rec.instant(0, 0, "publish", "weights", 2.5);
+        let json = rec.to_chrome_json();
+        let doc = Json::parse(&json).expect("export parses");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(
+            doc.at("traceEvents.0.args.name").unwrap().as_str(),
+            Some("engine \"zero\"")
+        );
+        assert_eq!(doc.at("traceEvents.1.ts").unwrap().as_f64(), Some(1_500_000.0));
+        assert_eq!(doc.at("traceEvents.1.dur").unwrap().as_f64(), Some(250_000.0));
+        assert_eq!(doc.at("traceEvents.1.tid").unwrap().as_usize(), Some(7));
+        assert_eq!(doc.at("traceEvents.2.args.value").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn negative_durations_clamped() {
+        let mut rec = TraceRecorder::enabled();
+        rec.span(0, 0, "x", "c", 1.0, -0.5);
+        assert_eq!(rec.events()[0].dur_s, 0.0);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let build = || {
+            let mut rec = TraceRecorder::enabled();
+            for i in 0..10 {
+                rec.span(1, i, "phase", "traj", i as f64 * 0.1, 0.05);
+                rec.counter(0, "g", i as f64, (i as f64) / 3.0);
+            }
+            rec.to_chrome_json()
+        };
+        assert_eq!(build(), build());
+    }
+}

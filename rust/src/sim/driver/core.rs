@@ -57,6 +57,7 @@ use crate::hw::{phase_time, GpuClass};
 use crate::metrics::StepBreakdown;
 use crate::mooncake::MooncakeStore;
 use crate::net::SharedLink;
+use crate::obs::{self, BubbleCause, BubbleReport, TraceRecorder};
 use crate::proxy::{EngineSim, LlmProxy, SimRequest};
 use crate::resource::{ResourceClass, ResourceManager, Role};
 use crate::rl::{TrajectoryId, Version};
@@ -329,6 +330,30 @@ struct DriverCore<'a> {
     acc_train: f64,
     acc_wait: f64,
     reward_busy_s: f64,
+    // ---- telemetry plane ----------------------------------------
+    /// The run's trace sink.  A disabled recorder drops every span and
+    /// counter (one branch per site), so tracing is always compiled in
+    /// but free when off; the *bubble* accounting below is always on —
+    /// it is pure f64 bookkeeping and must be bit-identical between
+    /// traced and untraced runs.
+    rec: &'a mut TraceRecorder,
+    bubbles: BubbleReport,
+    /// Open idle window per engine (`None` while busy or down).
+    idle_since: Vec<Option<f64>>,
+    /// Cause the open window will book under unless refined at close.
+    idle_cause: Vec<BubbleCause>,
+    /// When the engine's in-flight step started (trace span start).
+    busy_since: Vec<f64>,
+    /// When the engine's in-flight cutover began (trace span start).
+    cutover_since: Vec<f64>,
+    /// Dispatch context: a window closed while this is not `EnvWait`
+    /// refines a generic env-wait bubble into the real unblocker
+    /// (KV delivery → `KvQueue`; post-resume flush →
+    /// `StarvedAdmission`).
+    kick_cause: BubbleCause,
+    /// When the in-flight train step started (trace span start).
+    train_started: f64,
+    // -------------------------------------------------------------
     result: ScenarioResult,
 }
 
@@ -341,7 +366,7 @@ fn reward_exec(cfg: &Scenario, rng: &mut SimRng) -> f64 {
 }
 
 impl<'a> DriverCore<'a> {
-    fn new(cfg: &'a Scenario) -> Self {
+    fn new(cfg: &'a Scenario, rec: &'a mut TraceRecorder) -> Self {
         let policy = policy_for(cfg.mode);
         if let Err(e) = cfg.weights.validate() {
             panic!("invalid weights config: {e}");
@@ -481,11 +506,21 @@ impl<'a> DriverCore<'a> {
             b.set_group_aware(policy.group_atomic_deposits());
             b
         };
-        let pd = cfg.pd.as_ref().filter(|p| p.disaggregated).map(|p| PdState {
+        let mut pd = cfg.pd.as_ref().filter(|p| p.disaggregated).map(|p| PdState {
             cfg: p.clone(),
             shared: shared_kv_link(p),
             pending: BTreeMap::new(),
         });
+        let mut wlink = SharedLink::new(cfg.weights.fanout_link(), cfg.weights.fanout_slots);
+        if rec.is_enabled() {
+            // Keep per-transfer records so finish() can lay the links
+            // out as occupancy tracks.  Grants are identical either
+            // way, so traced and untraced runs cannot diverge.
+            wlink.enable_trace();
+            if let Some(pd) = pd.as_mut() {
+                pd.shared.enable_trace();
+            }
+        }
         DriverCore {
             cfg,
             policy,
@@ -520,7 +555,7 @@ impl<'a> DriverCore<'a> {
             env_target,
             engine_version: vec![Version(0); n_engines],
             wstrategy: cfg.weights.strategy.make(),
-            wlink: SharedLink::new(cfg.weights.fanout_link(), cfg.weights.fanout_slots),
+            wlink,
             wsync: vec![EngineSync::Idle; n_engines],
             wsync_version: vec![Version(0); n_engines],
             wdissem_started: None,
@@ -567,12 +602,118 @@ impl<'a> DriverCore<'a> {
             acc_train: 0.0,
             acc_wait: 0.0,
             reward_busy_s: 0.0,
+            rec,
+            bubbles: BubbleReport::default(),
+            // Every engine starts idle awaiting its first dispatch.
+            idle_since: vec![Some(0.0); n_engines],
+            idle_cause: vec![BubbleCause::EnvWait; n_engines],
+            busy_since: vec![0.0; n_engines],
+            cutover_since: vec![0.0; n_engines],
+            kick_cause: BubbleCause::EnvWait,
+            train_started: 0.0,
             result: ScenarioResult::default(),
         }
     }
 
     fn now(&self) -> f64 {
         self.q.now().as_secs()
+    }
+
+    // ---- telemetry plane --------------------------------------------
+
+    /// Trace pid of engine `e` (one viewer "process" per engine).
+    fn engine_pid(e: usize) -> u64 {
+        obs::PID_ENGINE_BASE + e as u64
+    }
+
+    /// Open an idle window on engine `e` (no-op if one is already open
+    /// or the engine is down — downtime belongs to the fault plane, not
+    /// the bubble decomposition).
+    fn idle_open(&mut self, e: usize, cause: BubbleCause) {
+        if self.idle_since[e].is_none() && !self.engine_down[e] {
+            self.idle_since[e] = Some(self.now());
+            self.idle_cause[e] = cause;
+        }
+    }
+
+    /// Close engine `e`'s open idle window, booking it under its cause.
+    /// A window opened as generic `EnvWait` is refined by the dispatch
+    /// context that ended it (`kick_cause`): closed by a KV delivery,
+    /// the engine was really behind the KV queue; closed by a
+    /// post-resume flush, admission starved it.
+    fn idle_close(&mut self, e: usize) {
+        let Some(t0) = self.idle_since[e].take() else {
+            return;
+        };
+        let now = self.now();
+        let mut cause = self.idle_cause[e];
+        if cause == BubbleCause::EnvWait && self.kick_cause != BubbleCause::EnvWait {
+            cause = self.kick_cause;
+        }
+        self.bubbles.book(cause, now - t0);
+        if self.rec.is_enabled() && now > t0 {
+            let name = format!("idle:{}", cause.label());
+            self.rec.span(Self::engine_pid(e), 0, &name, "bubble", t0, now - t0);
+        }
+    }
+
+    /// Re-cause engine `e`'s open idle window at the current instant:
+    /// book the elapsed part under the old cause and reopen under
+    /// `cause`.  No-op while the engine is busy or down — this is how
+    /// `AwaitingWeights` gets bracketed exactly at cutover and drain
+    /// boundaries.
+    fn idle_split(&mut self, e: usize, cause: BubbleCause) {
+        if self.idle_since[e].is_some() {
+            self.idle_close(e);
+            self.idle_open(e, cause);
+        }
+    }
+
+    /// Sample the gauge catalog (sim-time-sampled counters; one point
+    /// per train step plus the endpoints).
+    fn sample_counters(&mut self) {
+        if !self.rec.is_enabled() {
+            return;
+        }
+        let now = self.now();
+        let busy = self.engine_busy.iter().filter(|b| **b).count() as f64;
+        let live = self.engine_down.iter().filter(|d| !**d).count() as f64;
+        let lag = (0..self.engine_version.len())
+            .filter(|&e| !self.engine_down[e])
+            .map(|e| self.version.0.saturating_sub(self.engine_version[e].0))
+            .max()
+            .unwrap_or(0) as f64;
+        let active = self.active() as f64;
+        let parked = self.pending_requests.len() as f64;
+        let depth = self.q.len() as f64;
+        let kv_q = match self.pd.as_ref() {
+            Some(pd) => pd.shared.stats.queue_delay_total_s,
+            None => 0.0,
+        };
+        let w_q = self.wlink.stats.queue_delay_total_s;
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_ENGINES_BUSY, now, busy);
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_ENGINES_LIVE, now, live);
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_ACTIVE_TRAJ, now, active);
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_PENDING_REQS, now, parked);
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_QUEUE_DEPTH, now, depth);
+        self.rec.counter(obs::PID_DRIVER, obs::CTR_VERSION_LAG_MAX, now, lag);
+        self.rec.counter(obs::PID_KV_LINK, obs::CTR_KV_QUEUE_DELAY, now, kv_q);
+        self.rec
+            .counter(obs::PID_WEIGHT_LINK, obs::CTR_WLINK_QUEUE_DELAY, now, w_q);
+    }
+
+    /// Viewer label of engine `e`: index, GPU class, and (PD) the pool
+    /// its class serves.
+    fn engine_label(&self, e: usize) -> String {
+        let eng = &self.proxy.engines()[e];
+        match self.pd.as_ref() {
+            Some(pd) => format!(
+                "engine-{e} ({:?}, {})",
+                eng.class,
+                super::pd::pool_label(&pd.cfg, eng.class)
+            ),
+            None => format!("engine-{e} ({:?})", eng.class),
+        }
     }
 
     // ---- lifecycle funnel -------------------------------------------
@@ -586,6 +727,15 @@ impl<'a> DriverCore<'a> {
     fn transition(&mut self, mgr: usize, to: TrajPhase) {
         let now = self.now();
         let edge = self.lifecycle.transition_at(mgr, to, now);
+        if self.rec.is_enabled() {
+            // One span per completed phase visit, computed with the
+            // same `(now - entered).max(0)` arithmetic the residency
+            // booking uses, so the span timeline and LifecycleStats
+            // agree exactly (the fig_phases bench asserts this).
+            let dur = (now - edge.since_s).max(0.0);
+            self.rec
+                .span(obs::PID_TRAJ, mgr as u64, edge.from.label(), "traj", edge.since_s, dur);
+        }
         if edge.to == TrajPhase::Aborted {
             if let Some(pd) = self.pd.as_mut() {
                 if let Some(entry) = pd.pending.remove(&TrajectoryId(mgr as u64)) {
@@ -642,6 +792,8 @@ impl<'a> DriverCore<'a> {
     /// first wave.  Engines mid-sync complete to the version they
     /// committed to and are re-picked.
     fn begin_dissemination(&mut self, push_start: f64) {
+        let now = self.now();
+        self.rec.instant(obs::PID_DRIVER, 0, "publish", "weights", now);
         self.wreport.publishes += 1;
         let bytes = self.cfg.model.weight_bytes();
         let n = self.cfg.weights.mooncake.bucket_count(bytes);
@@ -709,6 +861,11 @@ impl<'a> DriverCore<'a> {
     /// The stream has delivered and the engine is at a step boundary —
     /// suspend only for the cutover (protocol step ⑤).
     fn begin_cutover(&mut self, e: usize) {
+        // The engine sits at a step boundary, so it has an open idle
+        // window: from here to WsyncDone the bubble is the weight
+        // plane's — exactly the `cut` booked into engine_offline_s.
+        self.idle_split(e, BubbleCause::AwaitingWeights);
+        self.cutover_since[e] = self.now();
         self.wsync[e] = EngineSync::Offline;
         self.proxy.engines_mut()[e].suspend();
         let (cut, exposed) = self.engine_cutover_s(e);
@@ -785,6 +942,14 @@ impl<'a> DriverCore<'a> {
         self.wsync[e] = EngineSync::Idle;
         self.engine_version[e] = self.wsync_version[e];
         self.wreport.engine_syncs += 1;
+        if self.rec.is_enabled() {
+            let t0 = self.cutover_since[e];
+            let dur = self.now() - t0;
+            self.rec.span(Self::engine_pid(e), 0, "cutover", "weights", t0, dur);
+        }
+        // The awaiting-weights bubble ends here; whatever idle follows
+        // is ordinary env-wait (or refined by the kicks below).
+        self.idle_split(e, BubbleCause::EnvWait);
         if !self.proxy.is_suspended() {
             self.proxy.engines_mut()[e].resume();
         }
@@ -1037,6 +1202,8 @@ impl<'a> DriverCore<'a> {
         } = outcome
         {
             self.engine_busy[e] = true;
+            self.idle_close(e);
+            self.busy_since[e] = self.now();
             self.engine_inflight_done[e] = completed.iter().map(|(t, _)| *t).collect();
             let epoch = self.engine_epoch[e];
             self.q.schedule_in(
@@ -1182,6 +1349,16 @@ impl<'a> DriverCore<'a> {
     /// drained requests plus the trajectories whose completions were
     /// riding the invalidated step event (both need re-dispatch).
     fn take_down_engine(&mut self, e: usize) -> (Vec<SimRequest>, Vec<TrajectoryId>) {
+        // Close the telemetry windows first: the truncated step (work
+        // the crash voided) and any open bubble end here — downtime
+        // itself belongs to the fault plane, not the idle
+        // decomposition.
+        if self.engine_busy[e] && self.rec.is_enabled() {
+            let t0 = self.busy_since[e];
+            let dur = self.now() - t0;
+            self.rec.span(Self::engine_pid(e), 0, "step(lost)", "engine", t0, dur);
+        }
+        self.idle_close(e);
         self.engine_down[e] = true;
         self.engine_epoch[e] += 1;
         self.engine_busy[e] = false;
@@ -1272,6 +1449,7 @@ impl<'a> DriverCore<'a> {
         }
         self.engine_down[e] = false;
         self.engine_up_since[e] = Some(self.now());
+        self.idle_open(e, BubbleCause::EnvWait);
         self.proxy.engines_mut()[e].set_down(false);
         // Recovery reloads the *current* weights (the reboot pulls from
         // the store as part of engine_recovery_s) and clears any
@@ -1296,9 +1474,17 @@ impl<'a> DriverCore<'a> {
             return;
         }
         let pending: Vec<SimRequest> = std::mem::take(&mut self.pending_requests);
+        if pending.is_empty() {
+            return;
+        }
+        // An idle window closed by one of these dispatches means the
+        // engine sat ready while admission held its work back.
+        let prev = self.kick_cause;
+        self.kick_cause = BubbleCause::StarvedAdmission;
         for req in pending {
             self.dispatch(req);
         }
+        self.kick_cause = prev;
     }
 
     fn live_engines_of(&self, class: GpuClass) -> Vec<usize> {
@@ -1562,6 +1748,15 @@ impl<'a> DriverCore<'a> {
         self.engine_version.push(self.version);
         self.wsync.push(EngineSync::Idle);
         self.wsync_version.push(self.version);
+        // Telemetry state: the newcomer starts idle awaiting dispatch.
+        self.idle_since.push(Some(self.now()));
+        self.idle_cause.push(BubbleCause::EnvWait);
+        self.busy_since.push(self.now());
+        self.cutover_since.push(0.0);
+        if self.rec.is_enabled() {
+            let label = self.engine_label(e);
+            self.rec.process_name(Self::engine_pid(e), &label);
+        }
         // The new engine is subject to the same failure process.
         if self.fault_on {
             self.schedule_engine_failure(e);
@@ -1738,6 +1933,11 @@ impl<'a> DriverCore<'a> {
     fn begin_suspend(&mut self) {
         self.proxy.suspend();
         self.suspend_draining = true;
+        // Already-idle engines wait on the drain from this instant;
+        // busy ones open their awaiting-weights window at EngineFree.
+        for e in 0..self.engine_busy.len() {
+            self.idle_split(e, BubbleCause::AwaitingWeights);
+        }
         if self.engine_busy.iter().all(|b| !b) {
             self.finish_drain();
         }
@@ -1772,6 +1972,11 @@ impl<'a> DriverCore<'a> {
         self.wreport.dissemination_s += exposed + recompute;
         self.wreport.engine_offline_s += (exposed + recompute) * live as f64;
         self.sync_scheduled = true;
+        if self.rec.is_enabled() {
+            let now = self.now();
+            self.rec
+                .span(obs::PID_DRIVER, 0, "fleet-drain", "weights", now, exposed + recompute);
+        }
         self.q.schedule_in(exposed + recompute, Ev::SyncDone);
     }
 
@@ -1783,6 +1988,11 @@ impl<'a> DriverCore<'a> {
         // version vector stays uniform under the blocking baseline.
         for v in &mut self.engine_version {
             *v = self.version;
+        }
+        // The drain is over: idle from here on is ordinary env-wait
+        // (the kicks below close most windows at zero length anyway).
+        for e in 0..self.engine_busy.len() {
+            self.idle_split(e, BubbleCause::EnvWait);
         }
         self.proxy.resume();
         self.flush_pending();
@@ -1809,6 +2019,7 @@ impl<'a> DriverCore<'a> {
             * crate::sim::TRAIN_OVERHEAD;
         self.acc_train += t;
         self.trainer_busy = true;
+        self.train_started = self.now();
         self.inflight_train_tokens = tokens;
         self.q.schedule_in(t, Ev::TrainDone);
     }
@@ -1824,6 +2035,12 @@ impl<'a> DriverCore<'a> {
         self.trainer_busy = false;
         self.trainer_idle_since = self.now();
         self.train_steps_done += 1;
+        if self.rec.is_enabled() {
+            let t0 = self.train_started;
+            let dur = self.now() - t0;
+            self.rec.span(obs::PID_DRIVER, 0, "train", "trainer", t0, dur);
+        }
+        self.sample_counters();
         // Publish new weights to the store (push overlaps rollout).
         self.weights_pushed_at = Some(self.now());
 
@@ -1931,6 +2148,9 @@ impl<'a> DriverCore<'a> {
                     let bytes = kv_bytes(&self.cfg.model, entry.prefill.new_tokens);
                     let grant = pd.shared.acquire(now, bytes);
                     entry.hop_s = grant.done_s - now;
+                    // Telemetry: the forward hops' queueing is the
+                    // cross-checkable floor of the kv-queue bubble.
+                    self.bubbles.kv_queue_booked_s += grant.queue_delay_s;
                     kv_delay = Some(entry.hop_s);
                 }
                 // A completion for a transfer-phase entry cannot arrive
@@ -1982,6 +2202,19 @@ impl<'a> DriverCore<'a> {
         }
         self.engine_busy[engine] = false;
         self.engine_inflight_done[engine].clear();
+        if self.rec.is_enabled() {
+            let t0 = self.busy_since[engine];
+            let dur = self.now() - t0;
+            self.rec.span(Self::engine_pid(engine), 0, "step", "engine", t0, dur);
+        }
+        // The engine goes idle at this boundary; mid-drain the bubble
+        // is the weight plane's, otherwise env-wait until refined.
+        let cause = if self.suspend_draining {
+            BubbleCause::AwaitingWeights
+        } else {
+            BubbleCause::EnvWait
+        };
+        self.idle_open(engine, cause);
         // Turns are recorded at the version of the engine that
         // generated them (exact per-engine attribution under rolling /
         // lazy dissemination; uniform under the blocking baseline).
@@ -2048,7 +2281,12 @@ impl<'a> DriverCore<'a> {
             self.kv_hop_booked_s += entry.hop_s;
             entry.decode.clone()
         };
+        // A decode engine whose idle window this dispatch closes was
+        // really waiting on the KV link, not the environments.
+        let prev = self.kick_cause;
+        self.kick_cause = BubbleCause::KvQueue;
         self.dispatch(decode);
+        self.kick_cause = prev;
     }
 
     fn on_scheduled(&mut self, idx: usize) {
@@ -2073,6 +2311,19 @@ impl<'a> DriverCore<'a> {
     /// Prime the queue: chaos schedule, MTBF processes, initial launch.
     fn prime(&mut self) {
         self.trainer_idle_since = 0.0;
+        if self.rec.is_enabled() {
+            self.rec.process_name(obs::PID_DRIVER, "driver");
+            self.rec.process_name(obs::PID_TRAJ, "trajectories");
+            if self.pd.is_some() {
+                self.rec.process_name(obs::PID_KV_LINK, "kv-link");
+            }
+            self.rec.process_name(obs::PID_WEIGHT_LINK, "weight-link");
+            for e in 0..self.engine_down.len() {
+                let label = self.engine_label(e);
+                self.rec.process_name(Self::engine_pid(e), &label);
+            }
+        }
+        self.sample_counters();
         if self.fault_on {
             for (idx, f) in self.cfg.fault.scheduled.iter().enumerate() {
                 self.q.schedule(SimTime::secs(f.at_s), Ev::Scheduled { idx });
@@ -2156,6 +2407,47 @@ impl<'a> DriverCore<'a> {
     fn finish(mut self) -> (ScenarioResult, LifecycleStats) {
         let total = self.now().max(1e-9);
         self.result.total_time_s = total;
+        // Close the telemetry plane: truncated busy spans for engines
+        // still mid-step, every open idle window booked through run
+        // end, a final counter sample, and the links' transfer logs
+        // laid out as occupancy tracks (tid = 2·slot + direction, so
+        // same-slot transfers — which the link serializes — share a
+        // row).
+        self.sample_counters();
+        for e in 0..self.engine_busy.len() {
+            if self.engine_busy[e] && self.rec.is_enabled() {
+                let t0 = self.busy_since[e];
+                let dur = self.now() - t0;
+                self.rec.span(Self::engine_pid(e), 0, "step", "engine", t0, dur);
+            }
+            self.idle_close(e);
+        }
+        if self.rec.is_enabled() {
+            let kv_log = match self.pd.as_mut() {
+                Some(pd) => pd.shared.drain_trace(),
+                None => Vec::new(),
+            };
+            for t in kv_log {
+                let tid = 2 * t.slot as u64 + t.reverse as u64;
+                let name = if t.reverse { "kv-reverse" } else { "kv-transfer" };
+                self.rec
+                    .span(obs::PID_KV_LINK, tid, name, "link", t.start_s, t.done_s - t.start_s);
+            }
+            for t in self.wlink.drain_trace() {
+                let tid = 2 * t.slot as u64 + t.reverse as u64;
+                self.rec.span(
+                    obs::PID_WEIGHT_LINK,
+                    tid,
+                    "weight-bucket",
+                    "link",
+                    t.start_s,
+                    t.done_s - t.start_s,
+                );
+            }
+        }
+        self.result.bubbles = self.bubbles;
+        self.result.sim_events = self.q.popped();
+        self.result.peak_queue_depth = self.q.max_depth() as u64;
         // A dissemination window still converging at run end (a lazy
         // fleet floating inside its α slack) closes here.
         if let Some(t0) = self.wdissem_started.take() {
@@ -2215,8 +2507,25 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
 /// Run a trajectory-level scenario and return the lifecycle statistics
 /// alongside the result (invariant checks, diagnostics).
 pub fn run_traced(cfg: &Scenario) -> (ScenarioResult, LifecycleStats) {
+    let mut rec = TraceRecorder::disabled();
+    run_with_trace(cfg, &mut rec)
+}
+
+/// Run a trajectory-level scenario recording telemetry into `rec`.
+///
+/// With an enabled recorder every trajectory phase, engine step, idle
+/// bubble, cutover, link transfer and train step lands as a span
+/// (export with [`TraceRecorder::to_chrome_json`] and open in
+/// chrome://tracing or Perfetto).  The returned `ScenarioResult` is
+/// bit-identical to an untraced run of the same scenario — tracing
+/// observes the simulation, never steers it (pinned by the
+/// `tests/obs_plane.rs` determinism test).
+pub fn run_with_trace(
+    cfg: &Scenario,
+    rec: &mut TraceRecorder,
+) -> (ScenarioResult, LifecycleStats) {
     assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
-    DriverCore::new(cfg).run()
+    DriverCore::new(cfg, rec).run()
 }
 
 #[cfg(test)]

@@ -69,6 +69,22 @@ impl TrajPhase {
         matches!(self, TrajPhase::Deposited | TrajPhase::Aborted)
     }
 
+    /// Stable lowercase label (trace span names; never reformatted, so
+    /// committed trace files stay diffable).
+    pub fn label(self) -> &'static str {
+        match self {
+            TrajPhase::Queued => "queued",
+            TrajPhase::Prefilling => "prefilling",
+            TrajPhase::Decoding => "decoding",
+            TrajPhase::EnvStep => "env-step",
+            TrajPhase::Reward => "reward",
+            TrajPhase::Deposited => "deposited",
+            TrajPhase::Suspended => "suspended",
+            TrajPhase::Recovering => "recovering",
+            TrajPhase::Aborted => "aborted",
+        }
+    }
+
     /// Is `self → to` a legal edge?  Self-loops on non-terminal phases
     /// are legal (e.g. a parked request re-parked because its pool is
     /// still down).
@@ -97,7 +113,7 @@ impl TrajPhase {
 }
 
 /// One recorded transition.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LifecycleEdge {
     pub from: TrajPhase,
     pub to: TrajPhase,
@@ -105,6 +121,12 @@ pub struct LifecycleEdge {
     /// applied-around — the tracker still moves to `to` so the run
     /// continues deterministically).
     pub legal: bool,
+    /// Simulation time the trajectory entered `from` — the start of the
+    /// phase span this edge closes.  The telemetry plane emits each
+    /// completed visit as the trace span `[since_s, now]`, computed
+    /// with the same arithmetic as the residency booking so the span
+    /// timeline and [`LifecycleStats`] cannot drift apart.
+    pub since_s: f64,
 }
 
 /// Aggregate lifecycle activity of one run (exposed through
@@ -208,7 +230,8 @@ impl LifecycleTracker {
             self.stats.violations += 1;
         }
         *self.stats.edges.entry((from, to)).or_insert(0) += 1;
-        let dwell = (now - self.entered_at[idx]).max(0.0);
+        let since_s = self.entered_at[idx];
+        let dwell = (now - since_s).max(0.0);
         self.stats
             .residency
             .entry(from)
@@ -217,7 +240,12 @@ impl LifecycleTracker {
         *self.stats.residency_totals.entry(from).or_insert(0.0) += dwell;
         self.phases[idx] = to;
         self.entered_at[idx] = now;
-        LifecycleEdge { from, to, legal }
+        LifecycleEdge {
+            from,
+            to,
+            legal,
+            since_s,
+        }
     }
 
     pub fn stats(&self) -> &LifecycleStats {
@@ -335,6 +363,18 @@ mod tests {
         t.transition_at(i, Prefilling, 3.0);
         assert_eq!(t.stats().residency_s(Suspended), 3.0);
         assert_eq!(t.stats().residency.get(&Suspended).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn edges_carry_the_phase_span_start() {
+        let mut t = LifecycleTracker::new();
+        let i = t.spawn_at(1.0);
+        let e = t.transition_at(i, Prefilling, 3.0);
+        assert_eq!(e.since_s, 1.0, "Queued entered at spawn time");
+        let e = t.transition_at(i, Decoding, 8.0);
+        assert_eq!(e.since_s, 3.0);
+        // Span duration (now - since_s) equals the residency booked.
+        assert_eq!(t.stats().residency_s(Prefilling), 8.0 - 3.0);
     }
 
     #[test]

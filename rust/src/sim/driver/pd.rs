@@ -168,6 +168,19 @@ pub fn shared_kv_link(pd: &PdScenario) -> SharedLink {
     SharedLink::new(pd.kv_link.clone(), pd.kv_slots)
 }
 
+/// The pool an engine of `class` serves in this deployment — used by
+/// the telemetry plane to label engine trace tracks.  The colocated
+/// arm runs one interleaved pool.
+pub fn pool_label(pd: &PdScenario, class: GpuClass) -> &'static str {
+    if !pd.disaggregated {
+        "colocated"
+    } else if class == pd.prefill_class {
+        "prefill"
+    } else {
+        "decode"
+    }
+}
+
 /// Build the engine fleet a [`PdScenario`] describes.  Engine ids start
 /// at 0; in the disaggregated arm prefill engines come first.
 pub fn build_engines(pd: &PdScenario, model: &LlmSpec) -> Vec<EngineSim> {
@@ -509,6 +522,15 @@ mod tests {
         assert_eq!(d.new_tokens, 0.0);
         assert_eq!(d.ctx_tokens, 2000.0, "decode half sees the full context");
         assert_eq!(d.decode_budget, 250.0);
+    }
+
+    #[test]
+    fn pool_labels_follow_the_deployment_arm() {
+        let pd = PdScenario::xpyd(1, 1);
+        assert_eq!(pool_label(&pd, GpuClass::H800), "prefill");
+        assert_eq!(pool_label(&pd, GpuClass::H20), "decode");
+        let colo = PdScenario::colocated_baseline(1, 1);
+        assert_eq!(pool_label(&colo, GpuClass::H800), "colocated");
     }
 
     #[test]

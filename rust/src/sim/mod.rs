@@ -288,6 +288,15 @@ pub struct ScenarioResult {
     /// Weight-dissemination activity: exposed stall, per-engine
     /// version lag, fan-out link contention (see [`crate::weights`]).
     pub weights: WeightSyncReport,
+    /// Engine idle time decomposed into named causes by the telemetry
+    /// plane (see [`crate::obs::BubbleReport`]).  Always populated by
+    /// the event driver, traced or not.
+    pub bubbles: crate::obs::BubbleReport,
+    /// Events the DES dispatched over the run (event-driver runs only;
+    /// the analytic Sync driver leaves it 0).
+    pub sim_events: u64,
+    /// High-water mark of the pending-event heap.
+    pub peak_queue_depth: u64,
 }
 
 impl ScenarioResult {

@@ -42,6 +42,7 @@
 
 use super::{RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::coordinator::GroupTracker;
+use crate::obs::{self, TraceRecorder};
 use crate::env::profile::{DomainProfile, TrajectoryShape};
 use crate::envpool::ResetSampler;
 use crate::fault::{exp_sample, FaultEvent};
@@ -57,6 +58,28 @@ use super::TRAIN_OVERHEAD;
 
 /// Run the synchronous scenario.
 pub fn run(cfg: &Scenario) -> ScenarioResult {
+    let mut rec = TraceRecorder::disabled();
+    run_with_trace(cfg, &mut rec)
+}
+
+/// Run the synchronous scenario, recording its phase timeline into
+/// `rec`.
+///
+/// The monolith is analytic (no event queue), so the trace is a flat
+/// per-iteration timeline on [`obs::PID_DRIVER`]: one span per pipeline
+/// phase, serialized in the barrier order of the module doc.  Phase
+/// durations come straight from the committed
+/// [`StepBreakdown`](crate::metrics::StepBreakdown), so the span
+/// timeline sums to `total_time_s` exactly.  The `other` span bundles
+/// the analytic KV-hop and fault-stall terms; its nominal position at
+/// the end of the iteration is a presentation choice (the modeled costs
+/// interleave with rollout).
+///
+/// Passing a disabled recorder is free and bit-identical to [`run`].
+pub fn run_with_trace(cfg: &Scenario, rec: &mut TraceRecorder) -> ScenarioResult {
+    if rec.is_enabled() {
+        rec.process_name(obs::PID_DRIVER, "sync-pipeline");
+    }
     let root = SimRng::new(cfg.seed);
     let mut result = ScenarioResult::default();
     let mut reward_busy = 0.0;
@@ -412,6 +435,25 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
         }
 
         let step_time = breakdown.total();
+        if rec.is_enabled() {
+            let mut t = clock;
+            let phases = [
+                ("env-reset", breakdown.env_reset_s),
+                ("rollout", breakdown.generation_s),
+                ("env-step", breakdown.env_step_s),
+                ("reward", breakdown.reward_s),
+                ("weight-sync", breakdown.weight_sync_s),
+                ("get-batch-wait", breakdown.get_batch_wait_s),
+                ("train", breakdown.train_s),
+                ("other", breakdown.other_s),
+            ];
+            for (name, dur) in phases {
+                if dur > 0.0 {
+                    rec.span(obs::PID_DRIVER, 0, name, "sync-phase", t, dur);
+                }
+                t += dur;
+            }
+        }
         clock += step_time;
         result.steps.push(StepStats {
             step_time_s: step_time,
@@ -789,6 +831,30 @@ mod tests {
         // Training is compute-bound: the bandwidth-optimized class must
         // pay for its thin FLOPs.
         assert!(t(&slow) > t(&fast), "{} vs {}", t(&slow), t(&fast));
+    }
+
+    #[test]
+    fn trace_timeline_sums_to_total_time() {
+        let cfg = small_sync();
+        let mut rec = TraceRecorder::enabled();
+        let r = run_with_trace(&cfg, &mut rec);
+        // One flat timeline on the driver pid; spans sum to the clock
+        // exactly (phase durations come from the same breakdown).
+        let span_sum: f64 = rec
+            .events()
+            .iter()
+            .filter(|e| e.ph == 'X')
+            .map(|e| e.dur_s)
+            .sum();
+        assert!((span_sum - r.total_time_s).abs() < 1e-9, "{span_sum} vs {}", r.total_time_s);
+        // Spans never overlap: each starts at or after the previous end.
+        let mut end = 0.0f64;
+        for e in rec.events().iter().filter(|e| e.ph == 'X') {
+            assert!(e.start_s >= end - 1e-9, "{} starts before {end}", e.name);
+            end = e.start_s + e.dur_s;
+        }
+        // Tracing leaves the result untouched.
+        assert_eq!(r, run(&cfg));
     }
 
     #[test]

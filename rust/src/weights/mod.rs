@@ -762,6 +762,18 @@ impl WeightSyncReport {
         }
         (1.0 - self.exposed_stall_s / self.dissemination_s).clamp(0.0, 1.0)
     }
+
+    /// Engine-seconds the weight plane *committed* to suspensions —
+    /// the floor for the telemetry plane's
+    /// [`BubbleReport::awaiting_weights_s`](crate::obs::BubbleReport)
+    /// attribution.  Under event strategies in a fault-free run the two
+    /// are equal (every suspension is a cutover bracketed by the bubble
+    /// accountant); the blocking fleet drain books the exposed window
+    /// here per engine while the measured bubble can only be larger if
+    /// faults stretch a drain.
+    pub fn min_awaiting_weights_s(&self) -> f64 {
+        self.engine_offline_s
+    }
 }
 
 #[cfg(test)]

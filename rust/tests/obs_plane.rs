@@ -1,0 +1,284 @@
+//! Telemetry-plane conformance suite.
+//!
+//! Three properties hold the observability layer together:
+//!
+//! 1. **Zero observable cost** — a traced run returns a
+//!    `ScenarioResult` bit-identical to the untraced run (bubble
+//!    attribution is always-on and pure f64 bookkeeping; the recorder
+//!    only *reads* simulation state).
+//! 2. **Structural validity** — exported Chrome-trace JSON parses, all
+//!    spans have non-negative durations, and per-engine busy spans
+//!    never overlap (an engine runs one step at a time).
+//! 3. **Cross-checked attribution** — the `BubbleReport` idle-cause
+//!    decomposition is not free-floating: `awaiting-weights` pins to
+//!    the weight plane's own `engine_offline_s` and the booked KV queue
+//!    delay pins to the shared link's `queue_delay_total_s`, each
+//!    within 1%.
+//!
+//! The committed `BENCH_6.json` perf baseline (written by
+//! `benches/perf_baseline.rs`) is schema-validated here so CI fails
+//! loudly if the file goes missing or malformed.
+
+use rollart::llm::QWEN3_8B;
+use rollart::obs::{BubbleCause, TraceRecorder, PID_ENGINE_BASE};
+use rollart::sim::driver::{run, run_with_trace, PdScenario};
+use rollart::sim::{Mode, Scenario};
+use rollart::util::json::Json;
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+
+fn scenario(mode: Mode) -> Scenario {
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
+    s.mode = mode;
+    s.batch_size = 16;
+    s.group_size = 4;
+    s.iterations = 3;
+    s
+}
+
+/// The acceptance scenario: disaggregated PD (contended KV link) plus
+/// an event weight-dissemination strategy (per-engine cutovers).
+fn pd_weights_scenario() -> Scenario {
+    let mut s = scenario(Mode::RollArt);
+    s.alpha = 2;
+    s.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        kv_slots: 1,
+        ..PdScenario::xpyd(1, 1)
+    });
+    s.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+    s
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+// ---- zero-cost property ------------------------------------------------
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    for cfg in [
+        scenario(Mode::RollArt),
+        scenario(Mode::SyncPlus),
+        pd_weights_scenario(),
+    ] {
+        let plain = run(&cfg);
+        let mut rec = TraceRecorder::enabled();
+        let (traced, _) = run_with_trace(&cfg, &mut rec);
+        // Field-for-field: tracing must not perturb the simulation.
+        assert_eq!(plain, traced, "tracing changed the result");
+        assert!(!rec.is_empty(), "traced run recorded nothing");
+    }
+}
+
+#[test]
+fn trace_export_is_deterministic_across_runs() {
+    let cfg = pd_weights_scenario();
+    let export = |cfg: &Scenario| {
+        let mut rec = TraceRecorder::enabled();
+        let _ = run_with_trace(cfg, &mut rec);
+        rec.to_chrome_json()
+    };
+    let a = export(&cfg);
+    let b = export(&cfg);
+    assert_eq!(a, b, "same seed must export byte-identical traces");
+    // And the export is real JSON with the Chrome-trace envelope.
+    let j = Json::parse(&a).expect("trace JSON parses");
+    let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(events.len() > 100, "only {} events", events.len());
+    assert_eq!(j.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+}
+
+// ---- structural span invariants ----------------------------------------
+
+#[test]
+fn spans_are_well_formed_and_engine_steps_never_overlap() {
+    let cfg = pd_weights_scenario();
+    let mut rec = TraceRecorder::enabled();
+    let (r, _) = run_with_trace(&cfg, &mut rec);
+    let mut engine_steps: std::collections::BTreeMap<u64, Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
+    for e in rec.events() {
+        if e.ph == 'X' {
+            assert!(e.dur_s >= 0.0, "span {} has negative duration", e.name);
+            assert!(e.start_s >= 0.0, "span {} starts before t=0", e.name);
+            // Link grants are priced at admission, so a transfer still
+            // in flight at run end legitimately outlives the clock;
+            // every other span closes inside the run.
+            if e.cat != "link" {
+                assert!(
+                    e.start_s + e.dur_s <= r.total_time_s + 1e-6,
+                    "span {} ends after the run",
+                    e.name
+                );
+            }
+        }
+        if e.ph == 'X' && e.cat == "engine" && e.pid >= PID_ENGINE_BASE {
+            engine_steps
+                .entry(e.pid)
+                .or_default()
+                .push((e.start_s, e.start_s + e.dur_s));
+        }
+    }
+    assert!(!engine_steps.is_empty(), "no engine busy spans recorded");
+    for (pid, spans) in &mut engine_steps {
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1 - 1e-9,
+                "engine pid {pid}: busy spans overlap ({:?} then {:?})",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn event_driver_reports_des_self_profile() {
+    let r = run(&scenario(Mode::RollArt));
+    assert!(r.sim_events > 0, "event count not recorded");
+    assert!(r.peak_queue_depth > 0, "queue high-water mark not recorded");
+    assert!(
+        r.peak_queue_depth < r.sim_events,
+        "peak depth {} vs {} events dispatched",
+        r.peak_queue_depth,
+        r.sim_events
+    );
+}
+
+// ---- bubble attribution ------------------------------------------------
+
+#[test]
+fn bubble_causes_partition_measured_idle() {
+    for cfg in [scenario(Mode::RollArt), pd_weights_scenario()] {
+        let r = run(&cfg);
+        let b = &r.bubbles;
+        assert!(b.engine_idle_s > 0.0, "no idle observed: {b:?}");
+        assert!(b.windows > 0);
+        // The four causes partition the measured idle exactly — they
+        // are booked from the same window closes.
+        assert!(
+            (b.attributed_s() - b.engine_idle_s).abs() < 1e-6,
+            "attribution leak: {b:?}"
+        );
+        // Idle can never exceed fleet wall-clock.
+        let n: usize = cfg
+            .pd
+            .as_ref()
+            .map(|p| p.prefill_nodes + p.decode_nodes)
+            .unwrap_or_else(|| cfg.gen_pools.iter().map(|p| p.engines).sum());
+        assert!(
+            b.engine_idle_s <= r.total_time_s * n as f64 + 1e-6,
+            "idle {} over {} engine-seconds",
+            b.engine_idle_s,
+            r.total_time_s * n as f64
+        );
+    }
+}
+
+#[test]
+fn awaiting_weights_matches_the_weight_plane_within_1pct() {
+    let cfg = pd_weights_scenario();
+    let r = run(&cfg);
+    let booked = r.weights.min_awaiting_weights_s();
+    assert!(booked > 0.0, "no cutover windows booked: {:?}", r.weights);
+    assert!(
+        rel(r.bubbles.awaiting_weights_s, booked) < 0.01
+            || (r.bubbles.awaiting_weights_s - booked).abs() < 1e-6,
+        "bubble awaiting-weights {} vs weight-plane offline {}",
+        r.bubbles.awaiting_weights_s,
+        booked
+    );
+}
+
+#[test]
+fn kv_queue_booking_matches_the_link_within_1pct() {
+    let cfg = pd_weights_scenario();
+    let r = run(&cfg);
+    let link_total = r.kv_link.queue_delay_total_s;
+    assert!(
+        link_total > 0.0,
+        "1-slot KV link never queued: {:?}",
+        r.kv_link
+    );
+    assert!(
+        rel(r.bubbles.kv_queue_booked_s, link_total) < 0.01
+            || (r.bubbles.kv_queue_booked_s - link_total).abs() < 1e-6,
+        "booked KV queue delay {} vs link total {}",
+        r.bubbles.kv_queue_booked_s,
+        link_total
+    );
+}
+
+#[test]
+fn blocking_drain_books_at_least_the_exposed_window() {
+    // The default BlockingBroadcast drains the whole fleet: engines
+    // that went idle *before* the drain wait longer than the exposed
+    // window itself, so the measured bubble is a superset.
+    let cfg = scenario(Mode::RollArt);
+    let r = run(&cfg);
+    assert!(
+        r.bubbles.awaiting_weights_s >= r.weights.min_awaiting_weights_s() - 1e-6,
+        "bubble {} under the weight-plane floor {}",
+        r.bubbles.awaiting_weights_s,
+        r.weights.min_awaiting_weights_s()
+    );
+    // And some of the drain wait is actually attributed there.
+    assert!(
+        r.bubbles.fraction(BubbleCause::AwaitingWeights) > 0.0,
+        "{:?}",
+        r.bubbles
+    );
+}
+
+// ---- committed perf baseline -------------------------------------------
+
+#[test]
+fn committed_bench_baseline_is_valid() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("BENCH_6.json must be committed at the repo root: {e}"));
+    let j = Json::parse(&text).expect("BENCH_6.json parses");
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("perf_baseline"));
+    assert!(j.get("quick").and_then(Json::as_bool).is_some());
+    let scenarios = j
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .expect("scenarios array");
+    assert!(
+        scenarios.len() >= 4,
+        "need the 4 standard scenarios, found {}",
+        scenarios.len()
+    );
+    let mut names = Vec::new();
+    for s in scenarios {
+        let name = s.get("name").and_then(Json::as_str).expect("name");
+        names.push(name.to_string());
+        for key in [
+            "sim_events",
+            "wall_s",
+            "events_per_s",
+            "peak_queue_depth",
+            "sim_time_s",
+            "steps",
+        ] {
+            let v = s
+                .get(key)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("{name}: missing numeric field {key}"));
+            assert!(v >= 0.0, "{name}: {key} = {v}");
+        }
+        assert!(
+            s.get("sim_events").unwrap().as_f64().unwrap() > 0.0,
+            "{name}: zero events"
+        );
+    }
+    for expect in ["rollart", "syncplus", "pd", "pd-weights"] {
+        assert!(
+            names.iter().any(|n| n == expect),
+            "standard scenario {expect} missing from {names:?}"
+        );
+    }
+}
