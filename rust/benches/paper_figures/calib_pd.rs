@@ -24,6 +24,7 @@ use rollart::llm::QWEN3_8B;
 use rollart::metrics::CsvWriter;
 use rollart::sim::driver::PdScenario;
 use rollart::sim::{driver, Scenario};
+use rollart::simkit::par::par_map;
 
 pub fn run() {
     banner(
@@ -48,6 +49,9 @@ pub fn run() {
     );
     let waits: &[f64] = if quick_mode() { &[30.0] } else { &[10.0, 30.0, 90.0] };
     let backlogs: &[f64] = if quick_mode() { &[1.0] } else { &[0.5, 1.0, 2.0] };
+    // The threshold grid points are independent replications: fan them
+    // across cores, emit serially in grid order (byte-identical CSV).
+    let mut points = Vec::new();
     for &wait in waits {
         for &backlog_x in backlogs {
             let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
@@ -60,8 +64,15 @@ pub fn run() {
             pol.prefill_wait_per_engine_s = wait;
             pol.decode_backlog_per_engine *= backlog_x;
             s.pd_elastic = Some(pol);
-            let s = quick(s, 5);
-            let r = driver::run(&s);
+            points.push(quick(s, 5));
+        }
+    }
+    let results = par_map(&points, driver::run);
+    let mut idx = 0;
+    for &wait in waits {
+        for &backlog_x in backlogs {
+            let r = &results[idx];
+            idx += 1;
             let e = &r.elastic;
             let prefill_resizes = e.prefill_scale_ups + e.prefill_scale_downs;
             let decode_resizes = e.decode_scale_ups + e.decode_scale_downs;

@@ -36,6 +36,7 @@ use crate::support::*;
 use rollart::llm::{QWEN3_14B, QWEN3_32B, QWEN3_8B};
 use rollart::metrics::CsvWriter;
 use rollart::sim::{driver, Scenario};
+use rollart::simkit::par::par_map;
 use rollart::weights::{SyncStrategyKind, WeightsScenario};
 
 const STRATEGIES: [SyncStrategyKind; 5] = [
@@ -90,16 +91,30 @@ pub fn run() {
         vec![&QWEN3_8B, &QWEN3_14B, &QWEN3_32B]
     };
     let alphas: &[u64] = if quick_mode() { &[1] } else { &[1, 4] };
-    for spec in models {
+    // model × α × strategy replications are independent: fan across
+    // cores, then walk the results serially in sweep order so the
+    // ordering-sensitive asserts (blocking runs first) and the CSV
+    // stay byte-identical to a serial run.
+    let mut points = Vec::new();
+    for spec in &models {
         for &alpha in alphas {
-            let mut exposed_blocking = None;
             for kind in STRATEGIES {
                 let mut s: Scenario =
                     quick(Scenario::rollart_default((*spec).clone(), SCALE), 4);
                 s.alpha = alpha;
                 s.weights = WeightsScenario::with_strategy(kind);
-                let r = driver::run(&s);
-                let exposed = exposed_sync_s(&r);
+                points.push(s);
+            }
+        }
+    }
+    let results = par_map(&points, driver::run);
+    let mut next = results.iter();
+    for spec in &models {
+        for &alpha in alphas {
+            let mut exposed_blocking = None;
+            for kind in STRATEGIES {
+                let r = next.next().expect("one result per sweep point");
+                let exposed = exposed_sync_s(r);
                 let w = &r.weights;
                 row(
                     &format!("{} α={alpha} {}", spec.name, kind.name()),
@@ -190,13 +205,25 @@ fn bucket_sweep() {
             "push_gate_s",
         ],
     );
+    let gbs = [0.25, 0.5, 1.0, 2.0];
+    let points: Vec<Scenario> = gbs
+        .iter()
+        .map(|&gb| {
+            let mut s: Scenario = quick(Scenario::rollart_default(QWEN3_8B.clone(), SCALE), 4);
+            s.weights =
+                WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 2 });
+            s.weights.mooncake.bucket_bytes = gb * GB;
+            s
+        })
+        .collect();
+    // Independent replications in parallel; the monotonicity assert
+    // walks the ordered results serially.
+    let results = par_map(&points, driver::run);
     let mut last_exposed = f64::INFINITY;
-    for gb in [0.25, 0.5, 1.0, 2.0] {
-        let mut s: Scenario = quick(Scenario::rollart_default(QWEN3_8B.clone(), SCALE), 4);
-        s.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 2 });
-        s.weights.mooncake.bucket_bytes = gb * GB;
+    for (i, &gb) in gbs.iter().enumerate() {
+        let s = &points[i];
         let n = s.weights.mooncake.bucket_count(s.model.weight_bytes());
-        let r = driver::run(&s);
+        let r = &results[i];
         let b = r.weights.buckets;
         assert!(b.cutovers > 0, "bucket {gb} GB: no cutovers observed");
         assert!(b.bucket_transfers >= b.engine_pulls, "{b:?}");

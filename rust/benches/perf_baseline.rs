@@ -1,15 +1,32 @@
 //! DES self-profiling baseline: events/sec, wall-clock and peak event-
-//! queue depth per standard scenario, committed as `BENCH_6.json` at
+//! queue depth per standard scenario, committed as `BENCH_7.json` at
 //! the repository root so perf regressions in the simulator core show
 //! up as a diff instead of a vague feeling.
 //!
-//! Two sizes:
+//! `BENCH_N.json` is a *trajectory*, not a file that gets edited: each
+//! perf-changing PR commits a new `BENCH_{N+1}.json` next to its
+//! predecessor and records the per-scenario gain against the previous
+//! file (see docs/OBSERVABILITY.md).  This revision measures the DES
+//! performance plane — calendar-queue scheduling plus the
+//! allocation-free driver hot path — against the `BENCH_6.json`
+//! binary-heap/BTreeMap baseline, and adds a wall-clock row for an
+//! 8-way parallel replication sweep (`simkit::par`).
+//!
+//! Three run modes:
 //!
 //! * **full** (default) — paper-ish scale 0.25, 6 iterations; the
 //!   numbers worth eyeballing across machines.
 //! * **quick** (`ROLLART_BENCH_QUICK=1`) — scale 0.06, 3 iterations;
 //!   what CI runs on every push to regenerate and schema-check the
 //!   file in seconds.
+//! * **gate** (`ROLLART_BENCH_GATE=1`, implies quick) — the CI perf-
+//!   regression gate: runs quick, writes the fresh numbers to
+//!   `target/bench-results/BENCH_current.json` (uploaded as an
+//!   artifact, the committed file is left untouched) and **fails** if
+//!   any standard scenario's events/sec drops below 0.75× the
+//!   committed `BENCH_7.json`.  Wall-clock on shared CI runners is
+//!   noisy; 25% headroom trips on real regressions (an accidental
+//!   O(log n) or a reintroduced per-event allocation), not on noise.
 //!
 //! The committed file is validated by `tests/obs_plane.rs`
 //! (`committed_bench_baseline_is_valid`): present, parseable, all four
@@ -23,9 +40,19 @@
 use rollart::llm::QWEN3_8B;
 use rollart::obs::TraceRecorder;
 use rollart::sim::driver::{run_with_trace, PdScenario};
-use rollart::sim::{Mode, Scenario, ScenarioResult};
+use rollart::sim::{driver, Mode, Scenario, ScenarioResult};
+use rollart::simkit::par::par_map_with;
+use rollart::util::json::Json;
 use rollart::weights::{SyncStrategyKind, WeightsScenario};
 use std::time::Instant;
+
+/// The predecessor baseline this PR's gain column is measured against.
+const PREV_BASELINE: &str = "BENCH_6.json";
+/// The baseline this revision commits (and the CI gate compares to).
+const THIS_BASELINE: &str = "BENCH_7.json";
+/// CI gate: fail when events/sec falls below this fraction of the
+/// committed baseline.
+const GATE_FLOOR: f64 = 0.75;
 
 struct Arm {
     name: &'static str,
@@ -92,18 +119,95 @@ fn num(v: f64) -> String {
     }
 }
 
-fn main() {
-    let quick = std::env::var("ROLLART_BENCH_QUICK").is_ok();
+/// events/sec per scenario name from a committed `BENCH_N.json`, or
+/// `None` when the file is absent/unreadable (first run on a fresh
+/// checkout must still work).
+fn committed_eps(path: &str) -> Option<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let mut out = Vec::new();
+    for s in j.get("scenarios")?.as_arr()? {
+        out.push((
+            s.get("name")?.as_str()?.to_string(),
+            s.get("events_per_s")?.as_f64()?,
+        ));
+    }
+    Some(out)
+}
+
+fn lookup(table: &Option<Vec<(String, f64)>>, name: &str) -> Option<f64> {
+    table
+        .as_ref()?
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+}
+
+/// The 8-way parallel replication row: the same quick RollArt scenario
+/// at 8 seeds, run serially then with 8 workers.  The per-point
+/// results must match element-for-element — `simkit::par` collects in
+/// input order — before the wall-clock comparison means anything.
+fn parallel_sweep_row(quick: bool) -> String {
+    const POINTS: usize = 8;
+    let (scale, iters) = if quick { (0.06, 2) } else { (0.25, 4) };
+    let sweep: Vec<Scenario> = (0..POINTS as u64)
+        .map(|seed| {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), scale);
+            s.iterations = iters;
+            if quick {
+                s.batch_size = 16;
+                s.group_size = 4;
+            }
+            s.seed = 1000 + seed;
+            s
+        })
+        .collect();
+    let t0 = Instant::now();
+    let serial: Vec<ScenarioResult> = par_map_with(1, &sweep, driver::run);
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let parallel: Vec<ScenarioResult> = par_map_with(POINTS, &sweep, driver::run);
+    let parallel_wall = t1.elapsed().as_secs_f64();
+    assert_eq!(serial, parallel, "parallel sweep diverged from serial");
+    let speedup = serial_wall / parallel_wall.max(1e-9);
     println!(
-        "perf_baseline ({}) — DES self-profile per standard scenario",
-        if quick { "quick" } else { "full" }
+        "{:<12} {:>12} {:>10.3} {:>14} {:>12} {:>12}",
+        "par-sweep-8",
+        format!("{}pt", POINTS),
+        parallel_wall,
+        format!("{speedup:.2}x"),
+        "-",
+        "-"
+    );
+    format!(
+        concat!(
+            "  \"parallel_sweep\": {{\"points\": {}, \"threads\": {}, ",
+            "\"serial_wall_s\": {:.4}, \"parallel_wall_s\": {:.4}, ",
+            "\"speedup\": {:.3}}}"
+        ),
+        POINTS, POINTS, serial_wall, parallel_wall, speedup
+    )
+}
+
+fn main() {
+    let gate = std::env::var("ROLLART_BENCH_GATE").is_ok();
+    let quick = gate || std::env::var("ROLLART_BENCH_QUICK").is_ok();
+    println!(
+        "perf_baseline ({}{}) — DES self-profile per standard scenario",
+        if quick { "quick" } else { "full" },
+        if gate { ", gate" } else { "" }
     );
     println!(
         "{:<12} {:>12} {:>10} {:>14} {:>12} {:>12}",
         "scenario", "sim_events", "wall_s", "events/s", "peak_queue", "sim_time_s"
     );
 
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    let prev = committed_eps(&format!("{root}/{PREV_BASELINE}"));
+    let committed = committed_eps(&format!("{root}/{THIS_BASELINE}"));
+
     let mut rows = Vec::new();
+    let mut regressions = Vec::new();
     for arm in arms(quick) {
         let mut rec = if arm.trace {
             TraceRecorder::enabled()
@@ -128,11 +232,32 @@ fn main() {
                 rec.len()
             );
         }
+        // Gain vs the previous committed baseline (the before/after
+        // column this PR exists to move).
+        let (base_eps, gain) = match lookup(&prev, arm.name) {
+            Some(b) if b > 0.0 => (b, eps / b),
+            _ => (0.0, 0.0),
+        };
+        if gain > 0.0 {
+            println!("  vs {PREV_BASELINE}: {gain:.2}x ({base_eps:.0} -> {eps:.0} ev/s)");
+        }
+        // CI gate: compare against the *committed* current baseline.
+        if gate {
+            if let Some(c) = lookup(&committed, arm.name) {
+                if eps < c * GATE_FLOOR {
+                    regressions.push(format!(
+                        "{}: {eps:.0} ev/s < {GATE_FLOOR} x committed {c:.0}",
+                        arm.name
+                    ));
+                }
+            }
+        }
         rows.push(format!(
             concat!(
                 "    {{\"name\": \"{}\", \"sim_events\": {}, \"wall_s\": {:.4}, ",
                 "\"events_per_s\": {:.0}, \"peak_queue_depth\": {}, ",
-                "\"sim_time_s\": {}, \"steps\": {}}}"
+                "\"sim_time_s\": {}, \"steps\": {}, ",
+                "\"baseline_events_per_s\": {:.0}, \"gain\": {:.3}}}"
             ),
             arm.name,
             r.sim_events,
@@ -140,17 +265,45 @@ fn main() {
             eps,
             r.peak_queue_depth,
             num(r.total_time_s),
-            r.steps.len()
+            r.steps.len(),
+            base_eps,
+            gain
         ));
     }
 
+    let sweep = parallel_sweep_row(quick);
+
     let json = format!(
-        "{{\n  \"bench\": \"perf_baseline\",\n  \"quick\": {},\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        concat!(
+            "{{\n  \"bench\": \"perf_baseline\",\n  \"quick\": {},\n",
+            "  \"baseline\": \"{}\",\n  \"scenarios\": [\n{}\n  ],\n{}\n}}\n"
+        ),
         quick,
-        rows.join(",\n")
+        PREV_BASELINE,
+        rows.join(",\n"),
+        sweep
     );
-    // The committed baseline lives at the repo root, next to ROADMAP.md.
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
-    std::fs::write(path, &json).expect("write BENCH_6.json");
-    println!("wrote {path}");
+    if gate {
+        // The gate never rewrites the committed baseline: fresh numbers
+        // go to the bench-results artifact dir for upload.
+        let dir = std::path::Path::new("target").join("bench-results");
+        std::fs::create_dir_all(&dir).expect("create bench-results dir");
+        let path = dir.join("BENCH_current.json");
+        std::fs::write(&path, &json).expect("write BENCH_current.json");
+        println!("wrote {}", path.display());
+        if !regressions.is_empty() {
+            eprintln!("perf gate FAILED:");
+            for r in &regressions {
+                eprintln!("  {r}");
+            }
+            std::process::exit(1);
+        }
+        println!("perf gate passed (floor {GATE_FLOOR}x committed {THIS_BASELINE})");
+    } else {
+        // The committed baseline lives at the repo root, next to
+        // ROADMAP.md, alongside its predecessors (BENCH_6.json, ...).
+        let path = format!("{root}/{THIS_BASELINE}");
+        std::fs::write(&path, &json).expect("write BENCH_7.json");
+        println!("wrote {path}");
+    }
 }

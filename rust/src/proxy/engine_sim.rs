@@ -270,17 +270,20 @@ impl EngineSim {
 
         // Decode: advance every active request by up to `decode_chunk`
         // tokens (bounded by the smallest remaining budget so that
-        // completions stay step-accurate).
-        let min_remaining = self
-            .active
-            .iter()
-            .map(|a| a.req.decode_budget - a.decoded)
-            .fold(f64::INFINITY, f64::min)
-            .max(1.0);
+        // completions stay step-accurate).  Single pass over the batch
+        // computes both the chunk bound and the context sum — this runs
+        // once per decode event, the hottest loop in the DES.
+        let mut min_remaining = f64::INFINITY;
+        let mut ctx_sum = 0.0;
+        for a in &self.active {
+            min_remaining = min_remaining.min(a.req.decode_budget - a.decoded);
+            ctx_sum += a.ctx;
+        }
+        let min_remaining = min_remaining.max(1.0);
         let chunk = min_remaining.min(self.decode_chunk).floor().max(1.0);
 
         let batch = self.active.len() as f64;
-        let mean_ctx = self.active.iter().map(|a| a.ctx).sum::<f64>() / batch;
+        let mean_ctx = ctx_sum / batch;
         let cost = self.model.decode_cost(batch, mean_ctx).scale(chunk);
         let elapsed = phase_time(&cost, self.class.spec(), self.gpus)
             .max(chunk * DECODE_STEP_FLOOR_S)

@@ -48,10 +48,24 @@ pub struct LlmProxy {
     dispatched: BTreeMap<TaskDomain, u64>,
     /// The dispatch discipline (see [`route`]).
     policy: Box<dyn RoutePolicy>,
+    /// Maintained live (not-down) count — [`LlmProxy::live_engines`] is
+    /// read on every dispatch and must not scan the fleet.  Kept
+    /// coherent by routing all up/down flips through
+    /// [`LlmProxy::set_down`].
+    live: usize,
+    /// Engine indices per GPU class (engines are never removed, only
+    /// marked down/retired, so these only grow).  The PD class-pinned
+    /// dispatch iterates one pool's members instead of the whole fleet.
+    class_members: BTreeMap<GpuClass, Vec<usize>>,
 }
 
 impl LlmProxy {
     pub fn new(engines: Vec<EngineSim>) -> Self {
+        let live = engines.iter().filter(|e| !e.is_down()).count();
+        let mut class_members: BTreeMap<GpuClass, Vec<usize>> = BTreeMap::new();
+        for (i, e) in engines.iter().enumerate() {
+            class_members.entry(e.class).or_default().push(i);
+        }
         LlmProxy {
             engines,
             affinity: BTreeMap::new(),
@@ -59,6 +73,8 @@ impl LlmProxy {
             suspended: false,
             dispatched: BTreeMap::new(),
             policy: RouteKind::Affinity.make(),
+            live,
+            class_members,
         }
     }
 
@@ -101,13 +117,37 @@ impl LlmProxy {
         if self.suspended {
             engine.suspend();
         }
+        let idx = self.engines.len();
+        self.class_members.entry(engine.class).or_default().push(idx);
+        if !engine.is_down() {
+            self.live += 1;
+        }
         self.engines.push(engine);
-        self.engines.len() - 1
+        idx
     }
 
-    /// Live (not-down) engine count.
+    /// Live (not-down) engine count (maintained, not scanned).
     pub fn live_engines(&self) -> usize {
-        self.engines.iter().filter(|e| !e.is_down()).count()
+        debug_assert_eq!(
+            self.live,
+            self.engines.iter().filter(|e| !e.is_down()).count(),
+            "live-engine count drifted: an up/down flip bypassed LlmProxy::set_down"
+        );
+        self.live
+    }
+
+    /// Flip engine `idx` up/down, keeping the live count coherent.
+    /// All fault/elastic up-down transitions must come through here —
+    /// flipping `EngineSim::set_down` directly through `engines_mut`
+    /// would leave [`LlmProxy::live_engines`] stale.
+    pub fn set_down(&mut self, idx: usize, down: bool) {
+        let was_down = self.engines[idx].is_down();
+        self.engines[idx].set_down(down);
+        match (was_down, down) {
+            (false, true) => self.live -= 1,
+            (true, false) => self.live += 1,
+            _ => {}
+        }
     }
 
     pub fn is_suspended(&self) -> bool {
@@ -152,13 +192,13 @@ impl LlmProxy {
         }
         // Per-engine suspend (weight plane): a pool member mid-swap is
         // skipped like a down one — the caller holds when the whole
-        // pool is refreshing.
-        let idx = (0..self.engines.len())
-            .filter(|&i| {
-                !self.engines[i].is_down()
-                    && !self.engines[i].is_suspended()
-                    && self.engines[i].class == class
-            })
+        // pool is refreshing.  Only the class's own members are
+        // scanned (maintained index list, not the whole fleet).
+        let members = self.class_members.get(&class).map(Vec::as_slice).unwrap_or(&[]);
+        let idx = members
+            .iter()
+            .copied()
+            .filter(|&i| !self.engines[i].is_down() && !self.engines[i].is_suspended())
             .min_by_key(|&i| self.engines[i].load())?;
         *self.dispatched.entry(req.domain).or_insert(0) += 1;
         self.engines[idx].enqueue(req);
@@ -285,13 +325,13 @@ mod tests {
         let mut p = proxy();
         // Kill both H20 engines: default-class traffic must spill to
         // the H800 survivor instead of landing on a corpse.
-        p.engines_mut()[1].set_down(true);
-        p.engines_mut()[2].set_down(true);
+        p.set_down(1, true);
+        p.set_down(2, true);
         assert_eq!(p.live_engines(), 1);
         let idx = p.add(req(1, TaskDomain::MathTool)).unwrap();
         assert_eq!(p.engines()[idx].class, GpuClass::H800);
         // Whole fleet down: no routing target at all.
-        p.engines_mut()[0].set_down(true);
+        p.set_down(0, true);
         assert!(p.route(TaskDomain::MathTool).is_none());
     }
 
@@ -321,7 +361,7 @@ mod tests {
         // Not merely *missing*: the declared class exists but every
         // member is dead.  Work must spill to a live survivor.
         let mut p = proxy();
-        p.engines_mut()[0].set_down(true); // the only H800
+        p.set_down(0, true); // the only H800
         let idx = p.add(req(1, TaskDomain::Game)).unwrap();
         assert_eq!(p.engines()[idx].class, GpuClass::H20);
     }
@@ -372,7 +412,7 @@ mod tests {
             .unwrap();
         assert_eq!(p.engines()[idx].class, GpuClass::H800);
         // Class fully down → no fallback, the caller must hold.
-        p.engines_mut()[idx].set_down(true);
+        p.set_down(idx, true);
         assert!(p
             .add_to_class(req(2, TaskDomain::MathTool), GpuClass::H800)
             .is_none());
@@ -393,6 +433,25 @@ mod tests {
             .add_to_class(req(2, TaskDomain::Web), GpuClass::H20)
             .unwrap();
         assert_ne!(a, b, "second pinned request must go to the other H20");
+    }
+
+    #[test]
+    fn live_count_tracks_flips_and_scaleups() {
+        let mut p = proxy();
+        assert_eq!(p.live_engines(), 3);
+        p.set_down(1, true);
+        p.set_down(1, true); // idempotent: no double-decrement
+        assert_eq!(p.live_engines(), 2);
+        p.set_down(1, false);
+        assert_eq!(p.live_engines(), 3);
+        // A scale-up joins live; its class list routes to it.
+        let idx = p.add_engine(EngineSim::new(9, GpuClass::H800, 2, QWEN3_8B.clone(), 32));
+        assert_eq!(p.live_engines(), 4);
+        p.set_down(0, true); // the original H800
+        let e = p
+            .add_to_class(req(1, TaskDomain::Game), GpuClass::H800)
+            .unwrap();
+        assert_eq!(e, idx, "pinned dispatch must find the new class member");
     }
 
     #[test]

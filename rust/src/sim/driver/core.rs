@@ -67,6 +67,13 @@ use crate::simkit::{EventQueue, SimRng, SimTime};
 use crate::weights::{bucketized_pull, AdaptDecision, FleetView, SyncStrategy, WeightSyncReport};
 use std::collections::BTreeMap;
 
+// Hot-path storage note: everything keyed by trajectory slot
+// (`TrajectoryId.0` == the `mgrs` index) or by dense group id lives in
+// plain `Vec`s — the per-event `BTreeMap` lookups this file used to do
+// were the driver's dominant cost after the calendar queue landed
+// (docs/ARCHITECTURE.md, "DES performance plane").  `BTreeMap` remains
+// only for genuinely sparse, cold keys (`pending_provisions`).
+
 /// Safety horizon: a mis-configured chaos scenario (e.g. a permanent
 /// whole-fleet outage with no elastic replacement) must terminate, not
 /// spin on fault events forever.  Only checked when faults are active.
@@ -87,6 +94,11 @@ enum Ev {
     EngineCrashed { engine: usize },
     /// A crashed engine finished recovering.
     EngineRecovered { engine: usize },
+    /// A crashed engine finished rebooting (the analytic
+    /// `engine_recovery_s`): admit its weight *reload* on the contended
+    /// link now — recovery traffic queues like elastic warm-ups do —
+    /// then rejoin via [`Ev::EngineRecovered`].
+    RecoveryPull { engine: usize },
     /// Deterministic chaos event `cfg.fault.scheduled[idx]` fires.
     Scheduled { idx: usize },
     /// An elastic scale-up finished warming: an engine of `class`
@@ -192,7 +204,11 @@ struct PdState {
     /// `weights.share_kv_link` the weight plane's per-engine pulls ride
     /// (and contend on) the same slots.
     shared: SharedLink,
-    pending: BTreeMap<TrajectoryId, PdPending>,
+    /// Slab of in-flight split requests, indexed by trajectory slot
+    /// (`TrajectoryId.0` — also the driver's `mgrs` index): a direct
+    /// index instead of a per-event tree walk.  `None` = no split
+    /// request in flight for that slot.
+    pending: Vec<Option<PdPending>>,
 }
 
 struct DriverCore<'a> {
@@ -226,8 +242,9 @@ struct DriverCore<'a> {
     engine_inflight_done: Vec<Vec<TrajectoryId>>,
     /// Per-engine count of MTBF failures drawn so far (stream index).
     engine_fail_nth: Vec<u64>,
-    /// Crash time of currently-down engines (recovery-latency metric).
-    down_since: BTreeMap<usize, f64>,
+    /// Crash time of currently-down engines (recovery-latency metric);
+    /// `None` while up.
+    down_since: Vec<Option<f64>>,
     /// Alive-time accounting for utilization under churn.
     engine_up_since: Vec<Option<f64>>,
     engine_alive_s: Vec<f64>,
@@ -265,10 +282,16 @@ struct DriverCore<'a> {
     acc_requeued: u64,
     // -------------------------------------------------------------
     groups: GroupTracker,
-    /// Completed trajectories awaiting their group to fill.
-    staged: BTreeMap<u64, Vec<crate::rl::Trajectory>>,
-    /// Group → task domain (for replacement launches).
-    group_domain: BTreeMap<u64, TaskDomain>,
+    /// Completed trajectories awaiting their group to fill, indexed by
+    /// group id (group ids are dense: `0..next_group`).
+    staged: Vec<Vec<crate::rl::Trajectory>>,
+    /// Group → task domain (for replacement launches), same dense
+    /// group-id index as `staged`.
+    group_domain: Vec<TaskDomain>,
+    /// Maintained count of non-terminal trajectories (the old
+    /// `mgrs.iter().filter(!terminal)` scan ran on every refill /
+    /// counter sample and went quadratic with trajectory churn).
+    active_count: usize,
     buffer: SampleBuffer,
     store: MooncakeStore,
     serverless: ServerlessPlatform,
@@ -283,6 +306,12 @@ struct DriverCore<'a> {
     /// rolling / lazy / overlapped strategies; the blocking baseline
     /// keeps it uniform (flipped fleet-wide at `SyncDone`).
     engine_version: Vec<Version>,
+    /// Cached [`DriverCore::gen_version`]: the admission gate reads it
+    /// on every turn, but its inputs (`engine_version`, `engine_down`,
+    /// `version`) only change at rare fleet-mutation events — so it is
+    /// recomputed there ([`DriverCore::recompute_gen_version`]) instead
+    /// of scanning the fleet per admission.
+    gen_version_cache: Version,
     /// The scenario's dissemination discipline (see [`crate::weights`]).
     wstrategy: Box<dyn SyncStrategy>,
     /// Trainer-side fan-out link the per-engine pulls contend on
@@ -302,7 +331,10 @@ struct DriverCore<'a> {
     wreport: WeightSyncReport,
     /// PD prefix-reuse: per-trajectory completion time of the reverse
     /// (decode→prefill) KV hop the next turn's prefill must wait for.
-    pd_reverse_ready: BTreeMap<usize, f64>,
+    /// Indexed by trajectory slot; `0.0` is the "nothing pending"
+    /// sentinel — `(0.0 - now).max(0.0) == 0.0`, exactly the absent
+    /// case, so no `Option` wrapper is needed on the hot path.
+    pd_reverse_ready: Vec<f64>,
     // -------------------------------------------------------------
     // trainer state
     trainer_busy: bool,
@@ -509,7 +541,7 @@ impl<'a> DriverCore<'a> {
         let mut pd = cfg.pd.as_ref().filter(|p| p.disaggregated).map(|p| PdState {
             cfg: p.clone(),
             shared: shared_kv_link(p),
-            pending: BTreeMap::new(),
+            pending: Vec::new(),
         });
         let mut wlink = SharedLink::new(cfg.weights.fanout_link(), cfg.weights.fanout_slots);
         if rec.is_enabled() {
@@ -539,7 +571,7 @@ impl<'a> DriverCore<'a> {
             engine_epoch: vec![0; n_engines],
             engine_inflight_done: vec![Vec::new(); n_engines],
             engine_fail_nth: vec![0; n_engines],
-            down_since: BTreeMap::new(),
+            down_since: vec![None; n_engines],
             engine_up_since: vec![Some(0.0); n_engines],
             engine_alive_s: vec![0.0; n_engines],
             scaler,
@@ -554,6 +586,7 @@ impl<'a> DriverCore<'a> {
             pending_provisions: BTreeMap::new(),
             env_target,
             engine_version: vec![Version(0); n_engines],
+            gen_version_cache: Version(0),
             wstrategy: cfg.weights.strategy.make(),
             wlink,
             wsync: vec![EngineSync::Idle; n_engines],
@@ -561,13 +594,14 @@ impl<'a> DriverCore<'a> {
             wdissem_started: None,
             wpush_plan: None,
             wreport: WeightSyncReport::default(),
-            pd_reverse_ready: BTreeMap::new(),
+            pd_reverse_ready: Vec::new(),
             initial_engines: n_engines,
             acc_engine_failures: 0,
             acc_requeued: 0,
             groups: GroupTracker::new(),
-            staged: BTreeMap::new(),
-            group_domain: BTreeMap::new(),
+            active_count: 0,
+            staged: Vec::new(),
+            group_domain: Vec::new(),
             buffer,
             // Both weight paths — the blocking drain's analytic sync
             // and the event strategies' bucketized pulls — price
@@ -738,7 +772,7 @@ impl<'a> DriverCore<'a> {
         }
         if edge.to == TrajPhase::Aborted {
             if let Some(pd) = self.pd.as_mut() {
-                if let Some(entry) = pd.pending.remove(&TrajectoryId(mgr as u64)) {
+                if let Some(entry) = pd.pending.get_mut(mgr).and_then(Option::take) {
                     if entry.phase == PdPhase::Transfer {
                         // Aborted mid-hop: the admitted transfer still
                         // occupies (and completes on) the link, and the
@@ -776,12 +810,30 @@ impl<'a> DriverCore<'a> {
     /// version at every admission point; under rolling/lazy
     /// dissemination it leads the laggards.  Falls back to the
     /// trainer-side version when the whole fleet is down (chaos).
+    ///
+    /// Read per admitted turn, so the fleet scan is cached and
+    /// recomputed only at the events that can change it (crash, retire,
+    /// revive, sync completion, provisioning, trainer version bump) —
+    /// every such site calls [`DriverCore::recompute_gen_version`].
     fn gen_version(&self) -> Version {
-        (0..self.engine_version.len())
+        debug_assert_eq!(
+            self.gen_version_cache,
+            (0..self.engine_version.len())
+                .filter(|&i| !self.engine_down[i])
+                .map(|i| self.engine_version[i])
+                .max()
+                .unwrap_or(self.version),
+            "stale gen_version cache: a fleet mutation missed its recompute"
+        );
+        self.gen_version_cache
+    }
+
+    fn recompute_gen_version(&mut self) {
+        self.gen_version_cache = (0..self.engine_version.len())
             .filter(|&i| !self.engine_down[i])
             .map(|i| self.engine_version[i])
             .max()
-            .unwrap_or(self.version)
+            .unwrap_or(self.version);
     }
 
     /// A freshly trained version starts disseminating (event-driven
@@ -941,6 +993,7 @@ impl<'a> DriverCore<'a> {
         }
         self.wsync[e] = EngineSync::Idle;
         self.engine_version[e] = self.wsync_version[e];
+        self.recompute_gen_version();
         self.wreport.engine_syncs += 1;
         if self.rec.is_enabled() {
             let t0 = self.cutover_since[e];
@@ -989,9 +1042,16 @@ impl<'a> DriverCore<'a> {
 
     // -----------------------------------------------------------------
 
-    /// Active (non-terminal) trajectory count.
+    /// Active (non-terminal) trajectory count (maintained, not
+    /// scanned: spawn sites increment, the terminal edges — abort and
+    /// completion — decrement).
     fn active(&self) -> usize {
-        self.mgrs.iter().filter(|m| !m.is_terminal()).count()
+        debug_assert_eq!(
+            self.active_count,
+            self.mgrs.iter().filter(|m| !m.is_terminal()).count(),
+            "active-trajectory count drifted from the mgr slab"
+        );
+        self.active_count
     }
 
     /// Launch one GRPO group (G + redundancy members).
@@ -1001,7 +1061,10 @@ impl<'a> DriverCore<'a> {
         let members = self.cfg.group_size + self.policy.group_redundancy(self.cfg);
         self.groups.add_group(g, self.cfg.group_size);
         let domain = *self.rng.choose(&self.cfg.task_mix);
-        self.group_domain.insert(g, domain);
+        // Group ids are dense — the per-group tables are plain Vecs.
+        debug_assert_eq!(self.group_domain.len() as u64, g);
+        self.group_domain.push(domain);
+        self.staged.push(Vec::new());
         let profile = DomainProfile::of(domain);
         for _ in 0..members {
             let idx = self.mgrs.len();
@@ -1009,6 +1072,7 @@ impl<'a> DriverCore<'a> {
             let shape = profile.sample_trajectory(&mut self.rng);
             let m = EnvManagerSim::new(id, shape, self.gen_version(), g, self.now());
             self.mgrs.push(m);
+            self.active_count += 1;
             let li = self.lifecycle.spawn_at(self.now());
             debug_assert_eq!(li, idx);
             self.groups.launch(g, id);
@@ -1149,15 +1213,19 @@ impl<'a> DriverCore<'a> {
         let mgr = tid.0 as usize;
         let (half, class, phase) = {
             let pd = self.pd.as_mut().expect("pd dispatch without pd state");
-            let entry = pd.pending.entry(tid).or_insert_with(|| {
+            if pd.pending.len() <= mgr {
+                pd.pending.resize_with(mgr + 1, || None);
+            }
+            if pd.pending[mgr].is_none() {
                 let (prefill, decode) = split_request(&req);
-                PdPending {
+                pd.pending[mgr] = Some(PdPending {
                     phase: PdPhase::Prefill,
                     prefill,
                     decode,
                     hop_s: 0.0,
-                }
-            });
+                });
+            }
+            let entry = pd.pending[mgr].as_mut().expect("slot filled above");
             match entry.phase {
                 PdPhase::Prefill => (
                     entry.prefill.clone(),
@@ -1204,7 +1272,11 @@ impl<'a> DriverCore<'a> {
             self.engine_busy[e] = true;
             self.idle_close(e);
             self.busy_since[e] = self.now();
-            self.engine_inflight_done[e] = completed.iter().map(|(t, _)| *t).collect();
+            // Reuse the per-engine scratch buffer instead of collecting
+            // a fresh Vec on every busy step.
+            let buf = &mut self.engine_inflight_done[e];
+            buf.clear();
+            buf.extend(completed.iter().map(|(t, _)| *t));
             let epoch = self.engine_epoch[e];
             self.q.schedule_in(
                 elapsed,
@@ -1260,11 +1332,11 @@ impl<'a> DriverCore<'a> {
                 // until this turn's reverse (decode→prefill) KV hop
                 // lands back home — fold any residual transfer time
                 // into the env-interaction wait.
-                let reverse_gap = self
-                    .pd_reverse_ready
-                    .remove(&mgr)
-                    .map(|t| (t - self.now()).max(0.0))
-                    .unwrap_or(0.0);
+                let now = self.now();
+                let reverse_gap = match self.pd_reverse_ready.get_mut(mgr) {
+                    Some(t) => (std::mem::replace(t, 0.0) - now).max(0.0),
+                    None => 0.0,
+                };
                 // Fault plane: this step may kill its env worker.  The
                 // crash is detected after the health-check delay and
                 // recovered at trajectory level (group backfill).
@@ -1282,6 +1354,9 @@ impl<'a> DriverCore<'a> {
                 self.q.schedule_in(lat, Ev::EnvStepDone { mgr });
             }
             EnvAction::Complete => {
+                // The mgr just went `Done` (terminal) — the only place
+                // `Complete` is produced.
+                self.active_count -= 1;
                 self.transition(mgr, TrajPhase::Reward);
                 self.dispatch_reward(mgr);
             }
@@ -1294,6 +1369,9 @@ impl<'a> DriverCore<'a> {
     fn abort_mgr(&mut self, mgr: usize, reason: AbortReason) {
         let id = self.mgrs[mgr].id;
         let group = self.mgrs[mgr].traj.group;
+        if !self.mgrs[mgr].is_terminal() {
+            self.active_count -= 1;
+        }
         self.mgrs[mgr].abort();
         self.proxy.abort(id);
         self.groups.fail(id);
@@ -1329,13 +1407,14 @@ impl<'a> DriverCore<'a> {
 
     /// Launch one replacement member into an existing group.
     fn launch_member(&mut self, group: u64) {
-        let domain = self.group_domain[&group];
+        let domain = self.group_domain[group as usize];
         let profile = DomainProfile::of(domain);
         let idx = self.mgrs.len();
         let id = TrajectoryId(idx as u64);
         let shape = profile.sample_trajectory(&mut self.rng);
         let m = EnvManagerSim::new(id, shape, self.gen_version(), group, self.now());
         self.mgrs.push(m);
+        self.active_count += 1;
         let li = self.lifecycle.spawn_at(self.now());
         debug_assert_eq!(li, idx);
         self.groups.launch(group, id);
@@ -1369,7 +1448,8 @@ impl<'a> DriverCore<'a> {
         if let Some(up) = self.engine_up_since[e].take() {
             self.engine_alive_s[e] += now - up;
         }
-        self.proxy.engines_mut()[e].set_down(true);
+        self.proxy.set_down(e, true);
+        self.recompute_gen_version();
         let lost = std::mem::take(&mut self.engine_inflight_done[e]);
         (self.proxy.engines_mut()[e].drain_requests(), lost)
     }
@@ -1421,13 +1501,18 @@ impl<'a> DriverCore<'a> {
         let recovered = (reqs.len() + lost.len()) as u64;
         self.fault_report.requeued_requests += recovered;
         self.acc_requeued += recovered;
-        self.down_since.insert(e, self.now());
+        self.down_since[e] = Some(self.now());
         self.requeue_drained(reqs);
         self.replay_lost(lost);
         if auto_recover {
+            // Recovery = node reboot + engine relaunch (the analytic
+            // `engine_recovery_s`) followed by a *real* bucketized
+            // weight reload on the contended link: a crash storm's
+            // reloads queue against in-flight refreshes and elastic
+            // warm-ups instead of hiding inside the constant.
             self.q.schedule_in(
                 self.cfg.fault.engine_recovery_s,
-                Ev::EngineRecovered { engine: e },
+                Ev::RecoveryPull { engine: e },
             );
         }
         // A crash mid-drain must not wedge the weight-sync barrier:
@@ -1443,6 +1528,29 @@ impl<'a> DriverCore<'a> {
         self.update_env_target();
     }
 
+    /// Rebooted engine's weight reload: pull the current weights as
+    /// real bucketized traffic on the contended fan-out (or shared-KV)
+    /// link, load them into the GPU, then rejoin the fleet — the same
+    /// shape as an elastic warm-up.  The reload books into the generic
+    /// transfer/bucket counters plus its own `recovery_pulls` tally,
+    /// *never* into `engine_offline_s` (that is the weight plane's
+    /// cutover cost and is cross-checked 1:1 against the
+    /// awaiting-weights bubble).
+    fn on_recovery_pull(&mut self, e: usize) {
+        if !self.engine_down[e] || self.engine_retired[e] {
+            // Restored early by a PoolRestore (or retired) while the
+            // reboot was in flight: nothing to reload.
+            return;
+        }
+        let now = self.now();
+        let bytes = self.cfg.model.weight_bytes();
+        // No push gate: the store already holds the published version.
+        let pull_done = self.pull_weights(now, bytes, false);
+        let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
+        self.wreport.recovery_pulls += 1;
+        self.q.schedule_in(delay, Ev::EngineRecovered { engine: e });
+    }
+
     fn revive_engine(&mut self, e: usize) {
         if !self.engine_down[e] || self.engine_retired[e] {
             return;
@@ -1450,16 +1558,17 @@ impl<'a> DriverCore<'a> {
         self.engine_down[e] = false;
         self.engine_up_since[e] = Some(self.now());
         self.idle_open(e, BubbleCause::EnvWait);
-        self.proxy.engines_mut()[e].set_down(false);
-        // Recovery reloads the *current* weights (the reboot pulls from
-        // the store as part of engine_recovery_s) and clears any
+        self.proxy.set_down(e, false);
+        // Recovery reloaded the *current* weights (the reboot's
+        // bucketized pull, see on_recovery_pull) and clears any
         // suspend a cancelled per-engine sync left behind.
         self.engine_version[e] = self.version;
         self.wsync[e] = EngineSync::Idle;
+        self.recompute_gen_version();
         if !self.proxy.is_suspended() {
             self.proxy.engines_mut()[e].resume();
         }
-        if let Some(t0) = self.down_since.remove(&e) {
+        if let Some(t0) = self.down_since[e].take() {
             self.fault_report.recoveries += 1;
             self.fault_report.recovery_latency_s += self.now() - t0;
         }
@@ -1740,6 +1849,7 @@ impl<'a> DriverCore<'a> {
         self.engine_epoch.push(0);
         self.engine_inflight_done.push(Vec::new());
         self.engine_fail_nth.push(0);
+        self.down_since.push(None);
         self.engine_up_since.push(Some(self.now()));
         self.engine_alive_s.push(0.0);
         self.engine_bindings.push(binding);
@@ -1748,6 +1858,7 @@ impl<'a> DriverCore<'a> {
         self.engine_version.push(self.version);
         self.wsync.push(EngineSync::Idle);
         self.wsync_version.push(self.version);
+        self.recompute_gen_version();
         // Telemetry state: the newcomer starts idle awaiting dispatch.
         self.idle_since.push(Some(self.now()));
         self.idle_cause.push(BubbleCause::EnvWait);
@@ -1851,11 +1962,11 @@ impl<'a> DriverCore<'a> {
             }
             GroupOutcome::Pending => {
                 let traj = self.mgrs[mgr].traj.clone();
-                self.staged.entry(group).or_default().push(traj);
+                self.staged[group as usize].push(traj);
             }
             GroupOutcome::Filled { abort } => {
                 let traj = self.mgrs[mgr].traj.clone();
-                let mut members = self.staged.remove(&group).unwrap_or_default();
+                let mut members = std::mem::take(&mut self.staged[group as usize]);
                 members.push(traj);
                 // Deposited = handed to the buffer with its whole
                 // group; the buffer may still evict stale entries.
@@ -1920,6 +2031,10 @@ impl<'a> DriverCore<'a> {
             } else {
                 let push_start = self.weights_pushed_at.take().unwrap_or_else(|| self.now());
                 self.version = self.version.next();
+                // The bump can only matter to gen_version when the
+                // whole fleet is down (its fallback); keep the cache
+                // coherent anyway.
+                self.recompute_gen_version();
                 self.begin_dissemination(push_start);
                 self.start_train(tokens);
             }
@@ -1989,6 +2104,7 @@ impl<'a> DriverCore<'a> {
         for v in &mut self.engine_version {
             *v = self.version;
         }
+        self.recompute_gen_version();
         // The drain is over: idle from here on is ordinary env-wait
         // (the kicks below close most windows at zero length anyway).
         for e in 0..self.engine_busy.len() {
@@ -2130,16 +2246,18 @@ impl<'a> DriverCore<'a> {
         let mgr = tid.0 as usize;
         if self.mgrs[mgr].is_terminal() {
             if let Some(pd) = self.pd.as_mut() {
-                pd.pending.remove(&tid);
+                if let Some(slot) = pd.pending.get_mut(mgr) {
+                    *slot = None;
+                }
             }
             return;
         }
         let now = self.now();
         let mut kv_delay = None;
         if let Some(pd) = self.pd.as_mut() {
-            match pd.pending.get(&tid).map(|e| e.phase) {
+            match pd.pending.get(mgr).and_then(|e| e.as_ref()).map(|e| e.phase) {
                 Some(PdPhase::Prefill) => {
-                    let entry = pd.pending.get_mut(&tid).expect("entry just seen");
+                    let entry = pd.pending[mgr].as_mut().expect("entry just seen");
                     entry.phase = PdPhase::Transfer;
                     // Ship the KV over the *contended* link: an
                     // admission wave's worth of prefills completes in
@@ -2157,7 +2275,7 @@ impl<'a> DriverCore<'a> {
                 // (nothing is on an engine); ignore defensively.
                 Some(PdPhase::Transfer) => return,
                 Some(PdPhase::Decode) => {
-                    let entry = pd.pending.remove(&tid);
+                    let entry = pd.pending.get_mut(mgr).and_then(Option::take);
                     // Decode→prefill prefix reuse (ROADMAP follow-up):
                     // the turn's freshly decoded KV ships *back* so the
                     // next turn's prefill sees the full context — a
@@ -2172,7 +2290,10 @@ impl<'a> DriverCore<'a> {
                                 let bytes =
                                     kv_bytes(&self.cfg.model, entry.decode.decode_budget);
                                 let grant = pd.shared.acquire_reverse(now, bytes);
-                                self.pd_reverse_ready.insert(mgr, grant.done_s);
+                                if self.pd_reverse_ready.len() <= mgr {
+                                    self.pd_reverse_ready.resize(mgr + 1, 0.0);
+                                }
+                                self.pd_reverse_ready[mgr] = grant.done_s;
                             }
                         }
                     }
@@ -2264,13 +2385,15 @@ impl<'a> DriverCore<'a> {
         let mgr = tid.0 as usize;
         if self.mgrs[mgr].is_terminal() {
             if let Some(pd) = self.pd.as_mut() {
-                pd.pending.remove(&tid);
+                if let Some(slot) = pd.pending.get_mut(mgr) {
+                    *slot = None;
+                }
             }
             return;
         }
         let decode = {
             let Some(pd) = self.pd.as_mut() else { return };
-            let Some(entry) = pd.pending.get_mut(&tid) else {
+            let Some(entry) = pd.pending.get_mut(mgr).and_then(|e| e.as_mut()) else {
                 return;
             };
             entry.phase = PdPhase::Decode;
@@ -2368,6 +2491,7 @@ impl<'a> DriverCore<'a> {
                     self.schedule_engine_failure(engine);
                 }
                 Ev::EngineRecovered { engine } => self.revive_engine(engine),
+                Ev::RecoveryPull { engine } => self.on_recovery_pull(engine),
                 Ev::Scheduled { idx } => self.on_scheduled(idx),
                 Ev::EngineProvisioned {
                     binding,
@@ -2593,6 +2717,52 @@ mod tests {
         assert!(r.faults.engine_failures > 0);
         assert!(lc.entered(TrajPhase::Recovering) > 0, "{:?}", lc.edges);
         assert!(lc.entered(TrajPhase::Aborted) > 0, "env crashes abort");
+    }
+
+    #[test]
+    fn recovery_reloads_ride_the_contended_link() {
+        use crate::fault::{FaultEvent, FaultProfile, ScheduledFault};
+        let mut cfg = scenario(Mode::RollArt);
+        cfg.fault = FaultProfile {
+            engine_recovery_s: 3.0,
+            scheduled: (1..40)
+                .map(|i| ScheduledFault {
+                    at_s: 25.0 * i as f64,
+                    event: FaultEvent::EngineCrash { engine: 0 },
+                })
+                .collect(),
+            ..FaultProfile::none()
+        };
+        let r = run(&cfg);
+        assert!(r.faults.engine_failures > 0, "{:?}", r.faults);
+        // Carried-over ROADMAP fix: every auto-recovery reloads its
+        // weights as a real bucketized pull on the contended link
+        // instead of hiding the reload inside engine_recovery_s.
+        assert!(r.weights.recovery_pulls > 0, "{:?}", r.weights);
+        // A recovery completes only after its reload: pulls lead (or
+        // match) completed recoveries, and each pull booked real
+        // bucket transfers.
+        assert!(
+            r.weights.recovery_pulls >= r.faults.recoveries,
+            "pulls {} vs recoveries {}",
+            r.weights.recovery_pulls,
+            r.faults.recoveries
+        );
+        assert!(
+            r.weights.buckets.engine_pulls >= r.weights.recovery_pulls,
+            "{:?}",
+            r.weights.buckets
+        );
+        // The reload lengthens measured recovery latency beyond the
+        // analytic reboot constant.
+        assert!(r.faults.recoveries > 0);
+        assert!(
+            r.faults.recovery_latency_s / r.faults.recoveries as f64
+                > cfg.fault.engine_recovery_s,
+            "mean recovery {} must exceed the bare reboot {}",
+            r.faults.recovery_latency_s / r.faults.recoveries as f64,
+            cfg.fault.engine_recovery_s
+        );
     }
 
     #[test]

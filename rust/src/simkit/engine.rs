@@ -4,9 +4,29 @@
 //! `while let Some((t, ev)) = q.pop()` loop; the queue guarantees
 //! chronological order with FIFO tie-breaking (stable `seq`), which
 //! keeps co-timed events deterministic.
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//!
+//! # Calendar-queue scheduling
+//!
+//! The queue is a classic calendar queue (Brown 1988): pending events
+//! hash into an array of time buckets of fixed `width`, indexed by
+//! `floor(t / width) mod nbuckets`.  `pop` walks the calendar from the
+//! bucket holding the current clock "day", taking the earliest entry
+//! whose timestamp falls inside the bucket's current *year* window; a
+//! fruitless full lap falls back to a direct min search (the safety
+//! net that also absorbs any float-boundary disagreement between the
+//! hash and the window check).  The bucket count doubles/halves so
+//! occupancy stays near one event per bucket, which makes both
+//! `schedule` and `pop` O(1) amortized instead of the binary heap's
+//! O(log n) — this is the DES hot path, every simulated event passes
+//! through here twice.
+//!
+//! Ordering is a **total order** on `(time, seq)`: `seq` is a
+//! monotonically increasing schedule counter, so co-timed events pop
+//! in schedule (FIFO) order.  Because the order is total, *any*
+//! correct priority queue yields the identical pop sequence — the
+//! calendar queue cannot perturb determinism, and
+//! `tests/event_queue_prop.rs` cross-checks it against a binary-heap
+//! reference on random interleaved schedules.
 
 use super::SimTime;
 
@@ -16,27 +36,16 @@ struct Entry<E> {
     event: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+impl<E> Entry<E> {
+    /// The (time, seq) sort key: chronological, FIFO on ties.
+    #[inline]
+    fn key(&self) -> (SimTime, u64) {
+        (self.time, self.seq)
     }
 }
-impl<E> Eq for Entry<E> {}
 
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .time
-            .cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
+/// Initial / minimum size of the bucket array (power of two).
+const MIN_BUCKETS: usize = 32;
 
 /// A chronological event queue with stable FIFO tie-breaking.
 ///
@@ -45,7 +54,17 @@ impl<E> PartialOrd for Entry<E> {
 /// `ScenarioResult::{sim_events, peak_queue_depth}` and the
 /// `perf_baseline` bench turns into events/sec.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// The calendar: `buckets[floor(t / width) % nbuckets]`.  Entries
+    /// within a bucket are unordered (pop min-scans the bucket, which
+    /// resizing keeps near one entry long).
+    buckets: Vec<Vec<Entry<E>>>,
+    /// Bucket width in seconds (one calendar "day").
+    width: f64,
+    /// Virtual bucket cursor: `floor(now / width)` of the last popped
+    /// event.  Physical index is `cur_vday % nbuckets`; the year
+    /// window top is `(cur_vday + 1) * width`.
+    cur_vday: u64,
+    len: usize,
     next_seq: u64,
     now: SimTime,
     popped: u64,
@@ -61,7 +80,10 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: 1.0,
+            cur_vday: 0,
+            len: 0,
             next_seq: 0,
             now: SimTime::ZERO,
             popped: 0,
@@ -74,6 +96,20 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// Virtual day (bucket number on the infinite time axis) of `t`.
+    #[inline]
+    fn vday(&self, t: SimTime) -> u64 {
+        // Times are non-negative (schedule asserts t >= now >= 0); the
+        // cast saturates on absurdly large-but-finite timestamps, which
+        // only costs a direct-search pop, never correctness.
+        (t.as_secs() / self.width) as u64
+    }
+
+    #[inline]
+    fn bucket_of(&self, t: SimTime) -> usize {
+        (self.vday(t) % self.buckets.len() as u64) as usize
+    }
+
     /// Schedule `event` at absolute time `t`.
     ///
     /// Panics if `t` is in the past — a driver scheduling backwards in
@@ -84,28 +120,134 @@ impl<E> EventQueue<E> {
             "cannot schedule into the past: {t:?} < {:?}",
             self.now
         );
-        self.heap.push(Entry {
+        let b = self.bucket_of(t);
+        self.buckets[b].push(Entry {
             time: t,
             seq: self.next_seq,
             event,
         });
         self.next_seq += 1;
-        self.max_depth = self.max_depth.max(self.heap.len());
+        self.len += 1;
+        self.max_depth = self.max_depth.max(self.len);
+        if self.len > self.buckets.len() * 2 {
+            self.resize(self.buckets.len() * 2);
+        }
     }
 
     /// Schedule `event` `delay` seconds from now.
+    ///
+    /// Negative delays clamp to `now`.  A NaN delay is always an
+    /// upstream arithmetic bug: rejected by a debug assertion, clamped
+    /// to `now` in release builds so it cannot poison the clock.
     pub fn schedule_in(&mut self, delay: f64, event: E) {
-        let t = self.now + delay.max(0.0);
+        debug_assert!(!delay.is_nan(), "cannot schedule with a NaN delay");
+        let delay = if delay.is_nan() { 0.0 } else { delay.max(0.0) };
+        let t = self.now + delay;
         self.schedule(t, event);
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|e| {
-            self.now = e.time;
-            self.popped += 1;
-            (e.time, e.event)
-        })
+        if self.len == 0 {
+            return None;
+        }
+        let nbuckets = self.buckets.len();
+        for _lap in 0..nbuckets {
+            let idx = (self.cur_vday % nbuckets as u64) as usize;
+            let top = (self.cur_vday.saturating_add(1)) as f64 * self.width;
+            if let Some(pos) = Self::min_in_window(&self.buckets[idx], top) {
+                return Some(self.take(idx, pos));
+            }
+            // Nothing due this day — advance the calendar.
+            self.cur_vday = self.cur_vday.saturating_add(1);
+        }
+        // Full fruitless lap: the next event is more than a year out
+        // (or sits on a float boundary the window check excluded).
+        // Direct search: global (time, seq) min across all buckets.
+        let (idx, pos) = self
+            .global_min()
+            .expect("len > 0 but no entry found in direct search");
+        let t = self.buckets[idx][pos].time;
+        self.cur_vday = self.vday(t);
+        Some(self.take(idx, pos))
+    }
+
+    /// Earliest `(time, seq)` entry in `bucket` strictly inside the
+    /// current year window (`time < top`), if any.
+    fn min_in_window(bucket: &[Entry<E>], top: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in bucket.iter().enumerate() {
+            if e.time.as_secs() < top {
+                match best {
+                    Some(b) if e.key() >= bucket[b].key() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        best
+    }
+
+    /// Global `(time, seq)` minimum over every bucket.
+    fn global_min(&self) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                match best {
+                    Some((bb, bp)) if e.key() >= self.buckets[bb][bp].key() => {}
+                    _ => best = Some((bi, i)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Remove the entry at `(idx, pos)`, advance the clock and the
+    /// self-profile counters, and shrink the calendar if it emptied
+    /// out.  Bucket-internal order is irrelevant (pop min-scans), so
+    /// `swap_remove` keeps removal O(1).
+    fn take(&mut self, idx: usize, pos: usize) -> (SimTime, E) {
+        let e = self.buckets[idx].swap_remove(pos);
+        self.len -= 1;
+        self.now = e.time;
+        self.popped += 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            self.resize(self.buckets.len() / 2);
+        }
+        (e.time, e.event)
+    }
+
+    /// Rebuild the calendar with `nbuckets` buckets and a width chosen
+    /// from the live entries' time spread (target: ~1 entry/bucket, so
+    /// the per-pop bucket min-scan stays O(1)).  Resizing re-hashes
+    /// entries but never touches `(time, seq)`, so pop order — and
+    /// therefore determinism — is unaffected.
+    fn resize(&mut self, nbuckets: usize) {
+        let mut entries: Vec<Entry<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            entries.append(b);
+        }
+        // Width heuristic: spread the live span over the entries with
+        // ~3 days of slack per event (Brown's rule of thumb); keep the
+        // old width when the span is degenerate (all co-timed).
+        if entries.len() >= 2 {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for e in &entries {
+                let t = e.time.as_secs();
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+            let span = hi - lo;
+            if span > 0.0 {
+                self.width = (3.0 * span / entries.len() as f64).max(1e-9);
+            }
+        }
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        self.cur_vday = self.vday(self.now);
+        for e in entries {
+            let b = self.bucket_of(e.time);
+            self.buckets[b].push(e);
+        }
     }
 
     /// Events dispatched (popped) so far.
@@ -113,22 +255,22 @@ impl<E> EventQueue<E> {
         self.popped
     }
 
-    /// High-water mark of the pending-event heap.
+    /// High-water mark of pending events.
     pub fn max_depth(&self) -> usize {
         self.max_depth
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     /// Peek at the next event time without advancing the clock.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.time)
+        self.global_min().map(|(b, p)| self.buckets[b][p].time)
     }
 }
 
@@ -201,5 +343,62 @@ mod tests {
         q.pop();
         q.schedule_in(-3.0, ()); // clamps to now
         assert_eq!(q.peek_time(), Some(SimTime::secs(5.0)));
+    }
+
+    // schedule_in NaN regression: a NaN delay is a debug assertion
+    // (tests build with debug assertions on) and clamps to `now` in
+    // release so the clock can never be poisoned.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN delay")]
+    fn nan_delay_asserts_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, ());
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn nan_delay_clamps_to_now_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, "a");
+        q.pop();
+        q.schedule_in(f64::NAN, "b");
+        assert_eq!(q.peek_time(), Some(SimTime::secs(5.0)));
+    }
+
+    #[test]
+    fn survives_resizes_with_clustered_and_sparse_times() {
+        // Push enough to trigger growth, with a mix of dense ties and
+        // year-spanning gaps, then drain fully and check total order.
+        let mut q = EventQueue::new();
+        let mut expect = Vec::new();
+        for i in 0..500u64 {
+            let t = match i % 3 {
+                0 => (i / 3) as f64 * 0.001,       // dense cluster
+                1 => 1_000.0 + (i as f64) * 7.5,   // mid-range
+                _ => 1.0e6 + (i as f64) * 1.0e4,   // a year+ out
+            };
+            q.schedule(SimTime::secs(t), i);
+            expect.push((SimTime::secs(t), i));
+        }
+        expect.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        let got: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        let got_keyed: Vec<_> = got.iter().map(|(t, i)| (*t, *i)).collect();
+        assert_eq!(got_keyed, expect);
+        assert_eq!(q.popped(), 500);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::secs(10.0), "late");
+        q.schedule(SimTime::secs(1.0), "early");
+        assert_eq!(q.pop().unwrap().1, "early");
+        // schedule behind the pending event but after now
+        q.schedule(SimTime::secs(5.0), "mid");
+        assert_eq!(q.pop().unwrap().1, "mid");
+        assert_eq!(q.pop().unwrap().1, "late");
+        assert!(q.pop().is_none());
     }
 }

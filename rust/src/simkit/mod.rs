@@ -5,11 +5,15 @@
 //! (DESIGN.md §2 Substitutions).  The kit is deliberately small:
 //!
 //! * [`SimTime`] — f64 seconds with total ordering,
-//! * [`EventQueue`] — a stable (time, seq) binary-heap of driver events,
+//! * [`EventQueue`] — a calendar queue over the stable (time, seq)
+//!   total order of driver events: O(1) amortized schedule/pop with
+//!   the exact chronological + FIFO tie-break contract,
 //! * [`SimRng`] — deterministic, label-splittable xoshiro streams so every
 //!   scenario is reproducible bit-for-bit regardless of module order,
 //! * [`dist`] — the latency distributions observed in §3 (log-normal
-//!   heavy tails, truncated Gaussians, Bernoulli failures).
+//!   heavy tails, truncated Gaussians, Bernoulli failures),
+//! * [`par`] — deterministic parallel replications: fan independent
+//!   sweep points across scoped threads, collect in input order.
 //!
 //! # Seeding convention
 //!
@@ -24,6 +28,7 @@
 
 mod engine;
 pub mod dist;
+pub mod par;
 mod rng;
 mod time;
 

@@ -1,0 +1,126 @@
+//! Deterministic parallel replications over scoped threads.
+//!
+//! Every sweep point in the paper-figure benches is an independent,
+//! fully deterministic simulation (`docs/DETERMINISM.md`): the result
+//! is a pure function of the `Scenario`, never of wall-clock, thread
+//! timing, or run order.  That makes sweeps embarrassingly parallel —
+//! the only rule is that results must be **collected in input order**
+//! so CSV/figure output stays byte-identical to a serial run.
+//!
+//! [`par_map`] is the one helper the benches use: fan a slice of
+//! inputs out across `std::thread::scope` workers (no external
+//! dependencies — this crate builds offline) with a shared atomic
+//! work-stealing cursor, then reassemble results by input index.
+//! [`par_map_with`] pins the worker count, which the determinism test
+//! uses to compare a 1-thread and an 8-thread run byte-for-byte, and
+//! the `perf_baseline` bench uses for its 8-way sweep row.
+//!
+//! Keep simulation *state* out of the closure: `f` must only read its
+//! input (shared `&I`) and return an owned result.  Anything else —
+//! shared counters, interleaved prints — reintroduces scheduling
+//! nondeterminism that this module exists to fence off.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for [`par_map`]: the machine's available parallelism,
+/// overridable with `ROLLART_PAR` (set `ROLLART_PAR=1` to force the
+/// serial path, e.g. when profiling a single replication).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ROLLART_PAR") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `inputs` using the default worker count, preserving
+/// input order in the output.
+pub fn par_map<I, R, F>(inputs: &[I], f: F) -> Vec<R>
+where
+    I: Sync,
+    R: Send,
+    F: Fn(&I) -> R + Sync,
+{
+    par_map_with(default_threads(), inputs, f)
+}
+
+/// Map `f` over `inputs` with exactly `threads` workers (clamped to
+/// the input length), preserving input order in the output.
+///
+/// `threads == 1` runs inline on the caller's thread — the serial
+/// reference path.  Worker panics propagate to the caller.
+pub fn par_map_with<I, R, F>(threads: usize, inputs: &[I], f: F) -> Vec<R>
+where
+    I: Sync,
+    R: Send,
+    F: Fn(&I) -> R + Sync,
+{
+    let threads = threads.max(1).min(inputs.len().max(1));
+    if threads <= 1 || inputs.len() <= 1 {
+        return inputs.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let cursor = &cursor;
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut acc = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= inputs.len() {
+                            break;
+                        }
+                        acc.push((i, f(&inputs[i])));
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    // Reassemble in input order: this is the determinism contract.
+    tagged.sort_by_key(|(i, _)| *i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let inputs: Vec<u64> = (0..100).collect();
+        let out = par_map_with(8, &inputs, |&x| x * x);
+        assert_eq!(out, inputs.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial_byte_for_byte() {
+        let inputs: Vec<u64> = (0..64).collect();
+        let render = |&x: &u64| format!("row,{x},{:.6}", (x as f64).sqrt());
+        let serial = par_map_with(1, &inputs, render);
+        let parallel = par_map_with(8, &inputs, render);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let none: Vec<u64> = Vec::new();
+        assert!(par_map_with(8, &none, |&x| x).is_empty());
+        assert_eq!(par_map_with(8, &[7u64], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let out = par_map_with(64, &[1u64, 2, 3], |&x| x);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

@@ -737,6 +737,14 @@ pub struct WeightSyncReport {
     /// provisioned engine; real bucketized traffic, not the analytic
     /// `provision_delay_s`).
     pub warmup_pulls: u64,
+    /// Fault-recovery weight reloads routed over the contended link
+    /// (one per auto-recovered engine crash): the analytic
+    /// `engine_recovery_s` covers only the node reboot + engine
+    /// relaunch; the reload itself is real bucketized traffic queueing
+    /// against refreshes and warm-ups.  Booked into the generic
+    /// transfer/bucket counters, never into `engine_offline_s` (that
+    /// stays the cutover cost the bubble plane cross-checks against).
+    pub recovery_pulls: u64,
     /// Closed-loop strategy adjustments ([`AdaptiveSync`]): iterations
     /// that raised / lowered the refresh concurrency.
     pub adapt_raises: u64,

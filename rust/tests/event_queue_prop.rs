@@ -1,0 +1,185 @@
+//! DES performance-plane conformance.
+//!
+//! Two properties keep the calendar queue and the parallel-replication
+//! helper honest:
+//!
+//! 1. **Queue equivalence** — `(time, seq)` is a *total* order, so any
+//!    correct priority queue must produce the identical pop sequence.
+//!    The property test drives the calendar queue and a binary-heap
+//!    reference (the pre-refactor implementation, reconstructed here)
+//!    with the same random interleaved schedule/pop workload and
+//!    asserts every pop matches, including co-timed FIFO ties and the
+//!    year-spanning gaps that force calendar resizes and the
+//!    direct-search fallback.
+//! 2. **Parallel determinism** — `simkit::par` fans independent
+//!    replications across threads but collects in input order, so a
+//!    parallel sweep renders CSV rows byte-identical to a serial one.
+
+use rollart::llm::QWEN3_8B;
+use rollart::sim::driver;
+use rollart::sim::Scenario;
+use rollart::simkit::par::par_map_with;
+use rollart::simkit::{EventQueue, SimRng, SimTime};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The pre-refactor reference: a binary heap over the same
+/// `(time, seq)` key the calendar queue orders by.
+struct HeapQueue {
+    heap: BinaryHeap<Reverse<(SimTime, u64)>>,
+    next_seq: u64,
+    now: SimTime,
+}
+
+impl HeapQueue {
+    fn new() -> Self {
+        HeapQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// Returns the seq assigned to the scheduled event — the payload
+    /// both queues carry, so pops compare `(time, payload)` directly.
+    fn schedule(&mut self, t: SimTime) -> u64 {
+        assert!(t >= self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse((t, seq)));
+        seq
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64)> {
+        let Reverse((t, seq)) = self.heap.pop()?;
+        self.now = t;
+        Some((t, seq))
+    }
+}
+
+/// One random delay from a mixture that exercises every calendar
+/// regime: exact ties (FIFO), sub-width dense clusters, mid-range, and
+/// year-plus jumps that trigger the direct-search fallback and width
+/// re-estimation on resize.
+fn random_delay(rng: &mut SimRng) -> f64 {
+    let r = rng.u64();
+    match r % 4 {
+        0 => 0.0,
+        1 => (r >> 2) as f64 % 1000.0 * 0.001,
+        2 => (r >> 2) as f64 % 10_000.0 * 0.5,
+        _ => (r >> 2) as f64 % 100.0 * 1.0e5,
+    }
+}
+
+#[test]
+fn prop_calendar_queue_matches_binary_heap() {
+    let root = SimRng::new(0xC0FFEE);
+    for trial in 0..16u64 {
+        let mut rng = root.stream("prop-event-queue", trial);
+        let mut cal: EventQueue<u64> = EventQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut pops = 0u64;
+        for _op in 0..2_000 {
+            // 60/40 schedule/pop keeps the queue growing through
+            // resize thresholds while still draining often.
+            let do_schedule = cal.is_empty() || rng.u64() % 100 < 60;
+            if do_schedule {
+                let t = heap.now + random_delay(&mut rng);
+                let seq = heap.schedule(t);
+                cal.schedule(t, seq);
+            } else {
+                let got = cal.pop();
+                let want = heap.pop();
+                assert_eq!(got, want, "trial {trial}: pop #{pops} diverged");
+                pops += 1;
+            }
+            assert_eq!(cal.len(), heap.heap.len(), "trial {trial}: len diverged");
+        }
+        // Drain: the tail must match too (this is where a bad bucket
+        // hash or a missed window boundary would finally surface).
+        while let Some(want) = heap.pop() {
+            assert_eq!(cal.pop(), Some(want), "trial {trial}: drain diverged");
+        }
+        assert!(cal.is_empty());
+        assert!(cal.pop().is_none());
+    }
+}
+
+#[test]
+fn prop_co_timed_bursts_pop_in_schedule_order() {
+    // Adversarial tie case: large co-timed bursts at a handful of
+    // timestamps, scheduled in shuffled time order.  FIFO within each
+    // timestamp must survive bucket hashing and resizes.
+    let mut rng = SimRng::new(7).stream("tie-burst", 0);
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let times = [0.0, 1.0, 1.0 + 1e-12, 3600.0, 1.0e7];
+    let mut expect: Vec<(SimTime, u64)> = Vec::new();
+    for seq in 0..800u64 {
+        let t = SimTime::secs(times[(rng.u64() % times.len() as u64) as usize]);
+        q.schedule(t, seq);
+        expect.push((t, seq));
+    }
+    expect.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+    let got: Vec<(SimTime, u64)> = std::iter::from_fn(|| q.pop()).collect();
+    assert_eq!(got, expect);
+}
+
+// ---- parallel replications ---------------------------------------------
+
+fn sweep_scenarios() -> Vec<Scenario> {
+    (0..6u64)
+        .map(|seed| {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
+            s.batch_size = 16;
+            s.group_size = 4;
+            s.iterations = 2;
+            s.seed = 42 + seed;
+            s
+        })
+        .collect()
+}
+
+/// Render a result the way the figure benches do: fixed-precision CSV
+/// fields.  Byte equality here is the determinism contract the
+/// parallel sweep must honor.
+fn csv_row(i: usize, r: &rollart::sim::ScenarioResult) -> String {
+    format!(
+        "{i},{},{},{:.4},{:.4},{:.6}",
+        r.sim_events,
+        r.peak_queue_depth,
+        r.total_time_s,
+        r.mean_step_time(),
+        r.goodput()
+    )
+}
+
+#[test]
+fn parallel_sweep_csv_is_byte_identical_to_serial() {
+    let sweep = sweep_scenarios();
+    let serial: Vec<String> = par_map_with(1, &sweep, driver::run)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| csv_row(i, r))
+        .collect();
+    let parallel: Vec<String> = par_map_with(8, &sweep, driver::run)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| csv_row(i, r))
+        .collect();
+    assert_eq!(
+        serial.join("\n"),
+        parallel.join("\n"),
+        "parallel sweep must render the same CSV bytes as serial"
+    );
+}
+
+#[test]
+fn parallel_results_are_field_identical_to_serial() {
+    // Stronger than the CSV check: the full ScenarioResult (every
+    // counter, every step row) must match, not just the rendered
+    // columns.
+    let sweep = sweep_scenarios();
+    let serial = par_map_with(1, &sweep, driver::run);
+    let parallel = par_map_with(4, &sweep, driver::run);
+    assert_eq!(serial, parallel);
+}

@@ -233,14 +233,17 @@ fn blocking_drain_books_at_least_the_exposed_window() {
     );
 }
 
-// ---- committed perf baseline -------------------------------------------
+// ---- committed perf baselines ------------------------------------------
 
-#[test]
-fn committed_bench_baseline_is_valid() {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
-    let text = std::fs::read_to_string(path)
-        .unwrap_or_else(|e| panic!("BENCH_6.json must be committed at the repo root: {e}"));
-    let j = Json::parse(&text).expect("BENCH_6.json parses");
+/// Schema-check one committed `BENCH_N.json` perf baseline.  The files
+/// form a trajectory (docs/OBSERVABILITY.md): each perf-changing PR
+/// commits a new one and never edits its predecessors, so every file
+/// in the sequence must stay valid forever.
+fn check_bench_file(file: &str, trajectory_fields: bool) {
+    let path = format!("{}/../{file}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{file} must be committed at the repo root: {e}"));
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{file} parses: {e}"));
     assert_eq!(j.get("bench").and_then(Json::as_str), Some("perf_baseline"));
     assert!(j.get("quick").and_then(Json::as_bool).is_some());
     let scenarios = j
@@ -249,36 +252,68 @@ fn committed_bench_baseline_is_valid() {
         .expect("scenarios array");
     assert!(
         scenarios.len() >= 4,
-        "need the 4 standard scenarios, found {}",
+        "{file}: need the 4 standard scenarios, found {}",
         scenarios.len()
     );
+    let mut keys = vec![
+        "sim_events",
+        "wall_s",
+        "events_per_s",
+        "peak_queue_depth",
+        "sim_time_s",
+        "steps",
+    ];
+    if trajectory_fields {
+        // The before/after columns added with the trajectory
+        // convention.  Gain *magnitude* is machine-dependent and not
+        // asserted here — the CI gate owns the regression check.
+        keys.push("baseline_events_per_s");
+        keys.push("gain");
+    }
     let mut names = Vec::new();
     for s in scenarios {
         let name = s.get("name").and_then(Json::as_str).expect("name");
         names.push(name.to_string());
-        for key in [
-            "sim_events",
-            "wall_s",
-            "events_per_s",
-            "peak_queue_depth",
-            "sim_time_s",
-            "steps",
-        ] {
+        for key in &keys {
             let v = s
                 .get(key)
                 .and_then(Json::as_f64)
-                .unwrap_or_else(|| panic!("{name}: missing numeric field {key}"));
-            assert!(v >= 0.0, "{name}: {key} = {v}");
+                .unwrap_or_else(|| panic!("{file}/{name}: missing numeric field {key}"));
+            assert!(v >= 0.0, "{file}/{name}: {key} = {v}");
         }
         assert!(
             s.get("sim_events").unwrap().as_f64().unwrap() > 0.0,
-            "{name}: zero events"
+            "{file}/{name}: zero events"
         );
     }
     for expect in ["rollart", "syncplus", "pd", "pd-weights"] {
         assert!(
             names.iter().any(|n| n == expect),
-            "standard scenario {expect} missing from {names:?}"
+            "{file}: standard scenario {expect} missing from {names:?}"
         );
     }
+    if trajectory_fields {
+        assert!(
+            j.get("baseline").and_then(Json::as_str).is_some(),
+            "{file}: must name the predecessor baseline it was measured against"
+        );
+        let sweep = j
+            .get("parallel_sweep")
+            .unwrap_or_else(|| panic!("{file}: missing parallel_sweep row"));
+        for key in ["points", "threads", "serial_wall_s", "parallel_wall_s", "speedup"] {
+            let v = sweep
+                .get(key)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("{file}/parallel_sweep: missing {key}"));
+            assert!(v >= 0.0, "{file}/parallel_sweep: {key} = {v}");
+        }
+    }
+}
+
+#[test]
+fn committed_bench_baseline_is_valid() {
+    // The predecessor stays committed and untouched...
+    check_bench_file("BENCH_6.json", false);
+    // ...and the current revision adds the gain + parallel-sweep rows.
+    check_bench_file("BENCH_7.json", true);
 }
