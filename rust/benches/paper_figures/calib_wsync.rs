@@ -1,0 +1,104 @@
+//! Calibration: [`AdaptiveSync`] controller knobs (ROADMAP carry-over).
+//!
+//! The closed-loop dissemination strategy tunes its refresh
+//! concurrency `k` once per iteration; *when* it reacts is governed by
+//! two knobs this sweep grounds (mirroring how `calib_pd` grounded the
+//! `PdElasticPolicy` thresholds):
+//!
+//! * `rollout_bound_ratio` — the `get_batch`-wait-to-train-time
+//!   multiple past which the iteration counts as rollout-bound and `k`
+//!   is lowered;
+//! * `cooldown_steps` — settle iterations held after each adjustment.
+//!
+//! The grid runs the RollArt-mode scenario with adaptive weights at
+//! α = 4 (room for the controller to trade lag against link pressure)
+//! and prints step time, goodput, the controller's raise/drop counts
+//! and the lag it settled at.  Chosen defaults
+//! ([`AdaptiveSync::new`]): ratio 1.0, cooldown 1 — the stable middle;
+//! tighter ratios churn `k` on noise, laxer ones leave a starved
+//! rollout paying for dissemination, and longer cooldowns react a full
+//! staleness window late.  The defaults are pinned by
+//! `adaptive_defaults_match_calibration` in `src/weights/mod.rs`.
+
+use crate::support::*;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::sim::{driver, Scenario};
+use rollart::simkit::par::par_map;
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+
+pub fn run() {
+    banner(
+        "Calib wsync",
+        "AdaptiveSync rollout_bound_ratio x cooldown sweep (RollArt mode, alpha=4)",
+    );
+    let mut csv = CsvWriter::for_bench(
+        "calib_wsync",
+        &[
+            "rollout_bound_ratio",
+            "cooldown_steps",
+            "step_time_s",
+            "goodput_tok_s",
+            "adapt_raises",
+            "adapt_drops",
+            "mean_lag",
+            "max_lag",
+        ],
+    );
+    println!(
+        "  {:>7} {:>9} {:>12} {:>12} {:>7} {:>6} {:>9} {:>8}",
+        "ratio", "cooldown", "step_time", "goodput", "raises", "drops", "mean_lag", "max_lag"
+    );
+    let ratios: &[f64] = if quick_mode() { &[1.0] } else { &[0.5, 1.0, 2.0] };
+    let cooldowns: &[usize] = if quick_mode() { &[1] } else { &[0, 1, 3] };
+    // Grid points are independent replications: fan across cores, emit
+    // serially in grid order (byte-identical CSV).
+    let mut points = Vec::new();
+    for &ratio in ratios {
+        for &cooldown in cooldowns {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+            s.alpha = 4;
+            let mut w = WeightsScenario::with_strategy(SyncStrategyKind::Adaptive);
+            w.adaptive.rollout_bound_ratio = ratio;
+            w.adaptive.cooldown_steps = cooldown;
+            s.weights = w;
+            points.push(quick(s, 6));
+        }
+    }
+    let results = par_map(&points, driver::run);
+    let mut idx = 0;
+    for &ratio in ratios {
+        for &cooldown in cooldowns {
+            let r = &results[idx];
+            idx += 1;
+            let w = &r.weights;
+            println!(
+                "  {:>7.1} {:>9} {:>11.1}s {:>12.0} {:>7} {:>6} {:>9.2} {:>8}",
+                ratio,
+                cooldown,
+                r.mean_step_time(),
+                r.goodput(),
+                w.adapt_raises,
+                w.adapt_drops,
+                w.mean_lag(),
+                w.lag_max
+            );
+            csv.row([
+                format!("{ratio:.1}"),
+                cooldown.to_string(),
+                format!("{:.2}", r.mean_step_time()),
+                format!("{:.1}", r.goodput()),
+                w.adapt_raises.to_string(),
+                w.adapt_drops.to_string(),
+                format!("{:.3}", w.mean_lag()),
+                w.lag_max.to_string(),
+            ]);
+        }
+    }
+    row(
+        "chosen defaults",
+        "stable middle",
+        "ratio 1.0, cooldown 1 (AdaptiveSync::new)",
+    );
+    csv.flush().unwrap();
+}

@@ -1,0 +1,133 @@
+//! Principle 1 (heterogeneous fleet plane): roofline-driven placement
+//! on a mixed H800 + H20 fleet.
+//!
+//! All three arms run the *identical* cost-equivalent fleet — 2×H800/2
+//! (compute-rich) + 2×H20/6 (bandwidth-rich), so total FLOPs and total
+//! HBM bandwidth are equal by construction — over a half
+//! prefill-heavy (SWE) half decode-heavy (math-tool) task mix.  Only
+//! the dispatch discipline differs:
+//!
+//! * `best_fit` — [`BestFitRoute`](rollart::proxy::BestFitRoute):
+//!   scores every live engine by its roofline-derived per-turn service
+//!   time for the request's domain, so prefill-heavy work lands on
+//!   H800 and decode-heavy on H20 *emergently* (no hardcoded class
+//!   table);
+//! * `homogeneous` — class-blind least-loaded: the mixed fleet treated
+//!   as interchangeable capacity, the paper's naive-disaggregation
+//!   strawman;
+//! * `inverted` — the best-fit key reciprocal: prefill-heavy onto H20,
+//!   decode-heavy onto H800, the adversarial lower bound.
+//!
+//! The paper's claim (principle 1, §4) is an *ordering*, not an
+//! absolute number, so the ordering is asserted — in quick CI mode
+//! too: best-fit beats homogeneous, inverted is strictly worse than
+//! both.
+
+use crate::support::*;
+use rollart::env::TaskDomain;
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::proxy::RouteKind;
+use rollart::sim::{driver, EnginePool, Scenario};
+use rollart::simkit::par::par_map;
+
+pub fn run() {
+    banner(
+        "Fig affinity",
+        "best-fit vs homogeneous vs inverted placement on a mixed H800+H20 fleet",
+    );
+    let arms: &[(&str, RouteKind)] = &[
+        ("best_fit", RouteKind::BestFit),
+        ("homogeneous", RouteKind::LeastLoaded),
+        ("inverted", RouteKind::Inverted),
+    ];
+    let points: Vec<Scenario> = arms
+        .iter()
+        .map(|&(_, route)| {
+            let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+            // Cost-equivalent mix (6×H20 ≈ 2×H800): every arm sees the
+            // same fleet, so equal total FLOPs is true by construction.
+            s.gen_pools = vec![
+                EnginePool {
+                    class: GpuClass::H800,
+                    gpus_per_engine: 2,
+                    engines: 2,
+                    max_batch: 32,
+                },
+                EnginePool {
+                    class: GpuClass::H20,
+                    gpus_per_engine: 6,
+                    engines: 2,
+                    max_batch: 32,
+                },
+            ];
+            // One strongly prefill-heavy and one strongly decode-heavy
+            // domain, so placement quality is what separates the arms.
+            s.task_mix = vec![TaskDomain::Swe, TaskDomain::MathTool];
+            // Placement must come from the route policy alone: disable
+            // the R1 domain→class pins so `homogeneous` is genuinely
+            // class-blind.
+            s.affinity_routing = false;
+            s.route = route;
+            quick(s, 5)
+        })
+        .collect();
+    let results = par_map(&points, driver::run);
+
+    let mut csv = CsvWriter::for_bench(
+        "fig_affinity",
+        &["route", "step_time_s", "throughput_tok_s", "goodput_tok_s", "gen_util"],
+    );
+    println!(
+        "  {:>12} {:>12} {:>14} {:>14} {:>9}",
+        "route", "step_time", "throughput", "goodput", "gen_util"
+    );
+    for ((name, _), r) in arms.iter().zip(&results) {
+        println!(
+            "  {:>12} {:>11.1}s {:>14.0} {:>14.0} {:>9.2}",
+            name,
+            r.mean_step_time(),
+            r.throughput(),
+            r.goodput(),
+            r.gen_util
+        );
+        csv.row([
+            (*name).to_string(),
+            format!("{:.2}", r.mean_step_time()),
+            format!("{:.1}", r.throughput()),
+            format!("{:.1}", r.goodput()),
+            format!("{:.3}", r.gen_util),
+        ]);
+    }
+    csv.flush().unwrap();
+
+    let (bf, homo, inv) = (&results[0], &results[1], &results[2]);
+    row(
+        "best-fit vs homogeneous",
+        "affinity wins (principle 1)",
+        &x(bf.throughput() / homo.throughput().max(1e-9)),
+    );
+    row(
+        "inverted vs homogeneous",
+        "inverted strictly worse",
+        &x(inv.throughput() / homo.throughput().max(1e-9)),
+    );
+    // The paper-shape assertions stay on in quick mode: CI runs this
+    // bench with ROLLART_BENCH_QUICK=1 and uploads the CSV.
+    assert!(
+        bf.throughput() > homo.throughput(),
+        "principle 1 violated: best-fit ({:.1} tok/s) did not beat class-blind \
+         placement ({:.1} tok/s) on the mixed fleet",
+        bf.throughput(),
+        homo.throughput()
+    );
+    assert!(
+        inv.throughput() < homo.throughput() && inv.throughput() < bf.throughput(),
+        "inverted placement ({:.1} tok/s) must be strictly worse than both \
+         homogeneous ({:.1}) and best-fit ({:.1})",
+        inv.throughput(),
+        homo.throughput(),
+        bf.throughput()
+    );
+}

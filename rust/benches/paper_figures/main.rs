@@ -11,6 +11,7 @@
 //! factor, where crossovers fall.  EXPERIMENTS.md records the output.
 
 mod calib_pd;
+mod calib_wsync;
 mod fig10;
 mod fig11;
 mod fig12;
@@ -21,6 +22,7 @@ mod fig3;
 mod fig4;
 mod fig5;
 mod fig6;
+mod fig_affinity;
 mod fig_fault;
 mod fig_phases;
 mod fig_wsync;
@@ -93,6 +95,12 @@ fn main() {
     }
     if want("calib_pd") {
         calib_pd::run();
+    }
+    if want("calib_wsync") {
+        calib_wsync::run();
+    }
+    if want("affinity") {
+        fig_affinity::run();
     }
     if want("fig15") {
         fig15::run();

@@ -9,7 +9,7 @@ use crate::buffer::StalenessPolicy;
 use crate::env::TaskDomain;
 use crate::envpool::EnvPoolConfig;
 use crate::hw::GpuClass;
-use crate::llm::{LlmSpec, QWEN3_14B, QWEN3_32B, QWEN3_8B, TINY_E2E};
+use crate::llm::{LlmSpec, QWEN3_14B, QWEN3_30B_A3B, QWEN3_32B, QWEN3_8B, TINY_E2E};
 use crate::sim::{EnginePool, Mode, RewardDeploy, Scenario};
 use crate::simkit::dist::Dist;
 use crate::util::json::Json;
@@ -20,6 +20,7 @@ pub fn model_by_name(name: &str) -> Option<LlmSpec> {
         "qwen3-8b" | "8b" => Some(QWEN3_8B.clone()),
         "qwen3-14b" | "14b" => Some(QWEN3_14B.clone()),
         "qwen3-32b" | "32b" => Some(QWEN3_32B.clone()),
+        "qwen3-30b-a3b" | "30b-a3b" | "moe" => Some(QWEN3_30B_A3B.clone()),
         "tiny" | "tiny-e2e" => Some(TINY_E2E.clone()),
         _ => None,
     }
@@ -157,6 +158,8 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             "least_loaded" => crate::proxy::RouteKind::LeastLoaded,
             "domain_fair" => crate::proxy::RouteKind::DomainFair,
             "token_backlog" => crate::proxy::RouteKind::TokenBacklog,
+            "best_fit" => crate::proxy::RouteKind::BestFit,
+            "inverted" => crate::proxy::RouteKind::Inverted,
             other => return Err(format!("unknown route policy {other}")),
         };
     }
@@ -225,6 +228,17 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
         }
         if let Some(b) = w.get("share_kv_link").and_then(|v| v.as_bool()) {
             ws.share_kv_link = b;
+        }
+        // Adaptive-controller knobs (honored only by the adaptive
+        // strategy; defaults come from the calib_wsync sweep).
+        if let Some(r) = w.get("rollout_bound_ratio").and_then(|v| v.as_f64()) {
+            if r <= 0.0 || !r.is_finite() {
+                return Err(format!("weights.rollout_bound_ratio must be positive, got {r}"));
+            }
+            ws.adaptive.rollout_bound_ratio = r;
+        }
+        if let Some(c) = w.get("cooldown_steps").and_then(|v| v.as_usize()) {
+            ws.adaptive.cooldown_steps = c;
         }
         if let Some(gb) = w.get("bucket_gb").and_then(|v| v.as_f64()) {
             // Bucket granularity of the Mooncake model every weight
@@ -339,6 +353,10 @@ mod tests {
         assert_eq!(clean.route, crate::proxy::RouteKind::Affinity);
         let tb = scenario_from_json(r#"{"route": "token_backlog"}"#).unwrap();
         assert_eq!(tb.route, crate::proxy::RouteKind::TokenBacklog);
+        let bf = scenario_from_json(r#"{"route": "best_fit"}"#).unwrap();
+        assert_eq!(bf.route, crate::proxy::RouteKind::BestFit);
+        let inv = scenario_from_json(r#"{"route": "inverted"}"#).unwrap();
+        assert_eq!(inv.route, crate::proxy::RouteKind::Inverted);
     }
 
     #[test]
@@ -385,6 +403,19 @@ mod tests {
         );
         let ad = scenario_from_json(r#"{"weights": {"strategy": "adaptive"}}"#).unwrap();
         assert_eq!(ad.weights.strategy, SyncStrategyKind::Adaptive);
+        // Adaptive-controller knobs land on the template the driver
+        // clones (and leave the strategy selector untouched).
+        let tuned = scenario_from_json(
+            r#"{"weights": {"strategy": "adaptive", "rollout_bound_ratio": 2.0,
+                            "cooldown_steps": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(tuned.weights.adaptive.rollout_bound_ratio, 2.0);
+        assert_eq!(tuned.weights.adaptive.cooldown_steps, 3);
+        assert!(scenario_from_json(
+            r#"{"weights": {"rollout_bound_ratio": -1.0}}"#
+        )
+        .is_err());
         // Bucket granularity of the Mooncake model.
         let bk =
             scenario_from_json(r#"{"weights": {"strategy": "rolling", "bucket_gb": 0.5}}"#)
@@ -447,6 +478,8 @@ mod tests {
     #[test]
     fn lookups() {
         assert_eq!(model_by_name("8b").unwrap().name, "Qwen3-8B");
+        assert_eq!(model_by_name("moe").unwrap().name, "Qwen3-30B-A3B");
+        assert!(model_by_name("moe").unwrap().moe.is_some());
         assert_eq!(mode_by_name("RollArt"), Some(Mode::RollArt));
         assert_eq!(domain_by_name("game"), Some(TaskDomain::Game));
         assert!(domain_by_name("nope").is_none());

@@ -175,6 +175,13 @@ pub struct ElasticReport {
     /// Iterations where the KV link — not either pool — was the
     /// bottleneck, so the split controller held both pools.
     pub kv_bound_holds: u64,
+    /// Engines *repurposed* across GPU classes instead of a
+    /// retire + provision pair: when one PD pool wants to grow while
+    /// the other wants to shrink ([`PdAutoScaler::reconcile`]), the
+    /// shrinking pool's engine is re-homed onto the growing pool's
+    /// class, paying the warm-up weight pull but skipping the runtime
+    /// boot a cold provision pays.
+    pub repurposed: u64,
 }
 
 /// The feedback controller over [`IterationCost`] measurements.
@@ -411,6 +418,65 @@ impl PdAutoScaler {
             self.report.prefill_scale_downs + self.report.decode_scale_downs;
         (dp, dd)
     }
+
+    /// Reconcile one iteration's `(prefill, decode)` decisions into a
+    /// rebalance plan: when one pool grows while the other shrinks (a
+    /// *regime shift* — the workload's phase balance moved, not its
+    /// total demand), matched Up/Down pairs become **repurposes**: the
+    /// shrinking pool's engines are re-homed onto the growing pool's
+    /// class instead of being retired while fresh nodes are bound.  A
+    /// repurposed engine pays the warm-up weight pull (its weights are
+    /// re-laid-out for the new class's parallelism) but skips the
+    /// runtime boot — the engine process survives the move.  Unmatched
+    /// remainders stay ordinary scale decisions.
+    ///
+    /// Kept separate from [`PdAutoScaler::observe`] so the detector →
+    /// decision mapping stays independently testable; the driver calls
+    /// `observe` then `reconcile` back-to-back.
+    pub fn reconcile(&mut self, dp: ScaleDecision, dd: ScaleDecision) -> PdRebalance {
+        use ScaleDecision::{Down, Up};
+        let (mut plan_p, mut plan_d) = (dp, dd);
+        let mut p_to_d = 0;
+        let mut d_to_p = 0;
+        match (dp, dd) {
+            (Down(a), Up(b)) => {
+                let m = a.min(b);
+                p_to_d = m;
+                plan_p = if a > m { Down(a - m) } else { ScaleDecision::Hold };
+                plan_d = if b > m { Up(b - m) } else { ScaleDecision::Hold };
+            }
+            (Up(a), Down(b)) => {
+                let m = a.min(b);
+                d_to_p = m;
+                plan_p = if a > m { Up(a - m) } else { ScaleDecision::Hold };
+                plan_d = if b > m { Down(b - m) } else { ScaleDecision::Hold };
+            }
+            _ => {}
+        }
+        self.report.repurposed += (p_to_d + d_to_p) as u64;
+        PdRebalance {
+            prefill: plan_p,
+            decode: plan_d,
+            repurpose_prefill_to_decode: p_to_d,
+            repurpose_decode_to_prefill: d_to_p,
+        }
+    }
+}
+
+/// One iteration's reconciled PD rebalance plan
+/// ([`PdAutoScaler::reconcile`]): residual per-pool scale decisions
+/// plus the cross-class repurpose counts carved out of matched
+/// Up/Down pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PdRebalance {
+    /// Residual decision for the prefill pool.
+    pub prefill: ScaleDecision,
+    /// Residual decision for the decode pool.
+    pub decode: ScaleDecision,
+    /// Engines to re-home from the prefill class to the decode class.
+    pub repurpose_prefill_to_decode: usize,
+    /// Engines to re-home from the decode class to the prefill class.
+    pub repurpose_decode_to_prefill: usize,
 }
 
 #[cfg(test)]
@@ -595,6 +661,50 @@ mod tests {
         let max = s.policy.decode.max_engines;
         let (_, dd) = s.observe(&sig(0.0, 1e9, 0.0), 4, max - 1, 0, 1);
         assert_eq!(dd, ScaleDecision::Hold, "live + warming at max");
+    }
+
+    #[test]
+    fn reconcile_converts_opposed_decisions_into_repurposes() {
+        use ScaleDecision::{Down, Hold, Up};
+        let mut s = PdAutoScaler::new(pd_policy());
+        // Decode-bound regime shift: (Down(2), Up(2)) → 2 repurposes,
+        // no residual scaling.
+        let plan = s.reconcile(Down(2), Up(2));
+        assert_eq!(plan.prefill, Hold);
+        assert_eq!(plan.decode, Hold);
+        assert_eq!(plan.repurpose_prefill_to_decode, 2);
+        assert_eq!(plan.repurpose_decode_to_prefill, 0);
+        assert_eq!(s.report.repurposed, 2);
+        // Unbalanced pair keeps the residual on the bigger side.
+        let plan = s.reconcile(Up(3), Down(1));
+        assert_eq!(plan.prefill, Up(2));
+        assert_eq!(plan.decode, Hold);
+        assert_eq!(plan.repurpose_decode_to_prefill, 1);
+        assert_eq!(s.report.repurposed, 3);
+        // Same-direction or Hold pairs pass through untouched.
+        for (dp, dd) in [(Up(2), Up(2)), (Down(1), Down(1)), (Hold, Up(2)), (Hold, Hold)] {
+            let plan = s.reconcile(dp, dd);
+            assert_eq!(plan.prefill, dp);
+            assert_eq!(plan.decode, dd);
+            assert_eq!(plan.repurpose_prefill_to_decode, 0);
+            assert_eq!(plan.repurpose_decode_to_prefill, 0);
+        }
+        assert_eq!(s.report.repurposed, 3, "pass-throughs count nothing");
+    }
+
+    #[test]
+    fn observe_then_reconcile_repurposes_on_regime_shift() {
+        use ScaleDecision::Hold;
+        let mut s = PdAutoScaler::new(pd_policy());
+        // The decode-bound signal from
+        // `decode_bound_grows_decode_and_shrinks_prefill`, reconciled:
+        // the opposed pair becomes pure repurposing.
+        let (dp, dd) = s.observe(&sig(0.0, 1e9, 0.0), 4, 4, 0, 0);
+        let plan = s.reconcile(dp, dd);
+        assert_eq!(plan.repurpose_prefill_to_decode, 2);
+        assert_eq!(plan.prefill, Hold);
+        assert_eq!(plan.decode, Hold);
+        assert_eq!(s.report.repurposed, 2);
     }
 
     #[test]

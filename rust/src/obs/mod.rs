@@ -65,3 +65,16 @@ pub const CTR_VERSION_LAG_MAX: &str = "version_lag_max";
 pub const CTR_KV_QUEUE_DELAY: &str = "kv_link_queue_delay_s";
 /// Cumulative weight fan-out link queue delay, seconds.
 pub const CTR_WLINK_QUEUE_DELAY: &str = "weight_link_queue_delay_s";
+
+// Per-GPU-class rows (heterogeneous fleet plane): one gauge per class
+// present in the fleet, named `<prefix><class>` (e.g.
+// `class_live_H20`).  Classes appear and disappear as the elastic
+// controller repurposes engines, so the rows are emitted from the
+// live fleet scan, not a fixed catalog.
+
+/// Live engines of one GPU class (prefix; suffixed with the class name).
+pub const CTR_CLASS_LIVE_PREFIX: &str = "class_live_";
+/// Engines of one class currently mid-step.
+pub const CTR_CLASS_BUSY_PREFIX: &str = "class_busy_";
+/// Outstanding prefill+decode tokens queued on one class's engines.
+pub const CTR_CLASS_BACKLOG_PREFIX: &str = "class_backlog_tokens_";

@@ -116,6 +116,42 @@ impl EngineSim {
         }
     }
 
+    /// Re-home the engine onto a different GPU class (the elastic
+    /// repurpose path): the worker keeps its id, queues, and stats but
+    /// all subsequent step times come from the new class's roofline.
+    /// Callers are expected to have drained in-flight work first (a
+    /// repurpose rides the same take-down/warm-up machinery as a
+    /// retire) — the coordinator pays the weight re-pull, not this
+    /// struct.
+    pub fn repurpose(&mut self, class: GpuClass, gpus: usize, max_batch: usize) {
+        assert!(gpus > 0 && max_batch > 0);
+        self.class = class;
+        self.gpus = gpus;
+        self.max_batch = max_batch;
+    }
+
+    /// Analytic time of one prefill (admission) step over `new_tokens`
+    /// fresh tokens at `ctx_sum` total cached context, on this engine's
+    /// class/GPU count: exactly what [`EngineSim::step`] charges,
+    /// including the scheduling floor and interference multiplier.
+    /// Public so the conformance suite and best-fit routing score
+    /// engines with the *same* expression the DES executes.
+    pub fn prefill_step_s(&self, new_tokens: f64, ctx_sum: f64) -> f64 {
+        let cost = self.model.prefill_cost(new_tokens, ctx_sum);
+        phase_time(&cost, self.class.spec(), self.gpus).max(PREFILL_STEP_FLOOR_S)
+            * self.interference
+    }
+
+    /// Analytic time of one decode step advancing a batch of `batch`
+    /// requests at `mean_ctx` average context by `chunk` tokens each —
+    /// the exact expression [`EngineSim::step`]'s decode branch charges
+    /// (roofline, per-step floor, interference).
+    pub fn decode_step_s(&self, batch: f64, mean_ctx: f64, chunk: f64) -> f64 {
+        let cost = self.model.decode_cost(batch, mean_ctx).scale(chunk);
+        phase_time(&cost, self.class.spec(), self.gpus).max(chunk * DECODE_STEP_FLOOR_S)
+            * self.interference
+    }
+
     /// Set decode chunking (events-per-token trade-off; see §Perf).
     pub fn set_decode_chunk(&mut self, chunk: f64) -> &mut Self {
         assert!(chunk >= 1.0);
@@ -248,10 +284,7 @@ impl EngineSim {
                     ctx,
                 });
             }
-            let cost = self.model.prefill_cost(new_tokens, ctx_sum);
-            let elapsed = phase_time(&cost, self.class.spec(), self.gpus)
-                .max(PREFILL_STEP_FLOOR_S)
-                * self.interference;
+            let elapsed = self.prefill_step_s(new_tokens, ctx_sum);
             self.stats.prefill_steps += 1;
             self.stats.prefill_tokens += new_tokens;
             self.stats.busy_s += elapsed;
@@ -284,10 +317,7 @@ impl EngineSim {
 
         let batch = self.active.len() as f64;
         let mean_ctx = ctx_sum / batch;
-        let cost = self.model.decode_cost(batch, mean_ctx).scale(chunk);
-        let elapsed = phase_time(&cost, self.class.spec(), self.gpus)
-            .max(chunk * DECODE_STEP_FLOOR_S)
-            * self.interference;
+        let elapsed = self.decode_step_s(batch, mean_ctx, chunk);
 
         for a in &mut self.active {
             a.decoded += chunk;
@@ -532,6 +562,21 @@ mod tests {
         assert_eq!(n1, n2);
         assert_eq!(tok1, tok2, "token accounting is unchanged");
         assert!((t2 / t1 - 1.22).abs() < 1e-6, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn repurpose_changes_step_times_in_place() {
+        let mut e = EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), 64);
+        // Decode-heavy on H800 …
+        let t800 = e.decode_step_s(32.0, 4000.0, 16.0);
+        e.repurpose(GpuClass::H20, 6, 64);
+        assert_eq!(e.class, GpuClass::H20);
+        assert_eq!(e.gpus, 6);
+        // … is slower than the same batch after repurposing onto 6×H20
+        // (Fig 4b's cost-equivalent swap), with id/stats intact.
+        let t20 = e.decode_step_s(32.0, 4000.0, 16.0);
+        assert!(t20 < t800, "{t20} vs {t800}");
+        assert_eq!(e.id, 0);
     }
 
     #[test]

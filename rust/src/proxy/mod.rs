@@ -17,10 +17,12 @@ mod engine_sim;
 pub mod pd;
 pub mod route;
 
-pub use engine_sim::{EngineSim, EngineStats, SimRequest, StepOutcome};
+pub use engine_sim::{
+    EngineSim, EngineStats, SimRequest, StepOutcome, DECODE_STEP_FLOOR_S, PREFILL_STEP_FLOOR_S,
+};
 pub use route::{
-    AffinityRoute, DomainFairRoute, LeastLoadedRoute, RouteCtx, RouteKind, RoutePolicy,
-    TokenBacklogRoute,
+    AffinityRoute, BestFitRoute, DomainFairRoute, LeastLoadedRoute, RouteCtx, RouteKind,
+    RoutePolicy, TokenBacklogRoute,
 };
 
 use crate::env::TaskDomain;
@@ -53,9 +55,11 @@ pub struct LlmProxy {
     /// coherent by routing all up/down flips through
     /// [`LlmProxy::set_down`].
     live: usize,
-    /// Engine indices per GPU class (engines are never removed, only
-    /// marked down/retired, so these only grow).  The PD class-pinned
-    /// dispatch iterates one pool's members instead of the whole fleet.
+    /// Engine indices per GPU class.  Engines are never removed from
+    /// the fleet (only marked down/retired), but a *repurpose*
+    /// ([`LlmProxy::reclass_engine`]) moves an index between class
+    /// lists.  The PD class-pinned dispatch iterates one pool's
+    /// members instead of the whole fleet.
     class_members: BTreeMap<GpuClass, Vec<usize>>,
 }
 
@@ -124,6 +128,48 @@ impl LlmProxy {
         }
         self.engines.push(engine);
         idx
+    }
+
+    /// Re-home engine `idx` onto a new GPU class (elastic repurpose):
+    /// the engine keeps its fleet index but moves between the
+    /// [`LlmProxy::add_to_class`] member lists, and its step times come
+    /// from the new class's roofline ([`EngineSim::repurpose`]).  The
+    /// caller is expected to have taken the engine down and drained it
+    /// first — a repurpose pays the same warm-up pull as a fresh
+    /// provision before the engine re-joins the live fleet.
+    pub fn reclass_engine(&mut self, idx: usize, class: GpuClass, gpus: usize, max_batch: usize) {
+        let old = self.engines[idx].class;
+        if old != class {
+            let members = self.class_members.get_mut(&old).expect("class list exists");
+            let pos = members
+                .iter()
+                .position(|&i| i == idx)
+                .expect("engine listed under its own class");
+            members.remove(pos);
+            self.class_members.entry(class).or_default().push(idx);
+        }
+        self.engines[idx].repurpose(class, gpus, max_batch);
+        debug_assert!(
+            self.class_members_coherent(),
+            "class member lists drifted after reclass of engine {idx}"
+        );
+    }
+
+    /// Full-coherence rescan of the class member lists: every engine
+    /// appears exactly once, under exactly its own class.  Debug-assert
+    /// material on the mutation paths; public so the invariants suite
+    /// can promote it to an explicit property.
+    pub fn class_members_coherent(&self) -> bool {
+        let mut seen = vec![0usize; self.engines.len()];
+        for (&class, members) in &self.class_members {
+            for &i in members {
+                if i >= self.engines.len() || self.engines[i].class != class {
+                    return false;
+                }
+                seen[i] += 1;
+            }
+        }
+        seen.iter().all(|&n| n == 1)
     }
 
     /// Live (not-down) engine count (maintained, not scanned).
@@ -373,6 +419,8 @@ mod tests {
             RouteKind::LeastLoaded,
             RouteKind::DomainFair,
             RouteKind::TokenBacklog,
+            RouteKind::BestFit,
+            RouteKind::Inverted,
         ] {
             let mut p = proxy();
             p.set_route_policy(kind.make());
@@ -452,6 +500,33 @@ mod tests {
             .add_to_class(req(1, TaskDomain::Game), GpuClass::H800)
             .unwrap();
         assert_eq!(e, idx, "pinned dispatch must find the new class member");
+    }
+
+    #[test]
+    fn reclass_engine_moves_between_class_lists() {
+        let mut p = proxy();
+        assert!(p.class_members_coherent());
+        // Repurpose the H800 engine into the H20 pool (6-GPU layout).
+        p.reclass_engine(0, GpuClass::H20, 6, 32);
+        assert!(p.class_members_coherent());
+        assert_eq!(p.engines()[0].class, GpuClass::H20);
+        // Class-pinned dispatch finds it under its new class only.
+        assert!(p
+            .add_to_class(req(1, TaskDomain::Game), GpuClass::H800)
+            .is_none());
+        // … and the H20 pool now has three members: load them all.
+        let mut hits = std::collections::BTreeSet::new();
+        for i in 0..3 {
+            hits.insert(
+                p.add_to_class(req(10 + i, TaskDomain::Game), GpuClass::H20)
+                    .unwrap(),
+            );
+        }
+        assert!(hits.contains(&0), "repurposed engine takes H20 work");
+        // Same-class reclass (gpus/max_batch resize) is a no-op on the
+        // lists but still coherent.
+        p.reclass_engine(2, GpuClass::H20, 8, 64);
+        assert!(p.class_members_coherent());
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //!   (ProRL-style agentic rollouts) make request count a poor load
 //!   proxy, because one 20k-token decode weighs as much as dozens of
 //!   short tool calls.
+//! * [`BestFitRoute`] — roofline-driven best fit (paper principle 1):
+//!   scores every live engine by the *analytic service time* of the
+//!   domain's expected per-turn work on that engine's GPU class
+//!   ([`EngineSim::prefill_step_s`] / [`EngineSim::decode_step_s`]),
+//!   scaled by queue depth.  Prefill-heavy domains land on
+//!   compute-rich classes and decode-heavy domains on bandwidth-rich
+//!   classes *emergently* — no affinity table, the roofline decides.
+//!   Its `inverted` arm keys on the reciprocal fit, deliberately
+//!   placing work on the worst-suited class (Fig 10's lower bound).
 //!
 //! Policies see only the live fleet and a [`RouteCtx`] snapshot of the
 //! proxy's declarations, so they stay independently unit-testable.
@@ -102,6 +111,13 @@ pub enum RouteKind {
     DomainFair,
     /// Least outstanding prefill+decode *tokens*, affinity ignored.
     TokenBacklog,
+    /// Roofline-driven best fit: minimize analytic per-turn service
+    /// time × queue depth (paper principle 1 without an affinity
+    /// table).
+    BestFit,
+    /// Adversarial worst fit (`BestFit` with the fit term inverted):
+    /// the ablation floor for the affinity study.
+    Inverted,
 }
 
 impl RouteKind {
@@ -111,6 +127,8 @@ impl RouteKind {
             RouteKind::LeastLoaded => "least_loaded",
             RouteKind::DomainFair => "domain_fair",
             RouteKind::TokenBacklog => "token_backlog",
+            RouteKind::BestFit => "best_fit",
+            RouteKind::Inverted => "inverted",
         }
     }
 
@@ -121,6 +139,8 @@ impl RouteKind {
             RouteKind::LeastLoaded => Box::new(LeastLoadedRoute),
             RouteKind::DomainFair => Box::new(DomainFairRoute::new()),
             RouteKind::TokenBacklog => Box::new(TokenBacklogRoute),
+            RouteKind::BestFit => Box::new(BestFitRoute::best()),
+            RouteKind::Inverted => Box::new(BestFitRoute::inverted()),
         }
     }
 }
@@ -271,6 +291,76 @@ impl RoutePolicy for TokenBacklogRoute {
         (0..engines.len())
             .filter(|&i| !engines[i].is_down() && !engines[i].is_suspended())
             .min_by(|&a, &b| engines[a].backlog_tokens().total_cmp(&engines[b].backlog_tokens()))
+    }
+}
+
+/// Roofline-driven best fit (paper principle 1, no affinity table).
+///
+/// For every live engine the policy computes the *analytic service
+/// time* of the domain's expected per-turn work — mean observation
+/// tokens prefetched into the mean mid-rollout context, then the mean
+/// action decoded in the engine's would-be batch — using the exact
+/// step-time expressions the DES executes
+/// ([`EngineSim::prefill_step_s`] / [`EngineSim::decode_step_s`]).
+/// The pick minimizes `fit × (1 + load)`: service estimate scaled by
+/// queue depth.  Compute-bound prefill work therefore scores best on
+/// FLOPs-rich classes and bandwidth-bound decode work on HBM-rich
+/// classes *because the roofline says so*, not because a table does —
+/// a new GPU class joins the study by defining its [`crate::hw::GpuSpec`].
+///
+/// The `inverted` arm keys on `(1 + load) / fit` instead: still
+/// queue-balanced (it never starves an engine), but deliberately
+/// preferring the class *worst* suited to the domain.  This is the
+/// affinity study's lower bound — placement value is the spread
+/// between the two arms at equal total FLOPs.
+#[derive(Clone, Copy, Debug)]
+pub struct BestFitRoute {
+    invert: bool,
+}
+
+impl BestFitRoute {
+    pub fn best() -> Self {
+        BestFitRoute { invert: false }
+    }
+
+    pub fn inverted() -> Self {
+        BestFitRoute { invert: true }
+    }
+
+    /// Expected service seconds of one turn of `domain` on engine `e`,
+    /// were it dispatched there now.
+    fn fit_s(e: &EngineSim, domain: TaskDomain) -> f64 {
+        let p = crate::env::profile::DomainProfile::of(domain);
+        let turns = p.turns.mean().max(1.0);
+        let obs = p.obs_tokens_per_turn.mean().max(1.0);
+        let act = p.action_tokens.mean().max(1.0);
+        // Mid-rollout context: prompt plus half the rollout's growth.
+        let ctx = p.initial_prompt_tokens + 0.5 * turns * (obs + act);
+        let batch = (e.active_len() + 1) as f64;
+        e.prefill_step_s(obs, ctx) + e.decode_step_s(batch, ctx, act)
+    }
+}
+
+impl RoutePolicy for BestFitRoute {
+    fn name(&self) -> &'static str {
+        if self.invert {
+            "inverted"
+        } else {
+            "best_fit"
+        }
+    }
+
+    fn pick(&mut self, engines: &[EngineSim], domain: TaskDomain, _ctx: &RouteCtx) -> Option<usize> {
+        (0..engines.len())
+            .filter(|&i| !engines[i].is_down() && !engines[i].is_suspended())
+            .map(|i| {
+                let fit = Self::fit_s(&engines[i], domain).max(1e-12);
+                let queue = 1.0 + engines[i].load() as f64;
+                let key = if self.invert { queue / fit } else { fit * queue };
+                (key, i)
+            })
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+            .map(|(_, i)| i)
     }
 }
 
@@ -450,9 +540,75 @@ mod tests {
             RouteKind::LeastLoaded,
             RouteKind::DomainFair,
             RouteKind::TokenBacklog,
+            RouteKind::BestFit,
+            RouteKind::Inverted,
         ] {
             assert_eq!(k.make().name(), k.name());
         }
         assert_eq!(RouteKind::default(), RouteKind::Affinity);
+    }
+
+    #[test]
+    fn best_fit_places_by_phase_affinity() {
+        // Equal-cost fleet (2×H800 vs 6×H20, Table 2): decode-heavy
+        // MathTool must pick the H20 engine, prefill-heavy Swe the
+        // H800 engine — with no affinity table at all.
+        let engines = vec![
+            EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), 32),
+            EngineSim::new(1, GpuClass::H20, 6, QWEN3_8B.clone(), 32),
+        ];
+        let affinity = BTreeMap::new();
+        let mut p = BestFitRoute::best();
+        let decode_pick = p
+            .pick(&engines, TaskDomain::MathTool, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(engines[decode_pick].class, GpuClass::H20);
+        let prefill_pick = p
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(engines[prefill_pick].class, GpuClass::H800);
+        // The inverted arm flips both placements.
+        let mut inv = BestFitRoute::inverted();
+        let decode_pick = inv
+            .pick(&engines, TaskDomain::MathTool, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(engines[decode_pick].class, GpuClass::H800);
+        let prefill_pick = inv
+            .pick(&engines, TaskDomain::Swe, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(engines[prefill_pick].class, GpuClass::H20);
+    }
+
+    #[test]
+    fn best_fit_spills_under_queue_pressure() {
+        // One H20 and one H800; pile load onto the H20 engine until
+        // the queue term overrides the class fit for decode work.
+        let mut engines = vec![
+            EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), 64),
+            EngineSim::new(1, GpuClass::H20, 6, QWEN3_8B.clone(), 64),
+        ];
+        let affinity = BTreeMap::new();
+        let mut p = BestFitRoute::best();
+        for i in 0..64 {
+            engines[1].enqueue(crate::proxy::SimRequest {
+                traj: crate::rl::TrajectoryId(i),
+                domain: TaskDomain::MathTool,
+                new_tokens: 30.0,
+                ctx_tokens: 0.0,
+                decode_budget: 2000.0,
+            });
+        }
+        let got = p
+            .pick(&engines, TaskDomain::MathTool, &ctx(&affinity, None))
+            .unwrap();
+        assert_eq!(got, 0, "a 64-deep H20 queue must spill to the idle H800");
+        // Whole fleet down → None, like every other policy.
+        for e in &mut engines {
+            e.set_down(true);
+        }
+        assert_eq!(
+            p.pick(&engines, TaskDomain::MathTool, &ctx(&affinity, None)),
+            None
+        );
     }
 }

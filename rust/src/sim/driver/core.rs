@@ -120,6 +120,15 @@ enum Ev {
         gpus: usize,
         max_batch: usize,
     },
+    /// A cross-class repurpose finished its warm-up weight pull: engine
+    /// `engine` re-homes onto `class` (`gpus` wide, `max_batch` slots)
+    /// and rejoins the fleet — same slot, new roofline.
+    EngineRepurposed {
+        engine: usize,
+        class: GpuClass,
+        gpus: usize,
+        max_batch: usize,
+    },
     /// PD mode: `tid`'s KV cache finished its hop to the decode pool.
     KvDone { tid: TrajectoryId },
     /// Weight plane: engine finished its cutover and now serves the
@@ -587,7 +596,7 @@ impl<'a> DriverCore<'a> {
             env_target,
             engine_version: vec![Version(0); n_engines],
             gen_version_cache: Version(0),
-            wstrategy: cfg.weights.strategy.make(),
+            wstrategy: cfg.weights.make_strategy(),
             wlink,
             wsync: vec![EngineSync::Idle; n_engines],
             wsync_version: vec![Version(0); n_engines],
@@ -734,6 +743,41 @@ impl<'a> DriverCore<'a> {
         self.rec.counter(obs::PID_KV_LINK, obs::CTR_KV_QUEUE_DELAY, now, kv_q);
         self.rec
             .counter(obs::PID_WEIGHT_LINK, obs::CTR_WLINK_QUEUE_DELAY, now, w_q);
+        // Per-GPU-class rows (heterogeneous fleet plane): live/busy
+        // engines and token backlog per class, scanned from the fleet
+        // because repurposing moves engines between classes mid-run.
+        let mut per_class: BTreeMap<GpuClass, (f64, f64, f64)> = BTreeMap::new();
+        for (i, e) in self.proxy.engines().iter().enumerate() {
+            let row = per_class.entry(e.class).or_insert((0.0, 0.0, 0.0));
+            if !self.engine_down[i] {
+                row.0 += 1.0;
+                row.2 += e.backlog_tokens();
+            }
+            if self.engine_busy[i] {
+                row.1 += 1.0;
+            }
+        }
+        for (class, (live, busy, backlog)) in per_class {
+            let name = class.name();
+            self.rec.counter(
+                obs::PID_DRIVER,
+                &format!("{}{name}", obs::CTR_CLASS_LIVE_PREFIX),
+                now,
+                live,
+            );
+            self.rec.counter(
+                obs::PID_DRIVER,
+                &format!("{}{name}", obs::CTR_CLASS_BUSY_PREFIX),
+                now,
+                busy,
+            );
+            self.rec.counter(
+                obs::PID_DRIVER,
+                &format!("{}{name}", obs::CTR_CLASS_BACKLOG_PREFIX),
+                now,
+                backlog,
+            );
+        }
     }
 
     /// Viewer label of engine `e`: index, GPU class, and (PD) the pool
@@ -1744,12 +1788,23 @@ impl<'a> DriverCore<'a> {
         let prov_d = self.pending_provisions.get(&d_class).copied().unwrap_or(0);
         let scaler = self.pd_scaler.as_mut().expect("pd autoscale without scaler");
         let (dp, dd) = scaler.observe(&sig, live_p, live_d, prov_p, prov_d);
+        // Opposed decisions are a regime shift: matched Up/Down pairs
+        // become cross-class repurposes (warm-up pull only, no boot)
+        // instead of a retire on one side and a cold provision on the
+        // other; the residuals stay ordinary scale decisions.
+        let plan = scaler.reconcile(dp, dd);
         let (prefill_policy, decode_policy) = {
             let s = self.pd_scaler.as_ref().expect("checked above");
             (s.policy.prefill.clone(), s.policy.decode.clone())
         };
-        self.apply_scale_decision(dp, &prefill_policy);
-        self.apply_scale_decision(dd, &decode_policy);
+        for _ in 0..plan.repurpose_prefill_to_decode {
+            self.repurpose_one(p_class, &decode_policy);
+        }
+        for _ in 0..plan.repurpose_decode_to_prefill {
+            self.repurpose_one(d_class, &prefill_policy);
+        }
+        self.apply_scale_decision(plan.prefill, &prefill_policy);
+        self.apply_scale_decision(plan.decode, &decode_policy);
     }
 
     /// Start warming one engine of `policy`'s class: bind capacity
@@ -1899,6 +1954,123 @@ impl<'a> DriverCore<'a> {
         self.start_waves();
         self.check_dissemination_done();
         self.update_env_target();
+    }
+
+    /// Repurpose the least-loaded live engine of `from` onto the pool
+    /// `to` provisions for (minimal re-queued work, same victim rule as
+    /// a scale-down).  No live candidate → the repurpose is dropped
+    /// this iteration, like a capacity-starved provision.
+    fn repurpose_one(&mut self, from: GpuClass, to: &ElasticPolicy) {
+        let mut candidates = self.live_engines_of(from);
+        candidates.sort_by_key(|&i| self.proxy.engines()[i].load());
+        if let Some(&e) = candidates.first() {
+            self.repurpose_engine(e, to);
+        }
+    }
+
+    /// Re-home engine `e` onto `to`'s class (a matched Up/Down pair
+    /// from [`PdAutoScaler::reconcile`]): bind new-class capacity,
+    /// drain and take the engine down, release the old binding, and
+    /// admit the warm-up weight pull on the contended link *now* — a
+    /// repurpose skips the runtime boot a fresh provision pays (the
+    /// engine process survives; only its weights are re-laid-out for
+    /// the new class), which is exactly why the controller prefers it
+    /// over a retire + provision pair under regime shifts.
+    fn repurpose_engine(&mut self, e: usize, to: &ElasticPolicy) {
+        if self.engine_down[e] {
+            return;
+        }
+        // Bind the new class's capacity before touching the engine: no
+        // capacity → the decision is dropped (the engine keeps serving
+        // its old pool; next iteration retries), mirroring
+        // `provision_engine`'s drop-not-queue rule.
+        let new_binding = match self.rm.as_mut() {
+            Some(rm) => {
+                match rm.bind(
+                    Role::ActorGen,
+                    &[ResourceClass::Gpu(to.class)],
+                    to.gpus_per_engine,
+                ) {
+                    Ok(b) => Some(b.id),
+                    Err(_) => return,
+                }
+            }
+            None => None,
+        };
+        let (reqs, lost) = self.take_down_engine(e);
+        // Conversion window: the retired flag keeps a chaos
+        // PoolRestore or a stale RecoveryPull from reviving the engine
+        // into its *old* class mid-conversion; EngineRepurposed clears
+        // it (the epoch bump in take_down_engine already voided any
+        // in-flight EngineFree).
+        self.engine_retired[e] = true;
+        if let (Some(rm), Some(b)) = (self.rm.as_mut(), self.engine_bindings[e].take()) {
+            rm.release(b);
+        }
+        self.engine_bindings[e] = new_binding;
+        self.requeue_drained(reqs);
+        self.replay_lost(lost);
+        if self.suspend_draining {
+            self.finish_drain();
+        }
+        self.start_waves();
+        self.check_dissemination_done();
+        self.update_env_target();
+        // The warming engine counts toward the target pool's
+        // provisioning total so the controller cannot flap past its
+        // bounds while conversions are in flight.
+        *self.pending_provisions.entry(to.class).or_insert(0) += 1;
+        let now = self.now();
+        let bytes = self.cfg.model.weight_bytes();
+        // No push gate: the store already holds the published version.
+        let pull_done = self.pull_weights(now, bytes, false);
+        let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
+        self.wreport.warmup_pulls += 1;
+        if let Some(r) = self.elastic_report_mut() {
+            r.provision_wait_s += delay;
+        }
+        self.q.schedule_in(
+            delay,
+            Ev::EngineRepurposed {
+                engine: e,
+                class: to.class,
+                gpus: to.gpus_per_engine,
+                max_batch: to.max_batch,
+            },
+        );
+    }
+
+    /// The repurposed engine's warm-up pull landed: re-home it onto the
+    /// new class (same fleet slot — no parallel-state pushes) and
+    /// rejoin the live fleet, mirroring `revive_engine`'s rejoin
+    /// sequence plus the class move itself.
+    fn on_engine_repurposed(&mut self, e: usize, class: GpuClass, gpus: usize, max_batch: usize) {
+        if let Some(n) = self.pending_provisions.get_mut(&class) {
+            *n = n.saturating_sub(1);
+        }
+        self.engine_retired[e] = false;
+        self.proxy.reclass_engine(e, class, gpus, max_batch);
+        self.engine_down[e] = false;
+        self.engine_up_since[e] = Some(self.now());
+        self.idle_open(e, BubbleCause::EnvWait);
+        self.proxy.set_down(e, false);
+        // The pull delivered the current trainer-side version; any
+        // per-engine sync the take-down cancelled stays cancelled.
+        self.engine_version[e] = self.version;
+        self.wsync[e] = EngineSync::Idle;
+        self.wsync_version[e] = self.version;
+        self.recompute_gen_version();
+        if !self.proxy.is_suspended() {
+            self.proxy.engines_mut()[e].resume();
+        }
+        if self.rec.is_enabled() {
+            let label = self.engine_label(e);
+            self.rec.process_name(Self::engine_pid(e), &label);
+        }
+        self.update_env_target();
+        self.flush_pending();
+        self.refill();
+        self.kick_engine(e);
     }
 
     // ---- reward & training ------------------------------------------
@@ -2505,6 +2677,12 @@ impl<'a> DriverCore<'a> {
                     gpus,
                     max_batch,
                 } => self.on_warmup_pull(binding, class, gpus, max_batch),
+                Ev::EngineRepurposed {
+                    engine,
+                    class,
+                    gpus,
+                    max_batch,
+                } => self.on_engine_repurposed(engine, class, gpus, max_batch),
                 Ev::KvDone { tid } => self.on_kv_done(tid),
                 Ev::WsyncDone { engine, epoch } => self.on_wsync_done(engine, epoch),
                 Ev::WsyncStreamed { engine, epoch } => self.on_wsync_streamed(engine, epoch),

@@ -142,6 +142,12 @@ pub struct WeightsScenario {
     /// transfers, the trainer→store push paces them, and the cutover
     /// pays the per-bucket coordination residual (Table 4).
     pub mooncake: MooncakeConfig,
+    /// Template for [`SyncStrategyKind::Adaptive`]: the controller the
+    /// driver clones when the strategy is adaptive, carrying the tuned
+    /// `rollout_bound_ratio` / `cooldown_steps` knobs
+    /// ([`SyncStrategyKind`] itself is `Copy + Eq` and cannot hold the
+    /// f64 ratio).  Ignored by every other strategy.
+    pub adaptive: AdaptiveSync,
 }
 
 impl Default for WeightsScenario {
@@ -152,6 +158,7 @@ impl Default for WeightsScenario {
             fanout_slots: 2,
             share_kv_link: false,
             mooncake: MooncakeConfig::default(),
+            adaptive: AdaptiveSync::new(),
         }
     }
 }
@@ -162,6 +169,17 @@ impl WeightsScenario {
         WeightsScenario {
             strategy,
             ..WeightsScenario::default()
+        }
+    }
+
+    /// Instantiate the configured strategy.  Unlike
+    /// [`SyncStrategyKind::make`] this honors the scenario's
+    /// [`WeightsScenario::adaptive`] template, so tuned controller
+    /// knobs survive into the driver.
+    pub fn make_strategy(&self) -> Box<dyn SyncStrategy> {
+        match self.strategy {
+            SyncStrategyKind::Adaptive => Box::new(self.adaptive),
+            other => other.make(),
         }
     }
 
@@ -470,6 +488,26 @@ pub struct AdaptiveSync {
 }
 
 impl AdaptiveSync {
+    /// Calibrated defaults (see the `calib_wsync` bench, which sweeps
+    /// `rollout_bound_ratio` × `cooldown_steps` over the PD + chaos +
+    /// elastic stress scenario, mirroring how
+    /// [`PdElasticPolicy`](crate::elastic::PdElasticPolicy)'s
+    /// thresholds were chosen):
+    ///
+    /// * `rollout_bound_ratio = 1.0` — treat the iteration as
+    ///   rollout-bound as soon as the trainer waits longer on
+    ///   `get_batch` than it trains.  Laxer ratios (2.0) let
+    ///   dissemination keep stealing bandwidth from an already-starved
+    ///   rollout; tighter ratios (0.5) drop `k` on noise and re-raise
+    ///   it a few iterations later, churning without winning goodput.
+    /// * `cooldown_steps = 1` — one settle iteration after each
+    ///   adjustment.  `0` double-adjusts before the pipeline re-reaches
+    ///   steady state; `3` reacts a full staleness window late under
+    ///   regime shifts.
+    ///
+    /// The sweep's table is written to `bench-results/calib_wsync.csv`
+    /// and the chosen cell is pinned by
+    /// `adaptive_defaults_match_calibration` below.
     pub fn new() -> Self {
         AdaptiveSync {
             k: 1,
@@ -821,6 +859,40 @@ mod tests {
         assert!(w.validate().is_ok());
         assert!(w.strategy.make().blocking());
         assert!(!w.share_kv_link);
+    }
+
+    #[test]
+    fn adaptive_defaults_match_calibration() {
+        // Pinned to the `calib_wsync` sweep's chosen cell (see the doc
+        // on `AdaptiveSync::new`).  Changing these is a re-calibration:
+        // re-run the bench and update the rationale alongside.
+        let s = AdaptiveSync::new();
+        assert_eq!(s.rollout_bound_ratio, 1.0);
+        assert_eq!(s.cooldown_steps, 1);
+        assert_eq!((s.k(), s.min_k, s.max_k), (1, 1, 64));
+    }
+
+    #[test]
+    fn make_strategy_honors_adaptive_template() {
+        let mut w = WeightsScenario::with_strategy(SyncStrategyKind::Adaptive);
+        w.adaptive.rollout_bound_ratio = 2.0;
+        w.adaptive.cooldown_steps = 3;
+        let mut s = w.make_strategy();
+        assert_eq!(s.name(), "adaptive");
+        // Push k above min via the α-bound raise, then the tuned
+        // cooldown (3, not the default 1) holds the next three
+        // iterations even under an absurd rollout-bound signal.
+        assert_eq!(s.observe_iteration(0.0, 80.0, 4, 4), AdaptDecision::Raise);
+        for _ in 0..3 {
+            assert_eq!(s.observe_iteration(1e9, 80.0, 0, 4), AdaptDecision::Hold);
+        }
+        // Cooldown drained and k > min: wait 1.5× train is NOT
+        // rollout-bound at the tuned ratio 2.0 (the default 1.0 would
+        // answer Lower here).
+        assert_eq!(s.observe_iteration(120.0, 80.0, 0, 4), AdaptDecision::Hold);
+        // Non-adaptive strategies ignore the template.
+        let w = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 2 });
+        assert_eq!(w.make_strategy().name(), "rolling");
     }
 
     #[test]

@@ -143,6 +143,78 @@ fn weight_strategies_are_bit_deterministic() {
     }
 }
 
+/// Mixed-class fleets under the heterogeneous-fleet plane: best-fit
+/// (and inverted) routing score engines off per-class rooflines, the
+/// split elastic controller *repurposes* engines across classes on
+/// regime shifts, and adaptive weight sync streams warm-up pulls for
+/// the converted engines — all composed, twice, bit-identical (see
+/// docs/DETERMINISM.md on repurpose-event seeding).
+#[test]
+fn mixed_class_fleets_are_bit_deterministic() {
+    use rollart::sim::EnginePool;
+    let mixed_pools = || {
+        vec![
+            EnginePool {
+                class: GpuClass::H800,
+                gpus_per_engine: 2,
+                engines: 2,
+                max_batch: 16,
+            },
+            EnginePool {
+                class: GpuClass::H20,
+                gpus_per_engine: 6,
+                engines: 2,
+                max_batch: 16,
+            },
+        ]
+    };
+    for route in [
+        rollart::proxy::RouteKind::BestFit,
+        rollart::proxy::RouteKind::Inverted,
+    ] {
+        // Mixed fleet + roofline routing alone.
+        let mut cfg = base(Mode::RollArt);
+        cfg.gen_pools = mixed_pools();
+        cfg.affinity_routing = false;
+        cfg.route = route;
+        assert_bit_identical(&cfg, &format!("RollArt+mixed+{}", route.name()));
+
+        // + chaos + adaptive weights: crash recovery pulls and the
+        // closed-loop k tuning ride the same streams.
+        let mut chaos = base(Mode::RollArt);
+        chaos.gen_pools = mixed_pools();
+        chaos.affinity_routing = false;
+        chaos.route = route;
+        chaos.weights = WeightsScenario::with_strategy(SyncStrategyKind::Adaptive);
+        chaos.fault = FaultProfile {
+            env_crash_p: 0.01,
+            ..FaultProfile::mtbf(400.0)
+        };
+        assert_bit_identical(&chaos, &format!("RollArt+mixed+chaos+{}", route.name()));
+    }
+
+    // PD × split elastic with a forced decode-bound signal: the
+    // reconcile path converts opposed scale decisions into repurposes
+    // (Ev::EngineRepurposed), each paying a bucketized warm-up pull —
+    // composed with chaos and adaptive weight sync.
+    let mut cfg = base(Mode::RollArt);
+    cfg.iterations = 4;
+    cfg.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(2, 2)
+    });
+    let mut pol = PdElasticPolicy::for_pd(cfg.pd.as_ref().unwrap());
+    pol.decode_backlog_per_engine = -1.0;
+    cfg.pd_elastic = Some(pol);
+    cfg.weights = WeightsScenario::with_strategy(SyncStrategyKind::Adaptive);
+    cfg.fault = FaultProfile {
+        env_crash_p: 0.01,
+        ..FaultProfile::mtbf(400.0)
+    };
+    assert_bit_identical(&cfg, "RollArt+PD+repurpose+chaos+adaptive");
+}
+
 #[test]
 fn pd_runs_are_bit_deterministic() {
     let mut cfg = base(Mode::RollArt);

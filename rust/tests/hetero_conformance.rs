@@ -1,0 +1,243 @@
+//! Heterogeneous-fleet conformance suite: the simulated engine's
+//! per-class step times must reproduce the roofline cost model
+//! (`hw::roofline::phase_time` over `llm::spec` phase costs) — the
+//! quantitative premise of the paper's principle 1 — per GPU class ×
+//! model, MoE included, in the style of `weights_conformance.rs`.
+//!
+//! Tolerance statement for the golden test:
+//! * **prefill** and **decode** step times where the scheduling floors
+//!   don't bind: exact (1e-9 relative) — [`EngineSim::step`] charges
+//!   the same `phase_time` expression the analytic model evaluates
+//!   (shared via [`EngineSim::prefill_step_s`] /
+//!   [`EngineSim::decode_step_s`], which best-fit routing also scores
+//!   with);
+//! * **floor-bound** steps: exact — tiny work pins to
+//!   `PREFILL_STEP_FLOOR_S` / `chunk × DECODE_STEP_FLOOR_S` to the
+//!   digit;
+//! * every golden case first asserts its roofline sits ≥ 1.5× above
+//!   the floor, so a re-calibration of the cost model that silently
+//!   drops a case into floor territory fails loudly instead of
+//!   vacuously passing.
+
+use rollart::hw::{phase_time, GpuClass};
+use rollart::llm::{LlmSpec, QWEN3_14B, QWEN3_30B_A3B, QWEN3_32B, QWEN3_8B, TINY_E2E};
+use rollart::proxy::{EngineSim, SimRequest, StepOutcome, DECODE_STEP_FLOOR_S, PREFILL_STEP_FLOOR_S};
+use rollart::rl::TrajectoryId;
+
+/// The paper's cost-equivalent pair (§3): 2×H800 ≈ 6×H20.
+const CLASSES: [(GpuClass, usize); 2] = [(GpuClass::H800, 2), (GpuClass::H20, 6)];
+
+const MODELS: [&LlmSpec; 4] = [&QWEN3_8B, &QWEN3_14B, &QWEN3_32B, &QWEN3_30B_A3B];
+
+const PREFILL_NEW: f64 = 8000.0;
+const PREFILL_CTX: f64 = 4000.0;
+const DECODE_BATCH: usize = 64;
+const DECODE_CTX: f64 = 16000.0;
+const CHUNK: f64 = 16.0;
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+fn req(id: u64, new_tokens: f64, ctx_tokens: f64, decode_budget: f64) -> SimRequest {
+    SimRequest {
+        traj: TrajectoryId(id),
+        domain: rollart::env::TaskDomain::MathTool,
+        new_tokens,
+        ctx_tokens,
+        decode_budget,
+    }
+}
+
+fn busy_elapsed(out: StepOutcome, want_prefill: bool, what: &str) -> f64 {
+    match out {
+        StepOutcome::Busy {
+            elapsed,
+            was_prefill,
+            ..
+        } => {
+            assert_eq!(was_prefill, want_prefill, "{what}: wrong phase");
+            elapsed
+        }
+        StepOutcome::Idle => panic!("{what}: engine idled"),
+    }
+}
+
+/// Golden values: for every class × model, one executed prefill step
+/// and one executed decode step match `phase_time` over the model's
+/// `PhaseCost` exactly (floors checked non-binding first).
+#[test]
+fn golden_step_times_pin_to_the_roofline() {
+    for (class, gpus) in CLASSES {
+        for spec in MODELS {
+            let what = format!("{} × {}", class, spec.name);
+
+            // Prefill: one admission step over a single large request.
+            let analytic_prefill = phase_time(
+                &spec.prefill_cost(PREFILL_NEW, PREFILL_CTX),
+                class.spec(),
+                gpus,
+            );
+            assert!(
+                analytic_prefill > 1.5 * PREFILL_STEP_FLOOR_S,
+                "{what}: prefill case fell into floor territory ({analytic_prefill}s)"
+            );
+            let mut e = EngineSim::new(0, class, gpus, spec.clone(), DECODE_BATCH);
+            e.enqueue(req(1, PREFILL_NEW, PREFILL_CTX, 64.0));
+            let elapsed = busy_elapsed(e.step(), true, &what);
+            assert!(
+                rel(elapsed, analytic_prefill) < 1e-9,
+                "{what}: prefill step {elapsed}s vs roofline {analytic_prefill}s"
+            );
+            assert!(
+                rel(e.prefill_step_s(PREFILL_NEW, PREFILL_CTX), elapsed) < 1e-12,
+                "{what}: prefill_step_s must be the executed expression"
+            );
+
+            // Decode: a full batch at equal context, one chunked step.
+            let analytic_decode = phase_time(
+                &spec.decode_cost(DECODE_BATCH as f64, DECODE_CTX).scale(CHUNK),
+                class.spec(),
+                gpus,
+            );
+            assert!(
+                analytic_decode > 1.5 * CHUNK * DECODE_STEP_FLOOR_S,
+                "{what}: decode case fell into floor territory ({analytic_decode}s)"
+            );
+            let mut e = EngineSim::new(0, class, gpus, spec.clone(), DECODE_BATCH);
+            e.set_decode_chunk(CHUNK);
+            for i in 0..DECODE_BATCH as u64 {
+                // Active ctx after admission = ctx_tokens + new_tokens.
+                e.enqueue(req(i, 100.0, DECODE_CTX - 100.0, 1000.0));
+            }
+            busy_elapsed(e.step(), true, &format!("{what} (admission)"));
+            assert_eq!(e.active_len(), DECODE_BATCH, "{what}: batch admitted whole");
+            let elapsed = busy_elapsed(e.step(), false, &what);
+            assert!(
+                rel(elapsed, analytic_decode) < 1e-9,
+                "{what}: decode step {elapsed}s vs roofline {analytic_decode}s"
+            );
+            assert!(
+                rel(
+                    e.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK),
+                    elapsed
+                ) < 1e-12,
+                "{what}: decode_step_s must be the executed expression"
+            );
+        }
+    }
+}
+
+/// The scheduling floors bind exactly on tiny work: a sub-floor
+/// roofline never shows through.
+#[test]
+fn floors_bind_exactly_on_tiny_work() {
+    // Tiny model on a big engine: both phases sit far under the floors.
+    let mut e = EngineSim::new(0, GpuClass::H800, 8, TINY_E2E.clone(), 16);
+    e.set_decode_chunk(1.0);
+    let roofline = phase_time(&TINY_E2E.prefill_cost(1.0, 0.0), GpuClass::H800.spec(), 8);
+    assert!(roofline < PREFILL_STEP_FLOOR_S, "premise: {roofline}");
+    e.enqueue(req(1, 1.0, 0.0, 3.0));
+    let prefill = busy_elapsed(e.step(), true, "tiny prefill");
+    assert_eq!(prefill, PREFILL_STEP_FLOOR_S, "prefill floor must bind exactly");
+    let decode = busy_elapsed(e.step(), false, "tiny decode");
+    assert_eq!(decode, DECODE_STEP_FLOOR_S, "decode floor must bind exactly");
+    // Chunked floor scales with the chunk.
+    assert_eq!(
+        e.decode_step_s(1.0, 1.0, 16.0),
+        16.0 * DECODE_STEP_FLOOR_S,
+        "chunked decode floor is per token"
+    );
+}
+
+/// Principle 1 per model: on the cost-equivalent pair, prefill lands
+/// faster on compute-rich 2×H800 and decode faster on bandwidth-rich
+/// 6×H20 — for every dense size *and* the MoE spec.  This is the
+/// fleet-level premise `BestFitRoute` exploits.
+#[test]
+fn class_affinity_orderings_hold_for_every_model() {
+    for spec in MODELS {
+        let h800 = EngineSim::new(0, GpuClass::H800, 2, spec.clone(), DECODE_BATCH);
+        let h20 = EngineSim::new(1, GpuClass::H20, 6, spec.clone(), DECODE_BATCH);
+        let p800 = h800.prefill_step_s(PREFILL_NEW, PREFILL_CTX);
+        let p20 = h20.prefill_step_s(PREFILL_NEW, PREFILL_CTX);
+        assert!(
+            p800 < p20,
+            "{}: prefill must favor H800 ({p800}s vs {p20}s)",
+            spec.name
+        );
+        let d800 = h800.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK);
+        let d20 = h20.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK);
+        assert!(
+            d20 < d800,
+            "{}: decode must favor H20 ({d20}s vs {d800}s)",
+            spec.name
+        );
+    }
+}
+
+/// MoE sparsity shows through the step times: Qwen3-30B-A3B activates
+/// ~3.3B of 30.5B parameters, so its compute-bound prefill step runs
+/// far cheaper than the comparably-sized dense 32B on the same engine,
+/// while its decode step stays bandwidth-bound (full weight sweep per
+/// step — sparsity does not rescue decode).
+#[test]
+fn moe_sparsity_is_a_prefill_discount_not_a_decode_one() {
+    let moe = EngineSim::new(0, GpuClass::H800, 2, QWEN3_30B_A3B.clone(), DECODE_BATCH);
+    let dense = EngineSim::new(1, GpuClass::H800, 2, QWEN3_32B.clone(), DECODE_BATCH);
+    let ratio = moe.prefill_step_s(PREFILL_NEW, PREFILL_CTX)
+        / dense.prefill_step_s(PREFILL_NEW, PREFILL_CTX);
+    assert!(
+        ratio < 0.5,
+        "MoE prefill must be < half the dense 32B step, got {ratio}"
+    );
+    // Decode stays on the bandwidth roof for both classes: arithmetic
+    // intensity of the MoE decode step sits far below either ridge.
+    let cost = QWEN3_30B_A3B.decode_cost(DECODE_BATCH as f64, DECODE_CTX);
+    assert!(
+        cost.intensity() < GpuClass::H20.spec().ridge_point(),
+        "MoE decode must be bandwidth-bound on H20 ({} FLOP/B)",
+        cost.intensity()
+    );
+    assert!(
+        cost.intensity() < GpuClass::H800.spec().ridge_point(),
+        "MoE decode must be bandwidth-bound on H800 ({} FLOP/B)",
+        cost.intensity()
+    );
+}
+
+/// The colocation interference multiplier scales the analytic
+/// expression exactly — the conformance contract holds under PD
+/// colocation too.
+#[test]
+fn interference_scales_the_analytic_expression_exactly() {
+    let mut e = EngineSim::new(0, GpuClass::H20, 6, QWEN3_8B.clone(), DECODE_BATCH);
+    let base_p = e.prefill_step_s(PREFILL_NEW, PREFILL_CTX);
+    let base_d = e.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK);
+    e.set_interference(1.22);
+    assert!(rel(e.prefill_step_s(PREFILL_NEW, PREFILL_CTX), 1.22 * base_p) < 1e-12);
+    assert!(
+        rel(
+            e.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK),
+            1.22 * base_d
+        ) < 1e-12
+    );
+}
+
+/// Repurposing an engine re-pins its step times to the new class's
+/// roofline — the conformance contract follows the engine across the
+/// elastic plane's class moves.
+#[test]
+fn repurposed_engine_conforms_to_its_new_class() {
+    let mut e = EngineSim::new(0, GpuClass::H800, 2, QWEN3_8B.clone(), DECODE_BATCH);
+    e.repurpose(GpuClass::H20, 6, DECODE_BATCH);
+    let analytic = phase_time(
+        &QWEN3_8B.decode_cost(DECODE_BATCH as f64, DECODE_CTX).scale(CHUNK),
+        GpuClass::H20.spec(),
+        6,
+    );
+    assert!(
+        rel(e.decode_step_s(DECODE_BATCH as f64, DECODE_CTX, CHUNK), analytic) < 1e-9,
+        "repurposed engine must price off its new class"
+    );
+}

@@ -225,6 +225,123 @@ fn prop_proxy_routing_respects_class_when_uncongested() {
 }
 
 #[test]
+fn prop_class_member_lists_stay_coherent_under_chaotic_reclass() {
+    // ∀ random repurpose/crash/grow/dispatch sequences: the proxy's
+    // per-class member lists stay coherent — no engine lost from its
+    // class list, none double-booked, none listed under two classes.
+    // This promotes `LlmProxy::reclass_engine`'s debug_assert rescan to
+    // an explicit property (release builds skip debug_asserts).
+    use rollart::hw::GpuClass;
+    let classes = [GpuClass::H800, GpuClass::H20];
+    for seed in 0..250u64 {
+        let mut rng = SimRng::new(6000 + seed);
+        let mut engines = Vec::new();
+        for i in 0..rng.below(5) + 1 {
+            engines.push(EngineSim::new(
+                i as u64,
+                *rng.choose(&classes),
+                rng.below(6) + 1,
+                rollart::llm::QWEN3_8B.clone(),
+                rng.below(32) + 1,
+            ));
+        }
+        let mut proxy = LlmProxy::new(engines);
+        assert!(proxy.class_members_coherent(), "seed {seed}: incoherent at birth");
+        let mut next_id = 100u64;
+        for op in 0..40 {
+            let n = proxy.engines().len();
+            match rng.below(10) {
+                // Repurpose (the common case under an elastic regime
+                // shift) — including same-class resizes.
+                0..=4 => {
+                    let idx = rng.below(n);
+                    proxy.reclass_engine(
+                        idx,
+                        *rng.choose(&classes),
+                        rng.below(6) + 1,
+                        rng.below(32) + 1,
+                    );
+                }
+                // Crash / recover.
+                5..=6 => {
+                    let idx = rng.below(n);
+                    proxy.set_down(idx, rng.chance(0.5));
+                }
+                // Scale up: a freshly provisioned engine joins a list.
+                7 => {
+                    proxy.add_engine(EngineSim::new(
+                        next_id,
+                        *rng.choose(&classes),
+                        rng.below(6) + 1,
+                        rollart::llm::QWEN3_8B.clone(),
+                        rng.below(32) + 1,
+                    ));
+                    next_id += 1;
+                }
+                // Dispatch traffic between mutations (may find no live
+                // engine — that's fine, coherence is what's on trial).
+                _ => {
+                    let _ = proxy.add(SimRequest {
+                        traj: TrajectoryId(next_id),
+                        domain: *rng.choose(&TaskDomain::ALL),
+                        new_tokens: (rng.below(400) + 1) as f64,
+                        ctx_tokens: 0.0,
+                        decode_budget: (rng.below(100) + 1) as f64,
+                    });
+                    next_id += 1;
+                }
+            }
+            assert!(
+                proxy.class_members_coherent(),
+                "seed {seed} op {op}: class member lists drifted"
+            );
+            // Every engine is listed under exactly its own class: the
+            // coherence rescan covers it, and the fleet never shrinks.
+            assert!(proxy.engines().len() >= 1, "seed {seed} op {op}");
+        }
+    }
+}
+
+#[test]
+fn prop_pd_repurposing_runs_complete_cleanly() {
+    // ∀ seeds on a decode-starved split-elastic PD deployment (the
+    // regime-shift signal that drives prefill→decode repurposes),
+    // with engine chaos on top: every iteration completes, every
+    // trajectory lifecycle edge stays legal, and the controller acted.
+    use rollart::sim::driver::{run_traced, PdScenario};
+    use rollart::sim::Scenario;
+    for seed in 0..3u64 {
+        let mut s = Scenario::rollart_default(rollart::llm::QWEN3_8B.clone(), 0.05);
+        s.batch_size = 8;
+        s.group_size = 4;
+        s.iterations = 3;
+        s.seed = 7000 + seed * 13;
+        s.pd = Some(PdScenario {
+            gpus_per_node: 4,
+            max_batch: 16,
+            ..PdScenario::xpyd(2, 2)
+        });
+        let mut pol = rollart::elastic::PdElasticPolicy::for_pd(s.pd.as_ref().unwrap());
+        // Always-decode-bound signal: decode wants Up every iteration
+        // while prefill idles — the reconcile path's repurpose regime.
+        pol.decode_backlog_per_engine = -1.0;
+        s.pd_elastic = Some(pol);
+        s.fault = rollart::fault::FaultProfile {
+            engine_mtbf_s: Some(900.0),
+            ..s.fault
+        };
+        let (r, lc) = run_traced(&s);
+        assert_eq!(r.steps.len(), 3, "seed {seed}");
+        assert_eq!(lc.violations, 0, "seed {seed}: {:?}", lc.edges);
+        let e = &r.elastic;
+        assert!(
+            e.decode_scale_ups + e.repurposed > 0,
+            "seed {seed}: the forced decode-bound signal must move the controller ({e:?})"
+        );
+    }
+}
+
+#[test]
 fn prop_event_queue_is_chronological_under_random_interleaving() {
     for seed in 0..50 {
         let mut rng = SimRng::new(4000 + seed);
