@@ -1,0 +1,200 @@
+//! Fig critpath: causal critical-path blame tables and the what-if
+//! ranking, per coordination mode.
+//!
+//! The telemetry plane's [`BubbleReport`](rollart::obs::BubbleReport)
+//! decomposes *engine idle* time; this bench decomposes the *iteration
+//! makespan itself* via the causal provenance recorded by
+//! [`rollart::baselines::run_with_critpath`]: which dependency chain
+//! actually bounds each training iteration, per [`EdgeKind`], plus the
+//! causal-profiling what-if panel ("what would 2× faster decode buy?").
+//!
+//! Arms: the four standard coordination modes, a RollArt arm with the
+//! overlapped weight broadcast, and the mixed-class 2P2D deployment
+//! with weight streams contending on the KV link.  The acceptance
+//! claims (checked by assertion):
+//!
+//! * under the blocking broadcast, the weight plane (the fleet-drain
+//!   barrier) **dominates** every infrastructure row of the blame
+//!   table — it is the thing the critical path keeps passing through;
+//! * under the overlapped broadcast the barrier **vanishes** from the
+//!   path entirely (no `SyncDone` ever fires) and the weight plane's
+//!   total on-path cost collapses;
+//! * every arm's per-iteration path lengths tile the run makespan
+//!   exactly (the telescoping invariant `tests/critpath_plane.rs`
+//!   pins more aggressively).
+//!
+//! Writes `fig_critpath.csv` (one row per arm × blame row) and the
+//! `critpath_rollart.json` CI artifact (the blocking RollArt arm's
+//! full report).
+
+use crate::support::*;
+use rollart::baselines;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::obs::{rank_what_if, CritPathReport, EdgeKind};
+use rollart::sim::driver::PdScenario;
+use rollart::sim::{Mode, Scenario};
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+
+/// Infrastructure rows: everything that is neither engine compute nor
+/// the train payload nor the env/reward work the run exists to do.
+const INFRA: [EdgeKind; 6] = [
+    EdgeKind::KvHop,
+    EdgeKind::WeightStream,
+    EdgeKind::Cutover,
+    EdgeKind::Fault,
+    EdgeKind::Elastic,
+    EdgeKind::Other,
+];
+
+fn arms() -> Vec<(String, Scenario)> {
+    let mut v = Vec::new();
+    for mode in [Mode::Sync, Mode::SyncPlus, Mode::AReaL, Mode::RollArt] {
+        let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+        s.mode = mode;
+        v.push((mode.name().to_string(), quick(s, 4)));
+    }
+    // Same RollArt scenario, overlapped broadcast: the barrier must
+    // leave the critical path.
+    let mut over = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+    over.weights =
+        WeightsScenario::with_strategy(SyncStrategyKind::OverlappedBroadcast { chunks: 8 });
+    v.push(("RollArt+overlapped".to_string(), quick(over, 4)));
+    // Mixed-class PD deployment with the weight streams routed over the
+    // KV link (bucket preemption active): kv-hop and weight-stream rows
+    // become observable on the same contended slots.
+    let mut pd = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+    pd.pd = Some(PdScenario {
+        gpus_per_node: 4,
+        max_batch: 32,
+        ..PdScenario::xpyd(2, 2)
+    });
+    pd.weights =
+        WeightsScenario::with_strategy(SyncStrategyKind::OverlappedBroadcast { chunks: 8 });
+    pd.weights.share_kv_link = true;
+    v.push(("RollArt-2P2D+wkv".to_string(), quick(pd, 4)));
+    v
+}
+
+pub fn run() {
+    banner(
+        "Fig critpath",
+        "causal critical-path blame and what-if ranking per mode",
+    );
+    let mut csv = CsvWriter::for_bench(
+        "fig_critpath",
+        &["arm", "row", "on_path_s", "share_pct", "whatif2x_s", "whatif2x_saved_s"],
+    );
+    let mut reports: Vec<(String, CritPathReport)> = Vec::new();
+    for (name, cfg) in arms() {
+        let r = baselines::run_with_critpath(&cfg);
+        let rep = *r.critpath.clone().expect("critpath plane armed");
+        // The telescoping invariant, coarse form: iteration windows
+        // tile the run makespan, which is the run's wall clock.
+        assert_eq!(rep.iters.len(), r.steps.len(), "{name}: one path per step");
+        let tile: f64 = rep.iters.iter().map(|i| i.len_s).sum();
+        assert!(
+            (tile - rep.makespan_s).abs() <= 1e-6 * rep.makespan_s.max(1.0),
+            "{name}: windows {tile} must tile the makespan {}",
+            rep.makespan_s
+        );
+        assert!(
+            (rep.makespan_s - r.total_time_s).abs() <= 1e-6 * r.total_time_s.max(1.0),
+            "{name}: makespan {} vs wall clock {}",
+            rep.makespan_s,
+            r.total_time_s
+        );
+
+        let ranked = rank_what_if(&rep, 2.0);
+        let whatif = |row: &str| -> Option<&rollart::obs::WhatIf> {
+            ranked.iter().find(|w| w.speedup.kind().name() == row)
+        };
+        let (dk, ds) = rep.total.dominant();
+        row(
+            &format!("{name} dominant"),
+            "blame the binding stage",
+            &format!(
+                "{} {:.1}s of {:.1}s makespan ({} iters)",
+                dk.name(),
+                ds,
+                rep.makespan_s,
+                rep.iters.len()
+            ),
+        );
+        for w in ranked.iter().take(3) {
+            row(
+                &format!("{name} what-if {}x2", w.speedup.kind().name()),
+                "largest predicted saving first",
+                &format!("{:.1}s -> {:.1}s (x{:.3})", w.baseline_s, w.predicted_s, w.predicted_speedup()),
+            );
+        }
+        for (rname, secs) in rep.total.rows() {
+            let (p, saved) = match whatif(rname) {
+                Some(w) => (format!("{:.4}", w.predicted_s), format!("{:.4}", w.saved_s())),
+                None => (String::new(), String::new()),
+            };
+            csv.row([
+                name.clone(),
+                rname.to_string(),
+                format!("{secs:.4}"),
+                format!("{:.2}", 100.0 * secs / rep.makespan_s.max(1e-9)),
+                p,
+                saved,
+            ]);
+        }
+        reports.push((name, rep));
+    }
+    csv.flush().unwrap();
+
+    let rep = |n: &str| -> &CritPathReport {
+        &reports.iter().find(|(name, _)| name == n).expect("arm ran").1
+    };
+    // The analytic Sync baseline blocks on everything: its barrier row
+    // (batched weight sync) must be on every post-warm-up path.
+    assert!(rep("Sync").total.barrier_s > 0.0, "Sync: barrier on path");
+
+    // Blocking broadcast (RollArt default): the fleet-drain barrier
+    // dominates every infrastructure row of the blame table.
+    let block = rep("RollArt");
+    assert!(block.total.barrier_s > 0.0, "blocking: barrier must be on path");
+    for k in INFRA {
+        assert!(
+            block.total.barrier_s >= block.total.row(k),
+            "blocking: barrier {:.3}s must dominate {} {:.3}s",
+            block.total.barrier_s,
+            k.name(),
+            block.total.row(k)
+        );
+    }
+    assert!(
+        block.total.barrier_s >= block.total.queue_s,
+        "blocking: barrier must dominate link queueing"
+    );
+
+    // Overlapped broadcast: the barrier vanishes from the path (no
+    // SyncDone ever fires) and the weight plane's on-path cost drops.
+    let over = rep("RollArt+overlapped");
+    let weight_plane = |r: &CritPathReport| {
+        r.total.barrier_s + r.total.weight_stream_s + r.total.cutover_s
+    };
+    assert_eq!(over.total.barrier_s, 0.0, "overlapped: no barrier on path");
+    assert!(
+        weight_plane(over) < weight_plane(block),
+        "overlapped weight plane {:.3}s must beat blocking {:.3}s",
+        weight_plane(over),
+        weight_plane(block)
+    );
+
+    // Mixed-class PD arm: the KV hop is observable on the path, and the
+    // report names the trajectories that gated training.
+    let pd = rep("RollArt-2P2D+wkv");
+    assert!(pd.total.kv_hop_s > 0.0, "PD arm: KV hops must be on path");
+    assert!(!pd.top_edges.is_empty(), "PD arm: blame table populated");
+    assert!(!pd.top_trajectories.is_empty(), "PD arm: trajectory blame populated");
+
+    // CI artifact: the blocking RollArt arm's full report.
+    let dir = std::path::Path::new("target").join("bench-results");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("critpath_rollart.json"), rep("RollArt").to_json()).unwrap();
+    println!("  wrote critpath_rollart.json (blocking RollArt arm)");
+}

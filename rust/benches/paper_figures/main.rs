@@ -23,6 +23,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod fig_affinity;
+mod fig_critpath;
 mod fig_fault;
 mod fig_phases;
 mod fig_wsync;
@@ -101,6 +102,9 @@ fn main() {
     }
     if want("affinity") {
         fig_affinity::run();
+    }
+    if want("critpath") {
+        fig_critpath::run();
     }
     if want("fig15") {
         fig15::run();

@@ -36,10 +36,15 @@
 //! The PD+weights arm also exports its Chrome trace to
 //! `target/bench-results/trace_pd_weights.json` — the artifact CI
 //! uploads, openable directly in `chrome://tracing` or Perfetto.
+//!
+//! An observability-overhead guard runs the rollart scenario untraced
+//! vs fully instrumented (enabled recorder + causal event provenance)
+//! and asserts the combined cost stays ≤ 15% of throughput, so the
+//! telemetry planes can't quietly creep into the hot path.
 
 use rollart::llm::QWEN3_8B;
 use rollart::obs::TraceRecorder;
-use rollart::sim::driver::{run_with_trace, PdScenario};
+use rollart::sim::driver::{run_instrumented, run_with_trace, PdScenario};
 use rollart::sim::{driver, Mode, Scenario, ScenarioResult};
 use rollart::simkit::par::par_map_with;
 use rollart::util::json::Json;
@@ -53,6 +58,10 @@ const THIS_BASELINE: &str = "BENCH_7.json";
 /// CI gate: fail when events/sec falls below this fraction of the
 /// committed baseline.
 const GATE_FLOOR: f64 = 0.75;
+/// Observability must stay out of the hot path's way: the fully
+/// instrumented run (enabled recorder + causal provenance) may cost at
+/// most this fraction of the untraced throughput.
+const OBS_OVERHEAD_CEILING: f64 = 0.15;
 
 struct Arm {
     name: &'static str,
@@ -189,6 +198,69 @@ fn parallel_sweep_row(quick: bool) -> String {
     )
 }
 
+/// Tracing-overhead guard: the rollart scenario untraced vs fully
+/// instrumented (enabled recorder + event provenance), best-of-N wall
+/// clock each so scheduler noise on shared runners doesn't decide the
+/// verdict.  Asserts the combined overhead stays under
+/// [`OBS_OVERHEAD_CEILING`]; the measured split lands in the JSON
+/// artifact.
+fn obs_overhead_row(quick: bool) -> String {
+    const REPS: usize = 3;
+    let (scale, iters) = if quick { (0.06, 3) } else { (0.25, 6) };
+    let mut cfg = Scenario::rollart_default(QWEN3_8B.clone(), scale);
+    cfg.mode = Mode::RollArt;
+    cfg.iterations = iters;
+    if quick {
+        cfg.batch_size = 16;
+        cfg.group_size = 4;
+    }
+    let mut plain_wall = f64::INFINITY;
+    let mut events = 0u64;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        let r = driver::run(&cfg);
+        plain_wall = plain_wall.min(t.elapsed().as_secs_f64());
+        events = r.sim_events;
+    }
+    let mut instr_wall = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut rec = TraceRecorder::enabled();
+        let t = Instant::now();
+        let (r, _) = run_instrumented(&cfg, &mut rec, true);
+        instr_wall = instr_wall.min(t.elapsed().as_secs_f64());
+        assert_eq!(r.sim_events, events, "instrumentation must not change the run");
+        assert!(r.critpath.is_some(), "provenance was armed");
+    }
+    let plain_eps = events as f64 / plain_wall.max(1e-9);
+    let instr_eps = events as f64 / instr_wall.max(1e-9);
+    let overhead = plain_eps / instr_eps.max(1e-9) - 1.0;
+    println!(
+        "{:<12} {:>12} {:>10.3} {:>14.0} {:>12} {:>12}",
+        "obs-overhead",
+        events,
+        instr_wall,
+        instr_eps,
+        format!("{:+.1}%", overhead * 100.0),
+        "-"
+    );
+    assert!(
+        overhead <= OBS_OVERHEAD_CEILING,
+        "recorder+provenance overhead {:.1}% exceeds the {:.0}% ceiling \
+         ({plain_eps:.0} ev/s untraced vs {instr_eps:.0} instrumented)",
+        overhead * 100.0,
+        OBS_OVERHEAD_CEILING * 100.0
+    );
+    format!(
+        concat!(
+            "  \"obs_overhead\": {{\"sim_events\": {}, ",
+            "\"untraced_events_per_s\": {:.0}, ",
+            "\"instrumented_events_per_s\": {:.0}, ",
+            "\"overhead\": {:.4}, \"ceiling\": {}}}"
+        ),
+        events, plain_eps, instr_eps, overhead, OBS_OVERHEAD_CEILING
+    )
+}
+
 fn main() {
     let gate = std::env::var("ROLLART_BENCH_GATE").is_ok();
     let quick = gate || std::env::var("ROLLART_BENCH_QUICK").is_ok();
@@ -272,16 +344,18 @@ fn main() {
     }
 
     let sweep = parallel_sweep_row(quick);
+    let obs = obs_overhead_row(quick);
 
     let json = format!(
         concat!(
             "{{\n  \"bench\": \"perf_baseline\",\n  \"quick\": {},\n",
-            "  \"baseline\": \"{}\",\n  \"scenarios\": [\n{}\n  ],\n{}\n}}\n"
+            "  \"baseline\": \"{}\",\n  \"scenarios\": [\n{}\n  ],\n{},\n{}\n}}\n"
         ),
         quick,
         PREV_BASELINE,
         rows.join(",\n"),
-        sweep
+        sweep,
+        obs
     );
     if gate {
         // The gate never rewrites the committed baseline: fresh numbers

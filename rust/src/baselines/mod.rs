@@ -25,6 +25,19 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
     }
 }
 
+/// Run any mode with the critical-path plane armed: the event drivers
+/// record causal provenance
+/// ([`crate::sim::driver::run_with_provenance`]); `Mode::Sync`
+/// synthesizes its report from the barrier breakdown
+/// ([`sync_driver::run_with_critpath`]).  `result.critpath` is always
+/// populated; every other field is byte-identical to [`run`]'s.
+pub fn run_with_critpath(cfg: &Scenario) -> ScenarioResult {
+    match cfg.mode {
+        Mode::Sync => sync_driver::run_with_critpath(cfg),
+        _ => crate::sim::driver::run_with_provenance(cfg).0,
+    }
+}
+
 /// Rewrite a scenario for a given baseline, applying the paper's
 /// semantics (affinity off for non-RollArt, staleness policy, barrier
 /// behaviour, homogeneous H800 fleet for baselines).

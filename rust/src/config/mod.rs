@@ -176,6 +176,12 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             }
             pd.gpus_per_node = g;
         }
+        if let Some(g) = p.get("decode_gpus_per_node").and_then(|v| v.as_usize()) {
+            if g == 0 {
+                return Err("pd.decode_gpus_per_node must be ≥ 1".to_string());
+            }
+            pd.decode_gpus_per_node = Some(g);
+        }
         if let Some(m) = p.get("max_batch").and_then(|v| v.as_usize()) {
             if m == 0 {
                 return Err("pd.max_batch must be ≥ 1".to_string());

@@ -31,7 +31,7 @@
 //! | weights | [`weights`]: per-engine weight versions + pluggable [`weights::SyncStrategy`] dissemination (blocking / rolling / lazy / overlapped / adaptive), bucketized per-engine pulls ([`weights::bucketized_pull`], Mooncake bucket model) over a contended fan-out link |
 //! | fault & elasticity | [`fault`], [`elastic`] (single-pool [`elastic::AutoScaler`] + per-class PD [`elastic::PdAutoScaler`]) |
 //! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
-//! | telemetry | [`obs`]: [`obs::TraceRecorder`] Chrome-trace span/counter export, [`obs::BubbleReport`] idle-cause attribution (see `docs/OBSERVABILITY.md`) |
+//! | telemetry | [`obs`]: [`obs::TraceRecorder`] Chrome-trace span/counter export, [`obs::BubbleReport`] idle-cause attribution, [`obs::critpath`] causal critical-path blame + [`obs::what_if`] estimator over [`simkit::EventQueue`] provenance (see `docs/OBSERVABILITY.md`) |
 //! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |
 
 pub mod baselines;

@@ -17,9 +17,32 @@
 //! coincides with the balanced fair-share bound
 //! [`balanced_makespan`], which is also the analytic term the
 //! synchronous baseline's PD path uses.
+//!
+//! # Bucket-level priorities (KV preempts queued weight buckets)
+//!
+//! When weight dissemination shares the KV link
+//! (`weights.share_kv_link`), the plain FIFO model makes a latency-
+//! critical KV hop queue behind a multi-gigabyte background weight
+//! bucket that merely *arrived* earlier.  [`SharedLink::enable_preemption`]
+//! adds two traffic classes on the forward direction:
+//!
+//! * [`SharedLink::acquire_prio`] (KV hops) — admitted against the
+//!   *committed* tail of each slot only, jumping ahead of any queued
+//!   low-priority segment that has not started moving bytes yet;
+//! * [`SharedLink::acquire_low`] (weight buckets) — queue as before,
+//!   but every still-unstarted segment is pushed back when a priority
+//!   transfer lands in front of it (a segment that has started is
+//!   committed and never preempted — no mid-transfer abort modeling).
+//!
+//! Displaced pulls' completion times are tracked per pull id
+//! ([`SharedLink::low_pull_done`]) so the driver can re-check a
+//! stream's delivery event against the post-preemption reality.  With
+//! preemption disabled (the default) both class methods delegate to
+//! the plain FIFO [`SharedLink::acquire`], bit-identically.
 
 use super::Link;
 use crate::metrics::Histogram;
+use std::collections::BTreeMap;
 
 /// Admission of one transfer onto a [`SharedLink`].
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -69,6 +92,14 @@ pub struct SharedLinkStats {
     /// Reverse-direction transfers that queued (behind other *reverse*
     /// traffic — the fabric is full duplex).
     pub reverse_queued: u64,
+    /// Priority transfers that jumped ahead of at least one queued
+    /// low-priority segment ([`SharedLink::acquire_prio`]).
+    pub preemptions: u64,
+    /// Low-priority segments pushed back by priority traffic (one
+    /// preemption can displace several queued buckets).
+    pub preempted_segments: u64,
+    /// Total seconds low-priority segments were pushed back by.
+    pub preempted_delay_s: f64,
     /// Per-transfer queue-delay samples (percentiles for the benches).
     pub queue_delay: Histogram,
 }
@@ -91,6 +122,9 @@ impl SharedLinkStats {
             queue_delay_max_s: self.queue_delay_max_s,
             reverse_transfers: self.reverse_transfers,
             reverse_queued: self.reverse_queued,
+            preemptions: self.preemptions,
+            preempted_segments: self.preempted_segments,
+            preempted_delay_s: self.preempted_delay_s,
         }
     }
 }
@@ -106,6 +140,14 @@ pub struct KvLinkReport {
     /// Reverse-direction (decode→prefill prefix reuse) transfers.
     pub reverse_transfers: u64,
     pub reverse_queued: u64,
+    /// KV hops that preempted queued weight buckets
+    /// ([`SharedLink::acquire_prio`]; zero unless the scenario shares
+    /// the KV link with weight traffic and preemption is enabled).
+    pub preemptions: u64,
+    /// Weight buckets pushed back by those preemptions.
+    pub preempted_segments: u64,
+    /// Total pushback those buckets absorbed, seconds.
+    pub preempted_delay_s: f64,
 }
 
 /// A [`Link`] with `slots` FIFO transfer slots per direction.
@@ -124,7 +166,10 @@ pub struct KvLinkReport {
 #[derive(Clone, Debug)]
 pub struct SharedLink {
     link: Link,
-    /// Per-slot busy-until time, seconds (forward direction).
+    /// Per-slot busy-until time, seconds (forward direction).  With
+    /// preemption enabled this is the *committed* tail only — started
+    /// or non-preemptible work; queued low-priority segments live in
+    /// `low_q` until their start time passes.
     slots: Vec<f64>,
     /// Reverse-direction slot pool (same width; full duplex).
     rev_slots: Vec<f64>,
@@ -132,6 +177,25 @@ pub struct SharedLink {
     /// Opt-in transfer log ([`SharedLink::enable_trace`]); `None` keeps
     /// the admission path allocation-free when telemetry is off.
     trace_log: Option<Vec<TransferRecord>>,
+    /// Bucket-level priorities on ([`SharedLink::enable_preemption`]).
+    preempt: bool,
+    /// Queued, not-yet-started low-priority segments per forward slot,
+    /// in start order (empty unless preemption is enabled).
+    low_q: Vec<Vec<LowSeg>>,
+    /// Next low-priority pull id ([`SharedLink::begin_low_pull`]).
+    next_pull: u64,
+    /// Latest completion (incl. delivery latency) per low-priority
+    /// pull, updated when preemptions push its segments back.
+    pull_done: BTreeMap<u64, f64>,
+}
+
+/// One queued low-priority segment (a weight bucket) that has not
+/// started moving bytes yet — the preemptible unit.
+#[derive(Clone, Copy, Debug)]
+struct LowSeg {
+    start_s: f64,
+    end_s: f64,
+    pull: u64,
 }
 
 /// Earliest-free-slot FIFO admission over one direction's slot pool.
@@ -162,6 +226,55 @@ impl SharedLink {
             rev_slots: vec![0.0; slots],
             stats: SharedLinkStats::default(),
             trace_log: None,
+            preempt: false,
+            low_q: Vec::new(),
+            next_pull: 0,
+            pull_done: BTreeMap::new(),
+        }
+    }
+
+    /// Turn on bucket-level priorities on the forward direction: KV
+    /// hops admitted via [`SharedLink::acquire_prio`] jump ahead of
+    /// queued weight buckets admitted via [`SharedLink::acquire_low`].
+    /// While off (the default) both class methods delegate to the plain
+    /// FIFO [`SharedLink::acquire`] bit-identically.
+    pub fn enable_preemption(&mut self) {
+        if !self.preempt {
+            self.preempt = true;
+            self.low_q = vec![Vec::new(); self.slots.len()];
+        }
+    }
+
+    pub fn preemption_enabled(&self) -> bool {
+        self.preempt
+    }
+
+    /// Commit every queued low-priority segment whose start time has
+    /// passed: once bytes are moving the segment is non-preemptible and
+    /// folds into the slot's committed tail.
+    fn commit_started(&mut self, now: f64) {
+        for i in 0..self.low_q.len() {
+            while let Some(&seg) = self.low_q[i].first() {
+                if seg.start_s > now {
+                    break;
+                }
+                self.slots[i] = self.slots[i].max(seg.end_s);
+                self.low_q[i].remove(0);
+            }
+        }
+    }
+
+    /// Freeze every still-queued low segment into its slot's committed
+    /// tail.  Neutral-class arrivals on a preemption-enabled link admit
+    /// behind *all* pending work (they were granted a completion time a
+    /// driver event now depends on, so nothing scheduled before them
+    /// may be displaced afterwards — no stale-event hazard).
+    fn freeze_low(&mut self) {
+        for i in 0..self.low_q.len() {
+            if let Some(last) = self.low_q[i].last() {
+                self.slots[i] = self.slots[i].max(last.end_s);
+            }
+            self.low_q[i].clear();
         }
     }
 
@@ -228,10 +341,140 @@ impl SharedLink {
         if bytes <= 0.0 {
             return Self::empty_grant(now);
         }
+        if self.preempt {
+            self.commit_started(now);
+            self.freeze_low();
+        }
         let service = self.service_time(bytes);
         let grant = grant_on(&mut self.slots, service, self.link.latency_s, now);
         self.record(grant, bytes, false);
         grant
+    }
+
+    /// Admit one **priority** forward transfer (a KV hop): it queues
+    /// against each slot's *committed* tail only, jumping ahead of any
+    /// low-priority segment that has not started moving bytes yet;
+    /// displaced segments are pushed back and their pulls' completion
+    /// times updated ([`SharedLink::low_pull_done`]).  Delegates to the
+    /// FIFO [`SharedLink::acquire`] while preemption is off.
+    pub fn acquire_prio(&mut self, now: f64, bytes: f64) -> Grant {
+        if !self.preempt {
+            return self.acquire(now, bytes);
+        }
+        if bytes <= 0.0 {
+            return Self::empty_grant(now);
+        }
+        self.commit_started(now);
+        let service = self.service_time(bytes);
+        let latency = self.link.latency_s;
+        let slot = (0..self.slots.len())
+            .min_by(|&a, &b| self.slots[a].total_cmp(&self.slots[b]))
+            .expect("slots is non-empty");
+        let start = self.slots[slot].max(now);
+        let end = start + service;
+        self.slots[slot] = end;
+        let grant = Grant {
+            start_s: start,
+            done_s: end + latency,
+            queue_delay_s: start - now,
+            slot,
+        };
+        // Push back every still-queued low segment the priority
+        // transfer displaced, preserving their relative order.  An
+        // already-planned pull's cross-slot bucket sequencing is not
+        // re-derived: its delivery is the max of its segments'
+        // completions, which this keeps current.
+        let mut displaced = 0u64;
+        let mut pushback = 0.0f64;
+        let mut tail = end;
+        for seg in self.low_q[slot].iter_mut() {
+            if seg.start_s < tail {
+                let d = tail - seg.start_s;
+                seg.start_s += d;
+                seg.end_s += d;
+                displaced += 1;
+                pushback += d;
+                let done = seg.end_s + latency;
+                let e = self.pull_done.entry(seg.pull).or_insert(done);
+                if done > *e {
+                    *e = done;
+                }
+            }
+            tail = seg.end_s;
+        }
+        if displaced > 0 {
+            self.stats.preemptions += 1;
+            self.stats.preempted_segments += displaced;
+            self.stats.preempted_delay_s += pushback;
+        }
+        self.record(grant, bytes, false);
+        grant
+    }
+
+    /// Start one low-priority pull (a bucketized weight pull): returns
+    /// the pull id its buckets pass to [`SharedLink::acquire_low`] and
+    /// the driver uses to re-check delivery via
+    /// [`SharedLink::low_pull_done`].
+    pub fn begin_low_pull(&mut self) -> u64 {
+        let id = self.next_pull;
+        self.next_pull += 1;
+        id
+    }
+
+    /// Admit one **low-priority** forward transfer (one weight bucket
+    /// of pull `pull`): queues behind both committed work and earlier
+    /// low segments, and remains preemptible by
+    /// [`SharedLink::acquire_prio`] until its start time passes.
+    /// Delegates to the FIFO [`SharedLink::acquire`] while preemption
+    /// is off.
+    pub fn acquire_low(&mut self, now: f64, bytes: f64, pull: u64) -> Grant {
+        if !self.preempt {
+            return self.acquire(now, bytes);
+        }
+        if bytes <= 0.0 {
+            return Self::empty_grant(now);
+        }
+        self.commit_started(now);
+        let service = self.service_time(bytes);
+        let latency = self.link.latency_s;
+        let avail = |link: &Self, i: usize| -> f64 {
+            link.low_q[i]
+                .last()
+                .map(|s| s.end_s)
+                .unwrap_or(f64::NEG_INFINITY)
+                .max(link.slots[i])
+        };
+        let slot = (0..self.slots.len())
+            .min_by(|&a, &b| avail(self, a).total_cmp(&avail(self, b)))
+            .expect("slots is non-empty");
+        let start = avail(self, slot).max(now);
+        let end = start + service;
+        self.low_q[slot].push(LowSeg {
+            start_s: start,
+            end_s: end,
+            pull,
+        });
+        let done = end + latency;
+        let e = self.pull_done.entry(pull).or_insert(done);
+        if done > *e {
+            *e = done;
+        }
+        let grant = Grant {
+            start_s: start,
+            done_s: done,
+            queue_delay_s: start - now,
+            slot,
+        };
+        self.record(grant, bytes, false);
+        grant
+    }
+
+    /// Latest known completion of low-priority pull `pull`, including
+    /// any pushback preemptions inflicted after its buckets were
+    /// granted.  `None` for unknown pulls (or with preemption off,
+    /// where grants are final).
+    pub fn low_pull_done(&self, pull: u64) -> Option<f64> {
+        self.pull_done.get(&pull).copied()
     }
 
     /// Admit one *reverse-direction* transfer (decode→prefill prefix
@@ -459,6 +702,84 @@ mod tests {
         assert!(l.drain_trace().is_empty());
         l.acquire(2.0, 1e9);
         assert_eq!(l.drain_trace().len(), 1);
+    }
+
+    #[test]
+    fn preemption_off_class_methods_are_plain_fifo() {
+        // Bit-compatibility guard: without enable_preemption the class
+        // methods must produce exactly the legacy FIFO grants.
+        let mut a = shared(2);
+        let mut b = shared(2);
+        let g1 = a.acquire(0.0, 1e9);
+        let pull = b.begin_low_pull();
+        let g2 = b.acquire_low(0.0, 1e9, pull);
+        assert_eq!(g1, g2);
+        let g3 = a.acquire(0.0, 2e9);
+        let g4 = b.acquire_prio(0.0, 2e9);
+        assert_eq!(g3, g4);
+        assert!(b.low_pull_done(pull).is_none(), "grants are final");
+        assert_eq!(b.stats.preemptions, 0);
+        assert!(!b.preemption_enabled());
+    }
+
+    #[test]
+    fn kv_preempts_queued_weight_buckets() {
+        let mut l = shared(1);
+        l.enable_preemption();
+        let svc = l.service_time(1e9);
+        let pull = l.begin_low_pull();
+        // First bucket starts immediately → committed; second queues.
+        let b1 = l.acquire_low(0.0, 1e9, pull);
+        assert_eq!(b1.start_s, 0.0);
+        let b2 = l.acquire_low(0.0, 1e9, pull);
+        assert!((b2.start_s - svc).abs() < 1e-12);
+        let done_before = l.low_pull_done(pull).unwrap();
+        assert!((done_before - b2.done_s).abs() < 1e-12);
+        // A KV hop lands mid-first-bucket: it must wait only for the
+        // *started* bucket (no mid-transfer abort), then jump ahead of
+        // the queued one.
+        let kv = l.acquire_prio(0.5 * svc, 1e9);
+        assert!((kv.start_s - svc).abs() < 1e-12, "{kv:?}");
+        // The queued bucket is pushed back behind the KV hop, and the
+        // pull's tracked completion moves with it.
+        let done_after = l.low_pull_done(pull).unwrap();
+        assert!((done_after - (done_before + svc)).abs() < 1e-9);
+        assert_eq!(l.stats.preemptions, 1);
+        assert_eq!(l.stats.preempted_segments, 1);
+        assert!((l.stats.preempted_delay_s - svc).abs() < 1e-9);
+        let r = l.stats.report();
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.preempted_segments, 1);
+        assert!(r.preempted_delay_s > 0.0);
+    }
+
+    #[test]
+    fn neutral_arrival_freezes_the_low_queue() {
+        // A neutral-class transfer's grant is final (a driver event
+        // depends on it), so everything queued before it freezes: a
+        // later KV hop cannot displace those buckets any more.
+        let mut l = shared(1);
+        l.enable_preemption();
+        let svc = l.service_time(1e9);
+        let pull = l.begin_low_pull();
+        l.acquire_low(0.0, 1e9, pull);
+        let b2 = l.acquire_low(0.0, 1e9, pull);
+        let n = l.acquire(0.0, 1e9);
+        assert!((n.start_s - 2.0 * svc).abs() < 1e-12, "{n:?}");
+        let kv = l.acquire_prio(0.0, 1e9);
+        assert!((kv.start_s - 3.0 * svc).abs() < 1e-12, "{kv:?}");
+        assert_eq!(l.stats.preemptions, 0, "nothing left to displace");
+        assert!((l.low_pull_done(pull).unwrap() - b2.done_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prio_on_idle_link_pays_no_queue_delay() {
+        let mut l = shared(2);
+        l.enable_preemption();
+        let g = l.acquire_prio(1.0, 1e9);
+        assert_eq!(g.queue_delay_s, 0.0);
+        assert_eq!(g.start_s, 1.0);
+        assert_eq!(l.stats.preemptions, 0);
     }
 
     #[test]

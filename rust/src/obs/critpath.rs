@@ -1,0 +1,740 @@
+//! Critical-path plane: causal blame for the iteration makespan, and a
+//! re-simulation-validated what-if estimator.
+//!
+//! [`crate::obs::BubbleReport`] says *where engines idle*; this module
+//! says *which dependency chain actually bounds the iteration* — idle
+//! time off the critical path is free, idle time on it is the whole
+//! ballgame.  The inputs come from the event queue's causal provenance
+//! ([`crate::simkit::EventQueue::enable_provenance`]): every scheduled
+//! event records its parent (the event whose handler scheduled it), its
+//! schedule/fire times, a driver-assigned [`EdgeKind`], and the share
+//! of its delay spent queueing on a shared link.
+//!
+//! # Why the chain is exact
+//!
+//! A handler schedules its children at the simulation clock of the
+//! event it is handling, so a child's `sched_s` is *bitwise equal* to
+//! its parent's `due_s` — every ancestor chain covers a contiguous time
+//! interval ending at the final event's fire time.  The ancestor chain
+//! of iteration `i`'s `TrainDone`, clipped at iteration `i-1`'s
+//! `TrainDone`, therefore has length *exactly* equal to the iteration
+//! makespan ([`IterPath::len_s`] is computed as `end - start` directly;
+//! the per-kind decomposition sums to it within float addition).  This
+//! is the invariant `tests/critpath_plane.rs` pins under every mode ×
+//! PD × chaos composition.
+//!
+//! # What-if estimation (causal profiling)
+//!
+//! [`what_if`] applies a virtual speedup to every on-path edge of a
+//! kind (service part only — queueing is left untouched) and re-sums
+//! the chains, à la causal profiling (Coz): "what would the run take if
+//! decode were 2× faster?".  The prediction deliberately ignores
+//! second-order effects (a shorter decode changes queueing and may move
+//! the critical path onto another chain), so it is an *estimate*; the
+//! test suite validates it against actual re-simulation with the
+//! corresponding scenario knob changed, within the tolerance stated in
+//! `docs/OBSERVABILITY.md` (and it is an upper bound on the achievable
+//! new makespan in the common case, since the true path can only be
+//! bound by *other* chains getting relatively longer).
+
+use crate::simkit::{ProvEntry, NO_CAUSE};
+
+/// Causal classification of one scheduled event — what kind of work the
+/// delay between its scheduling and its firing represents.  Stored as a
+/// `u8` tag on [`ProvEntry`] (the queue is event-type-agnostic); the
+/// driver classifies each event at pop time.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EdgeKind {
+    /// Unclassified (an event scheduled but never popped, or a driver
+    /// that does not classify).
+    #[default]
+    Other = 0,
+    /// PD prefill-pool engine step.
+    Prefill = 1,
+    /// PD decode-pool engine step.
+    Decode = 2,
+    /// Colocated (non-PD) engine step.
+    Generation = 3,
+    /// KV-cache hop over the shared PD link.
+    KvHop = 4,
+    /// Environment reset (cold start, retries).
+    EnvReset = 5,
+    /// Environment step execution.
+    EnvStep = 6,
+    /// Reward computation.
+    Reward = 7,
+    /// Training step.
+    Train = 8,
+    /// Blocking weight-sync barrier (fleet drain + analytic store sync).
+    Barrier = 9,
+    /// Bucketized background weight stream (event-driven strategies).
+    WeightStream = 10,
+    /// Engine cutover (GPU load + per-bucket coordination + recompute).
+    Cutover = 11,
+    /// Fault plane: crashes, recovery, chaos events.
+    Fault = 12,
+    /// Elastic plane: provisioning, warm-up pulls, repurposing.
+    Elastic = 13,
+}
+
+impl EdgeKind {
+    /// Every classifiable kind, in tag order.
+    pub const ALL: [EdgeKind; 14] = [
+        EdgeKind::Other,
+        EdgeKind::Prefill,
+        EdgeKind::Decode,
+        EdgeKind::Generation,
+        EdgeKind::KvHop,
+        EdgeKind::EnvReset,
+        EdgeKind::EnvStep,
+        EdgeKind::Reward,
+        EdgeKind::Train,
+        EdgeKind::Barrier,
+        EdgeKind::WeightStream,
+        EdgeKind::Cutover,
+        EdgeKind::Fault,
+        EdgeKind::Elastic,
+    ];
+
+    pub fn from_u8(k: u8) -> EdgeKind {
+        *Self::ALL.get(k as usize).unwrap_or(&EdgeKind::Other)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeKind::Other => "other",
+            EdgeKind::Prefill => "prefill",
+            EdgeKind::Decode => "decode",
+            EdgeKind::Generation => "generation",
+            EdgeKind::KvHop => "kv-hop",
+            EdgeKind::EnvReset => "env-reset",
+            EdgeKind::EnvStep => "env-step",
+            EdgeKind::Reward => "reward",
+            EdgeKind::Train => "train",
+            EdgeKind::Barrier => "barrier",
+            EdgeKind::WeightStream => "weight-stream",
+            EdgeKind::Cutover => "cutover",
+            EdgeKind::Fault => "fault",
+            EdgeKind::Elastic => "elastic",
+        }
+    }
+}
+
+/// Seconds on the critical path, decomposed by [`EdgeKind`] service
+/// plus one shared queueing row (link-slot waits tagged by the driver,
+/// booked here instead of under their edge's kind so contention is
+/// blamed as contention).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PathBreakdown {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub generation_s: f64,
+    pub kv_hop_s: f64,
+    pub env_reset_s: f64,
+    pub env_step_s: f64,
+    pub reward_s: f64,
+    pub train_s: f64,
+    pub barrier_s: f64,
+    pub weight_stream_s: f64,
+    pub cutover_s: f64,
+    pub fault_s: f64,
+    pub elastic_s: f64,
+    pub other_s: f64,
+    /// Link-slot queueing across all on-path edges.
+    pub queue_s: f64,
+}
+
+impl PathBreakdown {
+    fn slot(&mut self, kind: EdgeKind) -> &mut f64 {
+        match kind {
+            EdgeKind::Prefill => &mut self.prefill_s,
+            EdgeKind::Decode => &mut self.decode_s,
+            EdgeKind::Generation => &mut self.generation_s,
+            EdgeKind::KvHop => &mut self.kv_hop_s,
+            EdgeKind::EnvReset => &mut self.env_reset_s,
+            EdgeKind::EnvStep => &mut self.env_step_s,
+            EdgeKind::Reward => &mut self.reward_s,
+            EdgeKind::Train => &mut self.train_s,
+            EdgeKind::Barrier => &mut self.barrier_s,
+            EdgeKind::WeightStream => &mut self.weight_stream_s,
+            EdgeKind::Cutover => &mut self.cutover_s,
+            EdgeKind::Fault => &mut self.fault_s,
+            EdgeKind::Elastic => &mut self.elastic_s,
+            EdgeKind::Other => &mut self.other_s,
+        }
+    }
+
+    fn book(&mut self, kind: EdgeKind, service_s: f64, queue_s: f64) {
+        *self.slot(kind) += service_s;
+        self.queue_s += queue_s;
+    }
+
+    fn merge(&mut self, other: &PathBreakdown) {
+        for k in EdgeKind::ALL {
+            *self.slot(k) += other.row(k);
+        }
+        self.queue_s += other.queue_s;
+    }
+
+    /// Service seconds booked under one kind.
+    pub fn row(&self, kind: EdgeKind) -> f64 {
+        match kind {
+            EdgeKind::Prefill => self.prefill_s,
+            EdgeKind::Decode => self.decode_s,
+            EdgeKind::Generation => self.generation_s,
+            EdgeKind::KvHop => self.kv_hop_s,
+            EdgeKind::EnvReset => self.env_reset_s,
+            EdgeKind::EnvStep => self.env_step_s,
+            EdgeKind::Reward => self.reward_s,
+            EdgeKind::Train => self.train_s,
+            EdgeKind::Barrier => self.barrier_s,
+            EdgeKind::WeightStream => self.weight_stream_s,
+            EdgeKind::Cutover => self.cutover_s,
+            EdgeKind::Fault => self.fault_s,
+            EdgeKind::Elastic => self.elastic_s,
+            EdgeKind::Other => self.other_s,
+        }
+    }
+
+    /// All rows, in tag order, plus the queueing row — the blame table.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        let mut out: Vec<(&'static str, f64)> =
+            EdgeKind::ALL.iter().map(|&k| (k.name(), self.row(k))).collect();
+        out.push(("queueing", self.queue_s));
+        out
+    }
+
+    /// Sum of every row (equals the path length within float addition).
+    pub fn total(&self) -> f64 {
+        EdgeKind::ALL.iter().map(|&k| self.row(k)).sum::<f64>() + self.queue_s
+    }
+
+    /// The largest non-train service row — "what to aim at next".
+    /// Train is excluded because it is the payload, not overhead.
+    pub fn dominant(&self) -> (EdgeKind, f64) {
+        let mut best = (EdgeKind::Other, f64::NEG_INFINITY);
+        for k in EdgeKind::ALL {
+            if k == EdgeKind::Train {
+                continue;
+            }
+            let v = self.row(k);
+            if v > best.1 {
+                best = (k, v);
+            }
+        }
+        best
+    }
+}
+
+/// One on-path edge: the causal delay of one event, clipped to its
+/// iteration window and split into service + queueing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PathNode {
+    pub kind: EdgeKind,
+    /// Engine id for engine edges, trajectory slot for env/KV/reward
+    /// edges, `u32::MAX` when not applicable.
+    pub actor: u32,
+    pub service_s: f64,
+    pub queue_s: f64,
+}
+
+/// The critical path of one training iteration: the unique causal
+/// ancestor chain of its `TrainDone`, clipped at the previous one.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IterPath {
+    pub iter: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Iteration makespan, `end_s - start_s` — *exactly* the sum of the
+    /// chain's delays (the telescoping invariant; see module docs).
+    pub len_s: f64,
+    pub breakdown: PathBreakdown,
+    /// On-path edges in chronological order.
+    pub nodes: Vec<PathNode>,
+}
+
+/// One recurring `(kind, actor)` edge aggregated across the run's
+/// critical paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeBlame {
+    pub kind: EdgeKind,
+    pub actor: u32,
+    pub on_path_s: f64,
+    pub count: u64,
+}
+
+/// One trajectory's total on-path seconds (env/KV/reward edges carry
+/// the trajectory slot as actor) — the per-trajectory critical-path
+/// blame: which rollouts actually gated training.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrajBlame {
+    pub traj: u32,
+    pub on_path_s: f64,
+}
+
+/// Critical-path decomposition of one run, attached to
+/// [`crate::sim::ScenarioResult::critpath`] by the provenance-enabled
+/// entry points.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CritPathReport {
+    /// Per-iteration critical paths, in iteration order.
+    pub iters: Vec<IterPath>,
+    /// Run-total blame table (sum of the per-iteration breakdowns).
+    pub total: PathBreakdown,
+    /// Top recurring on-path `(kind, actor)` edges, worst first.
+    pub top_edges: Vec<EdgeBlame>,
+    /// Top trajectories by on-path seconds, worst first.
+    pub top_trajectories: Vec<TrajBlame>,
+    /// Fire time of the final `TrainDone` (== the run makespan the
+    /// iteration windows tile).
+    pub makespan_s: f64,
+}
+
+/// How many recurring edges / trajectories the report keeps.
+const TOP_K: usize = 8;
+
+/// Shared accumulator state for the blame tables while paths are built.
+#[derive(Default)]
+struct BlameAcc {
+    edges: std::collections::BTreeMap<(u8, u32), (f64, u64)>,
+    trajs: std::collections::BTreeMap<u32, f64>,
+}
+
+impl BlameAcc {
+    fn book(&mut self, kind: EdgeKind, actor: u32, span: f64) {
+        let b = self.edges.entry((kind as u8, actor)).or_insert((0.0, 0));
+        b.0 += span;
+        b.1 += 1;
+        if matches!(
+            kind,
+            EdgeKind::KvHop | EdgeKind::EnvReset | EdgeKind::EnvStep | EdgeKind::Reward
+        ) && actor != u32::MAX
+        {
+            *self.trajs.entry(actor).or_insert(0.0) += span;
+        }
+    }
+
+    fn finish(self, report: &mut CritPathReport) {
+        let mut blames: Vec<EdgeBlame> = self
+            .edges
+            .into_iter()
+            .map(|((kind, actor), (on_path_s, count))| EdgeBlame {
+                kind: EdgeKind::from_u8(kind),
+                actor,
+                on_path_s,
+                count,
+            })
+            .collect();
+        blames.sort_by(|a, b| {
+            b.on_path_s
+                .total_cmp(&a.on_path_s)
+                .then(a.kind.cmp(&b.kind))
+                .then(a.actor.cmp(&b.actor))
+        });
+        blames.truncate(TOP_K);
+        report.top_edges = blames;
+
+        let mut tb: Vec<TrajBlame> = self
+            .trajs
+            .into_iter()
+            .map(|(traj, on_path_s)| TrajBlame { traj, on_path_s })
+            .collect();
+        tb.sort_by(|a, b| b.on_path_s.total_cmp(&a.on_path_s).then(a.traj.cmp(&b.traj)));
+        tb.truncate(TOP_K);
+        report.top_trajectories = tb;
+    }
+}
+
+/// Extract per-iteration critical paths from a provenance log.
+///
+/// Iteration windows are defined by [`EdgeKind::Train`] fire times
+/// (window `i` spans from `TrainDone`<sub>i-1</sub>, or 0, to
+/// `TrainDone`<sub>i</sub>); each window's path is the train event's
+/// causal ancestor chain clipped at the window start.
+pub fn extract(log: &[ProvEntry]) -> CritPathReport {
+    let mut trains: Vec<usize> = (0..log.len())
+        .filter(|&i| log[i].kind == EdgeKind::Train as u8)
+        .collect();
+    trains.sort_by(|&a, &b| log[a].due_s.total_cmp(&log[b].due_s).then(a.cmp(&b)));
+
+    let mut report = CritPathReport::default();
+    let mut acc = BlameAcc::default();
+
+    let mut start = 0.0f64;
+    for (iter, &ti) in trains.iter().enumerate() {
+        let end = log[ti].due_s;
+        let mut path = IterPath {
+            iter,
+            start_s: start,
+            end_s: end,
+            len_s: end - start,
+            breakdown: PathBreakdown::default(),
+            nodes: Vec::new(),
+        };
+        // Walk the unique causal ancestor chain train-ward → root-ward.
+        let mut idx = ti as u64;
+        while idx != NO_CAUSE {
+            let e = &log[idx as usize];
+            if e.due_s <= start {
+                break; // fully before this window: prior iterations' work
+            }
+            let kind = EdgeKind::from_u8(e.kind);
+            // Clip the boundary edge at the window start.
+            let span = (e.due_s - e.sched_s.max(start)).max(0.0);
+            let queue = e.queue_s.clamp(0.0, span);
+            let service = span - queue;
+            path.breakdown.book(kind, service, queue);
+            path.nodes.push(PathNode {
+                kind,
+                actor: e.actor,
+                service_s: service,
+                queue_s: queue,
+            });
+            acc.book(kind, e.actor, span);
+            idx = e.parent;
+        }
+        path.nodes.reverse();
+        report.total.merge(&path.breakdown);
+        report.iters.push(path);
+        start = end;
+    }
+    report.makespan_s = start;
+    acc.finish(&mut report);
+    report
+}
+
+/// Build a report from already-linear per-iteration chains.
+///
+/// The analytic Sync driver has no event queue to record provenance
+/// from — but a barrier pipeline *is* one causal chain by construction,
+/// so its committed per-iteration phase breakdown maps directly onto
+/// path nodes.  Windows tile from 0; each iteration's length is the sum
+/// of its nodes (the same telescoping identity [`extract`] gets from
+/// the event clock).
+pub fn synthesize(iters: &[Vec<PathNode>]) -> CritPathReport {
+    let mut report = CritPathReport::default();
+    let mut acc = BlameAcc::default();
+    let mut start = 0.0f64;
+    for (iter, nodes) in iters.iter().enumerate() {
+        let mut path = IterPath {
+            iter,
+            start_s: start,
+            end_s: start,
+            len_s: 0.0,
+            breakdown: PathBreakdown::default(),
+            nodes: Vec::new(),
+        };
+        for n in nodes {
+            let span = n.service_s + n.queue_s;
+            path.breakdown.book(n.kind, n.service_s, n.queue_s);
+            acc.book(n.kind, n.actor, span);
+            path.end_s += span;
+            path.nodes.push(*n);
+        }
+        path.len_s = path.end_s - path.start_s;
+        report.total.merge(&path.breakdown);
+        start = path.end_s;
+        report.iters.push(path);
+    }
+    report.makespan_s = start;
+    acc.finish(&mut report);
+    report
+}
+
+/// A virtual speedup to evaluate over the recorded critical paths:
+/// "what if this stage were `f`× faster?".  `f > 1.0` speeds the stage
+/// up; `f < 1.0` models a slowdown.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Speedup {
+    Prefill(f64),
+    Decode(f64),
+    Generation(f64),
+    KvHop(f64),
+    EnvReset(f64),
+    EnvStep(f64),
+    Reward(f64),
+    Train(f64),
+    /// The blocking fleet-drain barrier (analytic store sync).
+    Barrier(f64),
+    /// The bucketized background weight stream (link bandwidth).
+    Weights(f64),
+}
+
+impl Speedup {
+    pub fn kind(self) -> EdgeKind {
+        match self {
+            Speedup::Prefill(_) => EdgeKind::Prefill,
+            Speedup::Decode(_) => EdgeKind::Decode,
+            Speedup::Generation(_) => EdgeKind::Generation,
+            Speedup::KvHop(_) => EdgeKind::KvHop,
+            Speedup::EnvReset(_) => EdgeKind::EnvReset,
+            Speedup::EnvStep(_) => EdgeKind::EnvStep,
+            Speedup::Reward(_) => EdgeKind::Reward,
+            Speedup::Train(_) => EdgeKind::Train,
+            Speedup::Barrier(_) => EdgeKind::Barrier,
+            Speedup::Weights(_) => EdgeKind::WeightStream,
+        }
+    }
+
+    pub fn factor(self) -> f64 {
+        match self {
+            Speedup::Prefill(f)
+            | Speedup::Decode(f)
+            | Speedup::Generation(f)
+            | Speedup::KvHop(f)
+            | Speedup::EnvReset(f)
+            | Speedup::EnvStep(f)
+            | Speedup::Reward(f)
+            | Speedup::Train(f)
+            | Speedup::Barrier(f)
+            | Speedup::Weights(f) => f,
+        }
+    }
+}
+
+/// One what-if evaluation: predicted makespan under a virtual speedup.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WhatIf {
+    pub speedup: Speedup,
+    /// The recorded makespan the prediction starts from.
+    pub baseline_s: f64,
+    /// Predicted makespan with the stage virtually sped up.
+    pub predicted_s: f64,
+}
+
+impl WhatIf {
+    /// Predicted end-to-end speedup, `baseline / predicted`.
+    pub fn predicted_speedup(&self) -> f64 {
+        self.baseline_s / self.predicted_s.max(1e-12)
+    }
+
+    /// Seconds the speedup is predicted to shave off the run.
+    pub fn saved_s(&self) -> f64 {
+        self.baseline_s - self.predicted_s
+    }
+}
+
+/// Virtually speed up one stage over the recorded critical paths
+/// (service scaled by `1/f`, queueing untouched) and re-sum the chains.
+/// See the module docs for what the estimate does and does not capture.
+pub fn what_if(report: &CritPathReport, s: Speedup) -> WhatIf {
+    let kind = s.kind();
+    let f = s.factor().max(1e-9);
+    let mut predicted = 0.0f64;
+    for iter in &report.iters {
+        for n in &iter.nodes {
+            let service = if n.kind == kind { n.service_s / f } else { n.service_s };
+            predicted += service + n.queue_s;
+        }
+    }
+    WhatIf {
+        speedup: s,
+        baseline_s: report.makespan_s,
+        predicted_s: predicted,
+    }
+}
+
+/// Evaluate the standard what-if panel (every stage `factor`× faster)
+/// and rank by predicted saving — the "where to aim" table the
+/// `fig_critpath` bench prints.
+pub fn rank_what_if(report: &CritPathReport, factor: f64) -> Vec<WhatIf> {
+    let panel = [
+        Speedup::Prefill(factor),
+        Speedup::Decode(factor),
+        Speedup::Generation(factor),
+        Speedup::KvHop(factor),
+        Speedup::EnvReset(factor),
+        Speedup::EnvStep(factor),
+        Speedup::Reward(factor),
+        Speedup::Train(factor),
+        Speedup::Barrier(factor),
+        Speedup::Weights(factor),
+    ];
+    let mut out: Vec<WhatIf> = panel.iter().map(|&s| what_if(report, s)).collect();
+    out.sort_by(|a, b| {
+        a.predicted_s
+            .total_cmp(&b.predicted_s)
+            .then(a.speedup.kind().cmp(&b.speedup.kind()))
+    });
+    out
+}
+
+impl CritPathReport {
+    /// Deterministic JSON export of the blame table (the CI artifact):
+    /// per-iteration lengths, the run-total breakdown, and the top
+    /// recurring edges.  Hand-rolled like
+    /// [`crate::obs::TraceRecorder::to_chrome_json`] — no serde.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"makespan_s\": {:.9},\n", self.makespan_s));
+        s.push_str("  \"iterations\": [");
+        for (i, it) in self.iters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"iter\": {}, \"start_s\": {:.9}, \"end_s\": {:.9}, \"len_s\": {:.9}, \"nodes\": {}}}",
+                it.iter,
+                it.start_s,
+                it.end_s,
+                it.len_s,
+                it.nodes.len()
+            ));
+        }
+        s.push_str("],\n  \"total\": {");
+        for (i, (name, secs)) in self.total.rows().iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{name}\": {secs:.9}"));
+        }
+        s.push_str("},\n  \"top_edges\": [");
+        for (i, e) in self.top_edges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"kind\": \"{}\", \"actor\": {}, \"on_path_s\": {:.9}, \"count\": {}}}",
+                e.kind.name(),
+                e.actor,
+                e.on_path_s,
+                e.count
+            ));
+        }
+        s.push_str("],\n  \"top_trajectories\": [");
+        for (i, t) in self.top_trajectories.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"traj\": {}, \"on_path_s\": {:.9}}}",
+                t.traj, t.on_path_s
+            ));
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built provenance log: a 2-iteration linear chain
+    ///   root(gen, 0→2) → kv(2→3, 0.5 queued) → train(3→4)
+    ///   → env(4→7) → train(7→9)
+    fn demo_log() -> Vec<ProvEntry> {
+        let e = |parent: u64, sched: f64, due: f64, kind: EdgeKind, queue: f64, actor: u32| {
+            ProvEntry {
+                parent,
+                sched_s: sched,
+                due_s: due,
+                kind: kind as u8,
+                queue_s: queue,
+                actor,
+            }
+        };
+        vec![
+            e(NO_CAUSE, 0.0, 2.0, EdgeKind::Generation, 0.0, 3),
+            e(0, 2.0, 3.0, EdgeKind::KvHop, 0.5, 7),
+            e(1, 3.0, 4.0, EdgeKind::Train, 0.0, u32::MAX),
+            e(2, 4.0, 7.0, EdgeKind::EnvStep, 0.0, 7),
+            e(3, 7.0, 9.0, EdgeKind::Train, 0.0, u32::MAX),
+        ]
+    }
+
+    #[test]
+    fn extracts_exact_iteration_paths() {
+        let r = extract(&demo_log());
+        assert_eq!(r.iters.len(), 2);
+        assert_eq!(r.makespan_s, 9.0);
+        // Window 0: [0, 4] — gen 2s, kv 0.5s service + 0.5s queue,
+        // train 1s.
+        let i0 = &r.iters[0];
+        assert_eq!(i0.len_s, 4.0);
+        assert_eq!(i0.breakdown.generation_s, 2.0);
+        assert_eq!(i0.breakdown.kv_hop_s, 0.5);
+        assert_eq!(i0.breakdown.queue_s, 0.5);
+        assert_eq!(i0.breakdown.train_s, 1.0);
+        assert!((i0.breakdown.total() - i0.len_s).abs() < 1e-12);
+        // Window 1: [4, 9] — env 3s, train 2s.
+        let i1 = &r.iters[1];
+        assert_eq!(i1.len_s, 5.0);
+        assert_eq!(i1.breakdown.env_step_s, 3.0);
+        assert_eq!(i1.breakdown.train_s, 2.0);
+        // Total sums both windows and equals the makespan.
+        assert!((r.total.total() - r.makespan_s).abs() < 1e-12);
+        // Trajectory 7 carried the kv hop and the env step.
+        assert_eq!(r.top_trajectories[0].traj, 7);
+        assert!((r.top_trajectories[0].on_path_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_edges_clip_at_the_window_start() {
+        // An edge spanning a train boundary books only its post-boundary
+        // share into the later window.
+        let e = |parent: u64, sched: f64, due: f64, kind: EdgeKind| ProvEntry {
+            parent,
+            sched_s: sched,
+            due_s: due,
+            kind: kind as u8,
+            queue_s: 0.0,
+            actor: u32::MAX,
+        };
+        let log = vec![
+            e(NO_CAUSE, 0.0, 1.0, EdgeKind::Train),
+            // Spans the boundary at t=1: scheduled before, due after.
+            e(NO_CAUSE, 0.5, 3.0, EdgeKind::EnvStep),
+            e(1, 3.0, 4.0, EdgeKind::Train),
+        ];
+        let r = extract(&log);
+        assert_eq!(r.iters.len(), 2);
+        let i1 = &r.iters[1];
+        assert_eq!(i1.len_s, 3.0);
+        assert_eq!(i1.breakdown.env_step_s, 2.5, "clipped at the boundary");
+        assert_eq!(i1.breakdown.train_s, 1.0);
+        assert!((i1.breakdown.total() - i1.len_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn what_if_scales_service_not_queueing() {
+        let r = extract(&demo_log());
+        let w = what_if(&r, Speedup::Generation(2.0));
+        // gen 2s → 1s; everything else (incl. the 0.5s kv queue) stays.
+        assert!((w.predicted_s - 8.0).abs() < 1e-12, "{w:?}");
+        assert!((w.predicted_speedup() - 9.0 / 8.0).abs() < 1e-12);
+        assert!((w.saved_s() - 1.0).abs() < 1e-12);
+        // Queueing is never scaled.
+        let wk = what_if(&r, Speedup::KvHop(1e9));
+        assert!((wk.predicted_s - 8.5).abs() < 1e-9, "{wk:?}");
+        // A kind absent from the path predicts no change.
+        let wp = what_if(&r, Speedup::Prefill(2.0));
+        assert_eq!(wp.predicted_s, wp.baseline_s);
+    }
+
+    #[test]
+    fn rank_orders_by_predicted_makespan() {
+        let r = extract(&demo_log());
+        let ranked = rank_what_if(&r, 2.0);
+        assert_eq!(ranked[0].speedup.kind(), EdgeKind::Train, "3s on path");
+        assert!(ranked.windows(2).all(|w| w[0].predicted_s <= w[1].predicted_s));
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough() {
+        let r = extract(&demo_log());
+        let j = r.to_json();
+        assert!(j.contains("\"makespan_s\""));
+        assert!(j.contains("\"kv-hop\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn empty_log_yields_empty_report() {
+        let r = extract(&[]);
+        assert_eq!(r, CritPathReport::default());
+        assert_eq!(what_if(&r, Speedup::Decode(2.0)).predicted_s, 0.0);
+    }
+}

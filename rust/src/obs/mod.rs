@@ -21,15 +21,26 @@
 //!   [`ScenarioResult`](crate::sim::ScenarioResult) and cross-checked
 //!   against [`WeightSyncReport`](crate::weights::WeightSyncReport)
 //!   and KV-link totals (see `tests/obs_plane.rs`).
+//! * the **critical-path plane** ([`critpath`]) — causal event
+//!   provenance over the DES ([`crate::simkit::EventQueue::enable_provenance`])
+//!   turned into per-iteration blame tables ([`CritPathReport`]) and a
+//!   re-simulation-validated [`what_if`] estimator: which dependency
+//!   chain bounds the iteration, and what a stage speedup would buy.
 //!
 //! The disabled recorder is a no-op: a determinism test pins traced
 //! and untraced runs to bit-identical `ScenarioResult`s.  See
 //! `docs/OBSERVABILITY.md` for the guided tour.
 
 mod bubble;
+pub mod critpath;
 mod trace;
 
 pub use bubble::{BubbleCause, BubbleReport};
+pub use critpath::{
+    extract as extract_critpath, rank_what_if, synthesize as synthesize_critpath, what_if,
+    CritPathReport, EdgeBlame, EdgeKind, IterPath, PathBreakdown, PathNode, Speedup, TrajBlame,
+    WhatIf,
+};
 pub use trace::{TraceEvent, TraceRecorder};
 
 // ---- trace-process layout (pid scheme) ------------------------------

@@ -169,6 +169,27 @@ impl TraceRecorder {
         });
     }
 
+    /// Name one thread (`pid`, `tid`) for the viewer's sidebar — the
+    /// per-track label inside a process (trajectory rows, link slots,
+    /// the trainer lane).  Distinguished from [`TraceRecorder::process_name`]
+    /// by category at export time, where it becomes a Perfetto
+    /// `thread_name` metadata event carrying the tid.
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent {
+            ph: 'M',
+            pid,
+            tid,
+            name: name.to_string(),
+            cat: "__metadata_thread",
+            start_s: 0.0,
+            dur_s: 0.0,
+            value: 0.0,
+        });
+    }
+
     /// All recorded events, in emission order.
     pub fn events(&self) -> &[TraceEvent] {
         &self.events
@@ -195,11 +216,18 @@ impl TraceRecorder {
             }
             match e.ph {
                 'M' => {
+                    let meta = if e.cat == "__metadata_thread" {
+                        "thread_name"
+                    } else {
+                        "process_name"
+                    };
                     let _ = write!(
                         out,
-                        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+                        "{{\"name\":\"{}\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
                          \"args\":{{\"name\":\"{}\"}}}}",
+                        meta,
                         e.pid,
+                        e.tid,
                         escape(&e.name)
                     );
                 }
@@ -299,6 +327,7 @@ mod tests {
         rec.counter(0, "n", 0.0, 3.0);
         rec.instant(0, 0, "i", "c", 0.5);
         rec.process_name(0, "p");
+        rec.thread_name(0, 1, "t");
         assert!(rec.is_empty());
         assert_eq!(
             rec.to_chrome_json(),
@@ -325,6 +354,28 @@ mod tests {
         assert_eq!(doc.at("traceEvents.1.dur").unwrap().as_f64(), Some(250_000.0));
         assert_eq!(doc.at("traceEvents.1.tid").unwrap().as_usize(), Some(7));
         assert_eq!(doc.at("traceEvents.2.args.value").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn thread_name_metadata_carries_the_tid() {
+        let mut rec = TraceRecorder::enabled();
+        rec.process_name(2, "kv-link");
+        rec.thread_name(2, 5, "slot 2 (reverse)");
+        let json = rec.to_chrome_json();
+        let doc = Json::parse(&json).expect("export parses");
+        assert_eq!(
+            doc.at("traceEvents.0.name").unwrap().as_str(),
+            Some("process_name")
+        );
+        assert_eq!(
+            doc.at("traceEvents.1.name").unwrap().as_str(),
+            Some("thread_name")
+        );
+        assert_eq!(doc.at("traceEvents.1.tid").unwrap().as_usize(), Some(5));
+        assert_eq!(
+            doc.at("traceEvents.1.args.name").unwrap().as_str(),
+            Some("slot 2 (reverse)")
+        );
     }
 
     #[test]

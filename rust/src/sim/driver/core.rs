@@ -57,14 +57,16 @@ use crate::hw::{phase_time, GpuClass};
 use crate::metrics::StepBreakdown;
 use crate::mooncake::MooncakeStore;
 use crate::net::SharedLink;
-use crate::obs::{self, BubbleCause, BubbleReport, TraceRecorder};
+use crate::obs::{self, BubbleCause, BubbleReport, EdgeKind, TraceRecorder};
 use crate::proxy::{EngineSim, LlmProxy, SimRequest};
 use crate::resource::{ResourceClass, ResourceManager, Role};
 use crate::rl::{TrajectoryId, Version};
 use crate::serverless::{ServerlessConfig, ServerlessPlatform};
 use crate::sim::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::simkit::{EventQueue, SimRng, SimTime};
-use crate::weights::{bucketized_pull, AdaptDecision, FleetView, SyncStrategy, WeightSyncReport};
+use crate::weights::{
+    bucketized_pull_classed, AdaptDecision, FleetView, SyncStrategy, WeightSyncReport,
+};
 use std::collections::BTreeMap;
 
 // Hot-path storage note: everything keyed by trajectory slot
@@ -331,6 +333,12 @@ struct DriverCore<'a> {
     wsync: Vec<EngineSync>,
     /// The version each engine's in-flight sync will flip it to.
     wsync_version: Vec<Version>,
+    /// Low-priority pull id of each engine's in-flight background
+    /// stream on a preemption-enabled shared link (`u64::MAX`: none).
+    /// KV hops may push the stream's queued buckets back after its
+    /// `WsyncStreamed` was scheduled; the handler re-checks
+    /// [`SharedLink::low_pull_done`] and chases the moved delivery.
+    wsync_pull: Vec<u64>,
     /// Wall-clock the open dissemination window started (publish →
     /// last live engine current), if one is converging.
     wdissem_started: Option<f64>,
@@ -394,8 +402,26 @@ struct DriverCore<'a> {
     kick_cause: BubbleCause,
     /// When the in-flight train step started (trace span start).
     train_started: f64,
+    /// Causal provenance armed on the event queue (critical-path
+    /// plane): the dispatch loop classifies every popped event and
+    /// `finish()` turns the log into a [`CritPathReport`]
+    /// ([`crate::obs::CritPathReport`]).  Purely observational — the
+    /// `ScenarioResult` aside from its `critpath` field is
+    /// bit-identical with it off (pinned in `tests/critpath_plane.rs`).
+    prov_on: bool,
     // -------------------------------------------------------------
     result: ScenarioResult,
+}
+
+/// Outcome of one admitted engine weight pull
+/// ([`DriverCore::pull_weights`]): when it lands, how much of that was
+/// link queueing, and — for background streams on a preemption-enabled
+/// shared link — the low-priority pull id whose live delivery estimate
+/// the `WsyncStreamed` handler re-checks.
+struct PullTicket {
+    done_s: f64,
+    queue_s: f64,
+    pull: Option<u64>,
 }
 
 /// Per-call reward execution sample.
@@ -407,7 +433,7 @@ fn reward_exec(cfg: &Scenario, rng: &mut SimRng) -> f64 {
 }
 
 impl<'a> DriverCore<'a> {
-    fn new(cfg: &'a Scenario, rec: &'a mut TraceRecorder) -> Self {
+    fn new(cfg: &'a Scenario, rec: &'a mut TraceRecorder, prov: bool) -> Self {
         let policy = policy_for(cfg.mode);
         if let Err(e) = cfg.weights.validate() {
             panic!("invalid weights config: {e}");
@@ -562,12 +588,24 @@ impl<'a> DriverCore<'a> {
                 pd.shared.enable_trace();
             }
         }
+        if cfg.weights.share_kv_link {
+            // Bucket-level priorities: when weight streams ride the PD
+            // KV link, latency-critical KV hops preempt their *queued*
+            // buckets (committed transfers are never cut).
+            if let Some(pd) = pd.as_mut() {
+                pd.shared.enable_preemption();
+            }
+        }
+        let mut q = EventQueue::new();
+        if prov {
+            q.enable_provenance();
+        }
         DriverCore {
             cfg,
             policy,
             lifecycle: LifecycleTracker::new(),
             pd,
-            q: EventQueue::new(),
+            q,
             rng: SimRng::new(cfg.seed),
             mgrs: Vec::new(),
             proxy,
@@ -600,6 +638,7 @@ impl<'a> DriverCore<'a> {
             wlink,
             wsync: vec![EngineSync::Idle; n_engines],
             wsync_version: vec![Version(0); n_engines],
+            wsync_pull: vec![u64::MAX; n_engines],
             wdissem_started: None,
             wpush_plan: None,
             wreport: WeightSyncReport::default(),
@@ -654,6 +693,7 @@ impl<'a> DriverCore<'a> {
             cutover_since: vec![0.0; n_engines],
             kick_cause: BubbleCause::EnvWait,
             train_started: 0.0,
+            prov_on: prov,
             result: ScenarioResult::default(),
         }
     }
@@ -944,14 +984,18 @@ impl<'a> DriverCore<'a> {
         self.wsync_version[e] = self.version;
         self.wsync[e] = EngineSync::Streaming;
         let now = self.now();
-        let done = self.pull_weights(now, self.cfg.model.weight_bytes(), true);
+        let ticket = self.pull_weights(now, self.cfg.model.weight_bytes(), true, true);
+        self.wsync_pull[e] = ticket.pull.unwrap_or(u64::MAX);
         self.q.schedule_in(
-            (done - now).max(0.0),
+            (ticket.done_s - now).max(0.0),
             Ev::WsyncStreamed {
                 engine: e,
                 epoch: self.engine_epoch[e],
             },
         );
+        // Provenance: the link-queue share of the stream is queueing,
+        // not service — what_if must never scale it away.
+        self.q.tag_last_queue(ticket.queue_s);
     }
 
     /// The stream has delivered and the engine is at a step boundary —
@@ -987,7 +1031,7 @@ impl<'a> DriverCore<'a> {
     /// bucket-by-bucket exactly as `MooncakeStore::sync`'s analytic
     /// pipeline does.  Returns the final bucket's completion time and
     /// books the pull into [`WeightSyncReport::buckets`].
-    fn pull_weights(&mut self, now: f64, bytes: f64, gated: bool) -> f64 {
+    fn pull_weights(&mut self, now: f64, bytes: f64, gated: bool, background: bool) -> PullTicket {
         let plan = if gated { self.wpush_plan } else { None };
         let ready = move |i: usize| match plan {
             Some(p) => p.start_s + (i + 1) as f64 * p.per_bucket_s,
@@ -995,8 +1039,10 @@ impl<'a> DriverCore<'a> {
         };
         let mc = self.cfg.weights.mooncake.clone();
         let out = match (self.cfg.weights.share_kv_link, self.pd.as_mut()) {
-            (true, Some(pd)) => bucketized_pull(&mut pd.shared, &mc, now, bytes, ready),
-            _ => bucketized_pull(&mut self.wlink, &mc, now, bytes, ready),
+            (true, Some(pd)) => {
+                bucketized_pull_classed(&mut pd.shared, &mc, now, bytes, ready, background)
+            }
+            _ => bucketized_pull_classed(&mut self.wlink, &mc, now, bytes, ready, background),
         };
         let b = &mut self.wreport.buckets;
         b.engine_pulls += 1;
@@ -1009,7 +1055,11 @@ impl<'a> DriverCore<'a> {
         self.wreport.transfers += out.buckets.len() as u64;
         self.wreport.queued_transfers += out.queued;
         self.wreport.link_queue_delay_s += out.queue_delay_s;
-        out.done_s
+        PullTicket {
+            done_s: out.done_s,
+            queue_s: out.queue_delay_s,
+            pull: out.pull,
+        }
     }
 
     /// Cutover of one engine's weight swap.  Returns
@@ -1060,6 +1110,25 @@ impl<'a> DriverCore<'a> {
     fn on_wsync_streamed(&mut self, e: usize, epoch: u64) {
         if epoch != self.engine_epoch[e] || self.wsync[e] != EngineSync::Streaming {
             return;
+        }
+        // Bucket-level priorities: KV hops admitted after this stream's
+        // grant may have pushed its queued buckets back on the shared
+        // link.  Chase the live delivery estimate until it holds still.
+        if self.wsync_pull[e] != u64::MAX {
+            if let Some(done) = self
+                .pd
+                .as_ref()
+                .and_then(|pd| pd.shared.low_pull_done(self.wsync_pull[e]))
+            {
+                let now = self.now();
+                if done > now + 1e-9 {
+                    self.q.schedule_in(done - now, Ev::WsyncStreamed { engine: e, epoch });
+                    // The chase is pure pushback delay — all queueing.
+                    self.q.tag_last_queue(done - now);
+                    return;
+                }
+            }
+            self.wsync_pull[e] = u64::MAX;
         }
         if self.engine_busy[e] {
             self.wsync[e] = EngineSync::AwaitCutover;
@@ -1589,7 +1658,7 @@ impl<'a> DriverCore<'a> {
         let now = self.now();
         let bytes = self.cfg.model.weight_bytes();
         // No push gate: the store already holds the published version.
-        let pull_done = self.pull_weights(now, bytes, false);
+        let pull_done = self.pull_weights(now, bytes, false, false).done_s;
         let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
         self.wreport.recovery_pulls += 1;
         self.q.schedule_in(delay, Ev::EngineRecovered { engine: e });
@@ -1860,7 +1929,7 @@ impl<'a> DriverCore<'a> {
         let now = self.now();
         let bytes = self.cfg.model.weight_bytes();
         // No push gate: the store already holds the published version.
-        let pull_done = self.pull_weights(now, bytes, false);
+        let pull_done = self.pull_weights(now, bytes, false, false).done_s;
         let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
         self.wreport.warmup_pulls += 1;
         if let Some(r) = self.elastic_report_mut() {
@@ -1913,6 +1982,7 @@ impl<'a> DriverCore<'a> {
         self.engine_version.push(self.version);
         self.wsync.push(EngineSync::Idle);
         self.wsync_version.push(self.version);
+        self.wsync_pull.push(u64::MAX);
         self.recompute_gen_version();
         // Telemetry state: the newcomer starts idle awaiting dispatch.
         self.idle_since.push(Some(self.now()));
@@ -2023,7 +2093,7 @@ impl<'a> DriverCore<'a> {
         let now = self.now();
         let bytes = self.cfg.model.weight_bytes();
         // No push gate: the store already holds the published version.
-        let pull_done = self.pull_weights(now, bytes, false);
+        let pull_done = self.pull_weights(now, bytes, false, false).done_s;
         let delay = (pull_done - now).max(0.0) + self.store.gpu_load_time(bytes);
         self.wreport.warmup_pulls += 1;
         if let Some(r) = self.elastic_report_mut() {
@@ -2435,13 +2505,16 @@ impl<'a> DriverCore<'a> {
                     // admission wave's worth of prefills completes in
                     // one engine step, so these transfers queue on the
                     // shared slots instead of overlapping for free.
+                    // KV hops are the latency-critical class — on a
+                    // preemption-enabled link (share_kv_link) they cut
+                    // ahead of queued background weight buckets.
                     let bytes = kv_bytes(&self.cfg.model, entry.prefill.new_tokens);
-                    let grant = pd.shared.acquire(now, bytes);
+                    let grant = pd.shared.acquire_prio(now, bytes);
                     entry.hop_s = grant.done_s - now;
                     // Telemetry: the forward hops' queueing is the
                     // cross-checkable floor of the kv-queue bubble.
                     self.bubbles.kv_queue_booked_s += grant.queue_delay_s;
-                    kv_delay = Some(entry.hop_s);
+                    kv_delay = Some((entry.hop_s, grant.queue_delay_s));
                 }
                 // A completion for a transfer-phase entry cannot arrive
                 // (nothing is on an engine); ignore defensively.
@@ -2473,10 +2546,12 @@ impl<'a> DriverCore<'a> {
                 None => {}
             }
         }
-        if let Some(dt) = kv_delay {
+        if let Some((dt, queue)) = kv_delay {
             // Still Prefilling (lifecycle-wise) until the decode half
             // dispatches on KvDone.
             self.q.schedule_in(dt, Ev::KvDone { tid });
+            // Provenance: split the hop into link queueing vs transfer.
+            self.q.tag_last_queue(queue);
             return;
         }
         if self.mgrs[mgr].phase == crate::coordinator::EnvPhase::Generating {
@@ -2603,16 +2678,61 @@ impl<'a> DriverCore<'a> {
 
     // ---- the event loop ---------------------------------------------
 
+    /// Classify the event being dispatched for the causal-provenance
+    /// log (critical-path plane): which pipeline edge its wait
+    /// represents, and which actor (engine / env manager / trajectory)
+    /// it belongs to.  Purely observational — only called when
+    /// provenance is armed.
+    fn classify(&self, ev: &Ev) -> (EdgeKind, u32) {
+        match ev {
+            Ev::ResetDone { mgr } | Ev::ResetRetry { mgr } => (EdgeKind::EnvReset, *mgr as u32),
+            Ev::EngineFree { engine, .. } => match self.pd.as_ref() {
+                // PD mode tells the phases apart by pool class.
+                Some(pd) if self.proxy.engines()[*engine].class == pd.cfg.decode_class => {
+                    (EdgeKind::Decode, *engine as u32)
+                }
+                Some(_) => (EdgeKind::Prefill, *engine as u32),
+                None => (EdgeKind::Generation, *engine as u32),
+            },
+            Ev::EnvStepDone { mgr } => (EdgeKind::EnvStep, *mgr as u32),
+            Ev::EnvCrashed { mgr } => (EdgeKind::Fault, *mgr as u32),
+            Ev::RewardDone { mgr } => (EdgeKind::Reward, *mgr as u32),
+            Ev::TrainDone => (EdgeKind::Train, u32::MAX),
+            Ev::SyncDone => (EdgeKind::Barrier, u32::MAX),
+            Ev::EngineCrashed { engine }
+            | Ev::EngineRecovered { engine }
+            | Ev::RecoveryPull { engine } => (EdgeKind::Fault, *engine as u32),
+            Ev::Scheduled { .. } => (EdgeKind::Fault, u32::MAX),
+            Ev::EngineProvisioned { .. } | Ev::WarmupPull { .. } => (EdgeKind::Elastic, u32::MAX),
+            Ev::EngineRepurposed { engine, .. } => (EdgeKind::Elastic, *engine as u32),
+            Ev::KvDone { tid } => (EdgeKind::KvHop, tid.0 as u32),
+            Ev::WsyncDone { engine, .. } => (EdgeKind::Cutover, *engine as u32),
+            Ev::WsyncStreamed { engine, .. } => (EdgeKind::WeightStream, *engine as u32),
+        }
+    }
+
     /// Prime the queue: chaos schedule, MTBF processes, initial launch.
     fn prime(&mut self) {
         self.trainer_idle_since = 0.0;
         if self.rec.is_enabled() {
             self.rec.process_name(obs::PID_DRIVER, "driver");
             self.rec.process_name(obs::PID_TRAJ, "trajectories");
-            if self.pd.is_some() {
+            if let Some(pd) = self.pd.as_ref() {
                 self.rec.process_name(obs::PID_KV_LINK, "kv-link");
+                // Transfer tracks are laid out tid = 2·slot + direction
+                // (see finish()); name them so Perfetto shows
+                // "slot0 fwd" instead of bare numbers.
+                for s in 0..pd.shared.slots() {
+                    let (f, r) = (2 * s as u64, 2 * s as u64 + 1);
+                    self.rec.thread_name(obs::PID_KV_LINK, f, &format!("slot{s} fwd"));
+                    self.rec.thread_name(obs::PID_KV_LINK, r, &format!("slot{s} rev"));
+                }
             }
             self.rec.process_name(obs::PID_WEIGHT_LINK, "weight-link");
+            for s in 0..self.wlink.slots() {
+                self.rec
+                    .thread_name(obs::PID_WEIGHT_LINK, 2 * s as u64, &format!("slot{s}"));
+            }
             for e in 0..self.engine_down.len() {
                 let label = self.engine_label(e);
                 self.rec.process_name(Self::engine_pid(e), &label);
@@ -2640,6 +2760,10 @@ impl<'a> DriverCore<'a> {
         while let Some((t, ev)) = self.q.pop() {
             if self.fault_on && t.as_secs() > MAX_SIM_S {
                 break; // chaos deadlock backstop; results are partial
+            }
+            if self.prov_on {
+                let (kind, actor) = self.classify(&ev);
+                self.q.classify_current(kind as u8, actor);
             }
             match ev {
                 Ev::ResetRetry { mgr } => self.on_reset_retry(mgr),
@@ -2750,6 +2874,14 @@ impl<'a> DriverCore<'a> {
         self.result.bubbles = self.bubbles;
         self.result.sim_events = self.q.popped();
         self.result.peak_queue_depth = self.q.max_depth() as u64;
+        // Critical-path plane: fold the causal log into per-iteration
+        // blame (the report is the only field provenance may touch —
+        // everything else must stay byte-identical with it off).
+        if self.prov_on {
+            if let Some(log) = self.q.take_provenance() {
+                self.result.critpath = Some(Box::new(crate::obs::extract_critpath(&log)));
+            }
+        }
         // A dissemination window still converging at run end (a lazy
         // fleet floating inside its α slack) closes here.
         if let Some(t0) = self.wdissem_started.take() {
@@ -2827,7 +2959,38 @@ pub fn run_with_trace(
     rec: &mut TraceRecorder,
 ) -> (ScenarioResult, LifecycleStats) {
     assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
-    DriverCore::new(cfg, rec).run()
+    DriverCore::new(cfg, rec, false).run()
+}
+
+/// Run a trajectory-level scenario with **causal event provenance**
+/// armed: every scheduled event records its parent, the dispatch loop
+/// classifies each pop into a pipeline [`EdgeKind`], and the result
+/// carries a [`CritPathReport`](crate::obs::CritPathReport)
+/// (`result.critpath`) — the per-iteration critical path, its phase
+/// blame decomposition, and the inputs the [`crate::obs::what_if`]
+/// estimator re-prices.
+///
+/// Provenance observes, never steers: aside from `critpath` itself the
+/// returned `ScenarioResult` is byte-identical to [`run`]'s (pinned in
+/// `tests/critpath_plane.rs`).
+pub fn run_with_provenance(cfg: &Scenario) -> (ScenarioResult, LifecycleStats) {
+    let mut rec = TraceRecorder::disabled();
+    run_instrumented(cfg, &mut rec, true)
+}
+
+/// Run with both telemetry planes controlled explicitly: spans into
+/// `rec`, and causal provenance on the event queue when `provenance`
+/// is set.  [`run_with_trace`] and [`run_with_provenance`] are the
+/// common special cases; the `perf_baseline` overhead guard uses this
+/// to price recorder + provenance together against the untraced hot
+/// path.
+pub fn run_instrumented(
+    cfg: &Scenario,
+    rec: &mut TraceRecorder,
+    provenance: bool,
+) -> (ScenarioResult, LifecycleStats) {
+    assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
+    DriverCore::new(cfg, rec, provenance).run()
 }
 
 #[cfg(test)]

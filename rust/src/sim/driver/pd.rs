@@ -49,6 +49,14 @@ pub struct PdScenario {
     pub decode_nodes: usize,
     /// GPUs per node (the paper's setup: 8).
     pub gpus_per_node: usize,
+    /// Override for the decode pool's GPUs per node (`None`: same as
+    /// [`PdScenario::gpus_per_node`]).  The critical-path plane's
+    /// what-if validation widens decode with this knob: per the 1/n
+    /// width law in [`phase_time`](crate::hw::phase_time), doubling
+    /// decode width ≈ halves decode service (modulo the
+    /// per-step launch overhead), which re-simulates a virtual
+    /// `Speedup::Decode(2.0)`.
+    pub decode_gpus_per_node: Option<usize>,
     /// Compute-optimized class hosting prefill.
     pub prefill_class: GpuClass,
     /// Bandwidth-optimized class hosting decode.
@@ -86,6 +94,7 @@ impl PdScenario {
             prefill_nodes,
             decode_nodes,
             gpus_per_node: 8,
+            decode_gpus_per_node: None,
             prefill_class: GpuClass::H800,
             decode_class: GpuClass::H20,
             kv_link: NVLINK_INTRA.clone(),
@@ -125,6 +134,11 @@ impl PdScenario {
     /// Total nodes (either arm).
     pub fn nodes(&self) -> usize {
         self.prefill_nodes + self.decode_nodes
+    }
+
+    /// GPUs per decode-pool node (the override, else the common width).
+    pub fn decode_gpus(&self) -> usize {
+        self.decode_gpus_per_node.unwrap_or(self.gpus_per_node)
     }
 }
 
@@ -203,7 +217,7 @@ pub fn build_engines(pd: &PdScenario, model: &LlmSpec) -> Vec<EngineSim> {
             engines.push(EngineSim::new(
                 (pd.prefill_nodes + i) as u64,
                 pd.decode_class,
-                pd.gpus_per_node,
+                pd.decode_gpus(),
                 model.clone(),
                 pd.max_batch,
             ));

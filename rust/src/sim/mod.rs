@@ -297,6 +297,13 @@ pub struct ScenarioResult {
     pub sim_events: u64,
     /// High-water mark of the pending-event heap.
     pub peak_queue_depth: u64,
+    /// Per-iteration critical paths and their blame decomposition,
+    /// populated only by [`driver::run_with_provenance`] (the Sync
+    /// driver synthesizes one from its analytic breakdown — see
+    /// [`sync_driver::run_with_critpath`]).  `None` everywhere else,
+    /// so ordinary runs stay byte-identical whether or not the
+    /// critical-path plane is compiled against.
+    pub critpath: Option<Box<crate::obs::CritPathReport>>,
 }
 
 impl ScenarioResult {

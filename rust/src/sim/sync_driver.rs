@@ -62,6 +62,53 @@ pub fn run(cfg: &Scenario) -> ScenarioResult {
     run_with_trace(cfg, &mut rec)
 }
 
+/// Run the synchronous scenario and attach a synthesized
+/// [`CritPathReport`](crate::obs::CritPathReport) (`result.critpath`).
+///
+/// The monolith has no event queue to record causal provenance from,
+/// but a barrier pipeline *is* one causal chain by construction: each
+/// iteration's committed [`StepBreakdown`] phases map directly onto
+/// critical-path nodes, in barrier order, with `get_batch_wait` booked
+/// as queueing on the train edge and the analytic KV-hop/fault terms
+/// under `other`.  This keeps `Mode::Sync` a first-class citizen of
+/// blame tables and [`what_if`](crate::obs::what_if) rankings alongside
+/// the provenance-extracted event-driver reports
+/// ([`run_with_provenance`](super::driver::run_with_provenance)).
+///
+/// Aside from `critpath` the result is byte-identical to [`run`]'s.
+pub fn run_with_critpath(cfg: &Scenario) -> ScenarioResult {
+    use crate::obs::{synthesize_critpath, EdgeKind, PathNode};
+    let mut result = run(cfg);
+    let iters: Vec<Vec<PathNode>> = result
+        .steps
+        .iter()
+        .map(|s| {
+            let b = &s.breakdown;
+            let phases = [
+                (EdgeKind::EnvReset, b.env_reset_s, 0.0),
+                (EdgeKind::Generation, b.generation_s, 0.0),
+                (EdgeKind::EnvStep, b.env_step_s, 0.0),
+                (EdgeKind::Reward, b.reward_s, 0.0),
+                (EdgeKind::Other, b.other_s, 0.0),
+                (EdgeKind::Barrier, b.weight_sync_s, 0.0),
+                (EdgeKind::Train, b.train_s, b.get_batch_wait_s),
+            ];
+            phases
+                .iter()
+                .filter(|(_, service, queue)| service + queue > 0.0)
+                .map(|&(kind, service, queue)| PathNode {
+                    kind,
+                    actor: u32::MAX,
+                    service_s: service,
+                    queue_s: queue,
+                })
+                .collect()
+        })
+        .collect();
+    result.critpath = Some(Box::new(synthesize_critpath(&iters)));
+    result
+}
+
 /// Run the synchronous scenario, recording its phase timeline into
 /// `rec`.
 ///

@@ -30,6 +30,40 @@
 
 use super::SimTime;
 
+/// Parent sentinel of a provenance root: the event was scheduled
+/// outside any handler (driver priming), so it has no causal parent.
+pub const NO_CAUSE: u64 = u64::MAX;
+
+/// One node of the causal event DAG ([`EventQueue::enable_provenance`]),
+/// indexed by the event's schedule sequence number.
+///
+/// Because a handler schedules its children at the simulation clock of
+/// the event it is handling, `sched_s` of a child is *bitwise equal* to
+/// `due_s` of its parent — every ancestor chain covers a contiguous
+/// time interval, which is what makes the critical-path length ≡
+/// makespan invariant exact (see [`crate::obs::critpath`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProvEntry {
+    /// `seq` of the event whose handler scheduled this one
+    /// ([`NO_CAUSE`] for priming-time roots).
+    pub parent: u64,
+    /// Simulation time this event was scheduled at.
+    pub sched_s: f64,
+    /// Simulation time this event fires at.
+    pub due_s: f64,
+    /// Driver-assigned edge-kind tag, set at pop time via
+    /// [`EventQueue::classify_current`].  Opaque here — the queue is
+    /// event-type-agnostic; `crate::obs::critpath::EdgeKind` decodes it.
+    pub kind: u8,
+    /// Portion of `due_s - sched_s` spent queueing on a shared resource
+    /// (link slot), tagged by the scheduling site via
+    /// [`EventQueue::tag_last_queue`].
+    pub queue_s: f64,
+    /// Driver-assigned actor id (engine / trajectory slot), `u32::MAX`
+    /// when not applicable.
+    pub actor: u32,
+}
+
 struct Entry<E> {
     time: SimTime,
     seq: u64,
@@ -69,6 +103,13 @@ pub struct EventQueue<E> {
     now: SimTime,
     popped: u64,
     max_depth: usize,
+    /// Causal provenance log, one [`ProvEntry`] per scheduled event,
+    /// indexed by `seq`.  `None` (the default) keeps scheduling
+    /// allocation-free — the hot path pays one branch on the `Option`.
+    prov: Option<Vec<ProvEntry>>,
+    /// `seq` of the event currently being handled (set by `take`); the
+    /// causal parent of everything scheduled until the next pop.
+    cur: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -88,7 +129,49 @@ impl<E> EventQueue<E> {
             now: SimTime::ZERO,
             popped: 0,
             max_depth: 0,
+            prov: None,
+            cur: NO_CAUSE,
         }
+    }
+
+    /// Start recording causal provenance: every event scheduled from
+    /// here on gets a [`ProvEntry`] whose `parent` is the event being
+    /// handled at schedule time.  Purely observational — the pop order
+    /// and clock are untouched, so a run with provenance on is
+    /// bit-identical to one without.
+    pub fn enable_provenance(&mut self) {
+        if self.prov.is_none() {
+            debug_assert_eq!(self.next_seq, 0, "enable provenance before scheduling");
+            self.prov = Some(Vec::new());
+        }
+    }
+
+    /// Tag the event being handled (the last popped one) with the
+    /// driver's edge classification.  No-op when provenance is off.
+    pub fn classify_current(&mut self, kind: u8, actor: u32) {
+        if let Some(p) = self.prov.as_mut() {
+            if let Some(e) = p.get_mut(self.cur as usize) {
+                e.kind = kind;
+                e.actor = actor;
+            }
+        }
+    }
+
+    /// Tag the most recently scheduled event with the share of its
+    /// delay spent queueing on a shared resource.  No-op when
+    /// provenance is off.
+    pub fn tag_last_queue(&mut self, queue_s: f64) {
+        if let Some(p) = self.prov.as_mut() {
+            if let Some(e) = p.last_mut() {
+                e.queue_s = queue_s.max(0.0);
+            }
+        }
+    }
+
+    /// Take the provenance log accumulated so far (`None` when
+    /// [`EventQueue::enable_provenance`] was never called).
+    pub fn take_provenance(&mut self) -> Option<Vec<ProvEntry>> {
+        self.prov.take()
     }
 
     /// Current simulation time (the timestamp of the last popped event).
@@ -126,6 +209,17 @@ impl<E> EventQueue<E> {
             seq: self.next_seq,
             event,
         });
+        if let Some(p) = self.prov.as_mut() {
+            debug_assert_eq!(p.len() as u64, self.next_seq);
+            p.push(ProvEntry {
+                parent: self.cur,
+                sched_s: self.now.as_secs(),
+                due_s: t.as_secs(),
+                kind: 0,
+                queue_s: 0.0,
+                actor: u32::MAX,
+            });
+        }
         self.next_seq += 1;
         self.len += 1;
         self.max_depth = self.max_depth.max(self.len);
@@ -210,6 +304,9 @@ impl<E> EventQueue<E> {
         self.len -= 1;
         self.now = e.time;
         self.popped += 1;
+        if self.prov.is_some() {
+            self.cur = e.seq;
+        }
         if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
             self.resize(self.buckets.len() / 2);
         }
@@ -387,6 +484,46 @@ mod tests {
         assert_eq!(got_keyed, expect);
         assert_eq!(q.popped(), 500);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn provenance_records_parent_and_telescoping_times() {
+        let mut q = EventQueue::new();
+        q.enable_provenance();
+        q.schedule_in(1.0, "root"); // seq 0, parent NO_CAUSE
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::secs(1.0));
+        q.classify_current(7, 42);
+        q.schedule_in(2.0, "child"); // seq 1, parent 0
+        q.tag_last_queue(0.5);
+        q.pop();
+        q.classify_current(3, 9);
+        q.schedule_in(4.0, "grandchild"); // seq 2, parent 1
+        q.pop();
+        let log = q.take_provenance().expect("provenance enabled");
+        assert_eq!(log.len(), 3);
+        assert_eq!(log[0].parent, NO_CAUSE);
+        assert_eq!((log[0].kind, log[0].actor), (7, 42));
+        assert_eq!(log[1].parent, 0);
+        assert_eq!(log[1].queue_s, 0.5);
+        assert_eq!((log[2].parent, log[2].kind), (1, 3));
+        // The telescoping invariant: a child's schedule time is bitwise
+        // the parent's due time, so chains cover contiguous intervals.
+        assert_eq!(log[1].sched_s, log[0].due_s);
+        assert_eq!(log[2].sched_s, log[1].due_s);
+        assert_eq!(log[2].due_s, 7.0);
+        // take_provenance is a one-shot drain.
+        assert!(q.take_provenance().is_none());
+    }
+
+    #[test]
+    fn provenance_off_is_free_and_absent() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, ());
+        q.pop();
+        q.classify_current(1, 1); // no-ops without provenance
+        q.tag_last_queue(1.0);
+        assert!(q.take_provenance().is_none());
     }
 
     #[test]

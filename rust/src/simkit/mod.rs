@@ -32,6 +32,6 @@ pub mod par;
 mod rng;
 mod time;
 
-pub use engine::EventQueue;
+pub use engine::{EventQueue, ProvEntry, NO_CAUSE};
 pub use rng::SimRng;
 pub use time::SimTime;

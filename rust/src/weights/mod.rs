@@ -613,6 +613,13 @@ pub struct PullOutcome {
     pub queued: u64,
     /// The sequenced per-bucket admissions, in pull order.
     pub buckets: Vec<BucketGrant>,
+    /// Low-priority pull id on the link ([`SharedLink::begin_low_pull`])
+    /// when the pull was admitted as preemptible background traffic;
+    /// `None` for the legacy FIFO class.  The driver re-checks the
+    /// pull's delivery against [`SharedLink::low_pull_done`] at its
+    /// stream event, because KV preemptions can push the tail buckets
+    /// back *after* this outcome was granted.
+    pub pull: Option<u64>,
 }
 
 /// Admit one engine's weight pull as a **bucketized pipeline** on a
@@ -633,6 +640,29 @@ pub fn bucketized_pull(
     bytes: f64,
     push_ready_at: impl Fn(usize) -> f64,
 ) -> PullOutcome {
+    bucketized_pull_classed(link, mc, now, bytes, push_ready_at, false)
+}
+
+/// [`bucketized_pull`] with a traffic class: `background` admits the
+/// buckets as **low-priority, preemptible** segments
+/// ([`SharedLink::acquire_low`]) that KV hops may push back on a
+/// shared link — the event-driven strategies' behind-decode streams.
+/// With `background = false`, or on a link without
+/// [`SharedLink::enable_preemption`], this is exactly the legacy FIFO
+/// pull.
+pub fn bucketized_pull_classed(
+    link: &mut SharedLink,
+    mc: &MooncakeConfig,
+    now: f64,
+    bytes: f64,
+    push_ready_at: impl Fn(usize) -> f64,
+    background: bool,
+) -> PullOutcome {
+    let pull = if background && link.preemption_enabled() {
+        Some(link.begin_low_pull())
+    } else {
+        None
+    };
     let mut out = PullOutcome {
         done_s: now,
         transfer_s: 0.0,
@@ -641,6 +671,7 @@ pub fn bucketized_pull(
         push_gate_s: 0.0,
         queued: 0,
         buckets: Vec::new(),
+        pull,
     };
     let latency = link.link().latency_s;
     let mut t = now;
@@ -648,7 +679,10 @@ pub fn bucketized_pull(
         let gate = push_ready_at(i);
         out.push_gate_s += (gate - t).max(0.0);
         let admit = t.max(gate).max(now);
-        let grant = link.acquire(admit, bucket);
+        let grant = match pull {
+            Some(id) => link.acquire_low(admit, bucket, id),
+            None => link.acquire(admit, bucket),
+        };
         out.transfer_s += link.service_time(bucket) + latency;
         out.queue_delay_s += grant.queue_delay_s;
         out.max_queue_delay_s = out.max_queue_delay_s.max(grant.queue_delay_s);

@@ -1,0 +1,335 @@
+//! Critical-path plane conformance: the telescoping invariant (every
+//! iteration's critical-path length ≡ its makespan, exactly), report
+//! determinism, provenance neutrality, and the what-if estimator
+//! validated against actual re-simulation.
+//!
+//! The invariant rests on the DES clock discipline: a handler schedules
+//! its children at the clock of the event it is handling, so a child's
+//! `sched_s` is bitwise equal to its parent's `due_s` and the causal
+//! ancestor chain of each `TrainDone` tiles its iteration window with
+//! no gaps.  If any driver path ever schedules against a stale clock,
+//! these tests fail loudly under whichever composition does it — hence
+//! the mode × PD × chaos × elastic sweep.
+//!
+//! The what-if tolerances asserted here are the contract stated in
+//! docs/OBSERVABILITY.md: the estimator re-prices the *recorded* paths
+//! (queueing untouched, no path reshaping), so its prediction is
+//! compared against a real re-simulation with the corresponding
+//! scenario knob changed.
+
+use rollart::baselines;
+use rollart::elastic::ElasticPolicy;
+use rollart::fault::FaultProfile;
+use rollart::hw::GpuClass;
+use rollart::llm::QWEN3_8B;
+use rollart::obs::{what_if, CritPathReport, EdgeKind, Speedup};
+use rollart::sim::driver::{self, PdScenario};
+use rollart::sim::{Mode, Scenario, ScenarioResult};
+use rollart::simkit::dist::Dist;
+use rollart::weights::{SyncStrategyKind, WeightsScenario};
+
+fn base(mode: Mode) -> Scenario {
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
+    s.mode = mode;
+    s.batch_size = 16;
+    s.group_size = 4;
+    s.iterations = 3;
+    s
+}
+
+/// The composition sweep: every coordination mode, plus the heavy
+/// RollArt compositions (PD dispatch, shared-link weight streams,
+/// chaos, elastic scaling).
+fn sweep() -> Vec<(String, Scenario)> {
+    let mut v: Vec<(String, Scenario)> = Vec::new();
+    for mode in [
+        Mode::Sync,
+        Mode::SyncPlus,
+        Mode::OneOff,
+        Mode::AReaL,
+        Mode::RollArt,
+    ] {
+        v.push((format!("{mode:?}"), base(mode)));
+    }
+    let mut pd = base(Mode::RollArt);
+    pd.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(1, 2)
+    });
+    v.push(("RollArt+PD".into(), pd));
+
+    let mut wkv = base(Mode::RollArt);
+    wkv.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+    wkv.weights.share_kv_link = true;
+    wkv.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(1, 2)
+    });
+    v.push(("RollArt+PD+wkv".into(), wkv));
+
+    let mut chaos = base(Mode::RollArt);
+    chaos.fault = FaultProfile {
+        env_crash_p: 0.01,
+        ..FaultProfile::mtbf(400.0)
+    };
+    v.push(("RollArt+chaos".into(), chaos));
+
+    let mut pd_chaos = base(Mode::RollArt);
+    pd_chaos.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(1, 2)
+    });
+    pd_chaos.fault = FaultProfile {
+        env_crash_p: 0.01,
+        ..FaultProfile::mtbf(400.0)
+    };
+    v.push(("RollArt+PD+chaos".into(), pd_chaos));
+
+    let mut el = base(Mode::RollArt);
+    el.iterations = 4;
+    let mut policy = ElasticPolicy::new(GpuClass::H800, el.model.rollout_tp, 32);
+    policy.scale_up_wait_ratio = 0.1;
+    policy.scale_down_wait_ratio = 0.01;
+    policy.cooldown_steps = 0;
+    el.elastic = Some(policy);
+    v.push(("RollArt+elastic".into(), el));
+    v
+}
+
+/// The structural contract of one report against its run.
+fn check_report(rep: &CritPathReport, r: &ScenarioResult, what: &str) {
+    assert_eq!(
+        rep.iters.len(),
+        r.steps.len(),
+        "{what}: one critical path per training step"
+    );
+    // The windows tile [0, makespan] with no gaps.
+    let mut prev_end = 0.0f64;
+    for it in &rep.iters {
+        assert_eq!(
+            it.start_s, prev_end,
+            "{what} iter {}: window must start where the last ended",
+            it.iter
+        );
+        assert!(it.end_s >= it.start_s, "{what} iter {}: monotone window", it.iter);
+        // The telescoping invariant, exact: path length ≡ makespan.
+        assert_eq!(
+            it.len_s,
+            it.end_s - it.start_s,
+            "{what} iter {}: len must be the window width, exactly",
+            it.iter
+        );
+        // The per-kind decomposition sums back to the length (float
+        // addition over the chain is the only slack).
+        let tol = 1e-9 * it.len_s.abs().max(1.0);
+        assert!(
+            (it.breakdown.total() - it.len_s).abs() <= tol,
+            "{what} iter {}: breakdown {} vs len {}",
+            it.iter,
+            it.breakdown.total(),
+            it.len_s
+        );
+        let node_sum: f64 = it.nodes.iter().map(|n| n.service_s + n.queue_s).sum();
+        assert!(
+            (node_sum - it.len_s).abs() <= tol,
+            "{what} iter {}: nodes {} must telescope to {}",
+            it.iter,
+            node_sum,
+            it.len_s
+        );
+        for n in &it.nodes {
+            assert!(
+                n.service_s >= 0.0 && n.queue_s >= 0.0,
+                "{what} iter {}: negative span {n:?}",
+                it.iter
+            );
+        }
+        // The chain is anchored at the iteration's TrainDone.
+        if it.len_s > 0.0 {
+            let last = it.nodes.last().expect("non-empty path for a non-empty window");
+            assert_eq!(
+                last.kind,
+                EdgeKind::Train,
+                "{what} iter {}: the path must end at the train step",
+                it.iter
+            );
+        }
+        prev_end = it.end_s;
+    }
+    assert_eq!(prev_end, rep.makespan_s, "{what}: windows must reach the makespan");
+    // The makespan is the run's wall clock (the event drivers stop at
+    // the final TrainDone; the Sync driver's steps sum to its clock).
+    assert!(
+        (rep.makespan_s - r.total_time_s).abs() <= 1e-9 * r.total_time_s.max(1.0),
+        "{what}: makespan {} vs wall clock {}",
+        rep.makespan_s,
+        r.total_time_s
+    );
+    let tol = 1e-9 * rep.makespan_s.abs().max(1.0);
+    assert!(
+        (rep.total.total() - rep.makespan_s).abs() <= tol,
+        "{what}: run-total blame {} must sum to the makespan {}",
+        rep.total.total(),
+        rep.makespan_s
+    );
+}
+
+/// Length ≡ makespan under every mode × PD × chaos/elastic composition,
+/// at two seeds.
+#[test]
+fn critical_path_length_is_the_iteration_makespan() {
+    for (name, mut cfg) in sweep() {
+        for salt in [0u64, 0x5eed] {
+            cfg.seed ^= salt;
+            let r = baselines::run_with_critpath(&cfg);
+            let rep = r.critpath.as_ref().expect("critpath plane armed");
+            check_report(rep, &r, &format!("{name} seed^{salt:x}"));
+        }
+    }
+}
+
+/// Same scenario twice ⇒ bit-identical report (full structural
+/// equality, every node of every path).
+#[test]
+fn critpath_report_is_bit_deterministic() {
+    for (name, cfg) in sweep() {
+        let a = baselines::run_with_critpath(&cfg);
+        let b = baselines::run_with_critpath(&cfg);
+        assert!(a.critpath.is_some(), "{name}: report populated");
+        assert_eq!(a, b, "{name}: provenance-armed runs diverged");
+    }
+}
+
+/// Provenance observes, never steers: aside from the report itself the
+/// result is byte-identical to an unobserved run.
+#[test]
+fn provenance_leaves_the_simulation_untouched() {
+    for (name, cfg) in sweep() {
+        let plain = baselines::run(&cfg);
+        let mut armed = baselines::run_with_critpath(&cfg);
+        assert!(armed.critpath.take().is_some(), "{name}: report populated");
+        assert_eq!(plain, armed, "{name}: provenance changed the simulation");
+    }
+}
+
+fn rel_err(predicted: f64, actual: f64) -> f64 {
+    (predicted - actual).abs() / actual.max(1e-9)
+}
+
+/// What-if validation 1 (env latency, tolerance 10%): inject a constant
+/// 30 s env step, predict a 2× env speedup, and re-simulate with the
+/// override at 15 s.  The env plane dominates the path and has no
+/// queueing, so this is the tightest of the three contracts.
+#[test]
+fn what_if_env_latency_matches_resimulation() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.env_step_override = Some(Dist::Constant(30.0));
+    let r = driver::run_with_provenance(&cfg).0;
+    let rep = r.critpath.as_ref().unwrap();
+    assert!(
+        rep.total.env_step_s > 0.0,
+        "env steps must be on the critical path"
+    );
+    let w = what_if(rep, Speedup::EnvStep(2.0));
+    assert!(w.predicted_s < w.baseline_s, "speedup must predict a saving");
+
+    let mut fast = cfg.clone();
+    fast.env_step_override = Some(Dist::Constant(15.0));
+    let actual = driver::run(&fast).total_time_s;
+    assert!(actual < w.baseline_s, "re-simulation must actually speed up");
+    assert!(
+        rel_err(w.predicted_s, actual) <= 0.10,
+        "env what-if: predicted {:.2}s vs re-simulated {actual:.2}s (baseline {:.2}s)",
+        w.predicted_s,
+        w.baseline_s
+    );
+}
+
+/// What-if validation 2 (decode width, tolerance 15%): a PD deployment
+/// with env latency muted so decode binds the path; predict a 2× decode
+/// speedup and re-simulate with `decode_gpus_per_node` doubled (the
+/// 1/n width law in `hw::phase_time`, launch overhead aside).
+#[test]
+fn what_if_decode_speedup_matches_resimulation() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.pd = Some(PdScenario {
+        gpus_per_node: 2,
+        max_batch: 8,
+        ..PdScenario::xpyd(1, 2)
+    });
+    cfg.env_step_override = Some(Dist::Constant(0.05));
+    let r = driver::run_with_provenance(&cfg).0;
+    let rep = r.critpath.as_ref().unwrap();
+    assert!(
+        rep.total.decode_s > 0.0,
+        "decode must be on the critical path"
+    );
+    let w = what_if(rep, Speedup::Decode(2.0));
+    assert!(w.predicted_s < w.baseline_s);
+
+    let mut fast = cfg.clone();
+    fast.pd.as_mut().unwrap().decode_gpus_per_node = Some(4);
+    let actual = driver::run(&fast).total_time_s;
+    assert!(actual < w.baseline_s, "wider decode must actually speed up");
+    assert!(
+        rel_err(w.predicted_s, actual) <= 0.15,
+        "decode what-if: predicted {:.2}s vs re-simulated {actual:.2}s (baseline {:.2}s)",
+        w.predicted_s,
+        w.baseline_s
+    );
+}
+
+/// What-if validation 3 (weight-link bandwidth, tolerance 20%): rolling
+/// refresh over a deliberately starved fan-out link (bandwidth / 8) so
+/// the weight stream sits on the path; predict a 2× stream speedup and
+/// re-simulate with `pull_bytes_per_s` doubled.  Loosest tolerance of
+/// the three: doubling the bandwidth also halves the queueing the
+/// estimator deliberately leaves untouched.
+#[test]
+fn what_if_weight_bandwidth_matches_resimulation() {
+    let mut cfg = base(Mode::RollArt);
+    cfg.weights = WeightsScenario::with_strategy(SyncStrategyKind::RollingSubset { k: 1 });
+    cfg.weights.mooncake.pull_bytes_per_s /= 8.0;
+    let r = driver::run_with_provenance(&cfg).0;
+    let rep = r.critpath.as_ref().unwrap();
+    assert!(
+        rep.total.weight_stream_s > 0.0,
+        "the starved weight stream must be on the critical path"
+    );
+    let w = what_if(rep, Speedup::Weights(2.0));
+    assert!(w.predicted_s < w.baseline_s);
+
+    let mut fast = cfg.clone();
+    fast.weights.mooncake.pull_bytes_per_s *= 2.0;
+    let actual = driver::run(&fast).total_time_s;
+    assert!(actual < w.baseline_s, "a faster link must actually speed up");
+    assert!(
+        rel_err(w.predicted_s, actual) <= 0.20,
+        "weights what-if: predicted {:.2}s vs re-simulated {actual:.2}s (baseline {:.2}s)",
+        w.predicted_s,
+        w.baseline_s
+    );
+}
+
+/// A kind absent from every path predicts exactly no change — the
+/// estimator never invents work.
+#[test]
+fn what_if_is_inert_off_the_path() {
+    let cfg = base(Mode::RollArt); // colocated: no PD, so no prefill/kv
+    let r = driver::run_with_provenance(&cfg).0;
+    let rep = r.critpath.as_ref().unwrap();
+    for s in [Speedup::Prefill(2.0), Speedup::KvHop(2.0)] {
+        let w = what_if(rep, s);
+        // Re-summing the untouched chains only re-does the float
+        // additions, so the prediction matches the baseline to dust.
+        assert!(
+            (w.predicted_s - w.baseline_s).abs() <= 1e-9 * w.baseline_s.max(1.0),
+            "{s:?}: nothing on the path to speed up ({} vs {})",
+            w.predicted_s,
+            w.baseline_s
+        );
+    }
+}
