@@ -8,7 +8,7 @@
 
 use rollart::baselines;
 use rollart::envpool::EnvPoolConfig;
-use rollart::llm::PROD_MOE;
+use rollart::llm::{PROD_MOE, QWEN3_8B};
 use rollart::sim::{async_driver, EnginePool, Mode, Scenario};
 use rollart::trace;
 use rollart::util::cli::Args;
@@ -27,12 +27,18 @@ fn main() {
         stats.max_prompt, stats.max_response, stats.mean_response
     );
     let ratios = trace::per_step_tail_ratios(&records, 512);
-    let peak = ratios.iter().cloned().fold(0.0, f64::max);
-    println!(
-        "  per-step straggler ratio (max/mean response): mean {:.1}x, peak {:.1}x",
-        ratios.iter().sum::<f64>() / ratios.len() as f64,
-        peak
-    );
+    if ratios.is_empty() {
+        // Only possible for an empty trace (`--trajectories 0`); a
+        // trailing partial step is a real step and produces a ratio.
+        println!("  per-step straggler ratio: n/a (empty trace)");
+    } else {
+        let peak = ratios.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "  per-step straggler ratio (max/mean response): mean {:.1}x, peak {:.1}x",
+            ratios.iter().sum::<f64>() / ratios.len() as f64,
+            peak
+        );
+    }
 
     println!("\n== iteration anatomy at production scale (Fig 15b) ==");
     let mut s = Scenario::rollart_default(PROD_MOE.clone(), 0.25);
@@ -97,4 +103,45 @@ fn main() {
         rt.mean_step_time(),
         r.mean_step_time() / rt.mean_step_time()
     );
+
+    println!("\n== open-loop trace replay with per-domain SLOs ==");
+    // The same §8 family mix, replayed as a *production serving*
+    // workload: a streaming `TraceSource` (constant memory — the feed
+    // never holds more than the record in hand) drives Poisson
+    // arrivals into the driver, an in-flight cap sheds overload, and
+    // the run reports per-domain latency quantiles and SLO violations.
+    let requests = args.get_usize("requests", 20_000) as u64;
+    let mut replay_cfg = Scenario::rollart_default(QWEN3_8B.clone(), 0.25);
+    replay_cfg.iterations = usize::MAX / 2; // end on trace drain, not a step budget
+    replay_cfg.alpha = 64;
+    let mut tr = trace::TraceScenario::section8(requests, 6.0);
+    tr.feed = trace::TraceFeed::Streamed;
+    replay_cfg.trace = Some(tr);
+    replay_cfg.slo = Some(trace::SloPolicy {
+        default_target_s: 600.0,
+        targets: vec![],
+        shed_above: Some(1_024),
+    });
+    let (res, _, replay) = rollart::sim::driver::run_trace_replay(&replay_cfg);
+    let slo = res.slo.expect("trace replay emits an SLO report");
+    println!(
+        "  offered {}  admitted {}  shed {}  completed {}  goodput {:.2} req/s",
+        slo.offered, slo.admitted, slo.shed, slo.completed, slo.goodput_rps
+    );
+    println!(
+        "  streamed feed peak buffer: {} record(s)",
+        replay.peak_records_buffered
+    );
+    for d in &slo.domains {
+        println!(
+            "  {:<12} p50 {:>7.1}s  p99 {:>7.1}s  max {:>7.1}s  violations {}/{} (target {:.0}s)",
+            d.domain.name(),
+            d.p50_s,
+            d.p99_s,
+            d.max_s,
+            d.violations,
+            d.completed,
+            d.target_s
+        );
+    }
 }

@@ -1,0 +1,143 @@
+//! fig_trace: production trace replay (§8) — open-loop streaming
+//! arrivals, multi-tenant SLO attainment, constant-memory feed.
+//!
+//! Replays the §8 production family mix through the full DES as an
+//! *open-loop* serving workload: a streaming `TraceSource` feeds
+//! Poisson arrivals into the RollArt-mode driver, an in-flight cap
+//! sheds overload at the door, and the run folds per-domain latency
+//! quantiles, goodput and SLO violations into a `SloReport`.  Full
+//! mode replays 10^6 requests in a single replication; quick mode
+//! (CI) replays 6×10^4.  Either way the streamed feed must hold
+//! exactly one record — the constant-memory gate asserted below.
+
+use crate::support::*;
+use rollart::llm::QWEN3_8B;
+use rollart::metrics::CsvWriter;
+use rollart::sim::driver::run_trace_replay;
+use rollart::sim::{Mode, Scenario};
+use rollart::trace::{SloPolicy, TraceFeed, TraceScenario};
+
+pub fn run() {
+    banner(
+        "fig_trace",
+        "production trace replay: per-domain SLO under open-loop arrivals",
+    );
+    let requests: u64 = if quick_mode() { 60_000 } else { 1_000_000 };
+
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), SCALE);
+    s.mode = Mode::RollArt;
+    // The replay ends when the trace drains, not at a step budget.
+    s.iterations = usize::MAX / 2;
+    // Generous staleness window: a serving replay should shed at the
+    // door, not abort mid-flight because training advanced the weights.
+    s.alpha = 64;
+    let mut t = TraceScenario::section8(requests, 6.0);
+    t.feed = TraceFeed::Streamed;
+    s.trace = Some(t);
+    s.slo = Some(SloPolicy {
+        default_target_s: 600.0,
+        targets: vec![],
+        shed_above: Some(2_048),
+    });
+
+    let t0 = std::time::Instant::now();
+    let (result, _, replay) = run_trace_replay(&s);
+    let wall = t0.elapsed().as_secs_f64();
+    let slo = result
+        .slo
+        .as_ref()
+        .expect("trace replay emits an SLO report");
+
+    // Constant-memory gate: the streamed feed never buffers more than
+    // the record in hand, at any trace length.
+    assert_eq!(
+        replay.peak_records_buffered, 1,
+        "streamed feed buffered records beyond the one in hand"
+    );
+    // Accounting closure over the whole trace (the SLO-table
+    // assertions CI runs in quick mode).
+    assert_eq!(slo.offered, requests, "every trace record was offered");
+    assert_eq!(slo.admitted + slo.shed, slo.offered);
+    assert_eq!(
+        slo.completed + slo.aborted,
+        slo.admitted,
+        "the replay must drain: nothing left in flight"
+    );
+    assert!(!slo.domains.is_empty(), "SLO table is empty");
+    for d in &slo.domains {
+        assert!(d.completed > 0, "empty SLO row {d:?}");
+        assert!(
+            d.p50_s <= d.p99_s && d.p99_s <= d.max_s,
+            "quantiles out of order in {d:?}"
+        );
+        assert!(d.violations <= d.completed, "{d:?}");
+    }
+    assert!(slo.goodput_rps > 0.0);
+
+    row("requests offered", "10^6 (full)", &format!("{}", slo.offered));
+    row(
+        "shed at admission",
+        "cap 2048 in flight",
+        &format!("{} ({:.2}%)", slo.shed, 100.0 * slo.shed as f64 / slo.offered as f64),
+    );
+    row(
+        "completed / aborted",
+        "-",
+        &format!("{} / {}", slo.completed, slo.aborted),
+    );
+    row(
+        "goodput",
+        "-",
+        &format!("{:.2} req/s", slo.goodput_rps),
+    );
+    row(
+        "streamed feed peak buffer",
+        "1 record",
+        &format!("{}", replay.peak_records_buffered),
+    );
+    for d in &slo.domains {
+        row(
+            &format!("{:?} p99 vs target", d.domain),
+            &format!("<= {:.0}s", d.target_s),
+            &format!(
+                "{:.1}s ({} violations / {} done)",
+                d.p99_s, d.violations, d.completed
+            ),
+        );
+    }
+    eprintln!("  [{requests} requests replayed in {wall:.1}s wall]");
+
+    let mut csv = CsvWriter::for_bench(
+        "fig_trace",
+        &[
+            "domain",
+            "completed",
+            "p50_s",
+            "p99_s",
+            "max_s",
+            "violations",
+            "target_s",
+        ],
+    );
+    for d in &slo.domains {
+        csv.row([
+            format!("{:?}", d.domain),
+            d.completed.to_string(),
+            format!("{:.3}", d.p50_s),
+            format!("{:.3}", d.p99_s),
+            format!("{:.3}", d.max_s),
+            d.violations.to_string(),
+            format!("{:.0}", d.target_s),
+        ]);
+    }
+    csv.row([
+        "all".to_string(),
+        slo.completed.to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        slo.total_violations.to_string(),
+        format!("{:.0}", slo.goodput_rps),
+    ]);
+    csv.flush().unwrap();
+}

@@ -26,6 +26,7 @@ mod fig_affinity;
 mod fig_critpath;
 mod fig_fault;
 mod fig_phases;
+mod fig_trace;
 mod fig_wsync;
 mod support;
 mod table3;
@@ -108,6 +109,9 @@ fn main() {
     }
     if want("fig15") {
         fig15::run();
+    }
+    if want("fig_trace") {
+        fig_trace::run();
     }
     eprintln!(
         "\npaper_figures done in {:.1}s; CSVs in target/bench-results/",

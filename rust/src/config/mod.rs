@@ -284,6 +284,107 @@ pub fn scenario_from_json(text: &str) -> Result<Scenario, String> {
             other => return Err(format!("unknown reward kind {other}")),
         };
     }
+    if let Some(t) = j.get("trace") {
+        use crate::trace::{ArrivalProcess, TraceFeed, TraceScenario};
+        let requests = t.get("requests").and_then(|v| v.as_usize()).unwrap_or(10_000) as u64;
+        if requests == 0 {
+            return Err("trace.requests must be ≥ 1".to_string());
+        }
+        let feed = match t.get("feed").and_then(|v| v.as_str()).unwrap_or("streamed") {
+            "streamed" => TraceFeed::Streamed,
+            "materialized" => TraceFeed::Materialized,
+            other => return Err(format!("unknown trace feed {other}")),
+        };
+        let arrivals = match t.get("arrivals") {
+            None => ArrivalProcess::Poisson { rate: 10.0 },
+            Some(a) => {
+                let rate_knob = |key: &str, default: f64| -> Result<f64, String> {
+                    let v = a.get(key).and_then(|v| v.as_f64()).unwrap_or(default);
+                    if v <= 0.0 || !v.is_finite() {
+                        return Err(format!("trace.arrivals.{key} must be positive, got {v}"));
+                    }
+                    Ok(v)
+                };
+                match a.get("kind").and_then(|v| v.as_str()).unwrap_or("poisson") {
+                    "poisson" => ArrivalProcess::Poisson {
+                        rate: rate_knob("rate", 10.0)?,
+                    },
+                    "diurnal" => {
+                        let amplitude =
+                            a.get("amplitude").and_then(|v| v.as_f64()).unwrap_or(0.5);
+                        if !(0.0..=1.0).contains(&amplitude) {
+                            return Err(format!(
+                                "trace.arrivals.amplitude must be in [0, 1], got {amplitude}"
+                            ));
+                        }
+                        ArrivalProcess::Diurnal {
+                            base_rate: rate_knob("base_rate", 10.0)?,
+                            amplitude,
+                            period_s: rate_knob("period_s", 86_400.0)?,
+                        }
+                    }
+                    "bursty" => ArrivalProcess::Bursty {
+                        on_rate: rate_knob("on_rate", 50.0)?,
+                        mean_on_s: rate_knob("mean_on_s", 60.0)?,
+                        mean_off_s: rate_knob("mean_off_s", 240.0)?,
+                    },
+                    other => return Err(format!("unknown arrival process {other}")),
+                }
+            }
+        };
+        // Open-loop arrivals cannot drive barrier iteration launches —
+        // mirror the driver's assertion as a config error (the analytic
+        // Sync driver ignores the trace entirely).
+        if s.mode != Mode::Sync
+            && !crate::sim::driver::policy_for(s.mode).continuous_rollout()
+        {
+            return Err(format!("mode {:?} does not admit a trace replay", s.mode));
+        }
+        s.trace = Some(TraceScenario {
+            families: crate::trace::prod_families(),
+            requests,
+            arrivals,
+            feed,
+            trace_seed: t.get("seed").and_then(|v| v.as_f64()).unwrap_or(8.0) as u64,
+        });
+    }
+    if let Some(o) = j.get("slo") {
+        use crate::trace::SloPolicy;
+        let mut slo = SloPolicy::default();
+        if let Some(d) = o.get("default_target_s").and_then(|v| v.as_f64()) {
+            if d <= 0.0 {
+                return Err(format!("slo.default_target_s must be positive, got {d}"));
+            }
+            slo.default_target_s = d;
+        }
+        if let Some(cap) = o.get("shed_above").and_then(|v| v.as_usize()) {
+            if cap == 0 {
+                return Err("slo.shed_above must be ≥ 1 (0 would shed everything)".to_string());
+            }
+            slo.shed_above = Some(cap);
+        }
+        // Per-domain targets as an array of objects (the Json helper
+        // has no key iteration).
+        if let Some(targets) = o.get("targets").and_then(|v| v.as_arr()) {
+            for entry in targets {
+                let name = entry
+                    .get("domain")
+                    .and_then(|v| v.as_str())
+                    .ok_or("slo.targets entries need a domain")?;
+                let domain =
+                    domain_by_name(name).ok_or(format!("unknown domain {name}"))?;
+                let target = entry
+                    .get("target_s")
+                    .and_then(|v| v.as_f64())
+                    .ok_or(format!("slo target for {name} needs target_s"))?;
+                if target <= 0.0 {
+                    return Err(format!("slo target for {name} must be positive"));
+                }
+                slo.targets.push((domain, target));
+            }
+        }
+        s.slo = Some(slo);
+    }
     Ok(s)
 }
 
@@ -479,6 +580,76 @@ mod tests {
         assert!(scenario_from_json(r#"{"engine_mtbf_s": 0.0}"#).is_err());
         assert!(scenario_from_json(r#"{"engine_mtbf_s": -5.0}"#).is_err());
         assert!(scenario_from_json(r#"{"env_crash_p": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn trace_and_slo_knobs_parse() {
+        use crate::trace::{ArrivalProcess, TraceFeed};
+        let s = scenario_from_json(
+            r#"{"trace": {"requests": 5000, "seed": 21, "feed": "materialized",
+                          "arrivals": {"kind": "diurnal", "base_rate": 4.0,
+                                       "amplitude": 0.6, "period_s": 3600.0}},
+                "slo": {"default_target_s": 900.0, "shed_above": 256,
+                        "targets": [{"domain": "swe", "target_s": 1800.0},
+                                    {"domain": "math_tool", "target_s": 300.0}]}}"#,
+        )
+        .unwrap();
+        let t = s.trace.expect("trace config");
+        assert_eq!(t.requests, 5_000);
+        assert_eq!(t.trace_seed, 21);
+        assert_eq!(t.feed, TraceFeed::Materialized);
+        assert_eq!(
+            t.arrivals,
+            ArrivalProcess::Diurnal {
+                base_rate: 4.0,
+                amplitude: 0.6,
+                period_s: 3_600.0
+            }
+        );
+        let slo = s.slo.expect("slo config");
+        assert_eq!(slo.default_target_s, 900.0);
+        assert_eq!(slo.shed_above, Some(256));
+        assert_eq!(slo.target_for(TaskDomain::Swe), 1_800.0);
+        assert_eq!(slo.target_for(TaskDomain::MathTool), 300.0);
+        assert_eq!(slo.target_for(TaskDomain::Web), 900.0);
+        // Defaults: streamed Poisson §8 mix.
+        let d = scenario_from_json(r#"{"trace": {}}"#).unwrap();
+        let t = d.trace.expect("default trace");
+        assert_eq!(t.feed, TraceFeed::Streamed);
+        assert_eq!(t.requests, 10_000);
+        assert!(matches!(t.arrivals, ArrivalProcess::Poisson { .. }));
+        let bursty = scenario_from_json(
+            r#"{"trace": {"arrivals": {"kind": "bursty", "on_rate": 20.0}}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            bursty.trace.unwrap().arrivals,
+            ArrivalProcess::Bursty { on_rate, .. } if on_rate == 20.0
+        ));
+        let clean = scenario_from_json("{}").unwrap();
+        assert!(clean.trace.is_none() && clean.slo.is_none());
+        // Validation: degenerate knobs and barrier modes error.
+        assert!(scenario_from_json(r#"{"trace": {"requests": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"trace": {"feed": "psychic"}}"#).is_err());
+        assert!(scenario_from_json(
+            r#"{"trace": {"arrivals": {"kind": "poisson", "rate": 0.0}}}"#
+        )
+        .is_err());
+        assert!(scenario_from_json(
+            r#"{"trace": {"arrivals": {"kind": "diurnal", "amplitude": 1.5}}}"#
+        )
+        .is_err());
+        assert!(scenario_from_json(r#"{"mode": "sync+", "trace": {}}"#).is_err());
+        assert!(scenario_from_json(r#"{"slo": {"shed_above": 0}}"#).is_err());
+        assert!(scenario_from_json(r#"{"slo": {"default_target_s": -1.0}}"#).is_err());
+        assert!(scenario_from_json(
+            r#"{"slo": {"targets": [{"domain": "swe"}]}}"#
+        )
+        .is_err());
+        assert!(scenario_from_json(
+            r#"{"slo": {"targets": [{"domain": "atlantis", "target_s": 60.0}]}}"#
+        )
+        .is_err());
     }
 
     #[test]

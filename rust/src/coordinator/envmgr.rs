@@ -154,6 +154,17 @@ impl EnvManagerSim {
         self.phase = EnvPhase::Aborted;
     }
 
+    /// Drop the per-turn token storage of a *terminal* trajectory.
+    /// Long trace replays (10⁶+ requests) keep every manager in the
+    /// slab; releasing the token vectors once the trajectory is
+    /// deposited (its clone lives in the sample buffer) or aborted
+    /// bounds slab memory by the in-flight set, not the trace length.
+    pub fn release(&mut self) {
+        debug_assert!(self.is_terminal());
+        self.traj.turns = Vec::new();
+        self.shape.per_turn = Vec::new();
+    }
+
     pub fn is_terminal(&self) -> bool {
         matches!(self.phase, EnvPhase::Done | EnvPhase::Aborted)
     }

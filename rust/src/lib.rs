@@ -30,7 +30,8 @@
 //! | scheduler | [`sim::driver`]: [`sim::driver::core`] event loop, [`sim::driver::policy`] per-mode policies, [`sim::driver::lifecycle`] trajectory state machine + phase residency, [`sim::driver::pd`] PD execution mode |
 //! | weights | [`weights`]: per-engine weight versions + pluggable [`weights::SyncStrategy`] dissemination (blocking / rolling / lazy / overlapped / adaptive), bucketized per-engine pulls ([`weights::bucketized_pull`], Mooncake bucket model) over a contended fan-out link |
 //! | fault & elasticity | [`fault`], [`elastic`] (single-pool [`elastic::AutoScaler`] + per-class PD [`elastic::PdAutoScaler`]) |
-//! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`], [`trace`] |
+//! | substrates | [`simkit`], [`env`], [`envpool`], [`metrics`] |
+//! | trace replay | [`trace`]: streaming [`trace::TraceSource`] §8 workload generator, [`trace::ArrivalProcess`] open-loop arrivals (Poisson / diurnal / bursty), [`trace::SloPolicy`] admission + per-domain [`trace::SloReport`] on [`sim::ScenarioResult`] (driven by [`sim::driver::run_trace_replay`]) |
 //! | telemetry | [`obs`]: [`obs::TraceRecorder`] Chrome-trace span/counter export, [`obs::BubbleReport`] idle-cause attribution, [`obs::critpath`] causal critical-path blame + [`obs::what_if`] estimator over [`simkit::EventQueue`] provenance (see `docs/OBSERVABILITY.md`) |
 //! | evaluation | [`sim`] ([`sim::sync_driver`] + the scheduler plane), [`baselines`] |
 

@@ -76,11 +76,13 @@ pub enum EdgeKind {
     Fault = 12,
     /// Elastic plane: provisioning, warm-up pulls, repurposing.
     Elastic = 13,
+    /// Trace-replay plane: open-loop trace arrival ticks.
+    Arrival = 14,
 }
 
 impl EdgeKind {
     /// Every classifiable kind, in tag order.
-    pub const ALL: [EdgeKind; 14] = [
+    pub const ALL: [EdgeKind; 15] = [
         EdgeKind::Other,
         EdgeKind::Prefill,
         EdgeKind::Decode,
@@ -95,6 +97,7 @@ impl EdgeKind {
         EdgeKind::Cutover,
         EdgeKind::Fault,
         EdgeKind::Elastic,
+        EdgeKind::Arrival,
     ];
 
     pub fn from_u8(k: u8) -> EdgeKind {
@@ -117,6 +120,7 @@ impl EdgeKind {
             EdgeKind::Cutover => "cutover",
             EdgeKind::Fault => "fault",
             EdgeKind::Elastic => "elastic",
+            EdgeKind::Arrival => "arrival",
         }
     }
 }
@@ -140,6 +144,8 @@ pub struct PathBreakdown {
     pub cutover_s: f64,
     pub fault_s: f64,
     pub elastic_s: f64,
+    /// Open-loop trace arrival ticks (trace-replay runs only).
+    pub arrival_s: f64,
     pub other_s: f64,
     /// Link-slot queueing across all on-path edges.
     pub queue_s: f64,
@@ -161,6 +167,7 @@ impl PathBreakdown {
             EdgeKind::Cutover => &mut self.cutover_s,
             EdgeKind::Fault => &mut self.fault_s,
             EdgeKind::Elastic => &mut self.elastic_s,
+            EdgeKind::Arrival => &mut self.arrival_s,
             EdgeKind::Other => &mut self.other_s,
         }
     }
@@ -193,6 +200,7 @@ impl PathBreakdown {
             EdgeKind::Cutover => self.cutover_s,
             EdgeKind::Fault => self.fault_s,
             EdgeKind::Elastic => self.elastic_s,
+            EdgeKind::Arrival => self.arrival_s,
             EdgeKind::Other => self.other_s,
         }
     }

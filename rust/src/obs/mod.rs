@@ -76,6 +76,10 @@ pub const CTR_VERSION_LAG_MAX: &str = "version_lag_max";
 pub const CTR_KV_QUEUE_DELAY: &str = "kv_link_queue_delay_s";
 /// Cumulative weight fan-out link queue delay, seconds.
 pub const CTR_WLINK_QUEUE_DELAY: &str = "weight_link_queue_delay_s";
+/// Trace-replay plane: requests offered by the arrival process so far.
+pub const CTR_TRACE_OFFERED: &str = "trace_offered";
+/// Trace-replay plane: offered requests shed by the admission cap.
+pub const CTR_TRACE_SHED: &str = "trace_shed";
 
 // Per-GPU-class rows (heterogeneous fleet plane): one gauge per class
 // present in the fleet, named `<prefix><class>` (e.g.

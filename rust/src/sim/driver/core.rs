@@ -54,7 +54,7 @@ use crate::env::TaskDomain;
 use crate::envpool::ResetSampler;
 use crate::fault::{FaultEvent, FaultReport};
 use crate::hw::{phase_time, GpuClass};
-use crate::metrics::StepBreakdown;
+use crate::metrics::{Histogram, StepBreakdown};
 use crate::mooncake::MooncakeStore;
 use crate::net::SharedLink;
 use crate::obs::{self, BubbleCause, BubbleReport, EdgeKind, TraceRecorder};
@@ -64,6 +64,10 @@ use crate::rl::{TrajectoryId, Version};
 use crate::serverless::{ServerlessConfig, ServerlessPlatform};
 use crate::sim::{Mode, RewardDeploy, Scenario, ScenarioResult, StepStats};
 use crate::simkit::{EventQueue, SimRng, SimTime};
+use crate::trace::{
+    Arrivals, DomainSlo, SloPolicy, SloReport, TraceFeed, TraceRecord, TraceReplayStats,
+    TraceSource,
+};
 use crate::weights::{
     bucketized_pull_classed, AdaptDecision, FleetView, SyncStrategy, WeightSyncReport,
 };
@@ -140,6 +144,9 @@ enum Ev {
     /// delivered; cut over at the next step boundary (event-driven
     /// strategies — the transfer rides behind decode).
     WsyncStreamed { engine: usize, epoch: u64 },
+    /// Trace-replay plane: the next open-loop arrival fires — pull one
+    /// record from the feed, admit or shed it, schedule the next tick.
+    TraceArrival,
 }
 
 /// Where one engine is in its per-engine weight sync (event-driven
@@ -402,6 +409,11 @@ struct DriverCore<'a> {
     kick_cause: BubbleCause,
     /// When the in-flight train step started (trace span start).
     train_started: f64,
+    // ---- trace-replay plane -------------------------------------
+    /// Open-loop trace replay (`Scenario::trace`): arrivals replace
+    /// closed-loop admission (`refill`) and barrier launches; `None`
+    /// runs the classic closed-loop drivers untouched.
+    tr: Option<TraceState>,
     /// Causal provenance armed on the event queue (critical-path
     /// plane): the dispatch loop classifies every popped event and
     /// `finish()` turns the log into a [`CritPathReport`]
@@ -422,6 +434,69 @@ struct PullTicket {
     done_s: f64,
     queue_s: f64,
     pull: Option<u64>,
+}
+
+/// Where the next trace record comes from (trace-replay plane).
+///
+/// Both feeds produce the *same* record sequence for the same
+/// `trace_seed` ([`TraceSource`] is the generator `generate` collects
+/// from), so the `ScenarioResult` is bit-identical either way — only
+/// the memory profile differs, which is exactly what
+/// [`TraceReplayStats::peak_records_buffered`] measures.
+enum TraceFeedState {
+    /// Constant-memory streaming: at most the record in hand.
+    Streamed(TraceSource),
+    /// Reference path: the whole trace materialized up front.
+    Materialized(std::vec::IntoIter<TraceRecord>),
+}
+
+impl TraceFeedState {
+    fn next(&mut self) -> Option<TraceRecord> {
+        match self {
+            TraceFeedState::Streamed(s) => s.next(),
+            TraceFeedState::Materialized(it) => it.next(),
+        }
+    }
+
+    /// Records currently buffered inside the feed (the record in hand
+    /// is counted by the caller).
+    fn buffered(&self) -> usize {
+        match self {
+            TraceFeedState::Streamed(_) => 0,
+            TraceFeedState::Materialized(it) => it.as_slice().len(),
+        }
+    }
+}
+
+/// Per-domain latency accumulator behind the [`SloReport`].
+#[derive(Default)]
+struct DomainAcc {
+    lat: Histogram,
+    total_s: f64,
+    completed: u64,
+    violations: u64,
+}
+
+/// Open-loop trace-replay state (`Scenario::trace`).  Lives outside
+/// `ScenarioResult` so the replay bookkeeping (notably
+/// `peak_buffered`, which *differs* between feeds by design) cannot
+/// perturb the bit-identity pins.
+struct TraceState {
+    feed: TraceFeedState,
+    arrivals: Arrivals,
+    slo: SloPolicy,
+    /// Stop offering after this many arrivals (`TraceScenario::requests`).
+    limit: u64,
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    aborted: u64,
+    aborted_total_s: f64,
+    peak_buffered: u64,
+    /// Keyed by [`TaskDomain`] (`Ord` = declaration order, so report
+    /// rows come out in `TaskDomain::ALL` order).
+    acc: BTreeMap<TaskDomain, DomainAcc>,
 }
 
 /// Per-call reward execution sample.
@@ -600,13 +675,49 @@ impl<'a> DriverCore<'a> {
         if prov {
             q.enable_provenance();
         }
+        let rng = SimRng::new(cfg.seed);
+        let tr = cfg.trace.as_ref().map(|t| {
+            assert!(t.requests > 0, "Scenario::trace needs at least one request");
+            assert!(
+                policy.continuous_rollout(),
+                "trace replay needs a continuous-rollout mode (open-loop \
+                 arrivals cannot drive barrier iteration launches)"
+            );
+            let feed = match t.feed {
+                TraceFeed::Streamed => {
+                    TraceFeedState::Streamed(TraceSource::new(&t.families, t.trace_seed))
+                }
+                TraceFeed::Materialized => TraceFeedState::Materialized(
+                    crate::trace::generate(&t.families, t.requests as usize, t.trace_seed)
+                        .into_iter(),
+                ),
+            };
+            TraceState {
+                feed,
+                // Dedicated stream: arrival *times* are a pure function
+                // of (scenario seed, process) — independent of the
+                // record draws (`trace_seed`) and of every other driver
+                // stream (docs/DETERMINISM.md).
+                arrivals: Arrivals::new(t.arrivals.clone(), rng.stream("arrival", 0)),
+                slo: cfg.slo.clone().unwrap_or_default(),
+                limit: t.requests,
+                offered: 0,
+                admitted: 0,
+                shed: 0,
+                completed: 0,
+                aborted: 0,
+                aborted_total_s: 0.0,
+                peak_buffered: 0,
+                acc: BTreeMap::new(),
+            }
+        });
         DriverCore {
             cfg,
             policy,
             lifecycle: LifecycleTracker::new(),
             pd,
             q,
-            rng: SimRng::new(cfg.seed),
+            rng,
             mgrs: Vec::new(),
             proxy,
             engine_busy: vec![false; n_engines],
@@ -693,6 +804,7 @@ impl<'a> DriverCore<'a> {
             cutover_since: vec![0.0; n_engines],
             kick_cause: BubbleCause::EnvWait,
             train_started: 0.0,
+            tr,
             prov_on: prov,
             result: ScenarioResult::default(),
         }
@@ -783,6 +895,11 @@ impl<'a> DriverCore<'a> {
         self.rec.counter(obs::PID_KV_LINK, obs::CTR_KV_QUEUE_DELAY, now, kv_q);
         self.rec
             .counter(obs::PID_WEIGHT_LINK, obs::CTR_WLINK_QUEUE_DELAY, now, w_q);
+        if let Some(tr) = self.tr.as_ref() {
+            let (off, shed) = (tr.offered as f64, tr.shed as f64);
+            self.rec.counter(obs::PID_DRIVER, obs::CTR_TRACE_OFFERED, now, off);
+            self.rec.counter(obs::PID_DRIVER, obs::CTR_TRACE_SHED, now, shed);
+        }
         // Per-GPU-class rows (heterogeneous fleet plane): live/busy
         // engines and token backlog per class, scanned from the fleet
         // because repurposing moves engines between classes mid-run.
@@ -868,6 +985,9 @@ impl<'a> DriverCore<'a> {
                     }
                 }
             }
+        }
+        if self.tr.is_some() {
+            self.trace_terminal(mgr, edge.from, edge.to);
         }
     }
 
@@ -1209,7 +1329,10 @@ impl<'a> DriverCore<'a> {
     /// elastic: it tracks the live generation fleet so a grown pool is
     /// fed and a shrunken one is not drowned.
     fn refill(&mut self) {
-        if !self.policy.continuous_rollout() {
+        if !self.policy.continuous_rollout() || self.tr.is_some() {
+            // Trace replay is open-loop: concurrency is whatever the
+            // arrival process drives it to (minus shedding), never
+            // topped up to a closed-loop target.
             return;
         }
         while self.active() < self.env_target {
@@ -1269,6 +1392,7 @@ impl<'a> DriverCore<'a> {
 
     /// Barrier modes: launch one iteration's worth of groups.
     fn launch_iteration(&mut self) {
+        debug_assert!(self.tr.is_none(), "trace replay rejects barrier modes");
         let n_groups = (self.cfg.batch_size / self.cfg.group_size).max(1);
         for _ in 0..n_groups {
             self.launch_group();
@@ -1495,7 +1619,10 @@ impl<'a> DriverCore<'a> {
                 // A stale member leaves its group short: relaunch a
                 // replacement at the *current* version so the group can
                 // still fill (the paper re-rolls aborted trajectories).
-                if !self.groups.is_filled(group) {
+                // Open-loop trace replay never backfills — a shed or
+                // aborted request is lost offered load, and a
+                // replacement would sample a non-trace shape.
+                if self.tr.is_none() && !self.groups.is_filled(group) {
                     self.launch_member(group);
                 }
             }
@@ -1509,7 +1636,7 @@ impl<'a> DriverCore<'a> {
                 // (§6.3 redundancy machinery).
                 self.fault_report.env_crashes += 1;
                 self.acc_failures += 1;
-                if !self.groups.is_filled(group) {
+                if self.tr.is_none() && !self.groups.is_filled(group) {
                     self.fault_report.trajectories_relaunched += 1;
                     self.launch_member(group);
                 }
@@ -1532,6 +1659,112 @@ impl<'a> DriverCore<'a> {
         debug_assert_eq!(li, idx);
         self.groups.launch(group, id);
         self.schedule_reset(idx);
+    }
+
+    // ---- trace-replay plane -----------------------------------------
+
+    /// Schedule the next open-loop arrival tick, unless the trace's
+    /// request budget is exhausted (then the run drains naturally).
+    fn schedule_next_arrival(&mut self) {
+        let now = self.now();
+        let Some(tr) = self.tr.as_mut() else { return };
+        if tr.offered >= tr.limit {
+            return;
+        }
+        let gap = tr.arrivals.next_gap(now);
+        self.q.schedule_in(gap, Ev::TraceArrival);
+    }
+
+    /// One open-loop arrival: pull the next record from the feed,
+    /// shed it if the in-flight cap says so, launch it otherwise, and
+    /// schedule the next tick.
+    fn on_trace_arrival(&mut self) {
+        let active = self.active_count;
+        let (rec, admitted) = {
+            let Some(tr) = self.tr.as_mut() else { return };
+            let Some(rec) = tr.feed.next() else { return };
+            tr.offered += 1;
+            // +1 for the record in hand: a streamed feed buffers
+            // nothing else, so its peak pins at 1 — the constant-memory
+            // proof the fig_trace bench gates on.
+            tr.peak_buffered = tr.peak_buffered.max(tr.feed.buffered() as u64 + 1);
+            let shed = tr.slo.shed_above.is_some_and(|cap| active >= cap);
+            if shed {
+                tr.shed += 1;
+            } else {
+                tr.admitted += 1;
+            }
+            (rec, !shed)
+        };
+        self.schedule_next_arrival();
+        if admitted {
+            self.launch_trace_record(&rec);
+        }
+    }
+
+    /// Spawn one admitted trace record.  Each request is its own group
+    /// of one — open-loop arrivals carry no GRPO prompt-group
+    /// semantics, and a singleton group keeps the deposit machinery
+    /// (staging, atomic deposit, lifecycle edges) uniform with the
+    /// closed-loop path.
+    fn launch_trace_record(&mut self, rec: &TraceRecord) {
+        let t = self.cfg.trace.as_ref().expect("trace arrival without Scenario::trace");
+        let domain = t.families[rec.family].domain;
+        let shape = crate::trace::record_shape(rec, domain);
+        let g = self.next_group;
+        self.next_group += 1;
+        self.groups.add_group(g, 1);
+        debug_assert_eq!(self.group_domain.len() as u64, g);
+        self.group_domain.push(domain);
+        self.staged.push(Vec::new());
+        let idx = self.mgrs.len();
+        let id = TrajectoryId(idx as u64);
+        let m = EnvManagerSim::new(id, shape, self.gen_version(), g, self.now());
+        self.mgrs.push(m);
+        self.active_count += 1;
+        let li = self.lifecycle.spawn_at(self.now());
+        debug_assert_eq!(li, idx);
+        self.groups.launch(g, id);
+        self.schedule_reset(idx);
+    }
+
+    /// SLO accounting at the terminal lifecycle edges of a trace
+    /// replay.  Latency is arrival → terminal, which equals the sum of
+    /// the trajectory's booked phase dwells (the lifecycle tracker's
+    /// residency booking telescopes) — `tests/trace_plane.rs` holds the
+    /// report to that identity within 1e-9.
+    fn trace_terminal(&mut self, mgr: usize, from: TrajPhase, to: TrajPhase) {
+        if !to.is_terminal() || from.is_terminal() {
+            // Not a terminal entry — or an illegal terminal→terminal
+            // edge (the lifecycle tracker records those as violations);
+            // either way there is nothing to book twice.
+            return;
+        }
+        let lat = (self.now() - self.mgrs[mgr].traj.started_at).max(0.0);
+        let domain = self.mgrs[mgr].domain();
+        let Some(tr) = self.tr.as_mut() else { return };
+        match to {
+            TrajPhase::Deposited => {
+                tr.completed += 1;
+                let acc = tr.acc.entry(domain).or_default();
+                acc.completed += 1;
+                acc.lat.record(lat);
+                acc.total_s += lat;
+                if lat > tr.slo.target_for(domain) {
+                    acc.violations += 1;
+                }
+            }
+            TrajPhase::Aborted => {
+                tr.aborted += 1;
+                tr.aborted_total_s += lat;
+            }
+            _ => unreachable!("matched above"),
+        }
+        // Constant-memory replay: the terminal trajectory's token
+        // vectors are dead weight (a deposited clone lives in the
+        // sample buffer) — drop them so slab memory is bounded by the
+        // in-flight set, not the trace length.
+        self.mgrs[mgr].release();
     }
 
     // ---- fault plane ------------------------------------------------
@@ -2708,6 +2941,7 @@ impl<'a> DriverCore<'a> {
             Ev::KvDone { tid } => (EdgeKind::KvHop, tid.0 as u32),
             Ev::WsyncDone { engine, .. } => (EdgeKind::Cutover, *engine as u32),
             Ev::WsyncStreamed { engine, .. } => (EdgeKind::WeightStream, *engine as u32),
+            Ev::TraceArrival => (EdgeKind::Arrival, u32::MAX),
         }
     }
 
@@ -2747,14 +2981,18 @@ impl<'a> DriverCore<'a> {
                 self.schedule_engine_failure(e);
             }
         }
-        if self.policy.continuous_rollout() {
+        if self.tr.is_some() {
+            // Open-loop trace replay: the arrival process drives all
+            // admission; the first tick seeds the chain.
+            self.schedule_next_arrival();
+        } else if self.policy.continuous_rollout() {
             self.refill();
         } else {
             self.launch_iteration();
         }
     }
 
-    fn run(mut self) -> (ScenarioResult, LifecycleStats) {
+    fn run(mut self) -> (ScenarioResult, LifecycleStats, TraceReplayStats) {
         self.prime();
         let target_steps = self.cfg.iterations;
         while let Some((t, ev)) = self.q.pop() {
@@ -2810,6 +3048,7 @@ impl<'a> DriverCore<'a> {
                 Ev::KvDone { tid } => self.on_kv_done(tid),
                 Ev::WsyncDone { engine, epoch } => self.on_wsync_done(engine, epoch),
                 Ev::WsyncStreamed { engine, epoch } => self.on_wsync_streamed(engine, epoch),
+                Ev::TraceArrival => self.on_trace_arrival(),
                 Ev::RewardDone { mgr } => self.on_reward_done(mgr),
                 Ev::TrainDone => {
                     let tokens = self.inflight_train_tokens;
@@ -2830,7 +3069,7 @@ impl<'a> DriverCore<'a> {
     }
 
     /// Final stats.
-    fn finish(mut self) -> (ScenarioResult, LifecycleStats) {
+    fn finish(mut self) -> (ScenarioResult, LifecycleStats, TraceReplayStats) {
         let total = self.now().max(1e-9);
         self.result.total_time_s = total;
         // Close the telemetry plane: truncated busy spans for engines
@@ -2929,7 +3168,47 @@ impl<'a> DriverCore<'a> {
         for s in &mut self.result.steps {
             s.breakdown.generation_s = busy / steps;
         }
-        (self.result, self.lifecycle.into_stats())
+        // Trace-replay plane: fold the per-domain accumulators into the
+        // SloReport.  The feed-side replay stats stay *outside*
+        // `ScenarioResult` — `peak_records_buffered` differs between
+        // streamed and materialized feeds by design, and folding it in
+        // would break the bit-identity pin between the two.
+        let mut replay = TraceReplayStats::default();
+        if let Some(mut tr) = self.tr.take() {
+            let mut domains = Vec::new();
+            let mut total_violations = 0;
+            for (domain, acc) in tr.acc.iter_mut() {
+                total_violations += acc.violations;
+                domains.push(DomainSlo {
+                    domain: *domain,
+                    completed: acc.completed,
+                    target_s: tr.slo.target_for(*domain),
+                    p50_s: acc.lat.p50(),
+                    p99_s: acc.lat.p99(),
+                    max_s: acc.lat.max(),
+                    total_latency_s: acc.total_s,
+                    violations: acc.violations,
+                });
+            }
+            self.result.slo = Some(Box::new(SloReport {
+                domains,
+                offered: tr.offered,
+                admitted: tr.admitted,
+                shed: tr.shed,
+                completed: tr.completed,
+                aborted: tr.aborted,
+                aborted_latency_s: tr.aborted_total_s,
+                goodput_rps: tr.completed as f64 / total,
+                total_violations,
+            }));
+            replay = TraceReplayStats {
+                offered: tr.offered,
+                admitted: tr.admitted,
+                shed: tr.shed,
+                peak_records_buffered: tr.peak_buffered,
+            };
+        }
+        (self.result, self.lifecycle.into_stats(), replay)
     }
 }
 
@@ -2959,7 +3238,24 @@ pub fn run_with_trace(
     rec: &mut TraceRecorder,
 ) -> (ScenarioResult, LifecycleStats) {
     assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
-    DriverCore::new(cfg, rec, false).run()
+    let (result, lifecycle, _) = DriverCore::new(cfg, rec, false).run();
+    (result, lifecycle)
+}
+
+/// Run an open-loop trace-replay scenario (`Scenario::trace` must be
+/// set) and return the feed-side [`TraceReplayStats`] alongside the
+/// usual result.  `peak_records_buffered` is the constant-memory proof
+/// the `fig_trace` bench gates on: a streamed feed pins it at 1
+/// regardless of `TraceScenario::requests`, a materialized feed
+/// buffers the whole trace.  The stats live outside `ScenarioResult`
+/// because they *differ* between the two feeds of the same scenario,
+/// whose results are otherwise pinned bit-identical
+/// (`tests/determinism.rs`).
+pub fn run_trace_replay(cfg: &Scenario) -> (ScenarioResult, LifecycleStats, TraceReplayStats) {
+    assert!(cfg.trace.is_some(), "run_trace_replay needs Scenario::trace");
+    assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
+    let mut rec = TraceRecorder::disabled();
+    DriverCore::new(cfg, &mut rec, false).run()
 }
 
 /// Run a trajectory-level scenario with **causal event provenance**
@@ -2990,7 +3286,8 @@ pub fn run_instrumented(
     provenance: bool,
 ) -> (ScenarioResult, LifecycleStats) {
     assert_ne!(cfg.mode, Mode::Sync, "use sync_driver for Mode::Sync");
-    DriverCore::new(cfg, rec, provenance).run()
+    let (result, lifecycle, _) = DriverCore::new(cfg, rec, provenance).run();
+    (result, lifecycle)
 }
 
 #[cfg(test)]

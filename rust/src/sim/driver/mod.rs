@@ -23,7 +23,9 @@ pub mod lifecycle;
 pub mod pd;
 pub mod policy;
 
-pub use self::core::{run, run_instrumented, run_traced, run_with_provenance, run_with_trace};
+pub use self::core::{
+    run, run_instrumented, run_trace_replay, run_traced, run_with_provenance, run_with_trace,
+};
 pub use lifecycle::{LifecycleStats, LifecycleTracker, TrajPhase};
 pub use pd::PdScenario;
 pub use policy::{policy_for, SchedPolicy};

@@ -160,6 +160,17 @@ pub struct Scenario {
     /// them (default: the legacy fleet-drain
     /// [`BlockingBroadcast`](crate::weights::BlockingBroadcast)).
     pub weights: WeightsScenario,
+    /// Trace-replay plane: when set, closed-loop admission is replaced
+    /// by open-loop arrivals drawn from this trace (§8 production
+    /// replay; see [`crate::trace::TraceScenario`]).  Event-driver
+    /// modes only — the analytic Sync driver ignores it.
+    pub trace: Option<crate::trace::TraceScenario>,
+    /// Per-domain SLO targets and load-shedding backstop for a trace
+    /// replay.  `None` with `trace` set still emits an [`SloReport`]
+    /// (infinite targets, no shedding).
+    ///
+    /// [`SloReport`]: crate::trace::SloReport
+    pub slo: Option<crate::trace::SloPolicy>,
 }
 
 impl Scenario {
@@ -224,6 +235,8 @@ impl Scenario {
             pd_elastic: None,
             route: RouteKind::Affinity,
             weights: WeightsScenario::default(),
+            trace: None,
+            slo: None,
         }
     }
 
@@ -304,6 +317,10 @@ pub struct ScenarioResult {
     /// so ordinary runs stay byte-identical whether or not the
     /// critical-path plane is compiled against.
     pub critpath: Option<Box<crate::obs::CritPathReport>>,
+    /// Multi-tenant SLO outcome of a trace replay, populated whenever
+    /// [`Scenario::trace`] is set (`None` otherwise, so non-trace runs
+    /// stay byte-identical to builds without the trace plane).
+    pub slo: Option<Box<crate::trace::SloReport>>,
 }
 
 impl ScenarioResult {

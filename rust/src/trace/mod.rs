@@ -1,4 +1,5 @@
-//! Production workload trace generator + analyzer (§8, Fig 15).
+//! Production workload trace plane (§8, Fig 15): generator, streaming
+//! source, open-loop arrival processes, and multi-tenant SLO types.
 //!
 //! The paper reports a week-long >3,000-GPU MoE deployment; the trace
 //! generator reproduces its published statistics so Fig 15 can be
@@ -6,7 +7,19 @@
 //! turns per task family, per-step max response > 5× mean (peak 9×),
 //! max turns > 40× mean, 1:5 train:generation GPU ratio, blocking
 //! `get_batch` up to 62% of iteration time, longest iteration 1.5 h.
+//!
+//! Beyond offline analysis, the trace is a first-class *scenario
+//! source*: a [`TraceSource`] streams records one at a time (constant
+//! memory — no materialized `Vec`), an [`ArrivalProcess`] turns them
+//! into open-loop arrival times, and [`Scenario::trace`] feeds them
+//! into the DES driver via `Ev::TraceArrival`.  Per-domain latency
+//! targets ([`SloPolicy`]) produce an [`SloReport`] on
+//! [`ScenarioResult`](crate::sim::ScenarioResult).
+//!
+//! [`Scenario::trace`]: crate::sim::Scenario
 
+use crate::env::profile::TrajectoryShape;
+use crate::env::TaskDomain;
 use crate::metrics::Histogram;
 use crate::simkit::dist::Dist;
 use crate::simkit::SimRng;
@@ -20,6 +33,9 @@ pub struct FamilyProfile {
     pub response_tokens: Dist,
     /// Fraction of the job's trajectories from this family.
     pub weight: f64,
+    /// Nearest Table-1 task domain — the tenant this family bills to
+    /// in multi-tenant SLO reports and PD/affinity routing.
+    pub domain: TaskDomain,
 }
 
 /// The §8 mix: in-house mathematical + software-engineering agentic
@@ -33,6 +49,7 @@ pub fn prod_families() -> Vec<FamilyProfile> {
             // long chains of thought; tail controlled below 46k
             response_tokens: Dist::lognormal_median(4000.0, 0.8),
             weight: 0.45,
+            domain: TaskDomain::GameSingle,
         },
         FamilyProfile {
             name: "math-tool",
@@ -40,6 +57,7 @@ pub fn prod_families() -> Vec<FamilyProfile> {
             prompt_tokens: Dist::lognormal_median(1500.0, 0.5),
             response_tokens: Dist::lognormal_median(2500.0, 0.7),
             weight: 0.25,
+            domain: TaskDomain::MathTool,
         },
         FamilyProfile {
             name: "swe-agent",
@@ -47,6 +65,7 @@ pub fn prod_families() -> Vec<FamilyProfile> {
             prompt_tokens: Dist::lognormal_median(6000.0, 0.5),
             response_tokens: Dist::lognormal_median(1200.0, 0.6),
             weight: 0.30,
+            domain: TaskDomain::Swe,
         },
     ]
 }
@@ -60,30 +79,73 @@ pub struct TraceRecord {
     pub response_tokens: f64,
 }
 
-/// Generate `n` trajectory records from the family mix.
+/// Weighted family pick.  `pick` is uniform in `[0, total_w)`; float
+/// roundoff in the decrement chain can let it survive every comparison
+/// (e.g. when `pick` rounds to `total_w` itself, or the partial sums
+/// round upward), in which case the leftover probability mass belongs
+/// to the *last* family, not the first.
+fn pick_family(families: &[FamilyProfile], mut pick: f64) -> usize {
+    let mut fi = families.len() - 1;
+    for (i, f) in families.iter().enumerate() {
+        if pick < f.weight {
+            fi = i;
+            break;
+        }
+        pick -= f.weight;
+    }
+    fi
+}
+
+/// Sample one record.  Draw order (family pick, turns, prompt,
+/// response) is part of the determinism contract: [`generate`] and
+/// [`TraceSource`] share this function, which is what pins the
+/// streamed replay bit-identical to the materialized one.
+fn sample_record(families: &[FamilyProfile], total_w: f64, rng: &mut SimRng) -> TraceRecord {
+    let fi = pick_family(families, rng.f64() * total_w);
+    let f = &families[fi];
+    TraceRecord {
+        family: fi,
+        turns: f.turns.sample(rng).round().max(1.0) as usize,
+        prompt_tokens: f.prompt_tokens.sample(rng).min(12_000.0),
+        response_tokens: f.response_tokens.sample(rng).min(46_000.0),
+    }
+}
+
+/// A streaming trace: an *infinite* iterator of [`TraceRecord`]s drawn
+/// from the family mix, one at a time, in constant memory.  The n-th
+/// record equals `generate(families, m, seed)[n]` for any `m > n` —
+/// the two share [`sample_record`] — so a driver fed by `take(n)` is
+/// bit-identical to one fed the materialized `Vec`.
+#[derive(Clone, Debug)]
+pub struct TraceSource {
+    families: Vec<FamilyProfile>,
+    total_w: f64,
+    rng: SimRng,
+}
+
+impl TraceSource {
+    pub fn new(families: &[FamilyProfile], seed: u64) -> TraceSource {
+        assert!(!families.is_empty(), "trace needs at least one family");
+        TraceSource {
+            families: families.to_vec(),
+            total_w: families.iter().map(|f| f.weight).sum(),
+            rng: SimRng::new(seed),
+        }
+    }
+}
+
+impl Iterator for TraceSource {
+    type Item = TraceRecord;
+
+    fn next(&mut self) -> Option<TraceRecord> {
+        Some(sample_record(&self.families, self.total_w, &mut self.rng))
+    }
+}
+
+/// Generate `n` trajectory records from the family mix (materialized
+/// form of [`TraceSource`]).
 pub fn generate(families: &[FamilyProfile], n: usize, seed: u64) -> Vec<TraceRecord> {
-    let mut rng = SimRng::new(seed);
-    let total_w: f64 = families.iter().map(|f| f.weight).sum();
-    (0..n)
-        .map(|_| {
-            let mut pick = rng.f64() * total_w;
-            let mut fi = 0;
-            for (i, f) in families.iter().enumerate() {
-                if pick < f.weight {
-                    fi = i;
-                    break;
-                }
-                pick -= f.weight;
-            }
-            let f = &families[fi];
-            TraceRecord {
-                family: fi,
-                turns: f.turns.sample(&mut rng).round().max(1.0) as usize,
-                prompt_tokens: f.prompt_tokens.sample(&mut rng).min(12_000.0),
-                response_tokens: f.response_tokens.sample(&mut rng).min(46_000.0),
-            }
-        })
-        .collect()
+    TraceSource::new(families, seed).take(n).collect()
 }
 
 /// Fig 15a-style statistics of a trace.
@@ -123,10 +185,13 @@ pub fn analyze(trace: &[TraceRecord]) -> TraceStats {
 
 /// Per-step straggler ratios over steps of `step_size` trajectories
 /// (the §8 "in each step, max response exceeds 5× the mean" claim).
+///
+/// The trailing partial step is included — a trace shorter than one
+/// step still yields one ratio (over however many records it has), so
+/// callers averaging the result never divide by zero.
 pub fn per_step_tail_ratios(trace: &[TraceRecord], step_size: usize) -> Vec<f64> {
     trace
         .chunks(step_size)
-        .filter(|c| c.len() == step_size)
         .map(|c| {
             let mean = c.iter().map(|t| t.response_tokens).sum::<f64>() / c.len() as f64;
             let max = c.iter().map(|t| t.response_tokens).fold(0.0, f64::max);
@@ -142,6 +207,268 @@ pub fn response_histogram(trace: &[TraceRecord]) -> Histogram {
         h.record(t.response_tokens);
     }
     h
+}
+
+/// Convert a trace record into the driver's trajectory shape: the
+/// prompt prefills on turn 0, the response decodes evenly across the
+/// record's turns.  Purely arithmetic — no RNG — so a record maps to
+/// the same shape on every path (streamed or materialized).
+pub fn record_shape(r: &TraceRecord, domain: TaskDomain) -> TrajectoryShape {
+    let turns = r.turns.max(1);
+    let act = (r.response_tokens / turns as f64).max(1.0);
+    TrajectoryShape {
+        domain,
+        initial_prompt_tokens: r.prompt_tokens,
+        per_turn: vec![(0.0, act); turns],
+    }
+}
+
+/// Open-loop arrival process over a trace (StreamRL-style evaluation:
+/// arrivals do not wait for completions the way closed-loop admission
+/// does).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate` requests/s.
+    Poisson { rate: f64 },
+    /// Non-homogeneous Poisson with a sinusoidal day/night cycle:
+    /// instantaneous rate `base_rate · (1 + amplitude·sin(2πt/period))`
+    /// (amplitude clamped to [0, 0.999]); sampled by thinning.
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
+    /// On/off bursts: exponential on-periods of mean `mean_on_s` with
+    /// Poisson arrivals at `on_rate`, separated by exponential silences
+    /// of mean `mean_off_s`.  The process starts in an on-period.
+    Bursty {
+        on_rate: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (requests/s) — sizing diagnostic.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            // The sinusoid integrates to zero over a period.
+            ArrivalProcess::Diurnal { base_rate, .. } => base_rate,
+            ArrivalProcess::Bursty {
+                on_rate,
+                mean_on_s,
+                mean_off_s,
+            } => on_rate * mean_on_s / (mean_on_s + mean_off_s),
+        }
+    }
+}
+
+/// Runtime state of an [`ArrivalProcess`]: owns a dedicated RNG stream
+/// (see `docs/DETERMINISM.md`) plus the bursty on/off phase machine.
+#[derive(Clone, Debug)]
+pub struct Arrivals {
+    process: ArrivalProcess,
+    rng: SimRng,
+    /// Bursty state: inside an on-period, and when the phase flips.
+    on: bool,
+    phase_until: f64,
+}
+
+impl Arrivals {
+    pub fn new(process: ArrivalProcess, rng: SimRng) -> Arrivals {
+        Arrivals {
+            process,
+            rng,
+            on: false,
+            phase_until: 0.0,
+        }
+    }
+
+    fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.rng.f64()).ln() / rate
+    }
+
+    /// Seconds from `now` until the next arrival.
+    pub fn next_gap(&mut self, now: f64) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate } => self.exp(rate),
+            ArrivalProcess::Diurnal {
+                base_rate,
+                amplitude,
+                period_s,
+            } => {
+                let amp = amplitude.clamp(0.0, 0.999);
+                let max_rate = base_rate * (1.0 + amp);
+                let mut t = now;
+                // Thinning: candidate arrivals at the peak rate, kept
+                // with probability rate(t)/max_rate.  Acceptance is at
+                // least (1-amp)/(1+amp) > 0, so the loop terminates.
+                loop {
+                    t += self.exp(max_rate);
+                    let rate = base_rate
+                        * (1.0 + amp * (std::f64::consts::TAU * t / period_s).sin());
+                    if self.rng.f64() * max_rate <= rate {
+                        return t - now;
+                    }
+                }
+            }
+            ArrivalProcess::Bursty {
+                on_rate,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                let mut t = now;
+                loop {
+                    if !self.on {
+                        t = self.phase_until.max(t);
+                        self.on = true;
+                        self.phase_until = t + self.exp(1.0 / mean_on_s);
+                    }
+                    let gap = self.exp(on_rate);
+                    if t + gap <= self.phase_until {
+                        return t + gap - now;
+                    }
+                    t = self.phase_until;
+                    self.on = false;
+                    self.phase_until = t + self.exp(1.0 / mean_off_s);
+                }
+            }
+        }
+    }
+}
+
+/// How the driver pulls trace records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFeed {
+    /// Pull one record per arrival from a [`TraceSource`] — constant
+    /// memory, the production path.
+    Streamed,
+    /// Materialize the whole trace up front ([`generate`]) — the
+    /// reference path the streamed one is pinned bit-identical to.
+    Materialized,
+}
+
+/// Trace-replay scenario source (`Scenario::trace`): when set, the
+/// driver replaces closed-loop admission with open-loop arrivals drawn
+/// from this trace.
+#[derive(Clone, Debug)]
+pub struct TraceScenario {
+    pub families: Vec<FamilyProfile>,
+    /// Requests to replay (the run drains after the last arrival).
+    pub requests: u64,
+    pub arrivals: ArrivalProcess,
+    pub feed: TraceFeed,
+    /// Seed of the trace's own RNG (separate from `Scenario::seed`, so
+    /// the same trace can be replayed under different system seeds).
+    pub trace_seed: u64,
+}
+
+impl TraceScenario {
+    /// The §8 production mix, streamed, Poisson arrivals at `rate`/s.
+    pub fn section8(requests: u64, rate: f64) -> TraceScenario {
+        TraceScenario {
+            families: prod_families(),
+            requests,
+            arrivals: ArrivalProcess::Poisson { rate },
+            feed: TraceFeed::Streamed,
+            trace_seed: 8,
+        }
+    }
+}
+
+/// Per-domain latency targets and the admission backstop
+/// (`Scenario::slo`).
+#[derive(Clone, Debug)]
+pub struct SloPolicy {
+    /// Target for domains without an explicit entry (default ∞: report
+    /// latencies, count no violations).
+    pub default_target_s: f64,
+    /// (domain, end-to-end trajectory latency target in seconds).
+    pub targets: Vec<(TaskDomain, f64)>,
+    /// Load shedding: reject arrivals while this many trajectories are
+    /// already in flight (None = admit everything).
+    pub shed_above: Option<usize>,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            default_target_s: f64::INFINITY,
+            targets: Vec::new(),
+            shed_above: None,
+        }
+    }
+}
+
+impl SloPolicy {
+    pub fn target_for(&self, d: TaskDomain) -> f64 {
+        self.targets
+            .iter()
+            .find(|(td, _)| *td == d)
+            .map(|(_, t)| *t)
+            .unwrap_or(self.default_target_s)
+    }
+}
+
+/// One tenant's row in the [`SloReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DomainSlo {
+    pub domain: TaskDomain,
+    /// Trajectories deposited into training batches.
+    pub completed: u64,
+    pub target_s: f64,
+    /// End-to-end trajectory latency (arrival → deposit) quantiles.
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+    /// Sum of completed-trajectory latencies — reconciles with the
+    /// lifecycle tracker's residency totals (the phase dwells of a
+    /// deposited trajectory telescope to exactly its latency).
+    pub total_latency_s: f64,
+    /// Completions slower than `target_s`.
+    pub violations: u64,
+}
+
+/// Multi-tenant SLO outcome of a trace replay, attached to
+/// [`ScenarioResult::slo`](crate::sim::ScenarioResult::slo).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloReport {
+    /// Per-domain rows, ordered by [`TaskDomain::ALL`].
+    pub domains: Vec<DomainSlo>,
+    /// Arrivals offered by the trace.
+    pub offered: u64,
+    /// Arrivals admitted (offered − shed).
+    pub admitted: u64,
+    /// Arrivals rejected by the `shed_above` backstop.
+    pub shed: u64,
+    /// Trajectories deposited into training batches.
+    pub completed: u64,
+    /// Admitted trajectories aborted before deposit (stale/crash).
+    pub aborted: u64,
+    /// Sum of aborted-trajectory latencies (arrival → abort) — the
+    /// non-completed share of lifecycle residency, kept so residency
+    /// reconciliation also holds under chaos.
+    pub aborted_latency_s: f64,
+    /// Completed trajectories per wall-clock second — goodput under
+    /// load shedding (shed and aborted requests don't count).
+    pub goodput_rps: f64,
+    pub total_violations: u64,
+}
+
+/// Feed-side replay statistics, returned by
+/// [`run_trace_replay`](crate::sim::driver::core::run_trace_replay)
+/// next to the scenario result.  `peak_records_buffered` is the
+/// constant-memory proof the `fig_trace` bench gates on: a streamed
+/// replay holds at most one record in hand regardless of trace length,
+/// while a materialized replay buffers the whole trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceReplayStats {
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub peak_records_buffered: u64,
 }
 
 #[cfg(test)]
@@ -201,5 +528,188 @@ mod tests {
     fn histogram_works() {
         let mut h = response_histogram(&trace());
         assert!(h.p99() > h.p50());
+    }
+
+    // Regression (bugfix 1): when float roundoff lets the pick survive
+    // every decrement, the leftover mass must land on the LAST family,
+    // not fall through to index 0.
+    #[test]
+    fn weighted_pick_boundary_lands_on_last_family() {
+        let fams = prod_families();
+        let total_w: f64 = fams.iter().map(|f| f.weight).sum();
+        // The epsilon case: rng.f64() close enough to 1 that
+        // `rng.f64() * total_w` rounds to total_w itself, surviving
+        // every decrement.  The old code returned 0 here.
+        assert_eq!(pick_family(&fams, total_w), fams.len() - 1);
+        assert_eq!(pick_family(&fams, total_w * (1.0 - 1e-17)), fams.len() - 1);
+        // Interior picks still map to their own families.
+        assert_eq!(pick_family(&fams, 0.0), 0);
+        assert_eq!(pick_family(&fams, 0.44), 0);
+        assert_eq!(pick_family(&fams, 0.46), 1);
+        assert_eq!(pick_family(&fams, 0.71), 2);
+    }
+
+    // Regression (bugfix 1), seeded flavor: a crafted mix whose float
+    // weight sum exceeds the last cumulative boundary, so seeds that
+    // draw near 1.0 land in the final epsilon.  Every record must
+    // carry a valid family index and the last family must receive its
+    // share (the old code silently re-billed that mass to family 0).
+    #[test]
+    fn weighted_pick_seeded_epsilon_mass_reaches_last_family() {
+        let base = prod_families();
+        // 10×0.1 sums to 0.9999999999999999 ≠ 1.0: the cumulative
+        // decrement chain and the float total disagree in the last ulp.
+        let fams: Vec<FamilyProfile> = (0..10)
+            .map(|i| {
+                let mut f = base[i % base.len()].clone();
+                f.weight = 0.1;
+                f
+            })
+            .collect();
+        for seed in 0..32 {
+            let t = generate(&fams, 2_000, seed);
+            assert!(t.iter().all(|r| r.family < fams.len()));
+            let last = t.iter().filter(|r| r.family == fams.len() - 1).count();
+            assert!(last > 0, "seed {seed}: last family starved");
+        }
+    }
+
+    // Regression (bugfix 2): a trace shorter than one step must yield
+    // one finite ratio, not an empty vec (the NaN the example hit).
+    #[test]
+    fn tail_ratios_include_trailing_partial_step() {
+        let t = trace();
+        let short = &t[..100];
+        let ratios = per_step_tail_ratios(short, 512);
+        assert_eq!(ratios.len(), 1);
+        assert!(ratios[0].is_finite() && ratios[0] >= 1.0, "{}", ratios[0]);
+        // 20_000 = 39×512 + 32: the partial step is a 40th ratio.
+        let full = per_step_tail_ratios(&t, 512);
+        assert_eq!(full.len(), t.len().div_ceil(512));
+        assert!(full.iter().all(|r| r.is_finite() && *r >= 1.0));
+    }
+
+    #[test]
+    fn streamed_source_matches_materialized_generate() {
+        let streamed: Vec<TraceRecord> =
+            TraceSource::new(&prod_families(), 8).take(5_000).collect();
+        let materialized = generate(&prod_families(), 5_000, 8);
+        for (s, m) in streamed.iter().zip(&materialized) {
+            assert_eq!(s.family, m.family);
+            assert_eq!(s.turns, m.turns);
+            assert_eq!(s.prompt_tokens, m.prompt_tokens);
+            assert_eq!(s.response_tokens, m.response_tokens);
+        }
+    }
+
+    #[test]
+    fn record_shape_conserves_tokens() {
+        for r in trace().iter().take(500) {
+            let shape = record_shape(r, TaskDomain::Swe);
+            assert_eq!(shape.turns(), r.turns);
+            assert_eq!(shape.initial_prompt_tokens, r.prompt_tokens);
+            let decode = shape.decode_tokens();
+            assert!(
+                (decode - r.response_tokens).abs() <= r.turns as f64,
+                "decode {decode} vs response {}",
+                r.response_tokens
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_have_the_right_mean() {
+        let mut a = Arrivals::new(ArrivalProcess::Poisson { rate: 4.0 }, SimRng::new(7));
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| a.next_gap(0.0)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean gap {mean}");
+    }
+
+    #[test]
+    fn diurnal_rate_tracks_the_sinusoid() {
+        let p = ArrivalProcess::Diurnal {
+            base_rate: 10.0,
+            amplitude: 0.8,
+            period_s: 1_000.0,
+        };
+        let mut a = Arrivals::new(p, SimRng::new(9));
+        let (mut t, mut peak_half, mut trough_half) = (0.0, 0u64, 0u64);
+        while t < 10_000.0 {
+            t += a.next_gap(t);
+            // sin > 0 on the first half of each period.
+            if (t % 1_000.0) < 500.0 {
+                peak_half += 1;
+            } else {
+                trough_half += 1;
+            }
+        }
+        assert!(
+            peak_half as f64 > 1.5 * trough_half as f64,
+            "peak {peak_half} trough {trough_half}"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let p = ArrivalProcess::Bursty {
+            on_rate: 50.0,
+            mean_on_s: 1.0,
+            mean_off_s: 9.0,
+        };
+        let mut a = Arrivals::new(p, SimRng::new(3));
+        let (mut t, mut gaps) = (0.0, Vec::new());
+        for _ in 0..5_000 {
+            let g = a.next_gap(t);
+            gaps.push(g);
+            t += g;
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let long = gaps.iter().filter(|g| **g > 5.0 * mean).count();
+        // Off-periods show up as rare gaps far above the on-rate gap.
+        assert!(long > 10, "only {long} long gaps");
+        let expected = 1.0 / p.mean_rate();
+        assert!((mean - expected).abs() / expected < 0.25, "mean gap {mean}");
+    }
+
+    #[test]
+    fn arrivals_are_deterministic() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 2.0 },
+            ArrivalProcess::Diurnal {
+                base_rate: 2.0,
+                amplitude: 0.5,
+                period_s: 100.0,
+            },
+            ArrivalProcess::Bursty {
+                on_rate: 10.0,
+                mean_on_s: 2.0,
+                mean_off_s: 5.0,
+            },
+        ] {
+            let mut a = Arrivals::new(p.clone(), SimRng::new(11));
+            let mut b = Arrivals::new(p, SimRng::new(11));
+            let (mut ta, mut tb) = (0.0, 0.0);
+            for _ in 0..1_000 {
+                ta += a.next_gap(ta);
+                tb += b.next_gap(tb);
+                assert_eq!(ta.to_bits(), tb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn slo_policy_targets_resolve_per_domain() {
+        let slo = SloPolicy {
+            default_target_s: 600.0,
+            targets: vec![(TaskDomain::Swe, 1_800.0), (TaskDomain::MathTool, 300.0)],
+            shed_above: Some(4_096),
+        };
+        assert_eq!(slo.target_for(TaskDomain::Swe), 1_800.0);
+        assert_eq!(slo.target_for(TaskDomain::MathTool), 300.0);
+        assert_eq!(slo.target_for(TaskDomain::Web), 600.0);
+        let d = SloPolicy::default();
+        assert!(d.target_for(TaskDomain::Game).is_infinite());
+        assert!(d.shed_above.is_none());
     }
 }

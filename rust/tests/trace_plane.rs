@@ -1,0 +1,206 @@
+//! Trace-replay plane conformance suite.
+//!
+//! Three properties hold the plane together:
+//!
+//! 1. **Accounting closure** — every offered request is accounted for
+//!    exactly once (`admitted + shed = offered`; on a full drain
+//!    `completed + aborted = admitted`), per-domain rows sum to the
+//!    report totals, and the per-domain latency totals reconcile with
+//!    the lifecycle tracker's phase-residency totals within 1e-9: a
+//!    trajectory's phase dwells telescope to its end-to-end latency
+//!    (terminal phases are never left), so the two books must agree.
+//! 2. **Constant memory** — the streamed `TraceSource` feed never
+//!    buffers more than the record in hand (`peak_records_buffered ==
+//!    1`), while the materialized feed holds the whole trace; the
+//!    bit-identity pin between the two lives in `tests/determinism.rs`.
+//! 3. **Admission control** — the `shed_above` in-flight cap actually
+//!    sheds under a burst, and SLO targets (default + per-domain
+//!    override) gate the violation counters.
+
+use rollart::env::TaskDomain;
+use rollart::llm::QWEN3_8B;
+use rollart::sim::driver::run_trace_replay;
+use rollart::sim::{Mode, Scenario};
+use rollart::trace::{ArrivalProcess, SloPolicy, TraceFeed, TraceScenario};
+
+fn base() -> Scenario {
+    let mut s = Scenario::rollart_default(QWEN3_8B.clone(), 0.06);
+    s.mode = Mode::RollArt;
+    s.batch_size = 16;
+    // Huge training budget: these runs must end by *draining* (every
+    // arrival fired, every admitted trajectory terminal), not by the
+    // step cap, so the residency identity covers the whole trace.
+    s.iterations = 100_000;
+    s
+}
+
+fn traced(requests: u64, arrivals: ArrivalProcess) -> Scenario {
+    let mut s = base();
+    let mut t = TraceScenario::section8(requests, 8.0);
+    t.arrivals = arrivals;
+    s.trace = Some(t);
+    s.slo = Some(SloPolicy {
+        default_target_s: 90.0,
+        targets: vec![],
+        shed_above: None,
+    });
+    s
+}
+
+// ---- accounting closure ----------------------------------------------
+
+#[test]
+fn slo_latency_reconciles_with_lifecycle_residency() {
+    for arrivals in [
+        ArrivalProcess::Poisson { rate: 8.0 },
+        ArrivalProcess::Diurnal {
+            base_rate: 8.0,
+            amplitude: 0.8,
+            period_s: 120.0,
+        },
+        ArrivalProcess::Bursty {
+            on_rate: 24.0,
+            mean_on_s: 20.0,
+            mean_off_s: 40.0,
+        },
+    ] {
+        let cfg = traced(300, arrivals.clone());
+        let (result, lifecycle, replay) = run_trace_replay(&cfg);
+        let slo = result.slo.as_ref().expect("trace replay emits an SLO report");
+        // Every offered request is accounted for exactly once.
+        assert_eq!(replay.offered, 300, "{arrivals:?}");
+        assert_eq!(slo.offered, 300, "{arrivals:?}");
+        assert_eq!(slo.admitted + slo.shed, slo.offered, "{arrivals:?}");
+        assert_eq!(slo.shed, 0, "{arrivals:?}: no cap configured");
+        assert_eq!(
+            slo.completed + slo.aborted,
+            slo.admitted,
+            "{arrivals:?}: a full drain leaves nothing in flight"
+        );
+        assert_eq!(
+            lifecycle.spawned, slo.admitted,
+            "{arrivals:?}: open-loop replay never backfills"
+        );
+        assert!(slo.goodput_rps > 0.0, "{arrivals:?}");
+        // Per-domain rows sum to the report totals and come out in
+        // domain order (BTreeMap accumulator).
+        let completed: u64 = slo.domains.iter().map(|d| d.completed).sum();
+        assert_eq!(completed, slo.completed, "{arrivals:?}");
+        let violations: u64 = slo.domains.iter().map(|d| d.violations).sum();
+        assert_eq!(violations, slo.total_violations, "{arrivals:?}");
+        assert!(
+            slo.domains.windows(2).all(|w| w[0].domain < w[1].domain),
+            "{arrivals:?}: domain rows out of order"
+        );
+        for d in &slo.domains {
+            assert!(d.completed > 0, "{arrivals:?}: empty domain row {d:?}");
+            assert!(
+                d.p50_s <= d.p99_s && d.p99_s <= d.max_s,
+                "{arrivals:?}: quantiles out of order in {d:?}"
+            );
+            assert!(
+                d.total_latency_s >= d.max_s,
+                "{arrivals:?}: latency total below its own max in {d:?}"
+            );
+        }
+        // The telescoping identity: phase dwells booked by the
+        // lifecycle tracker sum (over all phases, all trajectories) to
+        // exactly the end-to-end latencies the SLO report booked.
+        let residency: f64 = lifecycle.residency_totals.values().sum();
+        let latency: f64 = slo.domains.iter().map(|d| d.total_latency_s).sum::<f64>()
+            + slo.aborted_latency_s;
+        let rel = (residency - latency).abs() / latency.max(1e-12);
+        assert!(
+            rel <= 1e-9,
+            "{arrivals:?}: residency {residency} vs SLO latency {latency} (rel err {rel})"
+        );
+    }
+}
+
+// ---- constant memory -------------------------------------------------
+
+#[test]
+fn streamed_feed_is_constant_memory() {
+    let mut cfg = traced(400, ArrivalProcess::Poisson { rate: 16.0 });
+    cfg.trace.as_mut().unwrap().feed = TraceFeed::Streamed;
+    let (_, _, streamed) = run_trace_replay(&cfg);
+    assert_eq!(
+        streamed.peak_records_buffered, 1,
+        "streamed feed must hold only the record in hand"
+    );
+    cfg.trace.as_mut().unwrap().feed = TraceFeed::Materialized;
+    let (_, _, materialized) = run_trace_replay(&cfg);
+    assert_eq!(
+        materialized.peak_records_buffered, 400,
+        "materialized feed holds the whole remaining trace"
+    );
+}
+
+// ---- admission control -----------------------------------------------
+
+#[test]
+fn admission_cap_sheds_offered_load() {
+    let burst = ArrivalProcess::Bursty {
+        on_rate: 60.0,
+        mean_on_s: 30.0,
+        mean_off_s: 30.0,
+    };
+    let uncapped = traced(300, burst.clone());
+    let (r0, _, _) = run_trace_replay(&uncapped);
+    let slo0 = r0.slo.expect("SLO report");
+    assert_eq!(slo0.shed, 0, "no cap: nothing shed");
+
+    let mut capped = traced(300, burst);
+    capped.slo.as_mut().unwrap().shed_above = Some(8);
+    let (r1, _, replay) = run_trace_replay(&capped);
+    let slo1 = r1.slo.expect("SLO report");
+    assert!(
+        slo1.shed > 0,
+        "a 60 rps burst against an 8-deep in-flight cap must shed: {slo1:?}"
+    );
+    assert_eq!(slo1.admitted + slo1.shed, slo1.offered);
+    assert_eq!(replay.shed, slo1.shed, "feed-side and report-side shed agree");
+    assert!(
+        slo1.admitted < slo0.admitted,
+        "shedding reduces admitted load"
+    );
+}
+
+#[test]
+fn slo_targets_gate_violations_per_domain() {
+    let arrivals = ArrivalProcess::Poisson { rate: 10.0 };
+
+    let mut lax = traced(200, arrivals.clone());
+    lax.slo.as_mut().unwrap().default_target_s = f64::INFINITY;
+    let (r, _, _) = run_trace_replay(&lax);
+    let slo = r.slo.expect("SLO report");
+    assert!(slo.completed > 0);
+    assert_eq!(slo.total_violations, 0, "an infinite target never violates");
+
+    let mut strict = traced(200, arrivals.clone());
+    strict.slo.as_mut().unwrap().default_target_s = 1e-9;
+    let (r, _, _) = run_trace_replay(&strict);
+    let slo = r.slo.expect("SLO report");
+    assert_eq!(
+        slo.total_violations, slo.completed,
+        "a sub-nanosecond target makes every completion a violation"
+    );
+
+    // Per-domain override: one domain exempted from the strict default.
+    let mut mixed = traced(200, arrivals);
+    mixed.slo = Some(SloPolicy {
+        default_target_s: 1e-9,
+        targets: vec![(TaskDomain::Swe, f64::INFINITY)],
+        shed_above: None,
+    });
+    let (r, _, _) = run_trace_replay(&mixed);
+    let slo = r.slo.expect("SLO report");
+    for d in &slo.domains {
+        if d.domain == TaskDomain::Swe {
+            assert_eq!(d.target_s, f64::INFINITY, "override maps through");
+            assert_eq!(d.violations, 0, "exempted domain never violates");
+        } else {
+            assert_eq!(d.violations, d.completed, "strict default applies: {d:?}");
+        }
+    }
+}
